@@ -1,0 +1,61 @@
+//! Calibration-component scenario: shows how the public API exposes the
+//! LWC / LET knobs (paper Table 4's ablation as library calls) and prints
+//! per-block calibration loss improvements — the observable that the
+//! block-wise error minimization (Eq. 1) is actually optimizing.
+//!
+//!     make artifacts MODELS=omni-test
+//!     cargo run --release --example calib_ablation
+
+use anyhow::Result;
+
+use omniquant::calib::{self, OmniQuant};
+use omniquant::config::{CalibConfig, QuantSetting, TrainConfig};
+use omniquant::coordinator::pretrain;
+use omniquant::data::{Corpus, CorpusId};
+use omniquant::eval;
+use omniquant::runtime::load_runtime;
+
+fn main() -> Result<()> {
+    let rt = load_runtime("omni-test")?;
+    let corpus = Corpus::new(CorpusId::Wiki, rt.model().vocab);
+    let trained = pretrain(
+        &rt,
+        &TrainConfig { steps: 120, log_every: 0, ..Default::default() },
+        &corpus,
+    )?;
+    let fp = trained.params;
+    let setting = QuantSetting::parse("w4a4")?;
+    let fp_ppl = eval::perplexity(&rt, &fp, &QuantSetting::FP16, &corpus, 4)?;
+    println!("fp16 ppl {fp_ppl:.2}\n");
+    println!(
+        "{:<12} {:>9} {:>14} {:>14}",
+        "variant", "w4a4 ppl", "blk0 loss", "blk1 loss"
+    );
+
+    for (label, lwc, let_) in [
+        ("full", true, true),
+        ("-lwc", false, true),
+        ("-let", true, false),
+        ("-both", false, false),
+    ] {
+        let cfg = CalibConfig {
+            samples: 8,
+            epochs: 6,
+            use_lwc: lwc,
+            use_let: let_,
+            ..Default::default()
+        };
+        let mut method = OmniQuant::new(cfg);
+        let out = calib::quantize_model(&rt, &fp, &mut method, setting, &corpus, 8, 1)?;
+        let ppl = eval::perplexity(&rt, &out.qparams, &setting, &corpus, 4)?;
+        let fmt_loss = |b: usize| {
+            method
+                .stats
+                .get(b)
+                .map(|s| format!("{:.4}->{:.4}", s.loss_init, s.loss_final))
+                .unwrap_or_default()
+        };
+        println!("{label:<12} {ppl:>9.2} {:>14} {:>14}", fmt_loss(0), fmt_loss(1));
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! End-to-end validation driver (DESIGN.md section 7): proves all three
+//! layers compose on a real (small) workload.
+//!
+//!   1. pre-train omni-1m for several hundred steps on the synthetic
+//!      corpus via the AOT train-step graph (loss curve logged),
+//!   2. block-wise quantize with RTN / GPTQ / AWQ / OmniQuant at W3A16 and
+//!      W4A4,
+//!   3. evaluate perplexity + one zero-shot task for each,
+//!   4. serve 64 tokens from the packed W3 engine.
+//!
+//! The run is recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts MODELS=omni-1m
+//!     cargo run --release --example end_to_end
+
+use anyhow::Result;
+
+use omniquant::calib;
+use omniquant::config::{CalibConfig, QuantSetting, TrainConfig};
+use omniquant::coordinator::{make_method, pretrain};
+use omniquant::data::{Corpus, CorpusId, TaskKind, ZeroShotTask};
+use omniquant::eval;
+use omniquant::report::fmt_ppl;
+use omniquant::runtime::load_runtime;
+use omniquant::serve::Engine;
+use omniquant::util::{fmt_bytes, Rng};
+
+fn main() -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let rt = load_runtime("omni-1m")?;
+    let desc = rt.model().clone();
+    println!(
+        "== end-to-end: {} ({} params, {} layers, d={}) on {} ==",
+        desc.name,
+        rt.manifest().model_param_size(),
+        desc.n_layers,
+        desc.d_model,
+        rt.platform()
+    );
+
+    // ---- 1. pre-train -------------------------------------------------
+    let corpus = Corpus::new(CorpusId::Wiki, desc.vocab);
+    let train_cfg = TrainConfig { steps: 300, log_every: 25, ..Default::default() };
+    println!("\n-- phase 1: pre-training ({} steps) --", train_cfg.steps);
+    let trained = pretrain(&rt, &train_cfg, &corpus)?;
+    let fp = trained.params;
+    fp.save(std::path::Path::new("ckpt/omni-1m.oqc"))?;
+    println!(
+        "loss curve: {}",
+        trained
+            .losses
+            .iter()
+            .step_by(25)
+            .map(|l| format!("{l:.2}"))
+            .collect::<Vec<_>>()
+            .join(" -> ")
+    );
+
+    // ---- 2+3. quantize + evaluate --------------------------------------
+    let calib_cfg = CalibConfig { samples: 16, epochs: 6, ..Default::default() };
+    let fp_ppl = eval::perplexity(&rt, &fp, &QuantSetting::FP16, &corpus, 8)?;
+    let task = ZeroShotTask::generate(TaskKind::BoolqS, &corpus, 32, desc.seq_len, 3);
+    let fp_acc = eval::zero_shot_accuracy(&rt, &fp, &QuantSetting::FP16, &task)?;
+    println!("\n-- phase 2: quantization --");
+    println!("{:<12} {:>10} {:>10} {:>8}", "method", "w3a16 ppl", "w4a4 ppl", "calib s");
+    println!("{:<12} {:>10} {:>10} {:>8}", "fp16", fmt_ppl(fp_ppl), fmt_ppl(fp_ppl), "-");
+    let mut w3_omni = None;
+    for method_name in ["rtn", "gptq", "awq", "smoothquant", "omniquant"] {
+        let mut row = format!("{method_name:<12}");
+        let mut secs_total = 0.0;
+        for s in ["w3a16", "w4a4"] {
+            let setting = QuantSetting::parse(s)?;
+            let mut method = make_method(method_name, &calib_cfg)?;
+            let out = calib::quantize_model(
+                &rt, &fp, method.as_mut(), setting, &corpus, calib_cfg.samples, 1,
+            )?;
+            secs_total += out.secs;
+            let ppl = eval::perplexity(&rt, &out.qparams, &setting, &corpus, 8)?;
+            row.push_str(&format!(" {:>10}", fmt_ppl(ppl)));
+            if method_name == "omniquant" && s == "w3a16" {
+                w3_omni = Some(out.qparams);
+            }
+        }
+        row.push_str(&format!(" {secs_total:>8.1}"));
+        println!("{row}");
+    }
+    let w3 = w3_omni.unwrap();
+    let w3_setting = QuantSetting::parse("w3a16")?;
+    let q_acc = eval::zero_shot_accuracy(&rt, &w3, &w3_setting, &task)?;
+    println!(
+        "\nzero-shot boolq-s accuracy: fp {:.1}% -> omniquant w3a16 {:.1}%",
+        100.0 * fp_acc,
+        100.0 * q_acc
+    );
+
+    // ---- 4. serve -------------------------------------------------------
+    println!("\n-- phase 3: packed-weight serving --");
+    for (label, params, setting) in [
+        ("fp32", &fp, QuantSetting::FP16),
+        ("w3a16g64", &w3, QuantSetting::parse("w3a16g64")?),
+    ] {
+        let engine = Engine::build(params, setting)?;
+        let mut rng = Rng::new(5);
+        let prompt = corpus.sample(77, 16);
+        let (gen, stats) = engine.generate(&prompt, 64, 0.0, &mut rng);
+        println!(
+            "{label:<10} weights {:>10}  decode {:>7.0} tok/s  first tokens {:?}",
+            fmt_bytes(engine.weight_bytes()),
+            stats.decode_tok_per_s,
+            &gen[..8.min(gen.len())]
+        );
+    }
+
+    println!("\n== end-to-end complete in {:.0}s ==", t0.elapsed().as_secs_f64());
+    Ok(())
+}

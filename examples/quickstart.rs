@@ -1,0 +1,55 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Trains a tiny model for a handful of steps, quantizes it to W3A16 with
+//! OmniQuant (LWC), compares perplexity against RTN, and generates a few
+//! tokens from the packed-weight engine.
+//!
+//!     make artifacts MODELS=omni-test
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use omniquant::calib;
+use omniquant::config::{CalibConfig, QuantSetting, TrainConfig};
+use omniquant::coordinator::{make_method, pretrain};
+use omniquant::data::{Corpus, CorpusId};
+use omniquant::eval;
+use omniquant::runtime::load_runtime;
+use omniquant::serve::Engine;
+use omniquant::util::{fmt_bytes, Rng};
+
+fn main() -> Result<()> {
+    // 1. load the AOT artifacts (HLO graphs compiled by `make artifacts`)
+    let rt = load_runtime("omni-test")?;
+    println!("loaded {} on {}", rt.model().name, rt.platform());
+
+    // 2. pre-train a tiny model on the synthetic corpus
+    let corpus = Corpus::new(CorpusId::Wiki, rt.model().vocab);
+    let train_cfg = TrainConfig { steps: 120, log_every: 40, ..Default::default() };
+    let trained = pretrain(&rt, &train_cfg, &corpus)?;
+    let fp = trained.params;
+
+    // 3. quantize to 3-bit weights: RTN baseline vs OmniQuant
+    let setting = QuantSetting::parse("w3a16")?;
+    let calib_cfg = CalibConfig { samples: 8, epochs: 4, ..Default::default() };
+    let fp_ppl = eval::perplexity(&rt, &fp, &QuantSetting::FP16, &corpus, 4)?;
+    println!("\nFP16 perplexity: {fp_ppl:.2}");
+    for method_name in ["rtn", "omniquant"] {
+        let mut method = make_method(method_name, &calib_cfg)?;
+        let out = calib::quantize_model(&rt, &fp, method.as_mut(), setting, &corpus, 8, 1)?;
+        let ppl = eval::perplexity(&rt, &out.qparams, &setting, &corpus, 4)?;
+        println!("{method_name:<10} w3a16 perplexity: {ppl:.2}   ({:.1}s)", out.secs);
+
+        // 4. deploy: pack to 3-bit and generate from pure Rust
+        if method_name == "omniquant" {
+            let engine = Engine::build(&out.qparams, setting)?;
+            let mut rng = Rng::new(0);
+            let prompt = corpus.sample(42, 8);
+            let (gen, stats) = engine.generate(&prompt, 24, 0.8, &mut rng);
+            println!("\npacked weights: {}", fmt_bytes(engine.weight_bytes()));
+            println!("prompt {prompt:?}\n  -> {gen:?}");
+            println!("decode: {:.0} tok/s", stats.decode_tok_per_s);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Serving scenario: load (or train) a checkpoint, quantize it at several
+//! bit-widths, and benchmark batched decoding from the packed-weight
+//! engine — the deployment story of paper section 4.5 / Table 3.
+//!
+//!     make artifacts MODELS=omni-1m
+//!     cargo run --release --example serve_quantized
+
+use anyhow::Result;
+
+use omniquant::calib;
+use omniquant::config::{CalibConfig, QuantSetting, TrainConfig};
+use omniquant::coordinator::{make_method, pretrain};
+use omniquant::data::{Corpus, CorpusId};
+use omniquant::model::ModelParams;
+use omniquant::runtime::load_runtime;
+use omniquant::serve::Engine;
+use omniquant::util::fmt_bytes;
+
+fn main() -> Result<()> {
+    let rt = load_runtime("omni-1m")?;
+    let corpus = Corpus::new(CorpusId::Wiki, rt.model().vocab);
+
+    // reuse the end-to-end checkpoint when present
+    let ckpt = std::path::Path::new("ckpt/omni-1m.oqc");
+    let fp = if ckpt.exists() {
+        ModelParams::load(rt.manifest(), ckpt)?
+    } else {
+        let cfg = TrainConfig { steps: 200, log_every: 50, ..Default::default() };
+        let out = pretrain(&rt, &cfg, &corpus)?;
+        out.params.save(ckpt)?;
+        out.params
+    };
+
+    let calib_cfg = CalibConfig { samples: 8, epochs: 4, ..Default::default() };
+    println!(
+        "{:<12} {:>10} {:>10} {:>9} {:>9}",
+        "setting", "WM", "RM", "tok/s", "speedup"
+    );
+    let mut fp_tps = 0.0f64;
+    for name in ["fp16", "w4a16g64", "w3a16g64", "w2a16g64"] {
+        let setting = QuantSetting::parse(name)?;
+        let params = if setting.wbits >= 16 {
+            fp.clone()
+        } else {
+            let mut method = make_method("omniquant", &calib_cfg)?;
+            calib::quantize_model(&rt, &fp, method.as_mut(), setting, &corpus, 8, 1)?.qparams
+        };
+        let engine = Engine::build(&params, setting)?;
+        let stats = engine.batched_decode(4, 128, 9);
+        if setting.wbits >= 16 {
+            fp_tps = stats.decode_tok_per_s;
+        }
+        println!(
+            "{name:<12} {:>10} {:>10} {:>9.0} {:>8.2}x",
+            fmt_bytes(engine.weight_bytes()),
+            fmt_bytes(stats.running_bytes),
+            stats.decode_tok_per_s,
+            stats.decode_tok_per_s / fp_tps.max(1e-9)
+        );
+    }
+    Ok(())
+}

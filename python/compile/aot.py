@@ -1,0 +1,241 @@
+"""AOT lowering: every graph the Rust coordinator needs, lowered once to HLO
+*text* (xla_extension 0.5.1 rejects jax>=0.5 serialized protos — 64-bit ids;
+the text parser reassigns ids) plus a manifest.json describing layouts,
+shapes and quantization settings. Python's only entry point; never on the
+request path.
+
+Usage:
+    python -m compile.aot --model omni-1m [--out-dir ../artifacts]
+    python -m compile.aot --all
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import layouts, model
+from .configs import (ACT_BITS, CLIP_VARIANT_SETTINGS, CLIP_VARIANTS, MODELS,
+                      QUANT_SETTINGS)
+
+CALIB_BATCH = 4
+EVAL_BATCH = 8
+TRAIN_BATCH = 8
+
+# Settings that get a calibration graph (everything the experiment matrix
+# touches; W8A8 is eval-only since SmoothQuant is near-lossless there).
+CALIB_SETTINGS = [
+    "w2a16", "w2a16g64", "w2a16g32", "w3a16", "w3a16g64",
+    "w4a16", "w4a16g64", "w6a6", "w4a4",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _spec_dict(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def build_graphs(cfg):
+    """-> {graph_name: (fn, [(arg_name, spec)...])}"""
+    d, t, v = cfg.d_model, cfg.seq_len, cfg.vocab
+    bsz = layouts.layout_size(layouts.block_layout(cfg))
+    msz = layouts.layout_size(layouts.model_layout(cfg))
+    blay = layouts.block_layout(cfg)
+
+    def unpack_block(wflat):
+        return layouts.unpack(wflat, blay)
+
+    graphs = {}
+
+    def block_fwd_g(abits, use_pallas):
+        def fn(wflat, x):
+            return model.block_fwd(cfg, unpack_block(wflat), x, abits, use_pallas)
+        return fn
+
+    graphs["block_fwd"] = (
+        block_fwd_g(16, False),
+        [("wflat", f32(bsz)), ("x", f32(CALIB_BATCH, t, d))],
+    )
+    for ab in ACT_BITS:
+        graphs[f"block_fwd_actq{ab}"] = (
+            block_fwd_g(ab, True),
+            [("wflat", f32(bsz)), ("x", f32(CALIB_BATCH, t, d))],
+        )
+
+    def block_inter_fn(wflat, x):
+        return model.block_intermediates(cfg, unpack_block(wflat), x)
+
+    graphs["block_intermediates"] = (
+        block_inter_fn,
+        [("wflat", f32(bsz)), ("x", f32(CALIB_BATCH, t, d))],
+    )
+
+    def calib_g(qs, variant):
+        def fn(wflat, theta, x, target):
+            return model.calib_loss_and_grads(cfg, qs, variant, wflat, theta, x, target)
+        return fn
+
+    for sname in CALIB_SETTINGS:
+        qs = QUANT_SETTINGS[sname]
+        if qs.group and (d % qs.group or cfg.d_ff % qs.group):
+            continue
+        tsz = layouts.layout_size(layouts.theta_layout(cfg, qs, "lwc"))
+        graphs[f"block_calib_{sname}"] = (
+            calib_g(qs, "lwc"),
+            [("wflat", f32(bsz)), ("theta", f32(tsz)),
+             ("x", f32(CALIB_BATCH, t, d)), ("target", f32(CALIB_BATCH, t, d))],
+        )
+    for variant in CLIP_VARIANTS:
+        if variant == "lwc":
+            continue
+        for sname in CLIP_VARIANT_SETTINGS:
+            qs = QUANT_SETTINGS[sname]
+            tsz = layouts.layout_size(layouts.theta_layout(cfg, qs, variant))
+            graphs[f"block_calib_{variant}_{sname}"] = (
+                calib_g(qs, variant),
+                [("wflat", f32(bsz)), ("theta", f32(tsz)),
+                 ("x", f32(CALIB_BATCH, t, d)), ("target", f32(CALIB_BATCH, t, d))],
+            )
+
+    def nll_g(abits):
+        def fn(pflat, tokens):
+            return model.model_nll(cfg, pflat, tokens, abits)
+        return fn
+
+    def nll_masked_g(abits):
+        def fn(pflat, tokens, mask):
+            return model.model_nll_masked(cfg, pflat, tokens, mask, abits)
+        return fn
+
+    graphs["model_nll"] = (nll_g(16), [("pflat", f32(msz)), ("tokens", i32(EVAL_BATCH, t))])
+    graphs["model_nll_masked"] = (
+        nll_masked_g(16),
+        [("pflat", f32(msz)), ("tokens", i32(EVAL_BATCH, t)), ("mask", f32(EVAL_BATCH, t))],
+    )
+    for ab in (4, 6, 8):
+        graphs[f"model_nll_actq{ab}"] = (
+            nll_g(ab), [("pflat", f32(msz)), ("tokens", i32(EVAL_BATCH, t))]
+        )
+        graphs[f"model_nll_masked_actq{ab}"] = (
+            nll_masked_g(ab),
+            [("pflat", f32(msz)), ("tokens", i32(EVAL_BATCH, t)), ("mask", f32(EVAL_BATCH, t))],
+        )
+
+    def train_fn(pflat, m, v, step, lr, tokens):
+        return model.train_step(cfg, pflat, m, v, step, lr, tokens)
+
+    graphs["train_step"] = (
+        train_fn,
+        [("pflat", f32(msz)), ("m", f32(msz)), ("v", f32(msz)),
+         ("step", f32()), ("lr", f32()), ("tokens", i32(TRAIN_BATCH, t))],
+    )
+    return graphs
+
+
+def lower_config(cfg, out_dir, only=None, verbose=True):
+    cfg_dir = os.path.join(out_dir, cfg.name)
+    os.makedirs(cfg_dir, exist_ok=True)
+    graphs = build_graphs(cfg)
+    manifest = {
+        "model": {
+            "name": cfg.name, "family": cfg.family, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab, "seq_len": cfg.seq_len, "head_dim": cfg.head_dim,
+        },
+        "batches": {"calib": CALIB_BATCH, "eval": EVAL_BATCH, "train": TRAIN_BATCH},
+        "block_layout": [
+            {"name": n, "shape": list(s), "offset": o, "size": z}
+            for (n, s, o, z) in layouts.block_layout(cfg)
+        ],
+        "model_layout": [
+            {"name": n, "shape": list(s), "offset": o, "size": z}
+            for (n, s, o, z) in layouts.model_layout(cfg)
+        ],
+        "theta_layouts": {},
+        "quant_settings": {
+            k: {"wbits": q.wbits, "abits": q.abits, "group": q.group}
+            for k, q in QUANT_SETTINGS.items()
+        },
+        "graphs": {},
+    }
+    for sname in CALIB_SETTINGS:
+        qs = QUANT_SETTINGS[sname]
+        if qs.group and (cfg.d_model % qs.group or cfg.d_ff % qs.group):
+            continue
+        manifest["theta_layouts"][sname] = [
+            {"name": n, "shape": list(s), "offset": o, "size": z}
+            for (n, s, o, z) in layouts.theta_layout(cfg, qs, "lwc")
+        ]
+    for variant in ("pact", "lsq"):
+        for sname in CLIP_VARIANT_SETTINGS:
+            qs = QUANT_SETTINGS[sname]
+            manifest["theta_layouts"][f"{variant}_{sname}"] = [
+                {"name": n, "shape": list(s), "offset": o, "size": z}
+                for (n, s, o, z) in layouts.theta_layout(cfg, qs, variant)
+            ]
+
+    for name, (fn, args) in graphs.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        specs = [s for (_, s) in args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(cfg_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *specs)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        manifest["graphs"][name] = {
+            "file": fname,
+            "inputs": [_spec_dict(n, s) for (n, s) in args],
+            "outputs": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in out_shapes],
+        }
+        if verbose:
+            print(f"  [{cfg.name}] {name}: {len(text)//1024} KiB in {time.time()-t0:.1f}s",
+                  flush=True)
+
+    with open(os.path.join(cfg_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{cfg.name}] manifest + {len(manifest['graphs'])} graphs -> {cfg_dir}",
+          flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", action="append", default=None,
+                    help="model config name (repeatable)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--graph", action="append", default=None, help="lower only these graphs")
+    args = ap.parse_args()
+    names = list(MODELS) if args.all else (args.model or ["omni-1m"])
+    t0 = time.time()
+    for n in names:
+        lower_config(MODELS[n], args.out_dir, only=args.graph)
+    print(f"total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Model and quantization configuration registry.
+
+These are the build-time source of truth; `aot.py` serializes them into
+`artifacts/<model>/manifest.json`, which the Rust coordinator parses (it has
+no Python at runtime). Sizes are scaled-down analogues of the paper's model
+columns (LLaMA 7B/13B/30B -> omni-1m/3m/7m; OPT -> opt-1m/3m): the repro
+band for this paper is hardware-gated, so we reproduce the *shape* of every
+table on tiny pre-trained models (see DESIGN.md section 3).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # "llama" (RMSNorm + SwiGLU + RoPE) | "opt" (LayerNorm + ReLU + learned pos)
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def block_linears(self):
+        """(name, cin, cout) of every quantized linear in one block."""
+        d, f = self.d_model, self.d_ff
+        if self.family == "llama":
+            return [
+                ("wq", d, d), ("wk", d, d), ("wv", d, d), ("wo", d, d),
+                ("wg", d, f), ("wu", d, f), ("wd", f, d),
+            ]
+        return [
+            ("wq", d, d), ("wk", d, d), ("wv", d, d), ("wo", d, d),
+            ("w1", d, f), ("w2", f, d),
+        ]
+
+    def block_params(self):
+        """Ordered (name, shape) list for the flat block parameter layout.
+
+        Biases exist on every linear and both norms even for the llama
+        family: they start at zero and become non-zero when the Rust
+        coordinator fuses the learnable equivalent transformation (LET)
+        shift/scale into the block (DESIGN.md section 1).
+        """
+        d = self.d_model
+        out = [("ln1_w", (d,)), ("ln1_b", (d,))]
+        for (nm, cin, cout) in self.block_linears()[:4]:
+            out += [(nm, (cin, cout)), ("b" + nm[1:], (cout,))]
+        out += [("ln2_w", (d,)), ("ln2_b", (d,))]
+        for (nm, cin, cout) in self.block_linears()[4:]:
+            out += [(nm, (cin, cout)), ("b" + nm[1:], (cout,))]
+        return out
+
+    def model_params(self):
+        """Ordered (name, shape) for the whole-model flat layout."""
+        d, v = self.d_model, self.vocab
+        out = [("embed", (v, d))]
+        if self.family == "opt":
+            out.append(("pos_embed", (self.seq_len, d)))
+        for i in range(self.n_layers):
+            out += [(f"blk{i}.{nm}", shp) for (nm, shp) in self.block_params()]
+        out += [("lnf_w", (d,)), ("lnf_b", (d,)), ("head", (d, v))]
+        return out
+
+
+MODELS = {
+    "omni-test": ModelConfig("omni-test", "llama", 64, 2, 2, 192, 256, 64),
+    "omni-1m": ModelConfig("omni-1m", "llama", 128, 4, 4, 384, 256, 128),
+    "omni-3m": ModelConfig("omni-3m", "llama", 192, 6, 6, 512, 256, 128),
+    "omni-7m": ModelConfig("omni-7m", "llama", 256, 8, 8, 768, 256, 128),
+    "opt-test": ModelConfig("opt-test", "opt", 64, 2, 2, 256, 256, 64),
+    "opt-1m": ModelConfig("opt-1m", "opt", 128, 4, 4, 512, 256, 128),
+    "opt-3m": ModelConfig("opt-3m", "opt", 192, 6, 6, 768, 256, 128),
+}
+
+
+@dataclass(frozen=True)
+class QuantSetting:
+    """Paper notation WxAy[gN]: x-bit weights, y-bit activations, group N.
+
+    group == 0 means per-output-channel (one group spanning all of Cin).
+    The paper's g128/g64 on d=4096 scale to g64/g32 on our d=128..256.
+    """
+    name: str
+    wbits: int
+    abits: int
+    group: int = 0
+
+
+QUANT_SETTINGS = {
+    "w2a16": QuantSetting("w2a16", 2, 16),
+    "w2a16g64": QuantSetting("w2a16g64", 2, 16, 64),
+    "w2a16g32": QuantSetting("w2a16g32", 2, 16, 32),
+    "w3a16": QuantSetting("w3a16", 3, 16),
+    "w3a16g64": QuantSetting("w3a16g64", 3, 16, 64),
+    "w4a16": QuantSetting("w4a16", 4, 16),
+    "w4a16g64": QuantSetting("w4a16g64", 4, 16, 64),
+    "w6a6": QuantSetting("w6a6", 6, 6),
+    "w4a4": QuantSetting("w4a4", 4, 4),
+    "w8a8": QuantSetting("w8a8", 8, 8),
+}
+
+# Activation-quant bit-widths that get dedicated eval graphs.
+ACT_BITS = (4, 6, 8)
+
+# Clipping-method variants for Table A3 (PACT / LSQ slot into the LWC slot).
+CLIP_VARIANTS = ("lwc", "pact", "lsq")
+CLIP_VARIANT_SETTINGS = ("w3a16", "w4a4")

@@ -1,0 +1,69 @@
+"""Pallas kernel for per-token dynamic activation fake quantization.
+
+Grid runs over token tiles; each program instance quantizes a
+(token_tile x channels) VMEM block with per-row (per-token) asymmetric
+MinMax statistics — the deployment-friendly scheme the paper uses for
+weight-activation quantization. Backward = STE VJP of the jnp oracle.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _actq_kernel(x_ref, o_ref, *, bits: int):
+    x = x_ref[...]
+    qmax = 2.0**bits - 1.0
+    xmax = jnp.max(x, axis=-1, keepdims=True)
+    xmin = jnp.min(x, axis=-1, keepdims=True)
+    h = (xmax - xmin) / qmax
+    h = jnp.where(h < 1e-8, 1e-8, h)
+    z = -jnp.round(xmin / h)
+    q = jnp.clip(jnp.round(x / h) + z, 0.0, qmax)
+    o_ref[...] = (q - z) * h
+
+
+def _actq_pallas(x, bits):
+    orig_shape = x.shape
+    c = orig_shape[-1]
+    t = 1
+    for s in orig_shape[:-1]:
+        t *= s
+    x2 = x.reshape(t, c)
+    # Token tile: 8 rows per program instance (sublane-aligned); fall back
+    # to a single-tile launch when the token count is not a multiple of 8.
+    tt = 8 if t % 8 == 0 else t
+    out = pl.pallas_call(
+        functools.partial(_actq_kernel, bits=bits),
+        grid=(t // tt,),
+        in_specs=[pl.BlockSpec((tt, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tt, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, c), x.dtype),
+        interpret=True,
+    )(x2)
+    return out.reshape(orig_shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def act_quant(x, bits):
+    """Per-token fake quant: Pallas forward, STE backward. A16 is a no-op."""
+    if bits >= 16:
+        return x
+    return _actq_pallas(x, bits)
+
+
+def _aq_fwd(x, bits):
+    return act_quant(x, bits), (x,)
+
+
+def _aq_bwd(bits, res, ct):
+    (x,) = res
+    _, vjp = jax.vjp(lambda a: ref.act_quant(a, bits), x)
+    return vjp(ct)
+
+
+act_quant.defvjp(_aq_fwd, _aq_bwd)

@@ -1,0 +1,91 @@
+"""Pallas kernel for LWC fake quantization (the calibration hot-spot).
+
+Layer-1 of the stack: the kernel is invoked from the Layer-2 jax graphs
+(`model.py`) so it lowers into the same HLO module that the Rust runtime
+executes. `interpret=True` is mandatory on this testbed (CPU PJRT cannot run
+Mosaic custom-calls, see /opt/xla-example/README.md).
+
+TPU adaptation (DESIGN.md section 2): instead of the CUDA threadblock layout
+a GPU quant kernel would use, the grid runs over quantization groups and each
+program instance owns a (group x cout) VMEM tile; min/max reductions run
+along the sublane axis and the quant-dequant arithmetic is fully elementwise
+on the VPU. The backward pass is the STE VJP of the jnp reference oracle
+(`ref.py`) attached via jax.custom_vjp — exact to the oracle by construction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _lwc_kernel(w_ref, g_ref, b_ref, o_ref, *, bits: int):
+    """One grid step quantizes one (group, cout_tile) tile.
+
+    w_ref : (g, ct) weight tile (one quant group per sublane run)
+    g_ref : (1, ct) gamma logits for this group
+    b_ref : (1, ct) beta logits
+    """
+    w = w_ref[...]
+    gamma = jax.nn.sigmoid(g_ref[...])
+    beta = jax.nn.sigmoid(b_ref[...])
+    qmax = 2.0**bits - 1.0
+    wmax = jnp.max(w, axis=0, keepdims=True)
+    wmin = jnp.min(w, axis=0, keepdims=True)
+    h = (gamma * wmax - beta * wmin) / qmax
+    h = jnp.where(jnp.abs(h) < 1e-8, 1e-8, h)
+    z = -jnp.round(beta * wmin / h)
+    q = jnp.clip(jnp.round(w / h) + z, 0.0, qmax)
+    o_ref[...] = (q - z) * h
+
+
+def _lwc_pallas(w, gamma_logit, beta_logit, bits, group):
+    cin, cout = w.shape
+    g = group if group > 0 else cin
+    ng = cin // g
+    # Tile the cout axis to bound the VMEM footprint of one program
+    # instance: (g x ct) f32 tiles stay well under the ~16 MiB VMEM budget
+    # (g<=256, ct<=512 -> 512 KiB).
+    ct = cout if cout <= 512 else 256
+    while cout % ct != 0:  # pragma: no cover - shapes in this repo divide
+        ct //= 2
+    grid = (ng, cout // ct)
+    return pl.pallas_call(
+        functools.partial(_lwc_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, g, ct), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((None, 1, ct), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((None, 1, ct), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((None, g, ct), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((ng, g, cout), w.dtype),
+        interpret=True,
+    )(
+        w.reshape(ng, g, cout),
+        gamma_logit.reshape(ng, 1, cout),
+        beta_logit.reshape(ng, 1, cout),
+    ).reshape(cin, cout)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fake_quant_lwc(w, gamma_logit, beta_logit, bits, group):
+    """LWC fake quant: Pallas forward, STE (reference-oracle) backward."""
+    return _lwc_pallas(w, gamma_logit, beta_logit, bits, group)
+
+
+def _fq_fwd(w, gamma_logit, beta_logit, bits, group):
+    out = _lwc_pallas(w, gamma_logit, beta_logit, bits, group)
+    return out, (w, gamma_logit, beta_logit)
+
+
+def _fq_bwd(bits, group, res, ct):
+    w, gl, bl = res
+    _, vjp = jax.vjp(lambda a, b, c: ref.fake_quant_lwc(a, b, c, bits, group), w, gl, bl)
+    return vjp(ct)
+
+
+fake_quant_lwc.defvjp(_fq_fwd, _fq_bwd)

@@ -1,0 +1,62 @@
+"""Pallas kernel for int-simulated quantized matmul (W4A4-style compute).
+
+Quantizes the activation tile per-token and the weight tile per-group, then
+multiplies — the fused pattern a deployed low-bit kernel executes. On a real
+TPU the inner product hits the MXU in bf16 after dequant; here the kernel is
+structured the same way (tiled HBM->VMEM schedule expressed by BlockSpec)
+but runs under interpret=True.
+
+The K (contraction) axis is kept whole per program instance so each quant
+group's statistics live in one tile; for this repo's shapes (K <= 768) an
+(8 x K) activation tile plus a (K x 128) weight tile is ~400 KiB of VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(x_ref, w_ref, o_ref, *, abits: int, wbits: int, group: int):
+    x = x_ref[...]
+    w = w_ref[...]
+    k, n = w.shape
+    # per-token activation quant
+    aqmax = 2.0**abits - 1.0
+    xmax = jnp.max(x, axis=-1, keepdims=True)
+    xmin = jnp.min(x, axis=-1, keepdims=True)
+    ha = jnp.maximum((xmax - xmin) / aqmax, 1e-8)
+    za = -jnp.round(xmin / ha)
+    xq = (jnp.clip(jnp.round(x / ha) + za, 0.0, aqmax) - za) * ha
+    # per-group weight quant (MinMax)
+    g = group if group > 0 else k
+    wg = w.reshape(k // g, g, n)
+    wqmax = 2.0**wbits - 1.0
+    wmax = jnp.max(wg, axis=1, keepdims=True)
+    wmin = jnp.min(wg, axis=1, keepdims=True)
+    hw = (wmax - wmin) / wqmax
+    hw = jnp.where(jnp.abs(hw) < 1e-8, 1e-8, hw)
+    zw = -jnp.round(wmin / hw)
+    wq = ((jnp.clip(jnp.round(wg / hw) + zw, 0.0, wqmax) - zw) * hw).reshape(k, n)
+    o_ref[...] = xq @ wq
+
+
+def qmatmul(x, w, abits, wbits, group):
+    """x:(t,k) @ w:(k,n) with both operands fake-quantized in-kernel."""
+    t, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    tt = 8 if t % 8 == 0 else t
+    nt = 128 if n % 128 == 0 else n
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, abits=abits, wbits=wbits, group=group),
+        grid=(t // tt, n // nt),
+        in_specs=[
+            pl.BlockSpec((tt, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, nt), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tt, nt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=True,
+    )(x, w)

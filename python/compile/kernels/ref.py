@@ -1,0 +1,139 @@
+"""Pure-jnp reference implementations (correctness oracles) for the Pallas
+kernels, plus the straight-through-estimator (STE) semantics used by the
+calibration gradient graphs.
+
+Everything here is the mathematical ground truth: the Pallas kernels in
+`fake_quant.py` / `act_quant.py` / `qmatmul.py` are tested against these in
+`python/tests/` (hypothesis sweeps shapes / bits / groups), and the custom
+VJPs of the Pallas wrappers are *defined* as the VJPs of these functions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ste_round(x):
+    """round(x) in the forward pass, identity in the backward pass."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# Learnable-weight-clipping (LWC) fake quantization — paper Eq. (2).
+# ---------------------------------------------------------------------------
+
+def fake_quant_lwc(w, gamma_logit, beta_logit, bits, group):
+    """Asymmetric MinMax quant-dequant with learnable clipping strengths.
+
+        h = (gamma * max(W) - beta * min(W)) / (2^N - 1)
+        z = -round(beta * min(W) / h)
+        W_q = clamp(round(W / h) + z, 0, 2^N - 1)
+        W_dq = (W_q - z) * h
+
+    `w`           : (cin, cout) weight, groups run along cin.
+    `gamma_logit` : (cin/g, cout) raw logits, gamma = sigmoid(gamma_logit).
+    `group == 0`  : per-output-channel (single group spanning cin).
+
+    Rounds use the STE so gradients flow to gamma/beta (through h and z)
+    and to w itself when needed.
+    """
+    cin, cout = w.shape
+    g = group if group > 0 else cin
+    ng = cin // g
+    wg = w.reshape(ng, g, cout)
+    gamma = sigmoid(gamma_logit).reshape(ng, 1, cout)
+    beta = sigmoid(beta_logit).reshape(ng, 1, cout)
+
+    wmax = jnp.max(wg, axis=1, keepdims=True)
+    wmin = jnp.min(wg, axis=1, keepdims=True)
+    qmax = 2.0**bits - 1.0
+    h = (gamma * wmax - beta * wmin) / qmax
+    h = jnp.where(jnp.abs(h) < 1e-8, 1e-8, h)
+    z = -ste_round(beta * wmin / h)
+    q = jnp.clip(ste_round(wg / h) + z, 0.0, qmax)
+    return ((q - z) * h).reshape(cin, cout)
+
+
+def fake_quant_minmax(w, bits, group):
+    """Vanilla MinMax (RTN) quant-dequant: LWC with gamma = beta = 1."""
+    cin, cout = w.shape
+    g = group if group > 0 else cin
+    ng = cin // g
+    big = jnp.full((ng, cout), 30.0, w.dtype)  # sigmoid(30) == 1.0 in f32
+    return fake_quant_lwc(w, big, big, bits, group)
+
+
+# ---------------------------------------------------------------------------
+# PACT / LSQ clipping variants (Table A3). Both replace LWC's relative
+# clipping strengths with absolute learnable quantities.
+# ---------------------------------------------------------------------------
+
+def fake_quant_pact(w, t_min, t_max, bits, group):
+    """PACT-style: clamp W to learnable absolute thresholds, then MinMax.
+
+    `t_min`/`t_max`: (cin/g, cout) learnable clip values (absolute).
+    """
+    cin, cout = w.shape
+    g = group if group > 0 else cin
+    ng = cin // g
+    wg = w.reshape(ng, g, cout)
+    lo = t_min.reshape(ng, 1, cout)
+    hi = t_max.reshape(ng, 1, cout)
+    hi = jnp.maximum(hi, lo + 1e-6)
+    wc = jnp.clip(wg, lo, hi)
+    qmax = 2.0**bits - 1.0
+    h = (hi - lo) / qmax
+    z = -ste_round(lo / h)
+    q = jnp.clip(ste_round(wc / h) + z, 0.0, qmax)
+    return ((q - z) * h).reshape(cin, cout)
+
+
+def fake_quant_lsq(w, log_h, zp, bits, group):
+    """LSQ-style: learn the step size (log-parameterized) and zero point."""
+    cin, cout = w.shape
+    g = group if group > 0 else cin
+    ng = cin // g
+    wg = w.reshape(ng, g, cout)
+    h = jnp.exp(log_h).reshape(ng, 1, cout)
+    z = zp.reshape(ng, 1, cout)
+    qmax = 2.0**bits - 1.0
+    zr = ste_round(z)
+    q = jnp.clip(ste_round(wg / h) + zr, 0.0, qmax)
+    return ((q - zr) * h).reshape(cin, cout)
+
+
+# ---------------------------------------------------------------------------
+# Per-token dynamic activation fake quantization (asymmetric MinMax).
+# ---------------------------------------------------------------------------
+
+def act_quant(x, bits):
+    """Per-token (last-axis statistics) asymmetric MinMax quant-dequant.
+
+    `x`: (..., c); every leading-index "token" is quantized independently,
+    matching the paper's deployment-friendly per-token scheme. bits >= 16
+    is a no-op (FP path), so one code path covers WxA16.
+    """
+    if bits >= 16:
+        return x
+    xmax = jnp.max(x, axis=-1, keepdims=True)
+    xmin = jnp.min(x, axis=-1, keepdims=True)
+    qmax = 2.0**bits - 1.0
+    h = (xmax - xmin) / qmax
+    h = jnp.where(h < 1e-8, 1e-8, h)
+    z = -ste_round(xmin / h)
+    q = jnp.clip(ste_round(x / h) + z, 0.0, qmax)
+    return (q - z) * h
+
+
+# ---------------------------------------------------------------------------
+# Int-simulated matmul: quantize both operands (per-token / per-group) and
+# multiply — the compute pattern a real W4A4 kernel executes on the MXU.
+# ---------------------------------------------------------------------------
+
+def qmatmul(x, w, abits, wbits, group):
+    xq = act_quant(x, abits)
+    wq = fake_quant_minmax(w, wbits, group)
+    return xq @ wq

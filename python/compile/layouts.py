@@ -1,0 +1,94 @@
+"""Flat-buffer parameter layouts shared between the jax graphs and Rust.
+
+Every AOT graph takes whole parameter sets as a single flat f32 vector
+(plus data inputs); this keeps PJRT argument counts tiny and makes the Rust
+side's checkpoint format trivial (one vector + this layout). The layout is
+serialized into manifest.json so Rust can slice by name.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .configs import ModelConfig, QuantSetting
+
+
+def make_layout(named_shapes):
+    """[(name, shape)] -> [(name, shape, offset, size)] with contiguous offsets."""
+    out = []
+    off = 0
+    for name, shape in named_shapes:
+        size = int(np.prod(shape)) if shape else 1
+        out.append((name, tuple(shape), off, size))
+        off += size
+    return out
+
+
+def layout_size(layout):
+    return layout[-1][2] + layout[-1][3] if layout else 0
+
+
+def unpack(flat, layout):
+    """Slice a flat jnp vector into a {name: array} dict (traceable)."""
+    return {
+        name: jnp.reshape(flat[off:off + size], shape)
+        for (name, shape, off, size) in layout
+    }
+
+
+def pack(d, layout):
+    """Inverse of unpack (used in train_step to re-flatten updates)."""
+    return jnp.concatenate([jnp.reshape(d[name], (-1,)) for (name, _, _, _) in layout])
+
+
+# ---------------------------------------------------------------------------
+# Theta (learnable quantization parameter) layouts.
+# ---------------------------------------------------------------------------
+
+def n_groups(cin: int, group: int) -> int:
+    return cin // group if group > 0 else 1
+
+
+def theta1_shapes(cfg: ModelConfig, qs: QuantSetting, variant: str = "lwc"):
+    """Per-linear clipping parameters. Two tensors per linear:
+
+      lwc  : gamma_logit, beta_logit   (relative clipping strengths, Eq. 2)
+      pact : t_min, t_max              (absolute thresholds)
+      lsq  : log_h, zp                 (step size + zero point)
+    """
+    names = {"lwc": ("gamma", "beta"), "pact": ("tmin", "tmax"), "lsq": ("logh", "zp")}[variant]
+    out = []
+    for (nm, cin, cout) in cfg.block_linears():
+        ng = n_groups(cin, qs.group)
+        out.append((f"{nm}.{names[0]}", (ng, cout)))
+        out.append((f"{nm}.{names[1]}", (ng, cout)))
+    return out
+
+
+def theta2_shapes(cfg: ModelConfig):
+    """LET parameters (Eq. 3 / Eq. 5). Scales are log-parameterized.
+
+    s1/d1: qkv input (fused into norm1)        s2/d2: out-proj input (via V)
+    s3/d3: FFN input (fused into norm2)        lsa:   Q/K affinity scale
+    For the llama family lsa has d/2 entries (shared across RoPE rotation
+    pairs so the fusion into Wq/Wk commutes with the rotation).
+    """
+    d = cfg.d_model
+    sa = d // 2 if cfg.family == "llama" else d
+    return [
+        ("ls1", (d,)), ("d1", (d,)),
+        ("ls2", (d,)), ("d2", (d,)),
+        ("ls3", (d,)), ("d3", (d,)),
+        ("lsa", (sa,)),
+    ]
+
+
+def theta_layout(cfg: ModelConfig, qs: QuantSetting, variant: str = "lwc"):
+    return make_layout(theta1_shapes(cfg, qs, variant) + theta2_shapes(cfg))
+
+
+def block_layout(cfg: ModelConfig):
+    return make_layout(cfg.block_params())
+
+
+def model_layout(cfg: ModelConfig):
+    return make_layout(cfg.model_params())

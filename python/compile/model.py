@@ -1,0 +1,278 @@
+"""Layer-2: jax definition of the transformer families, the OmniQuant
+calibration graph (LET + LWC, paper Eq. 1-5), evaluation graphs and the
+pre-training step. Lowered once by `aot.py`; never imported at runtime.
+
+Weight convention: linears are stored (cin, cout) and applied as `x @ w + b`.
+Quant groups run along cin. Biases exist everywhere (zero until the Rust
+coordinator fuses LET shifts into them).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layouts
+from .configs import ModelConfig, QuantSetting
+from .kernels import ref
+from .kernels import fake_quant as pk_fq
+from .kernels import act_quant as pk_aq
+
+
+# ---------------------------------------------------------------------------
+# Primitive selection: block-level (calibration) graphs run the Pallas
+# kernels on the hot path; whole-model eval graphs use the bit-identical jnp
+# oracle (leaner HLO for the CPU PJRT backend). Tested equal in python/tests.
+# ---------------------------------------------------------------------------
+
+def _fq_lwc(use_pallas):
+    return pk_fq.fake_quant_lwc if use_pallas else ref.fake_quant_lwc
+
+
+def _aq(use_pallas):
+    return pk_aq.act_quant if use_pallas else ref.act_quant
+
+
+# ---------------------------------------------------------------------------
+# Norms, rope, attention.
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, b, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w + b
+
+
+def layernorm(x, w, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def norm(cfg, x, w, b):
+    return rmsnorm(x, w, b) if cfg.family == "llama" else layernorm(x, w, b)
+
+
+def rope_tables(t, head_dim):
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    j = jnp.arange(head_dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * j / head_dim)
+    return jnp.cos(ang), jnp.sin(ang)  # (t, hd/2)
+
+
+def apply_rope(q, cos, sin):
+    """q: (b, h, t, hd); rotate pairs (j, j+hd/2)."""
+    hd = q.shape[-1]
+    q1, q2 = q[..., : hd // 2], q[..., hd // 2:]
+    return jnp.concatenate([q1 * cos - q2 * sin, q1 * sin + q2 * cos], axis=-1)
+
+
+def split_heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    b, h, t, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+
+
+def attention(cfg, q, k, v):
+    """q,k,v: (b, t, d) -> (b, t, d); causal; softmax output kept FP
+    (long-tail distribution, paper section 4.1)."""
+    h = cfg.n_heads
+    qh, kh, vh = split_heads(q, h), split_heads(k, h), split_heads(v, h)
+    t = q.shape[1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(cfg.head_dim))
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    scores = jnp.where(mask[None, None] > 0, scores, -1e9)
+    p = jax.nn.softmax(scores, axis=-1)
+    return merge_heads(jnp.einsum("bhqk,bhkd->bhqd", p, vh))
+
+
+# ---------------------------------------------------------------------------
+# Runtime-semantics block forward: weights are whatever the coordinator
+# passes (already LET-fused / fake-quantized). Activation quant (abits<16)
+# happens in-graph at the deployment points.
+# ---------------------------------------------------------------------------
+
+def block_fwd(cfg: ModelConfig, bw: dict, x, abits: int = 16, use_pallas: bool = False):
+    aq = _aq(use_pallas)
+    x1 = aq(norm(cfg, x, bw["ln1_w"], bw["ln1_b"]), abits)
+    q = x1 @ bw["wq"] + bw["bq"]
+    k = x1 @ bw["wk"] + bw["bk"]
+    v = x1 @ bw["wv"] + bw["bv"]
+    if cfg.family == "llama":
+        cos, sin = rope_tables(x.shape[1], cfg.head_dim)
+        q = merge_heads(apply_rope(split_heads(q, cfg.n_heads), cos, sin))
+        k = merge_heads(apply_rope(split_heads(k, cfg.n_heads), cos, sin))
+    # Q/K/V enter the affinity matmul / KV cache quantized (per-token,
+    # per-head stats for Q/K).
+    qh = merge_heads(aq(split_heads(q, cfg.n_heads), abits))
+    kh = merge_heads(aq(split_heads(k, cfg.n_heads), abits))
+    vq = aq(v, abits)
+    ao = aq(attention(cfg, qh, kh, vq), abits)
+    h1 = x + ao @ bw["wo"] + bw["bo"]
+    x2 = aq(norm(cfg, h1, bw["ln2_w"], bw["ln2_b"]), abits)
+    if cfg.family == "llama":
+        g = x2 @ bw["wg"] + bw["bg"]
+        u = x2 @ bw["wu"] + bw["bu"]
+        mid = aq(jax.nn.silu(g) * u, abits)
+        return h1 + mid @ bw["wd"] + bw["bd"]
+    mid = aq(jax.nn.relu(x2 @ bw["w1"] + bw["b1"]), abits)
+    return h1 + mid @ bw["w2"] + bw["b2"]
+
+
+def block_intermediates(cfg: ModelConfig, bw: dict, x):
+    """FP forward that also returns the input of every quantized linear
+    (GPTQ Hessians, AWQ scales, SmoothQuant/OS+ initialization, Fig. A2)."""
+    x1 = norm(cfg, x, bw["ln1_w"], bw["ln1_b"])
+    q = x1 @ bw["wq"] + bw["bq"]
+    k = x1 @ bw["wk"] + bw["bk"]
+    v = x1 @ bw["wv"] + bw["bv"]
+    if cfg.family == "llama":
+        cos, sin = rope_tables(x.shape[1], cfg.head_dim)
+        q = merge_heads(apply_rope(split_heads(q, cfg.n_heads), cos, sin))
+        k = merge_heads(apply_rope(split_heads(k, cfg.n_heads), cos, sin))
+    ao = attention(cfg, q, k, v)
+    h1 = x + ao @ bw["wo"] + bw["bo"]
+    x2 = norm(cfg, h1, bw["ln2_w"], bw["ln2_b"])
+    if cfg.family == "llama":
+        g = x2 @ bw["wg"] + bw["bg"]
+        u = x2 @ bw["wu"] + bw["bu"]
+        mid = jax.nn.silu(g) * u
+        out = h1 + mid @ bw["wd"] + bw["bd"]
+    else:
+        mid = jax.nn.relu(x2 @ bw["w1"] + bw["b1"])
+        out = h1 + mid @ bw["w2"] + bw["b2"]
+    return x1, q, k, v, ao, x2, mid, out
+
+
+# ---------------------------------------------------------------------------
+# Calibration forward: full-precision weights + theta, LET applied
+# explicitly (Eq. 3/5), weights fake-quantized through the clipping variant,
+# activations fake-quantized per-token. Mirrors exactly what the fused
+# runtime model computes, so the minimized error is the deployed error.
+# ---------------------------------------------------------------------------
+
+def _sa_full(cfg, lsa):
+    sa = jnp.exp(lsa)
+    if cfg.family == "llama":
+        # (d/2,) -> per-head duplicated across rotation pairs -> (d,)
+        h, hd = cfg.n_heads, cfg.head_dim
+        sah = sa.reshape(h, hd // 2)
+        return jnp.concatenate([sah, sah], axis=-1).reshape(cfg.d_model)
+    return sa
+
+
+def calib_block_fwd(cfg: ModelConfig, qs: QuantSetting, bw: dict, th: dict,
+                    x, variant: str = "lwc", use_pallas: bool = True):
+    aq = _aq(use_pallas)
+    wb, ab, grp = qs.wbits, qs.abits, qs.group
+
+    def fq(name, w):
+        if variant == "lwc":
+            return _fq_lwc(use_pallas)(w, th[f"{name}.gamma"], th[f"{name}.beta"], wb, grp)
+        if variant == "pact":
+            return ref.fake_quant_pact(w, th[f"{name}.tmin"], th[f"{name}.tmax"], wb, grp)
+        return ref.fake_quant_lsq(w, th[f"{name}.logh"], th[f"{name}.zp"], wb, grp)
+
+    s1, d1 = jnp.exp(th["ls1"]), th["d1"]
+    s2, d2 = jnp.exp(th["ls2"]), th["d2"]
+    s3, d3 = jnp.exp(th["ls3"]), th["d3"]
+    sa = _sa_full(cfg, th["lsa"])
+
+    # --- attention ---
+    x1 = norm(cfg, x, bw["ln1_w"], bw["ln1_b"])
+    x1t = aq((x1 - d1) / s1, ab)
+    q = x1t @ fq("wq", s1[:, None] * bw["wq"]) + (d1 @ bw["wq"] + bw["bq"])
+    k = x1t @ fq("wk", s1[:, None] * bw["wk"]) + (d1 @ bw["wk"] + bw["bk"])
+    v = x1t @ fq("wv", s1[:, None] * bw["wv"]) + (d1 @ bw["wv"] + bw["bv"])
+    if cfg.family == "llama":
+        cos, sin = rope_tables(x.shape[1], cfg.head_dim)
+        q = merge_heads(apply_rope(split_heads(q, cfg.n_heads), cos, sin))
+        k = merge_heads(apply_rope(split_heads(k, cfg.n_heads), cos, sin))
+    # affinity scale (Eq. 5) then per-token-per-head quant
+    qh = merge_heads(aq(split_heads(q / sa, cfg.n_heads), ab))
+    kh = merge_heads(aq(split_heads(k * sa, cfg.n_heads), ab))
+    # out-proj LET rides on V (P rows sum to 1, so the shift commutes)
+    vt = aq((v - d2) / s2, ab)
+    ao = aq(attention(cfg, qh, kh, vt), ab)
+    o = ao @ fq("wo", s2[:, None] * bw["wo"]) + (d2 @ bw["wo"] + bw["bo"])
+    h1 = x + o
+
+    # --- ffn ---
+    x2 = norm(cfg, h1, bw["ln2_w"], bw["ln2_b"])
+    x2t = aq((x2 - d3) / s3, ab)
+    if cfg.family == "llama":
+        g = x2t @ fq("wg", s3[:, None] * bw["wg"]) + (d3 @ bw["wg"] + bw["bg"])
+        u = x2t @ fq("wu", s3[:, None] * bw["wu"]) + (d3 @ bw["wu"] + bw["bu"])
+        mid = aq(jax.nn.silu(g) * u, ab)
+        return h1 + mid @ fq("wd", bw["wd"]) + bw["bd"]  # no LET on 2nd FFN linear
+    mid = aq(jax.nn.relu(x2t @ fq("w1", s3[:, None] * bw["w1"]) + (d3 @ bw["w1"] + bw["b1"])), ab)
+    return h1 + mid @ fq("w2", bw["w2"]) + bw["b2"]
+
+
+def calib_loss_and_grads(cfg, qs, variant, wflat, theta_flat, x, target, use_pallas=True):
+    """-> (loss, dtheta_flat). Block-wise error minimization (Eq. 1)."""
+    blay = layouts.block_layout(cfg)
+    tlay = layouts.theta_layout(cfg, qs, variant)
+    bw = layouts.unpack(wflat, blay)
+
+    def loss_fn(tf):
+        th = layouts.unpack(tf, tlay)
+        out = calib_block_fwd(cfg, qs, bw, th, x, variant, use_pallas)
+        return jnp.mean((out - target) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(theta_flat)
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# Whole-model graphs.
+# ---------------------------------------------------------------------------
+
+def model_fwd(cfg: ModelConfig, pflat, tokens, abits: int = 16, use_pallas: bool = False):
+    lay = layouts.model_layout(cfg)
+    p = layouts.unpack(pflat, lay)
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.family == "opt":
+        x = x + p["pos_embed"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        bw = {nm.split(".", 1)[1]: p[nm] for nm in p if nm.startswith(f"blk{i}.")}
+        x = block_fwd(cfg, bw, x, abits, use_pallas)
+    x = norm(cfg, x, p["lnf_w"], p["lnf_b"])
+    return x @ p["head"]
+
+
+def model_nll(cfg, pflat, tokens, abits=16):
+    """Mean next-token negative log likelihood (perplexity = exp(out))."""
+    logits = model_fwd(cfg, pflat, tokens, abits)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def model_nll_masked(cfg, pflat, tokens, mask, abits=16):
+    """Per-sequence summed NLL over masked positions (zero-shot scoring:
+    mask selects the answer-option tokens). -> (batch,)"""
+    logits = model_fwd(cfg, pflat, tokens, abits)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask[:, 1:], axis=-1)
+
+
+def train_step(cfg, pflat, m, v, step, lr, tokens):
+    """One AdamW pre-training step, fully inside the graph.
+    -> (pflat', m', v', loss)."""
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.01
+
+    loss, grads = jax.value_and_grad(lambda p: model_nll(cfg, p, tokens))(pflat)
+    m2 = b1 * m + (1.0 - b1) * grads
+    v2 = b2 * v + (1.0 - b2) * grads * grads
+    t = step + 1.0
+    mhat = m2 / (1.0 - jnp.power(b1, t))
+    vhat = v2 / (1.0 - jnp.power(b2, t))
+    p2 = pflat - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * pflat)
+    return p2, m2, v2, loss

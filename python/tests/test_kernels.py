@@ -1,0 +1,210 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (`ref.py`).
+
+Hypothesis sweeps shapes / bit-widths / group sizes; gradients of the
+custom-VJP wrappers are checked against the oracle's autodiff exactly
+(they are defined to be the same function).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, fake_quant, act_quant, qmatmul
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+def assert_quant_close(a, b, step):
+    """Quantizers computed twice with different fp instruction orderings can
+    legitimately disagree by exactly one quantization step on round-to-even
+    ties (1-ulp differences in the scale h). Require: almost all elements
+    bit-close, and no element further apart than one step."""
+    a, b = np.asarray(a), np.asarray(b)
+    diff = np.abs(a - b)
+    assert (diff <= np.broadcast_to(step, a.shape) * 1.01 + 1e-6).all(), diff.max()
+    frac = (diff > 1e-5 * (1 + np.abs(a))).mean()
+    assert frac < 5e-3, f"{frac:.4%} of elements off by a quant step"
+
+
+# ---------------------------------------------------------------------------
+# fake_quant_lwc
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    cin_g=st.sampled_from([(32, 0), (64, 0), (64, 32), (128, 32), (128, 64), (96, 32)]),
+    cout=st.sampled_from([16, 48, 128]),
+    bits=st.integers(min_value=2, max_value=8),
+)
+def test_fake_quant_matches_ref(cin_g, cout, bits):
+    cin, group = cin_g
+    ng = cin // group if group else 1
+    w = _rand(cin, cout)
+    gl = _rand(ng, cout)
+    bl = _rand(ng, cout)
+    a = ref.fake_quant_lwc(w, gl, bl, bits, group)
+    b = fake_quant.fake_quant_lwc(w, gl, bl, bits, group)
+    g = group if group else cin
+    wg = np.asarray(w).reshape(cin // g, g, cout)
+    step = ((wg.max(1) - wg.min(1)) / (2.0**bits - 1))[:, None, :]
+    step = np.broadcast_to(step, wg.shape).reshape(cin, cout)
+    assert_quant_close(a, b, step)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bits=st.integers(min_value=2, max_value=4),
+    group=st.sampled_from([0, 32]),
+)
+def test_fake_quant_grads_match_ref(bits, group):
+    cin, cout = 64, 32
+    ng = cin // group if group else 1
+    w, gl, bl = _rand(cin, cout), _rand(ng, cout), _rand(ng, cout)
+    ct = _rand(cin, cout)
+
+    def loss(fn):
+        return lambda *a: jnp.sum(fn(*a, bits, group) * ct)
+
+    gr = jax.grad(loss(ref.fake_quant_lwc), argnums=(0, 1, 2))(w, gl, bl)
+    gp = jax.grad(loss(fake_quant.fake_quant_lwc), argnums=(0, 1, 2))(w, gl, bl)
+    for a, b in zip(gr, gp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+
+
+def test_fake_quant_levels_on_grid():
+    """Quantized-dequantized values must lie on the (h, z) integer grid."""
+    w = _rand(64, 16)
+    big = jnp.full((1, 16), 30.0)
+    out = np.asarray(ref.fake_quant_lwc(w, big, big, 3, 0))
+    for c in range(16):
+        col = out[:, c]
+        assert len(np.unique(col)) <= 8  # 2^3 levels
+
+
+def test_fake_quant_minmax_preserves_range():
+    """With gamma = beta = 1 the extreme values survive quantization."""
+    w = _rand(128, 8) * 3.0
+    out = np.asarray(ref.fake_quant_minmax(w, 8, 0))
+    wn = np.asarray(w)
+    np.testing.assert_allclose(out.max(0), wn.max(0), atol=0.05)
+    np.testing.assert_allclose(out.min(0), wn.min(0), atol=0.05)
+
+
+def test_fake_quant_clipping_shrinks_range():
+    """gamma, beta < 1 must clip the dequantized range."""
+    w = _rand(128, 8)
+    half = jnp.zeros((1, 8))  # sigmoid(0) = 0.5
+    out = np.asarray(ref.fake_quant_lwc(w, half, half, 8, 0))
+    wn = np.asarray(w)
+    assert (out.max(0) <= 0.5 * wn.max(0) + 0.05).all()
+    assert (out.min(0) >= 0.5 * wn.min(0) - 0.05).all()
+
+
+def test_fake_quant_error_decreases_with_bits():
+    w = _rand(256, 32)
+    errs = []
+    for bits in (2, 3, 4, 6, 8):
+        dq = ref.fake_quant_minmax(w, bits, 0)
+        errs.append(float(jnp.mean((dq - w) ** 2)))
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < 1e-4
+
+
+def test_groupwise_beats_per_channel():
+    """Group-wise quantization must reduce (or match) quantization error."""
+    w = _rand(128, 32) * jnp.asarray(RNG.uniform(0.1, 3.0, (128, 1)).astype(np.float32))
+    e_pc = float(jnp.mean((ref.fake_quant_minmax(w, 3, 0) - w) ** 2))
+    e_g = float(jnp.mean((ref.fake_quant_minmax(w, 3, 32) - w) ** 2))
+    assert e_g <= e_pc
+
+
+def test_column_scale_equivariance():
+    """fq(W / s)[:, c] == fq(W)[:, c] / s_c — the property that makes the
+    Rust LET fusion exact (DESIGN.md section 1)."""
+    w = _rand(64, 16)
+    s = jnp.asarray(RNG.uniform(0.5, 2.0, (16,)).astype(np.float32))
+    gl, bl = _rand(2, 16), _rand(2, 16)
+    a = ref.fake_quant_lwc(w / s[None, :], gl, bl, 4, 32)
+    b = ref.fake_quant_lwc(w, gl, bl, 4, 32) / s[None, :]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# act_quant
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.sampled_from([1, 7, 8, 24, 64]),
+    c=st.sampled_from([16, 100, 128]),
+    bits=st.integers(min_value=2, max_value=8),
+)
+def test_act_quant_matches_ref(t, c, bits):
+    x = _rand(t, c) * 2.0
+    a = ref.act_quant(x, bits)
+    b = act_quant.act_quant(x, bits)
+    xn = np.asarray(x)
+    step = ((xn.max(-1) - xn.min(-1)) / (2.0**bits - 1))[:, None]
+    assert_quant_close(a, b, step)
+
+
+def test_act_quant_higher_rank():
+    x = _rand(2, 4, 8, 32)
+    a = ref.act_quant(x, 4)
+    b = act_quant.act_quant(x, 4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_act_quant_a16_noop():
+    x = _rand(8, 32)
+    assert np.asarray(act_quant.act_quant(x, 16) == x).all()
+
+
+def test_act_quant_per_token_independent():
+    """Quantizing a batch equals quantizing each token separately."""
+    x = _rand(6, 40)
+    full = np.asarray(ref.act_quant(x, 4))
+    rows = np.stack([np.asarray(ref.act_quant(x[i:i + 1], 4))[0] for i in range(6)])
+    np.testing.assert_allclose(full, rows, atol=1e-6)
+
+
+def test_act_quant_grads_are_ste():
+    x = _rand(8, 32)
+    g = jax.grad(lambda a: jnp.sum(act_quant.act_quant(a, 4) ** 2))(x)
+    gr = jax.grad(lambda a: jnp.sum(ref.act_quant(a, 4) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.sampled_from([8, 24]),
+    k=st.sampled_from([64, 96]),
+    n=st.sampled_from([32, 128]),
+    abits=st.sampled_from([4, 8]),
+    wbits=st.sampled_from([2, 4]),
+    group=st.sampled_from([0, 32]),
+)
+def test_qmatmul_matches_ref(t, k, n, abits, wbits, group):
+    x, w = _rand(t, k), _rand(k, n)
+    a = ref.qmatmul(x, w, abits, wbits, group)
+    b = qmatmul.qmatmul(x, w, abits, wbits, group)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+
+
+def test_qmatmul_approaches_exact_with_bits():
+    x, w = _rand(16, 64), _rand(64, 32)
+    exact = np.asarray(x @ w)
+    e8 = np.abs(np.asarray(qmatmul.qmatmul(x, w, 8, 8, 0)) - exact).max()
+    e2 = np.abs(np.asarray(qmatmul.qmatmul(x, w, 2, 2, 0)) - exact).max()
+    assert e8 < e2 / 4
+    assert e8 < 1.0

@@ -1,0 +1,72 @@
+"""Layout / manifest consistency tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import layouts
+from compile.configs import MODELS, QUANT_SETTINGS
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_pack_unpack_roundtrip_block(name):
+    cfg = MODELS[name]
+    lay = layouts.block_layout(cfg)
+    n = layouts.layout_size(lay)
+    flat = jnp.arange(n, dtype=jnp.float32)
+    d = layouts.unpack(flat, lay)
+    back = layouts.pack(d, lay)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(back))
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_layout_offsets_contiguous(name):
+    cfg = MODELS[name]
+    for lay in (layouts.block_layout(cfg), layouts.model_layout(cfg)):
+        off = 0
+        for (_, shape, o, z) in lay:
+            assert o == off
+            assert z == int(np.prod(shape)) if shape else 1
+            off += z
+
+
+def test_model_layout_contains_all_blocks():
+    cfg = MODELS["omni-1m"]
+    lay = layouts.model_layout(cfg)
+    names = [n for (n, _, _, _) in lay]
+    for i in range(cfg.n_layers):
+        assert f"blk{i}.wq" in names
+    assert names[0] == "embed"
+    assert names[-1] == "head"
+
+
+def test_opt_has_pos_embed_llama_does_not():
+    lay_l = [n for (n, _, _, _) in layouts.model_layout(MODELS["omni-1m"])]
+    lay_o = [n for (n, _, _, _) in layouts.model_layout(MODELS["opt-1m"])]
+    assert "pos_embed" not in lay_l
+    assert "pos_embed" in lay_o
+
+
+@pytest.mark.parametrize("setting", ["w2a16", "w4a16g64", "w4a4"])
+def test_theta_layout_shapes(setting):
+    cfg = MODELS["omni-1m"]
+    qs = QUANT_SETTINGS[setting]
+    lay = layouts.theta_layout(cfg, qs)
+    names = {n for (n, _, _, _) in lay}
+    for (nm, cin, cout) in cfg.block_linears():
+        assert f"{nm}.gamma" in names and f"{nm}.beta" in names
+        shape = next(s for (n, s, _, _) in lay if n == f"{nm}.gamma")
+        ng = cin // qs.group if qs.group else 1
+        assert shape == (ng, cout)
+    assert "lsa" in names
+    sa_shape = next(s for (n, s, _, _) in lay if n == "lsa")
+    assert sa_shape == (cfg.d_model // 2,)  # llama: shared across RoPE pairs
+
+
+def test_group_sizes_divide_dims():
+    for mname, cfg in MODELS.items():
+        for qname, qs in QUANT_SETTINGS.items():
+            if qs.group and (cfg.d_model % qs.group or cfg.d_ff % qs.group):
+                continue  # skipped by aot.py too
+            lay = layouts.theta_layout(cfg, qs)
+            assert layouts.layout_size(lay) > 0

@@ -1,0 +1,193 @@
+"""L2 correctness: block/model graph semantics, and the fusion-equivalence
+invariant that specifies the Rust coordinator's LET fusion."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import layouts, model
+from compile.configs import MODELS, QUANT_SETTINGS
+from tests import util
+
+RNG = np.random.default_rng(7)
+
+
+def _x(cfg, b=2):
+    return jnp.asarray(RNG.standard_normal((b, cfg.seq_len, cfg.d_model)).astype(np.float32))
+
+
+@pytest.mark.parametrize("name", ["omni-test", "opt-test"])
+def test_block_fwd_shapes(name):
+    cfg = MODELS[name]
+    bw = util.init_block(cfg, RNG)
+    x = _x(cfg)
+    y = model.block_fwd(cfg, bw, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+
+
+@pytest.mark.parametrize("name", ["omni-test", "opt-test"])
+def test_block_fwd_actq_close_at_8bit(name):
+    cfg = MODELS[name]
+    bw = util.init_block(cfg, RNG)
+    x = _x(cfg)
+    y16 = np.asarray(model.block_fwd(cfg, bw, x, 16))
+    y8 = np.asarray(model.block_fwd(cfg, bw, x, 8, use_pallas=True))
+    assert np.abs(y16 - y8).max() < 0.15 * (np.abs(y16).max() + 1)
+
+
+def test_block_intermediates_consistent():
+    cfg = MODELS["omni-test"]
+    bw = util.init_block(cfg, RNG)
+    x = _x(cfg)
+    outs = model.block_intermediates(cfg, bw, x)
+    assert len(outs) == 8
+    y = model.block_fwd(cfg, bw, x)
+    np.testing.assert_allclose(np.asarray(outs[-1]), np.asarray(y), atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["omni-test", "opt-test"])
+@pytest.mark.parametrize("setting", ["w4a16", "w3a16", "w4a4", "w4a16g64"])
+def test_fusion_equivalence(name, setting):
+    """calib_block_fwd(W, theta) == block_fwd(fuse(W, theta)) — the central
+    invariant: the error minimized during calibration is exactly the error
+    of the deployed fused model. `util.fuse_reference` mirrors the Rust
+    coordinator's fusion and is the spec it is tested against."""
+    cfg = MODELS[name]
+    qs = QUANT_SETTINGS[setting]
+    bw = util.init_block(cfg, RNG)
+    th = util.init_theta(cfg, qs, RNG, scale=0.15)
+    x = _x(cfg)
+    calib = np.asarray(model.calib_block_fwd(cfg, qs, bw, th, x, use_pallas=False))
+    fused = util.fuse_reference(cfg, qs, bw, th)
+    run = np.asarray(model.block_fwd(cfg, fused, x, qs.abits, use_pallas=False))
+    scale = np.abs(calib).max() + 1e-6
+    np.testing.assert_allclose(run / scale, calib / scale, atol=5e-3)
+
+
+def test_calib_identity_theta_matches_rtn():
+    """theta at init (gamma/beta logits=30 -> sigmoid=1, s=1, d=0) makes the
+    calibration forward equal plain RTN fake-quant of the block."""
+    cfg = MODELS["omni-test"]
+    qs = QUANT_SETTINGS["w4a16"]
+    bw = util.init_block(cfg, RNG)
+    th = util.init_theta(cfg, qs, RNG, scale=0.0)
+    for k in list(th):
+        if k.endswith(".gamma") or k.endswith(".beta"):
+            th[k] = jnp.full_like(th[k], 30.0)
+    x = _x(cfg)
+    calib = np.asarray(model.calib_block_fwd(cfg, qs, bw, th, x, use_pallas=False))
+    from compile.kernels import ref
+    rtn = {k: v for k, v in bw.items()}
+    for nm, cin, cout in cfg.block_linears():
+        rtn[nm] = ref.fake_quant_minmax(bw[nm], qs.wbits, qs.group)
+    run = np.asarray(model.block_fwd(cfg, rtn, x, 16))
+    np.testing.assert_allclose(run, calib, atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("setting", ["w3a16", "w4a4"])
+def test_calib_gradient_descent_reduces_error(setting):
+    """The property calibration relies on: AdamW on theta with the STE
+    gradients reduces the block reconstruction error well below its value
+    at the MinMax initialization. (Pointwise finite differences are NOT a
+    valid oracle for STE gradients — the forward is a step function.)"""
+    cfg = MODELS["omni-test"]
+    qs = QUANT_SETTINGS[setting]
+    bw = util.init_block(cfg, RNG)
+    wflat = util.pack_block(cfg, bw)
+    th = util.init_theta(cfg, qs, RNG, scale=0.0)
+    tflat = np.asarray(util.pack_theta(cfg, qs, th))
+    # outlier-y activations (what LET exists to fix)
+    x = np.asarray(_x(cfg, b=2)).copy()
+    idx = RNG.choice(cfg.d_model, 3, replace=False)
+    x[..., idx] *= 8.0
+    x = jnp.asarray(x)
+    tgt = model.block_fwd(cfg, bw, x)  # FP block output (Eq. 1 target)
+
+    step = jax.jit(lambda tf: model.calib_loss_and_grads(
+        cfg, qs, "lwc", wflat, tf, x, tgt, use_pallas=False))
+    m = np.zeros_like(tflat)
+    v = np.zeros_like(tflat)
+    losses = []
+    lr = 1e-2
+    for i in range(120):
+        loss, g = step(jnp.asarray(tflat))
+        g = np.asarray(g)
+        losses.append(float(loss))
+        m = 0.9 * m + 0.1 * g
+        v = 0.95 * v + 0.05 * g * g
+        mh = m / (1 - 0.9 ** (i + 1))
+        vh = v / (1 - 0.95 ** (i + 1))
+        tflat = tflat - lr * mh / (np.sqrt(vh) + 1e-8)
+    best = min(losses[80:])
+    assert best < 0.75 * losses[0], (losses[0], best)
+
+
+def test_calib_grads_nonzero_for_all_groups():
+    cfg = MODELS["omni-test"]
+    qs = QUANT_SETTINGS["w4a4"]
+    bw = util.init_block(cfg, RNG)
+    wflat = util.pack_block(cfg, bw)
+    th = util.init_theta(cfg, qs, RNG, scale=0.05)
+    tflat = util.pack_theta(cfg, qs, th)
+    x = _x(cfg, b=1)
+    tgt = jnp.zeros_like(x)
+    _, grads = model.calib_loss_and_grads(cfg, qs, "lwc", wflat, tflat, x, tgt,
+                                          use_pallas=False)
+    grads = np.asarray(grads)
+    tlay = layouts.theta_layout(cfg, qs, "lwc")
+    for (n, _, o, z) in tlay:
+        g = np.abs(grads[o:o + z])
+        assert g.max() > 0, f"all-zero grads for {n}"
+
+
+@pytest.mark.parametrize("variant", ["pact", "lsq"])
+def test_clip_variants_run_and_grad(variant):
+    cfg = MODELS["omni-test"]
+    qs = QUANT_SETTINGS["w3a16"]
+    bw = util.init_block(cfg, RNG)
+    wflat = util.pack_block(cfg, bw)
+    th = util.init_theta(cfg, qs, RNG, variant=variant)
+    tflat = util.pack_theta(cfg, qs, th, variant)
+    x = _x(cfg, b=1)
+    tgt = jnp.asarray(np.asarray(model.block_fwd(cfg, bw, x)))
+    loss, grads = model.calib_loss_and_grads(cfg, qs, variant, wflat, tflat, x, tgt,
+                                             use_pallas=False)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(grads)).all()
+    assert np.abs(np.asarray(grads)).max() > 0
+
+
+@pytest.mark.parametrize("name", ["omni-test", "opt-test"])
+def test_model_nll_sane(name):
+    cfg = MODELS[name]
+    pflat = util.init_model_flat(cfg, RNG)
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab, (2, cfg.seq_len)).astype(np.int32))
+    nll = float(model.model_nll(cfg, pflat, tokens))
+    # random init -> NLL near log(vocab)
+    assert abs(nll - np.log(cfg.vocab)) < 1.0
+
+
+def test_model_nll_masked_consistency():
+    cfg = MODELS["omni-test"]
+    pflat = util.init_model_flat(cfg, RNG)
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab, (2, cfg.seq_len)).astype(np.int32))
+    mask = jnp.ones((2, cfg.seq_len), jnp.float32)
+    per_seq = np.asarray(model.model_nll_masked(cfg, pflat, tokens, mask))
+    mean_nll = float(model.model_nll(cfg, pflat, tokens))
+    np.testing.assert_allclose(per_seq.sum() / (2 * (cfg.seq_len - 1)), mean_nll, rtol=1e-4)
+
+
+def test_train_step_learns():
+    cfg = MODELS["omni-test"]
+    pflat = util.init_model_flat(cfg, RNG)
+    m = jnp.zeros_like(pflat)
+    v = jnp.zeros_like(pflat)
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab, (4, cfg.seq_len)).astype(np.int32))
+    step_fn = jax.jit(lambda p, m, v, s, tok: model.train_step(cfg, p, m, v, s, 3e-3, tok))
+    losses = []
+    for s in range(30):
+        pflat, m, v, loss = step_fn(pflat, m, v, jnp.float32(s), tokens)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses[::10]

@@ -1,0 +1,136 @@
+"""Shared test helpers: parameter/theta initialization mirroring the Rust
+coordinator, and the LET fusion reference used by the equivalence tests."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import layouts
+from compile.configs import ModelConfig, QuantSetting
+from compile.kernels import ref
+
+
+def init_block(cfg: ModelConfig, rng: np.random.Generator) -> dict:
+    """Random block weights with a couple of planted outlier channels so the
+    LET machinery has something to fix (synthetic stand-in for the trained
+    statistics the paper relies on)."""
+    bw = {}
+    for name, shape in cfg.block_params():
+        if name.startswith("ln") and name.endswith("_w"):
+            v = np.ones(shape, np.float32) + 0.1 * rng.standard_normal(shape).astype(np.float32)
+            # plant a few outlier channels: trained LLMs (esp. the OPT
+            # family) develop LayerNorm weights that blow up specific
+            # channels — the systematic activation outliers LET targets.
+            idx = rng.choice(shape[0], max(2, shape[0] // 32), replace=False)
+            v[idx] *= rng.uniform(4.0, 8.0, idx.shape).astype(np.float32)
+        elif name.startswith("b") or name.endswith("_b"):
+            v = np.zeros(shape, np.float32)
+        else:
+            fan_in = shape[0]
+            v = (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+            # heavy-tail a few weight columns (outlier-correlated weights).
+            idx = rng.choice(shape[1], max(1, shape[1] // 32), replace=False)
+            v[:, idx] *= 4.0
+        bw[name] = jnp.asarray(v)
+    return bw
+
+
+def pack_block(cfg, bw):
+    lay = layouts.block_layout(cfg)
+    return jnp.concatenate([jnp.reshape(bw[n], (-1,)) for (n, _, _, _) in lay])
+
+
+def init_theta(cfg: ModelConfig, qs: QuantSetting, rng, variant="lwc", scale=0.1) -> dict:
+    """Near-identity theta: gamma/beta logits at 4.0 (sigmoid ~ 0.982),
+    LET scales ~ 1, shifts ~ 0, with optional random perturbation."""
+    th = {}
+    for name, shape in layouts.theta1_shapes(cfg, qs, variant):
+        if variant == "lwc":
+            v = np.full(shape, 4.0, np.float32)
+        elif variant == "pact":
+            v = np.full(shape, -3.0 if "tmin" in name else 3.0, np.float32)
+        else:  # lsq
+            qmax = 2.0**qs.wbits - 1.0
+            v = (np.full(shape, np.log(6.0 / qmax), np.float32)
+                 if "logh" in name else np.full(shape, qmax / 2.0, np.float32))
+        th[name] = jnp.asarray(v)
+    for name, shape in layouts.theta2_shapes(cfg):
+        v = (scale * rng.standard_normal(shape)).astype(np.float32)
+        th[name] = jnp.asarray(v)
+    return th
+
+
+def pack_theta(cfg, qs, th, variant="lwc"):
+    lay = layouts.theta_layout(cfg, qs, variant)
+    return jnp.concatenate([jnp.reshape(th[n], (-1,)) for (n, _, _, _) in lay])
+
+
+def init_model_flat(cfg: ModelConfig, rng: np.random.Generator):
+    parts = []
+    for name, shape in cfg.model_params():
+        base = name.split(".")[-1]
+        if base.startswith("ln") and base.endswith("_w") or base == "lnf_w":
+            v = np.ones(shape, np.float32)
+        elif base.startswith("b") or base.endswith("_b"):
+            v = np.zeros(shape, np.float32)
+        elif base in ("embed", "pos_embed", "head"):
+            v = (0.02 * rng.standard_normal(shape)).astype(np.float32)
+        else:
+            v = (rng.standard_normal(shape) / np.sqrt(shape[0])).astype(np.float32)
+        parts.append(v.reshape(-1))
+    return jnp.asarray(np.concatenate(parts))
+
+
+def fuse_reference(cfg: ModelConfig, qs: QuantSetting, bw: dict, th: dict) -> dict:
+    """The LET fusion the Rust coordinator performs after calibration
+    (DESIGN.md section 1): returns runtime block weights such that
+    block_fwd(fused, x, abits) == calib_block_fwd(bw, th, x) given the same
+    weight fake-quantization. Weight fake-quant is applied here with the
+    learned gamma/beta on the *pre-column-scaled* tensors and the column
+    scaling applied afterwards (asymmetric MinMax quantization is exactly
+    equivariant to per-output-channel scaling)."""
+    s1 = np.exp(np.asarray(th["ls1"]))
+    d1 = np.asarray(th["d1"])
+    s2 = np.exp(np.asarray(th["ls2"]))
+    d2 = np.asarray(th["d2"])
+    s3 = np.exp(np.asarray(th["ls3"]))
+    d3 = np.asarray(th["d3"])
+    lsa = np.asarray(th["lsa"])
+    sa = np.exp(lsa)
+    if cfg.family == "llama":
+        h, hd = cfg.n_heads, cfg.head_dim
+        sa = np.concatenate([sa.reshape(h, hd // 2)] * 2, axis=-1).reshape(cfg.d_model)
+
+    def fq(name, w):
+        return np.asarray(ref.fake_quant_lwc(
+            jnp.asarray(w), th[f"{name}.gamma"], th[f"{name}.beta"], qs.wbits, qs.group))
+
+    f = {k: np.asarray(v).copy() for k, v in bw.items()}
+    wq, wk, wv, wo = (np.asarray(bw[k]) for k in ("wq", "wk", "wv", "wo"))
+    # norm1 <- s1, d1
+    f["ln1_w"] = np.asarray(bw["ln1_w"]) / s1
+    f["ln1_b"] = (np.asarray(bw["ln1_b"]) - d1) / s1
+    f["wq"] = fq("wq", s1[:, None] * wq) / sa[None, :]
+    f["bq"] = (d1 @ wq + np.asarray(bw["bq"])) / sa
+    f["wk"] = fq("wk", s1[:, None] * wk) * sa[None, :]
+    f["bk"] = (d1 @ wk + np.asarray(bw["bk"])) * sa
+    f["wv"] = fq("wv", s1[:, None] * wv) / s2[None, :]
+    f["bv"] = (d1 @ wv + np.asarray(bw["bv"]) - d2) / s2
+    f["wo"] = fq("wo", s2[:, None] * wo)
+    f["bo"] = d2 @ wo + np.asarray(bw["bo"])
+    if cfg.family == "llama":
+        wg, wu, wd = (np.asarray(bw[k]) for k in ("wg", "wu", "wd"))
+        f["ln2_w"] = np.asarray(bw["ln2_w"]) / s3
+        f["ln2_b"] = (np.asarray(bw["ln2_b"]) - d3) / s3
+        f["wg"] = fq("wg", s3[:, None] * wg)
+        f["bg"] = d3 @ wg + np.asarray(bw["bg"])
+        f["wu"] = fq("wu", s3[:, None] * wu)
+        f["bu"] = d3 @ wu + np.asarray(bw["bu"])
+        f["wd"] = fq("wd", wd)
+    else:
+        w1, w2 = np.asarray(bw["w1"]), np.asarray(bw["w2"])
+        f["ln2_w"] = np.asarray(bw["ln2_w"]) / s3
+        f["ln2_b"] = (np.asarray(bw["ln2_b"]) - d3) / s3
+        f["w1"] = fq("w1", s3[:, None] * w1)
+        f["b1"] = d3 @ w1 + np.asarray(bw["b1"])
+        f["w2"] = fq("w2", w2)
+    return {k: jnp.asarray(v) for k, v in f.items()}

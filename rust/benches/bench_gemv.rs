@@ -1,0 +1,41 @@
+//! L3 hot-path microbench: packed low-bit GEMV vs dense f32 GEMV.
+//! This is the kernel Table 3's decode throughput stands on — the paper's
+//! headline deployment claim is ~2x at W4A16g128; memory-bound GEMV should
+//! show the same shape here.
+
+use omniquant::bench::Bencher;
+use omniquant::linalg;
+use omniquant::quant::PackedMatrix;
+use omniquant::tensor::Tensor;
+use omniquant::util::Rng;
+
+fn main() {
+    let b = Bencher { warmup: 3, reps: 30, max_secs: 20.0 };
+    // FFN-sized layers across our model family + one "big" shape showing
+    // the memory-bound regime.
+    for (cin, cout) in [(128usize, 384usize), (256, 768), (768, 256), (1024, 4096)] {
+        let mut rng = Rng::new(1);
+        let w = Tensor::from_fn(&[cin, cout], |_| rng.normal());
+        let x: Vec<f32> = (0..cin).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; cout];
+
+        let r_fp = b.run(&format!("gemv f32      {cin}x{cout}"), || {
+            y.copy_from_slice(&linalg::vecmat(&x, &w));
+            std::hint::black_box(&y);
+        });
+        println!("{r_fp}");
+        let mut base = r_fp.median_ms;
+        if base <= 0.0 {
+            base = 1e-9;
+        }
+        for bits in [8u8, 4, 3, 2] {
+            let p = PackedMatrix::pack(&w, bits, 64, None, None);
+            let r = b.run(&format!("gemv w{bits}a16g64 {cin}x{cout}"), || {
+                p.gemv(&x, &mut y);
+                std::hint::black_box(&y);
+            });
+            println!("{r}  speedup_vs_f32 {:.2}x", base / r.median_ms);
+        }
+        println!();
+    }
+}

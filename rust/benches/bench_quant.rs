@@ -1,0 +1,39 @@
+//! Quantizer microbenches: MinMax/LWC fake-quant, bit-packing and GPTQ
+//! per-linear reconstruction — the per-block costs behind Table A1's
+//! calibration-time column.
+
+use omniquant::bench::Bencher;
+use omniquant::quant::methods::gptq::gptq_quantize;
+use omniquant::quant::{fake_quant, PackedMatrix};
+use omniquant::tensor::Tensor;
+use omniquant::util::Rng;
+
+fn main() {
+    let b = Bencher { warmup: 2, reps: 15, max_secs: 30.0 };
+    let mut rng = Rng::new(2);
+    for (cin, cout) in [(192usize, 512usize), (256, 768)] {
+        let w = Tensor::from_fn(&[cin, cout], |_| rng.normal());
+        let gamma = vec![0.95f32; (cin / 32) * cout];
+        for (bits, group) in [(4u8, 0usize), (3, 32), (2, 32)] {
+            let r = b.run(&format!("fake_quant w{bits}g{group} {cin}x{cout}"), || {
+                std::hint::black_box(fake_quant(&w, bits, group, None, None));
+            });
+            println!("{r}");
+        }
+        let r = b.run(&format!("fake_quant lwc w4g32 {cin}x{cout}"), || {
+            std::hint::black_box(fake_quant(&w, 4, 32, Some(&gamma), Some(&gamma)));
+        });
+        println!("{r}");
+        let r = b.run(&format!("pack w4g64 {cin}x{cout}"), || {
+            std::hint::black_box(PackedMatrix::pack(&w, 4, 64, None, None));
+        });
+        println!("{r}");
+
+        let x = Tensor::from_fn(&[512, cin], |_| rng.normal());
+        let r = b.run(&format!("gptq w3 {cin}x{cout} (512 rows)"), || {
+            std::hint::black_box(gptq_quantize(&w, &x, 3, 0, 0.01).unwrap());
+        });
+        println!("{r}");
+        println!();
+    }
+}

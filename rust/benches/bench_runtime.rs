@@ -1,0 +1,60 @@
+//! L2/runtime bench: PJRT graph execution throughput for the calibration
+//! hot loop (block forward, calibration grad step, model NLL) — what the
+//! OmniQuant training time (Table A1) is made of, and the target of the
+//! perf pass in EXPERIMENTS.md section Perf.
+
+use omniquant::bench::Bencher;
+use omniquant::model::ModelParams;
+use omniquant::runtime::{Runtime, Value};
+use omniquant::tensor::Tensor;
+use omniquant::util::Rng;
+
+fn main() {
+    let b = Bencher { warmup: 2, reps: 10, max_secs: 25.0 };
+    let root = std::path::Path::new("artifacts");
+    for model in ["omni-test", "omni-1m", "omni-3m"] {
+        let Ok(rt) = Runtime::for_model(root, model) else {
+            eprintln!("skipping {model}: artifacts missing (make artifacts)");
+            continue;
+        };
+        let m = rt.manifest();
+        let mut rng = Rng::new(5);
+        let params = ModelParams::init(m, &mut rng);
+        let wflat = params.block_flat(m, 0).unwrap();
+        let (cb, t, d) = (m.calib_batch, m.model.seq_len, m.model.d_model);
+        let x = Tensor::from_fn(&[cb, t, d], |_| 0.1 * rng.normal());
+        let tsize = m.theta_size("w4a4").unwrap();
+        let theta = Tensor::from_fn(&[tsize], |_| 0.01 * rng.normal());
+
+        let r = b.run(&format!("{model} block_fwd"), || {
+            std::hint::black_box(
+                rt.exec1("block_fwd", &[Value::F32(&wflat), Value::F32(&x)]).unwrap(),
+            );
+        });
+        println!("{r}");
+        let r = b.run(&format!("{model} block_calib_w4a4 (loss+grads)"), || {
+            std::hint::black_box(
+                rt.exec(
+                    "block_calib_w4a4",
+                    &[Value::F32(&wflat), Value::F32(&theta), Value::F32(&x), Value::F32(&x)],
+                )
+                .unwrap(),
+            );
+        });
+        println!("{r}");
+
+        let pflat = Tensor::new(&[params.flat.len()], params.flat.clone());
+        let toks: Vec<i32> = (0..m.eval_batch * t).map(|_| rng.below(m.model.vocab) as i32).collect();
+        let r = b.run(&format!("{model} model_nll"), || {
+            std::hint::black_box(
+                rt.exec1(
+                    "model_nll",
+                    &[Value::F32(&pflat), Value::I32(&toks, &[m.eval_batch, t])],
+                )
+                .unwrap(),
+            );
+        });
+        println!("{r}");
+        println!();
+    }
+}

@@ -1,0 +1,43 @@
+//! End-to-end serving bench (Table 3 shape): decode tokens/s at each
+//! weight bit-width from the packed-weight engine, per model size.
+//! Uses freshly initialized weights — throughput is content-independent.
+
+use omniquant::bench::Bencher;
+use omniquant::config::QuantSetting;
+use omniquant::model::ModelParams;
+use omniquant::runtime::Runtime;
+use omniquant::serve::Engine;
+use omniquant::util::{fmt_bytes, Rng};
+
+fn main() {
+    let b = Bencher { warmup: 1, reps: 5, max_secs: 30.0 };
+    let root = std::path::Path::new("artifacts");
+    for model in ["omni-1m", "omni-3m", "omni-7m"] {
+        let Ok(rt) = Runtime::for_model(root, model) else {
+            eprintln!("skipping {model}: artifacts missing (make artifacts)");
+            continue;
+        };
+        let mut rng = Rng::new(7);
+        let params = ModelParams::init(rt.manifest(), &mut rng);
+        let mut fp_tps = 0.0;
+        for setting_name in ["fp16", "w4a16g64", "w3a16g64", "w2a16g64"] {
+            let setting = QuantSetting::parse(setting_name).unwrap();
+            let engine = Engine::build(&params, setting).unwrap();
+            let n_tokens = 96usize;
+            let r = b.run(&format!("{model} {setting_name} decode x{n_tokens}"), || {
+                std::hint::black_box(engine.batched_decode(1, n_tokens, 3));
+            });
+            let tps = n_tokens as f64 / (r.median_ms / 1e3);
+            if setting.wbits >= 16 {
+                fp_tps = tps;
+            }
+            println!(
+                "{r}  {:.0} tok/s ({:.2}x vs fp)  WM {}",
+                tps,
+                tps / fp_tps.max(1e-9),
+                fmt_bytes(engine.weight_bytes())
+            );
+        }
+        println!();
+    }
+}

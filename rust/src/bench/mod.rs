@@ -1,0 +1,114 @@
+//! Hand-rolled micro/macro benchmark harness (criterion is not in the
+//! offline crate cache). Warmup + N timed repetitions, reports
+//! median / p10 / p90, and can be embedded by the experiment drivers.
+
+use crate::util::stats;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub reps: usize,
+    pub median_ms: f64,
+    pub p10_ms: f64,
+    pub p90_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.median_ms / 1e3)
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} median {:>9.3} ms  (p10 {:>9.3}, p90 {:>9.3}, n={})",
+            self.name, self.median_ms, self.p10_ms, self.p90_ms, self.reps
+        )
+    }
+}
+
+pub struct Bencher {
+    pub warmup: usize,
+    pub reps: usize,
+    /// Stop early once this much wall time (seconds) has been spent.
+    pub max_secs: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, reps: 10, max_secs: 30.0 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, reps: 5, max_secs: 10.0 }
+    }
+
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let start = Instant::now();
+        let mut times = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+            if start.elapsed().as_secs_f64() > self.max_secs && times.len() >= 3 {
+                break;
+            }
+        }
+        let times_f: Vec<f32> = times.iter().map(|&x| x as f32).collect();
+        BenchResult {
+            name: name.to_string(),
+            reps: times.len(),
+            median_ms: stats::median(&times_f) as f64,
+            p10_ms: stats::percentile(&times_f, 0.1) as f64,
+            p90_ms: stats::percentile(&times_f, 0.9) as f64,
+            mean_ms: stats::mean(&times_f) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher { warmup: 1, reps: 5, max_secs: 5.0 };
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..100_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            std::hint::black_box(s);
+        });
+        assert!(r.median_ms > 0.0);
+        // f32 percentile interpolation can be off by an ulp on near-equal
+        // samples; compare with a tiny tolerance.
+        let eps = 1e-6 * (1.0 + r.median_ms.abs());
+        assert!(r.p10_ms <= r.median_ms + eps && r.median_ms <= r.p90_ms + eps);
+        assert_eq!(r.reps, 5);
+    }
+
+    #[test]
+    fn early_stop_respects_min_reps() {
+        let b = Bencher { warmup: 0, reps: 100, max_secs: 0.0 };
+        let r = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(r.reps >= 3 && r.reps < 100);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(), reps: 1, median_ms: 500.0, p10_ms: 0.0, p90_ms: 0.0, mean_ms: 0.0,
+        };
+        assert!((r.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,177 @@
+//! The OmniQuant method: per block, train Θ = {γ, β (LWC); s, δ, s_a (LET)}
+//! with AdamW on the block-wise reconstruction loss (paper Eq. 1), gradients
+//! supplied by the AOT `block_calib_*` HLO graphs, then fuse + quantize.
+//! Also hosts the PACT / LSQ clipping variants of Table A3 (same pipeline,
+//! different Θ1 parameterization and graphs).
+
+use anyhow::{anyhow, Result};
+
+use crate::config::CalibConfig;
+use crate::model::BlockWeights;
+use crate::quant::methods::{BlockCtx, BlockQuantizer};
+use crate::quant::{fake_quant, fake_quant_lsq, fake_quant_pact};
+use crate::runtime::Value;
+use crate::tensor::Tensor;
+
+use super::adamw::AdamW;
+use super::fusion::{expand_sa, fuse_block, LetParams};
+use super::theta::{init_theta, Theta};
+
+#[derive(Clone, Debug, Default)]
+pub struct BlockCalibStats {
+    pub block: usize,
+    pub loss_init: f32,
+    pub loss_final: f32,
+    pub steps: usize,
+    /// learned sigmoid(gamma) values (sampled) — Figure A1 material.
+    pub clip_scales: Vec<f32>,
+    pub secs: f64,
+}
+
+pub struct OmniQuant {
+    pub cfg: CalibConfig,
+    pub stats: Vec<BlockCalibStats>,
+}
+
+impl OmniQuant {
+    pub fn new(cfg: CalibConfig) -> OmniQuant {
+        OmniQuant { cfg, stats: Vec::new() }
+    }
+
+    fn graph_and_layout_key(&self, ctx: &BlockCtx) -> (String, String) {
+        let sname = ctx.setting.name();
+        if self.cfg.clip_variant == "lwc" {
+            (format!("block_calib_{sname}"), sname)
+        } else {
+            let v = &self.cfg.clip_variant;
+            (format!("block_calib_{v}_{sname}"), format!("{v}_{sname}"))
+        }
+    }
+
+    fn sigmoid(x: f32) -> f32 {
+        1.0 / (1.0 + (-x).exp())
+    }
+
+    /// Fuse the trained theta into runtime block weights.
+    fn fuse(&self, ctx: &BlockCtx, th: &Theta) -> Result<BlockWeights> {
+        let m = ctx.rt.model();
+        let raw = th.let_raw()?;
+        let exp = |v: &[f32]| v.iter().map(|x| x.exp()).collect::<Vec<f32>>();
+        let p = LetParams {
+            s1: exp(&raw["ls1"]),
+            d1: raw["d1"].clone(),
+            s2: exp(&raw["ls2"]),
+            d2: raw["d2"].clone(),
+            s3: exp(&raw["ls3"]),
+            d3: raw["d3"].clone(),
+            sa: expand_sa(&m.family, &exp(&raw["lsa"]), m.d_model, m.n_heads),
+        };
+        let setting = ctx.setting;
+        let variant = self.cfg.clip_variant.clone();
+        let mut err: Option<anyhow::Error> = None;
+        let fused = fuse_block(ctx.family(), &ctx.bw, &p, &mut |name, w| {
+            let res = (|| -> Result<Tensor> {
+                let (a, b) = th.clip_pair(name)?;
+                Ok(match variant.as_str() {
+                    "lwc" => {
+                        let gamma: Vec<f32> = a.iter().map(|&x| Self::sigmoid(x)).collect();
+                        let beta: Vec<f32> = b.iter().map(|&x| Self::sigmoid(x)).collect();
+                        fake_quant(w, setting.wbits, setting.group, Some(&gamma), Some(&beta))
+                    }
+                    "pact" => fake_quant_pact(w, setting.wbits, setting.group, &a, &b),
+                    "lsq" => fake_quant_lsq(w, setting.wbits, setting.group, &a, &b),
+                    v => return Err(anyhow!("unknown variant {v}")),
+                })
+            })();
+            match res {
+                Ok(t) => t,
+                Err(e) => {
+                    err = Some(e);
+                    w.clone()
+                }
+            }
+        })?;
+        if let Some(e) = err {
+            return Err(e);
+        }
+        Ok(fused)
+    }
+}
+
+impl BlockQuantizer for OmniQuant {
+    fn name(&self) -> &'static str {
+        "omniquant"
+    }
+
+    fn quantize_block(&mut self, ctx: &mut BlockCtx) -> Result<BlockWeights> {
+        let t0 = std::time::Instant::now();
+        let (graph, key) = self.graph_and_layout_key(ctx);
+        let layout = ctx
+            .rt
+            .manifest()
+            .theta_layouts
+            .get(&key)
+            .ok_or_else(|| anyhow!("no theta layout '{key}' in manifest"))?
+            .clone();
+        let inter = ctx.intermediates(2)?;
+        let mut th = init_theta(ctx, &inter, &layout, &self.cfg)?;
+        let lr = th.lr_vector(&self.cfg);
+        let mut opt = AdamW::new(th.flat.len(), lr, self.cfg.wd);
+
+        // loss_init / loss_final are per-epoch means so they compare the
+        // same calibration batches before and after training.
+        let mut loss_init = f32::NAN;
+        let mut loss_final = f32::NAN;
+        let mut steps = 0usize;
+        for _epoch in 0..self.cfg.epochs {
+            let mut epoch_loss = 0.0f32;
+            let mut n = 0usize;
+            for (xb, tb) in ctx.x_q.iter().zip(ctx.targets.iter()) {
+                let theta_t = Tensor::new(&[th.flat.len()], th.flat.clone());
+                let outs = ctx.rt.exec(
+                    &graph,
+                    &[
+                        Value::F32(&ctx.wflat_fp),
+                        Value::F32(&theta_t),
+                        Value::F32(xb),
+                        Value::F32(tb),
+                    ],
+                )?;
+                epoch_loss += outs[0].item();
+                n += 1;
+                opt.step(&mut th.flat, outs[1].data());
+                steps += 1;
+            }
+            let mean = epoch_loss / n.max(1) as f32;
+            if loss_init.is_nan() {
+                loss_init = mean;
+            }
+            loss_final = mean;
+        }
+        if self.cfg.epochs == 0 {
+            // "0 epochs" ablation (Table A5): init-only, no training.
+            loss_init = 0.0;
+            loss_final = 0.0;
+        }
+
+        // sample learned clipping scales for Figure A1
+        let mut clip_scales = Vec::new();
+        if self.cfg.clip_variant == "lwc" {
+            for e in &th.layout {
+                if e.name.ends_with(".gamma") {
+                    let s = th.slice(&e.name)?;
+                    clip_scales.extend(s.iter().step_by((s.len() / 64).max(1)).map(|&x| Self::sigmoid(x)));
+                }
+            }
+        }
+        self.stats.push(BlockCalibStats {
+            block: ctx.block_idx,
+            loss_init,
+            loss_final,
+            steps,
+            clip_scales,
+            secs: t0.elapsed().as_secs_f64(),
+        });
+        self.fuse(ctx, &th)
+    }
+}

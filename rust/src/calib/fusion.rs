@@ -1,0 +1,276 @@
+//! LET fusion (paper Figure 3 / Eq. 3+5): absorb the learned channel-wise
+//! scales/shifts into neighboring norm + linear weights so the quantized
+//! model carries **zero** extra parameters or runtime operations.
+//!
+//! The weight quantizer runs on the *input-scaled* weight (`s_in ⊙ W`) and
+//! the output-side column scalings (1/s_a, ×s_a, 1/s2) are applied after
+//! quantization — exact because asymmetric MinMax quantization is
+//! equivariant to per-output-channel scaling (tested in `quant::tests`).
+//! This file is the Rust twin of `python/tests/util.py::fuse_reference`,
+//! which the cross-language fusion-equivalence test pins down.
+
+use anyhow::Result;
+
+use crate::linalg;
+use crate::model::BlockWeights;
+use crate::tensor::Tensor;
+
+/// The learnable equivalent transformation for one block (all in linear
+/// space; `sa_full` already expanded to d entries — RoPE-pair shared for
+/// the llama family).
+#[derive(Clone, Debug)]
+pub struct LetParams {
+    pub s1: Vec<f32>,
+    pub d1: Vec<f32>,
+    pub s2: Vec<f32>,
+    pub d2: Vec<f32>,
+    pub s3: Vec<f32>,
+    pub d3: Vec<f32>,
+    pub sa: Vec<f32>,
+}
+
+impl LetParams {
+    pub fn identity(d: usize) -> LetParams {
+        LetParams {
+            s1: vec![1.0; d],
+            d1: vec![0.0; d],
+            s2: vec![1.0; d],
+            d2: vec![0.0; d],
+            s3: vec![1.0; d],
+            d3: vec![0.0; d],
+            sa: vec![1.0; d],
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        let one = |v: &[f32]| v.iter().all(|&x| (x - 1.0).abs() < 1e-12);
+        let zero = |v: &[f32]| v.iter().all(|&x| x == 0.0);
+        one(&self.s1) && one(&self.s2) && one(&self.s3) && one(&self.sa)
+            && zero(&self.d1) && zero(&self.d2) && zero(&self.d3)
+    }
+}
+
+fn inv(v: &[f32]) -> Vec<f32> {
+    v.iter().map(|&x| 1.0 / x).collect()
+}
+
+/// shift-through-linear bias term: d @ W  (d: cin, W: cin x cout).
+fn shift_bias(d: &[f32], w: &Tensor) -> Vec<f32> {
+    linalg::vecmat(d, w)
+}
+
+fn vadd(a: &[f32], b: &[f32]) -> Vec<f32> {
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// Fuse LET into the block and quantize every linear through `quant`.
+/// `quant(name, w_scaled)` receives the input-scaled FP weight and returns
+/// its fake-quantized version (LWC / RTN / GPTQ / identity — caller's
+/// choice); output-side scalings and all bias algebra happen here.
+pub fn fuse_block(
+    family: &str,
+    bw: &BlockWeights,
+    p: &LetParams,
+    quant: &mut dyn FnMut(&str, &Tensor) -> Tensor,
+) -> Result<BlockWeights> {
+    let mut out = bw.clone();
+    let s2i = inv(&p.s2);
+    let sai = inv(&p.sa);
+
+    // norm1 <- s1, d1
+    let ln1w = bw.get("ln1_w")?;
+    let ln1b = bw.get("ln1_b")?;
+    out.set("ln1_w", Tensor::new(ln1w.shape(), ln1w.data().iter().zip(&p.s1).map(|(w, s)| w / s).collect()))?;
+    out.set("ln1_b", Tensor::new(ln1b.shape(), ln1b.data().iter().zip(&p.d1).zip(&p.s1).map(|((b, d), s)| (b - d) / s).collect()))?;
+
+    let wq = bw.get("wq")?.clone();
+    let wk = bw.get("wk")?.clone();
+    let wv = bw.get("wv")?.clone();
+    let wo = bw.get("wo")?.clone();
+
+    // query: fq(s1 ⊙ Wq) / sa ; bq~ = (d1 Wq + bq) / sa
+    let q_t = quant("wq", &wq.scale_rows(&p.s1)).scale_cols(&sai);
+    out.set("wq", q_t)?;
+    let bq = vadd(&shift_bias(&p.d1, &wq), bw.get("bq")?.data());
+    out.set("bq", Tensor::new(&[wq.cols()], bq.iter().zip(&p.sa).map(|(b, s)| b / s).collect()))?;
+
+    // key: fq(s1 ⊙ Wk) * sa ; bk~ = (d1 Wk + bk) * sa
+    let k_t = quant("wk", &wk.scale_rows(&p.s1)).scale_cols(&p.sa);
+    out.set("wk", k_t)?;
+    let bk = vadd(&shift_bias(&p.d1, &wk), bw.get("bk")?.data());
+    out.set("bk", Tensor::new(&[wk.cols()], bk.iter().zip(&p.sa).map(|(b, s)| b * s).collect()))?;
+
+    // value: fq(s1 ⊙ Wv) / s2 ; bv~ = (d1 Wv + bv - d2) / s2
+    let v_t = quant("wv", &wv.scale_rows(&p.s1)).scale_cols(&s2i);
+    out.set("wv", v_t)?;
+    let bv = vadd(&shift_bias(&p.d1, &wv), bw.get("bv")?.data());
+    out.set("bv", Tensor::new(&[wv.cols()], bv.iter().zip(&p.d2).zip(&p.s2).map(|((b, d), s)| (b - d) / s).collect()))?;
+
+    // out-proj: fq(s2 ⊙ Wo) ; bo~ = d2 Wo + bo
+    let o_t = quant("wo", &wo.scale_rows(&p.s2));
+    out.set("wo", o_t)?;
+    out.set("bo", Tensor::new(&[wo.cols()], vadd(&shift_bias(&p.d2, &wo), bw.get("bo")?.data())))?;
+
+    // norm2 <- s3, d3
+    let ln2w = bw.get("ln2_w")?;
+    let ln2b = bw.get("ln2_b")?;
+    out.set("ln2_w", Tensor::new(ln2w.shape(), ln2w.data().iter().zip(&p.s3).map(|(w, s)| w / s).collect()))?;
+    out.set("ln2_b", Tensor::new(ln2b.shape(), ln2b.data().iter().zip(&p.d3).zip(&p.s3).map(|((b, d), s)| (b - d) / s).collect()))?;
+
+    let ffn_in: &[&str] = if family == "llama" { &["wg", "wu"] } else { &["w1"] };
+    for nm in ffn_in {
+        let w = bw.get(nm)?.clone();
+        let w_t = quant(nm, &w.scale_rows(&p.s3));
+        out.set(nm, w_t)?;
+        let bn = BlockWeights::bias_name(nm);
+        out.set(&bn, Tensor::new(&[w.cols()], vadd(&shift_bias(&p.d3, &w), bw.get(&bn)?.data())))?;
+    }
+    // second FFN linear: LWC only, no LET (paper section 3.3)
+    let last = if family == "llama" { "wd" } else { "w2" };
+    let w = bw.get(last)?.clone();
+    out.set(last, quant(last, &w))?;
+
+    Ok(out)
+}
+
+/// Expand an sa parameter stored per-RoPE-pair (d/2 for llama) or full (d
+/// for opt) into d entries, matching `model._sa_full` on the python side.
+pub fn expand_sa(family: &str, sa: &[f32], d: usize, n_heads: usize) -> Vec<f32> {
+    if family != "llama" {
+        assert_eq!(sa.len(), d);
+        return sa.to_vec();
+    }
+    assert_eq!(sa.len(), d / 2);
+    let hd = d / n_heads;
+    let half = hd / 2;
+    let mut out = vec![0.0f32; d];
+    for h in 0..n_heads {
+        for j in 0..half {
+            let v = sa[h * half + j];
+            out[h * hd + j] = v;
+            out[h * hd + half + j] = v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::util::Rng;
+
+    fn manifest() -> Manifest {
+        // minimal llama block layout (d=4, dff=8)
+        let mut entries = String::new();
+        let mut off = 0usize;
+        let add = |name: &str, shape: &[usize], entries: &mut String, off: &mut usize| {
+            let size: usize = shape.iter().product();
+            if !entries.is_empty() {
+                entries.push(',');
+            }
+            entries.push_str(&format!(
+                r#"{{"name": "{name}", "shape": [{}], "offset": {off}, "size": {size}}}"#,
+                shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+            ));
+            *off += size;
+        };
+        for (n, s) in [
+            ("ln1_w", vec![4usize]), ("ln1_b", vec![4]),
+            ("wq", vec![4, 4]), ("bq", vec![4]),
+            ("wk", vec![4, 4]), ("bk", vec![4]),
+            ("wv", vec![4, 4]), ("bv", vec![4]),
+            ("wo", vec![4, 4]), ("bo", vec![4]),
+            ("ln2_w", vec![4]), ("ln2_b", vec![4]),
+            ("wg", vec![4, 8]), ("bg", vec![8]),
+            ("wu", vec![4, 8]), ("bu", vec![8]),
+            ("wd", vec![8, 4]), ("bd", vec![4]),
+        ] {
+            add(n, &s, &mut entries, &mut off);
+        }
+        Manifest::parse(&format!(
+            r#"{{
+          "model": {{"name": "m", "family": "llama", "d_model": 4, "n_layers": 1,
+                     "n_heads": 2, "d_ff": 8, "vocab": 16, "seq_len": 8, "head_dim": 2}},
+          "batches": {{"calib": 2, "eval": 2, "train": 2}},
+          "block_layout": [{entries}],
+          "model_layout": [{{"name": "blk0.x", "shape": [1], "offset": 0, "size": 1}}],
+          "theta_layouts": {{}}, "quant_settings": {{}}, "graphs": {{}}
+        }}"#
+        ))
+        .unwrap()
+    }
+
+    fn rand_block(m: &Manifest, seed: u64) -> BlockWeights {
+        let mut rng = Rng::new(seed);
+        let flat = Tensor::from_fn(&[m.block_param_size()], |_| rng.normal());
+        BlockWeights::from_flat(m, &flat).unwrap()
+    }
+
+    #[test]
+    fn identity_let_with_identity_quant_is_noop() {
+        let m = manifest();
+        let bw = rand_block(&m, 1);
+        let p = LetParams::identity(4);
+        assert!(p.is_identity());
+        let fused = fuse_block("llama", &bw, &p, &mut |_, w| w.clone()).unwrap();
+        assert!(fused.to_flat().sub(&bw.to_flat()).abs_max() < 1e-6);
+    }
+
+    #[test]
+    fn quant_fn_sees_input_scaled_weights() {
+        let m = manifest();
+        let bw = rand_block(&m, 2);
+        let mut p = LetParams::identity(4);
+        p.s1 = vec![2.0, 0.5, 1.0, 4.0];
+        let mut seen = Vec::new();
+        fuse_block("llama", &bw, &p, &mut |name, w| {
+            if name == "wq" {
+                seen = w.data().to_vec();
+            }
+            w.clone()
+        })
+        .unwrap();
+        let want = bw.get("wq").unwrap().scale_rows(&p.s1);
+        assert_eq!(seen, want.data());
+    }
+
+    #[test]
+    fn shift_moves_into_biases() {
+        let m = manifest();
+        let bw = rand_block(&m, 3);
+        let mut p = LetParams::identity(4);
+        p.d1 = vec![0.3, -0.2, 0.1, 0.5];
+        let fused = fuse_block("llama", &bw, &p, &mut |_, w| w.clone()).unwrap();
+        // bq~ = d1 @ Wq + bq (sa = 1)
+        let want = vadd(&shift_bias(&p.d1, bw.get("wq").unwrap()), bw.get("bq").unwrap().data());
+        for (a, b) in fused.get("bq").unwrap().data().iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // ln1_b absorbs -d1
+        for (i, v) in fused.get("ln1_b").unwrap().data().iter().enumerate() {
+            let b0 = bw.get("ln1_b").unwrap().data()[i];
+            assert!((v - (b0 - p.d1[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sa_expansion_llama_pairs() {
+        let sa = vec![2.0, 3.0]; // d=4, 2 heads, hd=2, half=1
+        let full = expand_sa("llama", &sa, 4, 2);
+        assert_eq!(full, vec![2.0, 2.0, 3.0, 3.0]);
+        let full_opt = expand_sa("opt", &[1.0, 2.0, 3.0, 4.0], 4, 2);
+        assert_eq!(full_opt, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn wd_untouched_by_let() {
+        let m = manifest();
+        let bw = rand_block(&m, 4);
+        let mut p = LetParams::identity(4);
+        p.s3 = vec![3.0; 4];
+        p.d3 = vec![1.0; 4];
+        let fused = fuse_block("llama", &bw, &p, &mut |_, w| w.clone()).unwrap();
+        assert!(fused.get("wd").unwrap().sub(bw.get("wd").unwrap()).abs_max() < 1e-7);
+    }
+}

@@ -1,0 +1,16 @@
+//! Block-wise calibration (paper Algorithm 1): the coordination layer of
+//! OmniQuant. `pipeline` owns the sequential X_fp / X_q activation streams
+//! and drives any `BlockQuantizer`; `engine` is the OmniQuant method itself
+//! (LWC + LET trained by AdamW against the AOT gradient graphs); `fusion`
+//! folds the learned equivalent transformation into the block weights;
+//! `theta` manages the learnable-parameter vector; `adamw` is the
+//! optimizer (runs in Rust — the graphs return loss + gradients).
+
+pub mod adamw;
+pub mod engine;
+pub mod fusion;
+pub mod pipeline;
+pub mod theta;
+
+pub use engine::OmniQuant;
+pub use pipeline::{quantize_model, QuantizeOutcome};

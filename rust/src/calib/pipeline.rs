@@ -1,0 +1,136 @@
+//! The sequential block-wise calibration pipeline (paper Algorithm 1):
+//! maintains the full-precision stream X_fp and the quantized stream X_q,
+//! hands each block to a `BlockQuantizer`, writes the fused result into the
+//! quantized model, and propagates X_q through the *quantized* block (with
+//! in-graph activation quantization for weight-activation settings).
+
+use anyhow::{bail, Result};
+
+use crate::config::QuantSetting;
+use crate::data::Corpus;
+use crate::model::ModelParams;
+use crate::quant::methods::{BlockCtx, BlockQuantizer};
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+
+#[derive(Debug, Default, Clone)]
+pub struct BlockTrace {
+    pub block: usize,
+    /// mean l1 between quantized and FP block outputs (Table A2's X-column)
+    pub out_l1: f32,
+    /// mean l1 between quantized and FP block weights (Table A2's W-column)
+    pub weight_l1: f32,
+}
+
+pub struct QuantizeOutcome {
+    pub qparams: ModelParams,
+    pub traces: Vec<BlockTrace>,
+    pub secs: f64,
+}
+
+/// Embed token batches into (B, T, d) activations (the only non-block math
+/// outside the graphs: a table lookup).
+pub fn embed_tokens(params: &ModelParams, tokens: &[i32], b: usize, t: usize) -> Result<Tensor> {
+    let desc = params.desc().clone();
+    let d = desc.d_model;
+    let embed = params.get("embed")?;
+    let pos = if desc.family == "opt" { Some(params.get("pos_embed")?) } else { None };
+    let mut out = vec![0.0f32; b * t * d];
+    for bi in 0..b {
+        for ti in 0..t {
+            let tok = tokens[bi * t + ti] as usize;
+            if tok >= desc.vocab {
+                bail!("token {tok} out of vocab {}", desc.vocab);
+            }
+            let dst = &mut out[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+            dst.copy_from_slice(embed.row(tok));
+            if let Some(p) = &pos {
+                for (x, pv) in dst.iter_mut().zip(p.row(ti)) {
+                    *x += pv;
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(&[b, t, d], out))
+}
+
+/// Graph used to propagate the quantized stream.
+fn propagate_graph(setting: &QuantSetting) -> String {
+    if setting.weight_only() {
+        "block_fwd".to_string()
+    } else {
+        format!("block_fwd_actq{}", setting.abits)
+    }
+}
+
+/// Quantize a model block-by-block with the given method.
+///
+/// `samples` 2048-token-segment analogues are drawn from `corpus` (seeded,
+/// disjoint from train/eval streams) and embedded once; the per-block
+/// streams then live entirely in Rust buffers between graph calls.
+pub fn quantize_model(
+    rt: &Runtime,
+    fp: &ModelParams,
+    method: &mut dyn BlockQuantizer,
+    setting: QuantSetting,
+    corpus: &Corpus,
+    samples: usize,
+    seed: u64,
+) -> Result<QuantizeOutcome> {
+    let t0 = std::time::Instant::now();
+    let m = rt.manifest();
+    let (b, t) = (m.calib_batch, m.model.seq_len);
+    let n_batches = samples.div_ceil(b).max(1);
+
+    // calibration stream seeds live in their own range (3 << 32)
+    let mut x_fp: Vec<Tensor> = Vec::with_capacity(n_batches);
+    for i in 0..n_batches {
+        let toks = corpus.batch((3u64 << 32) + seed.wrapping_mul(97).wrapping_add(i as u64), b, t);
+        x_fp.push(embed_tokens(fp, &toks, b, t)?);
+    }
+    let mut x_q: Vec<Tensor> = x_fp.clone();
+
+    let mut qparams = fp.clone();
+    let mut traces = Vec::new();
+    let prop_graph = propagate_graph(&setting);
+
+    for blk in 0..m.model.n_layers {
+        let wflat_fp = fp.block_flat(m, blk)?;
+        // FP targets (also the next FP stream)
+        let mut targets = Vec::with_capacity(n_batches);
+        for xb in &x_fp {
+            targets.push(rt.exec1("block_fwd", &[Value::F32(&wflat_fp), Value::F32(xb)])?);
+        }
+
+        let fused = {
+            let mut ctx = BlockCtx {
+                rt,
+                block_idx: blk,
+                setting,
+                bw: crate::model::BlockWeights::from_flat(m, &wflat_fp)?,
+                wflat_fp: wflat_fp.clone(),
+                x_q: &x_q,
+                targets: &targets,
+            };
+            method.quantize_block(&mut ctx)?
+        };
+        let fused_flat = fused.to_flat();
+        qparams.set_block_flat(m, blk, &fused_flat)?;
+
+        // propagate the quantized stream + measure drift
+        let mut out_l1 = 0.0f32;
+        for (xb, tgt) in x_q.iter_mut().zip(&targets) {
+            let y = rt.exec1(&prop_graph, &[Value::F32(&fused_flat), Value::F32(xb)])?;
+            out_l1 += y.l1_dist(tgt);
+            *xb = y;
+        }
+        traces.push(BlockTrace {
+            block: blk,
+            out_l1: out_l1 / n_batches as f32,
+            weight_l1: fused_flat.l1_dist(&wflat_fp),
+        });
+        x_fp = targets;
+    }
+
+    Ok(QuantizeOutcome { qparams, traces, secs: t0.elapsed().as_secs_f64() })
+}

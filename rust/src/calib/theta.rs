@@ -1,0 +1,236 @@
+//! The learnable quantization-parameter vector Θ = {Θ1, Θ2} (paper Eq. 1):
+//! flat storage matching the manifest's theta layout, initialization
+//! (SmoothQuant scales / Outlier-Suppression+ shifts / near-1 clipping
+//! logits — paper section 4.1), per-region learning rates, ablation
+//! freezing, and extraction back into `LetParams` + per-linear clipping
+//! parameters for fusion.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::CalibConfig;
+use crate::model::BlockWeights;
+use crate::quant::methods::{BlockCtx, Intermediates};
+use crate::quant::methods::smoothquant::smooth_scale;
+use crate::quant::{group_len, quant_params};
+use crate::runtime::LayoutEntry;
+use crate::tensor::Tensor;
+
+/// Clipping-logit init: sigmoid(4) ~= 0.982 (mild clipping to start);
+/// sigmoid(30) == 1.0 in f32 (exact MinMax, used when LWC is disabled).
+pub const LWC_INIT: f32 = 4.0;
+pub const LWC_OFF: f32 = 30.0;
+
+pub struct Theta {
+    pub flat: Vec<f32>,
+    pub layout: Vec<LayoutEntry>,
+    pub variant: String,
+}
+
+impl Theta {
+    pub fn slice(&self, name: &str) -> Result<&[f32]> {
+        let e = self
+            .layout
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("theta entry '{name}' missing"))?;
+        Ok(&self.flat[e.offset..e.offset + e.size])
+    }
+
+    fn fill(&mut self, name: &str, data: &[f32]) -> Result<()> {
+        let e = self
+            .layout
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("theta entry '{name}' missing"))?;
+        if data.len() != e.size {
+            return Err(anyhow!("theta '{name}': {} vs {}", data.len(), e.size));
+        }
+        self.flat[e.offset..e.offset + e.size].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Is this entry part of Θ1 (per-linear clipping) vs Θ2 (LET)?
+    pub fn is_theta1(name: &str) -> bool {
+        name.contains('.')
+    }
+
+    /// Per-element learning-rate vector implementing the paper's split
+    /// (5e-3 for LWC, 1e-2 for LET) and the ablation freezes.
+    pub fn lr_vector(&self, cfg: &CalibConfig) -> Vec<f32> {
+        let mut lr = vec![0.0f32; self.flat.len()];
+        for e in &self.layout {
+            let rate = if Self::is_theta1(&e.name) {
+                if cfg.use_lwc || self.variant != "lwc" { cfg.lr_lwc } else { 0.0 }
+            } else {
+                let shift = e.name.starts_with('d');
+                let attn = e.name == "lsa";
+                if !cfg.use_let {
+                    0.0
+                } else if shift && !cfg.use_let_shift {
+                    0.0
+                } else if attn && !cfg.use_let_attn {
+                    0.0
+                } else {
+                    cfg.lr_let
+                }
+            };
+            lr[e.offset..e.offset + e.size].iter_mut().for_each(|x| *x = rate);
+        }
+        lr
+    }
+
+    /// Extract Θ2 in linear space (s = exp(ls), sa expanded later).
+    pub fn let_raw(&self) -> Result<BTreeMap<String, Vec<f32>>> {
+        let mut out = BTreeMap::new();
+        for nm in ["ls1", "d1", "ls2", "d2", "ls3", "d3", "lsa"] {
+            out.insert(nm.to_string(), self.slice(nm)?.to_vec());
+        }
+        Ok(out)
+    }
+
+    /// Θ1 for a given linear: the two per-(group, cout) parameter planes.
+    pub fn clip_pair(&self, linear: &str) -> Result<(Vec<f32>, Vec<f32>)> {
+        let names = match self.variant.as_str() {
+            "lwc" => ("gamma", "beta"),
+            "pact" => ("tmin", "tmax"),
+            "lsq" => ("logh", "zp"),
+            v => return Err(anyhow!("unknown clip variant {v}")),
+        };
+        Ok((
+            self.slice(&format!("{linear}.{}", names.0))?.to_vec(),
+            self.slice(&format!("{linear}.{}", names.1))?.to_vec(),
+        ))
+    }
+}
+
+/// Build + initialize theta for one block.
+///
+/// LET: s initialized with SmoothQuant (alpha = 0.5) on the captured
+/// activations, shifts with the OS+ channel midpoint, attention scale at 1.
+/// Clipping: LWC logits at 4.0 (or 30 = disabled); PACT thresholds at the
+/// group min/max of the *s-scaled* weights; LSQ step/zero from MinMax.
+pub fn init_theta(
+    ctx: &BlockCtx,
+    inter: &Intermediates,
+    layout: &[LayoutEntry],
+    cfg: &CalibConfig,
+) -> Result<Theta> {
+    let size = layout.last().map(|e| e.offset + e.size).unwrap_or(0);
+    let mut th = Theta {
+        flat: vec![0.0f32; size],
+        layout: layout.to_vec(),
+        variant: cfg.clip_variant.clone(),
+    };
+    let bw = &ctx.bw;
+    let family = ctx.family();
+
+    // ---- Θ2 (LET) ----------------------------------------------------
+    let _d = ctx.rt.model().d_model;
+    let site = |x: &Tensor, ws: Vec<&Tensor>| -> (Vec<f32>, Vec<f32>) {
+        // shift = channel midpoint (OS+); scale = SmoothQuant on |X - δ|
+        let (mn, mx) = x.col_min_max();
+        let delta: Vec<f32> = if cfg.use_let && cfg.use_let_shift {
+            mn.iter().zip(&mx).map(|(a, b)| 0.5 * (a + b)).collect()
+        } else {
+            vec![0.0; x.shape()[1]]
+        };
+        let xa: Vec<f32> = mn
+            .iter()
+            .zip(&mx)
+            .zip(&delta)
+            .map(|((a, b), dl)| (a - dl).abs().max((b - dl).abs()))
+            .collect();
+        let mut wa = vec![0.0f32; x.shape()[1]];
+        for w in ws {
+            for j in 0..w.shape()[0] {
+                for c in 0..w.shape()[1] {
+                    wa[j] = wa[j].max(w.at2(j, c).abs());
+                }
+            }
+        }
+        let s = if cfg.use_let {
+            smooth_scale(&xa, &wa, 0.5)
+        } else {
+            vec![1.0; x.shape()[1]]
+        };
+        (s, delta)
+    };
+
+    let (s1, d1) = site(&inter.x1, vec![bw.get("wq")?, bw.get("wk")?, bw.get("wv")?]);
+    let (s2, d2) = site(&inter.v, vec![bw.get("wo")?]);
+    let ffn: Vec<&Tensor> = if family == "llama" {
+        vec![bw.get("wg")?, bw.get("wu")?]
+    } else {
+        vec![bw.get("w1")?]
+    };
+    let (s3, d3) = site(&inter.x2, ffn);
+    let ln = |v: Vec<f32>| -> Vec<f32> { v.iter().map(|x| x.max(1e-4).ln()).collect() };
+    th.fill("ls1", &ln(s1.clone()))?;
+    th.fill("d1", &d1)?;
+    th.fill("ls2", &ln(s2))?;
+    th.fill("d2", &d2)?;
+    th.fill("ls3", &ln(s3.clone()))?;
+    th.fill("d3", &d3)?;
+    // lsa stays 0 (sa = 1)
+
+    // ---- Θ1 (clipping) -------------------------------------------------
+    let linears = BlockWeights::linear_names(family);
+    for nm in linears {
+        let w = bw.get(nm)?;
+        let (cin, cout) = (w.shape()[0], w.shape()[1]);
+        let g = group_len(cin, ctx.setting.group);
+        let ng = cin / g;
+        // the quantizer sees the s-scaled weight in the calib graph
+        let scale_in: Option<&[f32]> = match *nm {
+            "wq" | "wk" | "wv" => Some(&s1),
+            "wo" => None, // scaled by s2; recompute below
+            "wg" | "wu" | "w1" => Some(&s3),
+            _ => None,
+        };
+        let ws = match (*nm, scale_in) {
+            ("wo", _) => {
+                let s2v = th.slice("ls2")?.iter().map(|x| x.exp()).collect::<Vec<_>>();
+                w.scale_rows(&s2v)
+            }
+            (_, Some(s)) => w.scale_rows(s),
+            (_, None) => w.clone(),
+        };
+        match cfg.clip_variant.as_str() {
+            "lwc" => {
+                let v = if cfg.use_lwc { LWC_INIT } else { LWC_OFF };
+                th.fill(&format!("{nm}.gamma"), &vec![v; ng * cout])?;
+                th.fill(&format!("{nm}.beta"), &vec![v; ng * cout])?;
+            }
+            "pact" => {
+                // thresholds at the group min/max (MinMax at init)
+                let mut tmin = vec![0.0f32; ng * cout];
+                let mut tmax = vec![0.0f32; ng * cout];
+                for gi in 0..ng {
+                    for c in 0..cout {
+                        let mut mn = f32::INFINITY;
+                        let mut mx = f32::NEG_INFINITY;
+                        for k in 0..g {
+                            let v = ws.at2(gi * g + k, c);
+                            mn = mn.min(v);
+                            mx = mx.max(v);
+                        }
+                        tmin[gi * cout + c] = mn;
+                        tmax[gi * cout + c] = mx;
+                    }
+                }
+                th.fill(&format!("{nm}.tmin"), &tmin)?;
+                th.fill(&format!("{nm}.tmax"), &tmax)?;
+            }
+            "lsq" => {
+                let qp = quant_params(&ws, ctx.setting.wbits, ctx.setting.group, None, None);
+                let logh: Vec<f32> = qp.h.iter().map(|h| h.abs().max(1e-8).ln()).collect();
+                th.fill(&format!("{nm}.logh"), &logh)?;
+                th.fill(&format!("{nm}.zp"), &qp.z)?;
+            }
+            v => return Err(anyhow!("unknown clip variant '{v}'")),
+        }
+    }
+    Ok(th)
+}

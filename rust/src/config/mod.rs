@@ -1,0 +1,249 @@
+//! Config system: a hand-rolled TOML-subset parser (tables, strings, ints,
+//! floats, bools, homogeneous arrays — everything `configs/*.toml` uses;
+//! no serde offline) plus the typed experiment / calibration configs.
+
+pub mod toml;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+pub use toml::TomlValue;
+
+/// Quantization setting in the paper's WxAy[gN] notation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantSetting {
+    pub wbits: u8,
+    pub abits: u8,
+    pub group: usize,
+}
+
+impl QuantSetting {
+    pub const FP16: QuantSetting = QuantSetting { wbits: 16, abits: 16, group: 0 };
+
+    pub fn parse(name: &str) -> Result<QuantSetting> {
+        // "w4a16g64" | "w4a4" | "fp16"
+        let s = name.to_ascii_lowercase();
+        if s == "fp16" || s == "fp" {
+            return Ok(Self::FP16);
+        }
+        let rest = s.strip_prefix('w').ok_or_else(|| anyhow!("bad setting '{name}'"))?;
+        let apos = rest.find('a').ok_or_else(|| anyhow!("bad setting '{name}'"))?;
+        let wbits: u8 = rest[..apos].parse().map_err(|_| anyhow!("bad wbits in '{name}'"))?;
+        let tail = &rest[apos + 1..];
+        let (abits_s, group) = match tail.find('g') {
+            Some(g) => (&tail[..g], tail[g + 1..].parse().map_err(|_| anyhow!("bad group in '{name}'"))?),
+            None => (tail, 0),
+        };
+        let abits: u8 = abits_s.parse().map_err(|_| anyhow!("bad abits in '{name}'"))?;
+        Ok(QuantSetting { wbits, abits, group })
+    }
+
+    pub fn name(&self) -> String {
+        if self.wbits >= 16 && self.abits >= 16 {
+            return "fp16".into();
+        }
+        if self.group > 0 {
+            format!("w{}a{}g{}", self.wbits, self.abits, self.group)
+        } else {
+            format!("w{}a{}", self.wbits, self.abits)
+        }
+    }
+
+    pub fn weight_only(&self) -> bool {
+        self.abits >= 16
+    }
+}
+
+/// Calibration hyperparameters (paper section 4.1, scaled to this testbed).
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    pub samples: usize,
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr_lwc: f32,
+    pub lr_let: f32,
+    pub wd: f32,
+    pub seed: u64,
+    pub use_lwc: bool,
+    pub use_let: bool,
+    pub use_let_shift: bool,
+    pub use_let_attn: bool,
+    /// "lwc" | "pact" | "lsq" (Table A3)
+    pub clip_variant: String,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig {
+            samples: 32,
+            epochs: 8,
+            batch: 4,
+            lr_lwc: 5e-3,
+            lr_let: 1e-2,
+            wd: 0.0,
+            seed: 0xC0FFEE,
+            use_lwc: true,
+            use_let: true,
+            use_let_shift: true,
+            use_let_attn: true,
+            clip_variant: "lwc".into(),
+        }
+    }
+}
+
+impl CalibConfig {
+    pub fn from_toml(v: &BTreeMap<String, TomlValue>) -> Result<CalibConfig> {
+        let mut c = CalibConfig::default();
+        for (k, val) in v {
+            match k.as_str() {
+                "samples" => c.samples = val.as_int()? as usize,
+                "epochs" => c.epochs = val.as_int()? as usize,
+                "batch" => c.batch = val.as_int()? as usize,
+                "lr_lwc" => c.lr_lwc = val.as_float()? as f32,
+                "lr_let" => c.lr_let = val.as_float()? as f32,
+                "wd" => c.wd = val.as_float()? as f32,
+                "seed" => c.seed = val.as_int()? as u64,
+                "use_lwc" => c.use_lwc = val.as_bool()?,
+                "use_let" => c.use_let = val.as_bool()?,
+                "use_let_shift" => c.use_let_shift = val.as_bool()?,
+                "use_let_attn" => c.use_let_attn = val.as_bool()?,
+                "clip_variant" => c.clip_variant = val.as_str()?.to_string(),
+                other => return Err(anyhow!("unknown calib key '{other}'")),
+            }
+        }
+        Ok(c)
+    }
+}
+
+/// Training hyperparameters for the in-repo pre-training pass.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 300, lr: 3e-3, warmup: 20, seed: 7, log_every: 20 }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_toml(v: &BTreeMap<String, TomlValue>) -> Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        for (k, val) in v {
+            match k.as_str() {
+                "steps" => c.steps = val.as_int()? as usize,
+                "lr" => c.lr = val.as_float()? as f32,
+                "warmup" => c.warmup = val.as_int()? as usize,
+                "seed" => c.seed = val.as_int()? as u64,
+                "log_every" => c.log_every = val.as_int()? as usize,
+                other => return Err(anyhow!("unknown train key '{other}'")),
+            }
+        }
+        Ok(c)
+    }
+}
+
+/// Top-level experiment configuration file.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    pub model: String,
+    pub artifacts_dir: String,
+    pub checkpoint: String,
+    pub calib: CalibConfig,
+    pub train: TrainConfig,
+}
+
+impl ExperimentConfig {
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ExperimentConfig> {
+        let doc = toml::parse(text)?;
+        let mut cfg = ExperimentConfig {
+            artifacts_dir: "artifacts".into(),
+            ..Default::default()
+        };
+        for (k, v) in &doc.root {
+            match k.as_str() {
+                "model" => cfg.model = v.as_str()?.to_string(),
+                "artifacts_dir" => cfg.artifacts_dir = v.as_str()?.to_string(),
+                "checkpoint" => cfg.checkpoint = v.as_str()?.to_string(),
+                other => return Err(anyhow!("unknown top-level key '{other}'")),
+            }
+        }
+        if let Some(t) = doc.tables.get("calib") {
+            cfg.calib = CalibConfig::from_toml(t)?;
+        }
+        if let Some(t) = doc.tables.get("train") {
+            cfg.train = TrainConfig::from_toml(t)?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_setting_parse_roundtrip() {
+        for s in ["w2a16", "w2a16g64", "w3a16", "w4a4", "w6a6", "w4a16g64"] {
+            let q = QuantSetting::parse(s).unwrap();
+            assert_eq!(q.name(), s);
+        }
+        assert_eq!(QuantSetting::parse("fp16").unwrap(), QuantSetting::FP16);
+        assert!(QuantSetting::parse("x4a4").is_err());
+        assert!(QuantSetting::parse("w4b4").is_err());
+    }
+
+    #[test]
+    fn quant_setting_fields() {
+        let q = QuantSetting::parse("w3a16g64").unwrap();
+        assert_eq!((q.wbits, q.abits, q.group), (3, 16, 64));
+        assert!(q.weight_only());
+        assert!(!QuantSetting::parse("w4a4").unwrap().weight_only());
+    }
+
+    #[test]
+    fn experiment_config_parse() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+model = "omni-1m"
+checkpoint = "ckpt/omni-1m.oqc"
+
+[calib]
+samples = 16
+epochs = 4
+lr_let = 0.02
+use_let_attn = false
+
+[train]
+steps = 100
+lr = 0.001
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "omni-1m");
+        assert_eq!(cfg.calib.samples, 16);
+        assert_eq!(cfg.calib.epochs, 4);
+        assert!((cfg.calib.lr_let - 0.02).abs() < 1e-9);
+        assert!(!cfg.calib.use_let_attn);
+        assert!(cfg.calib.use_lwc); // default preserved
+        assert_eq!(cfg.train.steps, 100);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(ExperimentConfig::parse("bogus = 1").is_err());
+        assert!(ExperimentConfig::parse("[calib]\nnope = 2").is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! TOML-subset parser: `key = value` pairs, `[table]` headers, strings,
+//! integers, floats, booleans, and flat arrays. Comments with `#`.
+//! Covers everything the repo's config files need.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => Err(anyhow!("expected string, got {self:?}")),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(x) => Ok(*x),
+            _ => Err(anyhow!("expected integer, got {self:?}")),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(x) => Ok(*x),
+            TomlValue::Int(x) => Ok(*x as f64),
+            _ => Err(anyhow!("expected float, got {self:?}")),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => Err(anyhow!("expected bool, got {self:?}")),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    pub root: BTreeMap<String, TomlValue>,
+    pub tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut current: Option<String> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated table header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(anyhow!("line {}: empty table name", lineno + 1));
+            }
+            doc.tables.entry(name.to_string()).or_default();
+            current = Some(name.to_string());
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim().to_string();
+        if key.is_empty() {
+            return Err(anyhow!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        match &current {
+            Some(t) => {
+                doc.tables.get_mut(t).unwrap().insert(key, value);
+            }
+            None => {
+                doc.root.insert(key, value);
+            }
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        return Err(anyhow!("empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(anyhow!("bad escape {other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: Result<Vec<_>, _> = split_top_level(inner).iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(anyhow!("cannot parse value '{s}'"))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_types() {
+        let d = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = [1, 2, 3]").unwrap();
+        assert_eq!(d.root["a"], TomlValue::Int(1));
+        assert_eq!(d.root["b"], TomlValue::Float(2.5));
+        assert_eq!(d.root["c"], TomlValue::Str("hi".into()));
+        assert_eq!(d.root["d"], TomlValue::Bool(true));
+        assert_eq!(
+            d.root["e"],
+            TomlValue::Arr(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+    }
+
+    #[test]
+    fn tables_and_comments() {
+        let d = parse("# header\nx = 1 # inline\n[t]\ny = \"a # not comment\"").unwrap();
+        assert_eq!(d.root["x"], TomlValue::Int(1));
+        assert_eq!(d.tables["t"]["y"], TomlValue::Str("a # not comment".into()));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let d = parse(r#"s = "a\nb\t\"q\"""#).unwrap();
+        assert_eq!(d.root["s"], TomlValue::Str("a\nb\t\"q\"".into()));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("novalue").is_err());
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let d = parse("m = [[1, 2], [3, 4]]").unwrap();
+        match &d.root["m"] {
+            TomlValue::Arr(v) => assert_eq!(v.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn float_coercion() {
+        let d = parse("x = 3").unwrap();
+        assert_eq!(d.root["x"].as_float().unwrap(), 3.0);
+    }
+}

@@ -1,0 +1,56 @@
+//! Method factory: name -> `BlockQuantizer`, including the paper's
+//! baselines and the OmniQuant ablation variants.
+
+use anyhow::{bail, Result};
+
+use crate::calib::OmniQuant;
+use crate::config::CalibConfig;
+use crate::quant::methods::{awq::Awq, gptq::Gptq, rtn::Rtn, smoothquant::SmoothQuant, BlockQuantizer};
+
+/// Recognized method names (CLI + experiment drivers):
+/// rtn | gptq | awq | smoothquant | omniquant | omniquant-nolwc |
+/// omniquant-nolet | omniquant-noshift | omniquant-noattn |
+/// omniquant-pact | omniquant-lsq | minmax-train (LWC off + LET off)
+pub fn make_method(name: &str, calib: &CalibConfig) -> Result<Box<dyn BlockQuantizer>> {
+    let mut cfg = calib.clone();
+    Ok(match name {
+        "rtn" => Box::new(Rtn),
+        "gptq" => Box::new(Gptq::default()),
+        "awq" => Box::new(Awq::default()),
+        "smoothquant" | "sq" => Box::new(SmoothQuant::default()),
+        "omniquant" => Box::new(OmniQuant::new(cfg)),
+        "omniquant-nolwc" => {
+            cfg.use_lwc = false;
+            Box::new(OmniQuant::new(cfg))
+        }
+        "omniquant-nolet" => {
+            cfg.use_let = false;
+            Box::new(OmniQuant::new(cfg))
+        }
+        "omniquant-noshift" => {
+            cfg.use_let_shift = false;
+            Box::new(OmniQuant::new(cfg))
+        }
+        "omniquant-noattn" => {
+            cfg.use_let_attn = false;
+            Box::new(OmniQuant::new(cfg))
+        }
+        "omniquant-pact" => {
+            cfg.clip_variant = "pact".into();
+            Box::new(OmniQuant::new(cfg))
+        }
+        "omniquant-lsq" => {
+            cfg.clip_variant = "lsq".into();
+            Box::new(OmniQuant::new(cfg))
+        }
+        "minmax-train" => {
+            // trained pipeline with both components off == MinMax (-LWC-LET)
+            cfg.use_lwc = false;
+            cfg.use_let = false;
+            Box::new(OmniQuant::new(cfg))
+        }
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+pub const ALL_METHODS: &[&str] = &["rtn", "gptq", "awq", "smoothquant", "omniquant"];

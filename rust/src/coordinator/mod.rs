@@ -1,0 +1,11 @@
+//! Top-level coordination: pre-training (via the AOT train-step graph),
+//! the quantize/evaluate/serve pipelines glued together, the method
+//! factory, and the experiment drivers that regenerate every paper table
+//! and figure (`repro`).
+
+pub mod methods;
+pub mod repro;
+pub mod train;
+
+pub use methods::make_method;
+pub use train::{pretrain, TrainOutcome};

@@ -1,0 +1,372 @@
+//! Ablation experiments: Table 4 (LWC/LET components), Table A1 (training
+//! time), Table A2 (l1 distances), Table A3 (PACT/LSQ/LWC), Table A4 (LET
+//! design), Table A5 (epochs), Tables A6/A7 (calibration data), Figure A1
+//! (learned clipping-scale distributions), Figure A2 (activation outliers
+//! before/after LET).
+
+use anyhow::Result;
+
+use crate::calib::{self, OmniQuant};
+use crate::config::{CalibConfig, QuantSetting};
+use crate::data::CorpusId;
+use crate::eval;
+use crate::report::{fmt_ppl, Table};
+use crate::util::stats::{histogram, sparkline};
+
+use super::Ctx;
+
+fn eval_ppl(ctx: &mut Ctx, model: &str, params: &crate::model::ModelParams,
+            setting: &QuantSetting, cid: CorpusId) -> Result<f64> {
+    let vocab = ctx.runtime(model)?.model().vocab;
+    let corpus = ctx.corpus(cid, vocab).clone();
+    let n = ctx.opts.eval_batches;
+    let rt = ctx.runtime(model)?;
+    eval::perplexity(rt, params, setting, &corpus, n)
+}
+
+/// Run OmniQuant directly (not through the ctx cache) so the per-block
+/// calibration statistics are observable.
+fn run_omniquant(
+    ctx: &mut Ctx,
+    model: &str,
+    setting: QuantSetting,
+    cfg: CalibConfig,
+    corpus_id: CorpusId,
+) -> Result<(crate::model::ModelParams, OmniQuant, f64, Vec<calib::pipeline::BlockTrace>)> {
+    let fp = ctx.trained(model)?;
+    let vocab = ctx.runtime(model)?.model().vocab;
+    let corpus = ctx.corpus(corpus_id, vocab).clone();
+    let samples = cfg.samples;
+    let seed = cfg.seed;
+    let rt = ctx.runtime(model)?;
+    let mut method = OmniQuant::new(cfg);
+    let out = calib::quantize_model(rt, &fp, &mut method, setting, &corpus, samples, seed)?;
+    Ok((out.qparams, method, out.secs, out.traces))
+}
+
+/// Table 4: component ablation — LWC+LET / -LWC / -LET / -both.
+pub fn table4(ctx: &mut Ctx) -> Result<()> {
+    let models: Vec<&str> =
+        if ctx.opts.quick { vec!["omni-1m"] } else { vec!["omni-3m", "opt-3m"] };
+    let settings = ["w4a4", "w3a16"];
+    let variants = [
+        ("LWC+LET", "omniquant"),
+        ("-LWC", "omniquant-nolwc"),
+        ("-LET", "omniquant-nolet"),
+        ("-LWC-LET", "minmax-train"),
+    ];
+    let mut header = vec!["method"];
+    for m in &models {
+        for s in &settings {
+            header.push(Box::leak(format!("{m} {s}").into_boxed_str()));
+        }
+    }
+    let mut table = Table::new("Table 4 — LWC / LET component ablation (wiki-s PPL)", &header);
+    for (label, method) in variants {
+        let mut row = vec![label.to_string()];
+        for model in &models {
+            for s in &settings {
+                let setting = QuantSetting::parse(s)?;
+                let (qp, _, _) = ctx.quantized(model, method, setting)?;
+                row.push(fmt_ppl(eval_ppl(ctx, model, &qp, &setting, CorpusId::Wiki)?));
+            }
+        }
+        println!("  {}", row.join(" | "));
+        table.row(row);
+    }
+    let md = table.to_markdown();
+    print!("{md}");
+    ctx.write_results("table4", &md)
+}
+
+/// Table A1: calibration wall time, weight-only vs weight-activation.
+pub fn table_a1(ctx: &mut Ctx) -> Result<()> {
+    let models: Vec<&str> = if ctx.opts.quick {
+        vec!["omni-1m"]
+    } else {
+        vec!["omni-1m", "omni-3m", "omni-7m"]
+    };
+    let mut table = Table::new(
+        "Table A1 — OmniQuant calibration runtime (this testbed)",
+        &["model", "weight-only (w3a16) s", "weight-activation (w4a4) s"],
+    );
+    for model in &models {
+        let cfg = ctx.opts.calib.clone();
+        let mut wo_cfg = cfg.clone();
+        wo_cfg.use_let = false; // paper: LLaMA weight-only trains LWC only
+        let (_, _, wo_secs, _) =
+            run_omniquant(ctx, model, QuantSetting::parse("w3a16")?, wo_cfg, CorpusId::Wiki)?;
+        let (_, _, wa_secs, _) =
+            run_omniquant(ctx, model, QuantSetting::parse("w4a4")?, cfg, CorpusId::Wiki)?;
+        let row = vec![model.to_string(), format!("{wo_secs:.1}"), format!("{wa_secs:.1}")];
+        println!("  {}", row.join(" | "));
+        table.row(row);
+    }
+    let md = table.to_markdown();
+    print!("{md}");
+    ctx.write_results("tableA1", &md)
+}
+
+/// Table A2: l1 distances with / without LWC across settings.
+pub fn table_a2(ctx: &mut Ctx) -> Result<()> {
+    let model = "omni-1m";
+    let settings = if ctx.opts.quick {
+        vec!["w3a16", "w4a16"]
+    } else {
+        vec!["w2a16g32", "w3a16", "w3a16g64", "w4a16", "w4a16g64"]
+    };
+    let mut table = Table::new(
+        "Table A2 — l1 distances, with vs without LWC",
+        &["setting", "|W-Wq| w/o LWC", "|W-Wq| w/ LWC", "|X-Xq| w/o LWC", "|X-Xq| w/ LWC"],
+    );
+    for s in settings {
+        let setting = QuantSetting::parse(s)?;
+        let mut no_lwc = ctx.opts.calib.clone();
+        no_lwc.use_lwc = false;
+        no_lwc.use_let = false;
+        let mut lwc = ctx.opts.calib.clone();
+        lwc.use_let = false;
+        let (_, _, _, tr_no) = run_omniquant(ctx, model, setting, no_lwc, CorpusId::Wiki)?;
+        let (_, _, _, tr_yes) = run_omniquant(ctx, model, setting, lwc, CorpusId::Wiki)?;
+        let wl = |t: &[calib::pipeline::BlockTrace]| {
+            t.iter().map(|b| b.weight_l1).sum::<f32>() / t.len() as f32
+        };
+        let xl = |t: &[calib::pipeline::BlockTrace]| {
+            t.iter().map(|b| b.out_l1).sum::<f32>() / t.len() as f32
+        };
+        let row = vec![
+            s.to_string(),
+            format!("{:.5}", wl(&tr_no)),
+            format!("{:.5}", wl(&tr_yes)),
+            format!("{:.4}", xl(&tr_no)),
+            format!("{:.4}", xl(&tr_yes)),
+        ];
+        println!("  {}", row.join(" | "));
+        table.row(row);
+    }
+    let md = table.to_markdown();
+    print!("{md}");
+    ctx.write_results("tableA2", &md)
+}
+
+/// Table A3: clipping-method comparison (MinMax / PACT / LSQ / LWC).
+pub fn table_a3(ctx: &mut Ctx) -> Result<()> {
+    let model = "omni-1m";
+    let mut table = Table::new(
+        "Table A3 — clipping methods inside the OmniQuant pipeline (wiki-s PPL)",
+        &["method", "w3a16", "w4a4"],
+    );
+    // FP reference row
+    {
+        let fp = ctx.trained(model)?;
+        let ppl = eval_ppl(ctx, model, &fp, &QuantSetting::FP16, CorpusId::Wiki)?;
+        table.row(vec!["FP".into(), fmt_ppl(ppl), fmt_ppl(ppl)]);
+    }
+    for (label, method) in [
+        ("MinMax", "minmax-train"),
+        ("PACT", "omniquant-pact"),
+        ("LSQ", "omniquant-lsq"),
+        ("LWC (ours)", "omniquant"),
+    ] {
+        let mut row = vec![label.to_string()];
+        for s in ["w3a16", "w4a4"] {
+            let setting = QuantSetting::parse(s)?;
+            let (qp, _, _) = ctx.quantized(model, method, setting)?;
+            row.push(fmt_ppl(eval_ppl(ctx, model, &qp, &setting, CorpusId::Wiki)?));
+        }
+        println!("  {}", row.join(" | "));
+        table.row(row);
+    }
+    let md = table.to_markdown();
+    print!("{md}");
+    ctx.write_results("tableA3", &md)
+}
+
+/// Table A4: LET design ablation (-shifting, -attention scaling).
+pub fn table_a4(ctx: &mut Ctx) -> Result<()> {
+    let models: Vec<&str> =
+        if ctx.opts.quick { vec!["omni-1m"] } else { vec!["omni-3m", "opt-3m"] };
+    let mut header = vec!["method"];
+    for m in &models {
+        for s in ["w4a4", "w3a16"] {
+            header.push(Box::leak(format!("{m} {s}").into_boxed_str()));
+        }
+    }
+    let mut table = Table::new("Table A4 — LET design ablation (wiki-s PPL)", &header);
+    for (label, method) in [
+        ("LWC+LET", "omniquant"),
+        ("-shifting", "omniquant-noshift"),
+        ("-attention", "omniquant-noattn"),
+    ] {
+        let mut row = vec![label.to_string()];
+        for model in &models {
+            for s in ["w4a4", "w3a16"] {
+                let setting = QuantSetting::parse(s)?;
+                let (qp, _, _) = ctx.quantized(model, method, setting)?;
+                row.push(fmt_ppl(eval_ppl(ctx, model, &qp, &setting, CorpusId::Wiki)?));
+            }
+        }
+        println!("  {}", row.join(" | "));
+        table.row(row);
+    }
+    let md = table.to_markdown();
+    print!("{md}");
+    ctx.write_results("tableA4", &md)
+}
+
+/// Table A5: training-epoch ablation.
+pub fn table_a5(ctx: &mut Ctx) -> Result<()> {
+    let model = "omni-1m";
+    let epochs_list: Vec<usize> = if ctx.opts.quick { vec![0, 2, 4] } else { vec![0, 2, 4, 8, 16] };
+    let settings = if ctx.opts.quick {
+        vec!["w3a16", "w4a4"]
+    } else {
+        vec!["w4a16", "w3a16", "w2a16", "w6a6", "w4a4"]
+    };
+    let mut header = vec!["epochs"];
+    header.extend(settings.iter().copied());
+    let mut table = Table::new("Table A5 — calibration epochs ablation (wiki-s PPL)", &header);
+    for &ep in &epochs_list {
+        let mut row = vec![ep.to_string()];
+        for s in &settings {
+            let setting = QuantSetting::parse(s)?;
+            let mut cfg = ctx.opts.calib.clone();
+            cfg.epochs = ep;
+            let (qp, _, _, _) = run_omniquant(ctx, model, setting, cfg, CorpusId::Wiki)?;
+            row.push(fmt_ppl(eval_ppl(ctx, model, &qp, &setting, CorpusId::Wiki)?));
+        }
+        println!("  {}", row.join(" | "));
+        table.row(row);
+    }
+    let md = table.to_markdown();
+    print!("{md}");
+    ctx.write_results("tableA5", &md)
+}
+
+/// Table A6: calibration-corpus robustness.
+pub fn table_a6(ctx: &mut Ctx) -> Result<()> {
+    let model = "omni-1m";
+    let calib_corpora = [CorpusId::Wiki, CorpusId::C4, CorpusId::Pile];
+    let mut table = Table::new(
+        "Table A6 — calibration dataset ablation (eval PPL)",
+        &["calib corpus", "w3a16 wiki-s", "w3a16 c4-s", "w4a4 wiki-s", "w4a4 c4-s"],
+    );
+    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); 4];
+    for cid in calib_corpora {
+        let mut row = vec![cid.name().to_string()];
+        for (i, s) in ["w3a16", "w4a4"].iter().enumerate() {
+            let setting = QuantSetting::parse(s)?;
+            let (qp, _, _) =
+                ctx.quantized_with(model, "omniquant", setting, None, cid, false)?;
+            for (j, ecid) in [CorpusId::Wiki, CorpusId::C4].iter().enumerate() {
+                let ppl = eval_ppl(ctx, model, &qp, &setting, *ecid)?;
+                cols[i * 2 + j].push(ppl);
+                row.push(fmt_ppl(ppl));
+            }
+        }
+        println!("  {}", row.join(" | "));
+        table.row(row);
+    }
+    // variance row (the paper reports it)
+    let mut vrow = vec!["variance".to_string()];
+    for c in &cols {
+        let m = c.iter().sum::<f64>() / c.len() as f64;
+        let v = c.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / c.len() as f64;
+        vrow.push(format!("{v:.4}"));
+    }
+    table.row(vrow);
+    let md = table.to_markdown();
+    print!("{md}");
+    ctx.write_results("tableA6", &md)
+}
+
+/// Table A7: calibration sample-count ablation.
+pub fn table_a7(ctx: &mut Ctx) -> Result<()> {
+    let model = "omni-1m";
+    let counts: Vec<usize> = if ctx.opts.quick { vec![4, 16] } else { vec![4, 8, 16, 32, 64] };
+    let mut table = Table::new(
+        "Table A7 — calibration sample count ablation",
+        &["samples", "w3a16 wiki-s", "w3a16 c4-s", "w4a4 wiki-s", "w4a4 c4-s"],
+    );
+    for &n in &counts {
+        let mut row = vec![n.to_string()];
+        for s in ["w3a16", "w4a4"] {
+            let setting = QuantSetting::parse(s)?;
+            let mut cfg = ctx.opts.calib.clone();
+            cfg.samples = n;
+            let (qp, _, _, _) = run_omniquant(ctx, model, setting, cfg, CorpusId::Wiki)?;
+            for ecid in [CorpusId::Wiki, CorpusId::C4] {
+                row.push(fmt_ppl(eval_ppl(ctx, model, &qp, &setting, ecid)?));
+            }
+        }
+        println!("  {}", row.join(" | "));
+        table.row(row);
+    }
+    let md = table.to_markdown();
+    print!("{md}");
+    ctx.write_results("tableA7", &md)
+}
+
+/// Figure A1: distribution of learned clipping scales sigmoid(gamma).
+pub fn fig_a1(ctx: &mut Ctx) -> Result<()> {
+    let model = "omni-1m";
+    let settings = if ctx.opts.quick {
+        vec!["w3a16", "w2a16g32"]
+    } else {
+        vec!["w3a16", "w3a16g64", "w2a16g32", "w4a16"]
+    };
+    let mut out = String::from("### Figure A1 — learned clipping-scale distributions\n\n");
+    out.push_str("Histogram of sigmoid(gamma) over [0, 1] (20 bins, all blocks):\n\n```\n");
+    for s in settings {
+        let setting = QuantSetting::parse(s)?;
+        let mut cfg = ctx.opts.calib.clone();
+        cfg.use_let = false;
+        let (_, method, _, _) = run_omniquant(ctx, model, setting, cfg, CorpusId::Wiki)?;
+        let scales: Vec<f32> = method.stats.iter().flat_map(|b| b.clip_scales.clone()).collect();
+        let hist = histogram(&scales, 0.0, 1.0, 20);
+        let frac_hi = scales.iter().filter(|&&x| x > 0.95).count() as f32
+            / scales.len().max(1) as f32;
+        out.push_str(&format!(
+            "{s:<12} {}  (n={}, {:.0}% above 0.95)\n",
+            sparkline(&hist),
+            scales.len(),
+            100.0 * frac_hi
+        ));
+    }
+    out.push_str("```\n");
+    print!("{out}");
+    ctx.write_results("figA1", &out)
+}
+
+/// Figure A2: activation outlier channels — original vs SmoothQuant vs LET.
+pub fn fig_a2(ctx: &mut Ctx) -> Result<()> {
+    let model = if ctx.opts.quick { "opt-1m" } else { "opt-3m" };
+    let setting = QuantSetting::parse("w4a4")?;
+    let fp = ctx.trained(model)?;
+    let (sq, _, _) = ctx.quantized(model, "smoothquant", setting)?;
+    let (oq, _, _) = ctx.quantized(model, "omniquant", setting)?;
+    let block = 1;
+    let vocab = ctx.runtime(model)?.model().vocab;
+    let corpus = ctx.corpus(CorpusId::Wiki, vocab).clone();
+    let rt = ctx.runtime(model)?;
+    let orig = eval::activation_channel_maxes(rt, &fp, block, &corpus)?;
+    let after_sq = eval::activation_channel_maxes(rt, &sq, block, &corpus)?;
+    let after_let = eval::activation_channel_maxes(rt, &oq, block, &corpus)?;
+    let summarize = |v: &[f32]| {
+        let mx = v.iter().cloned().fold(0.0f32, f32::max);
+        let mean = v.iter().sum::<f32>() / v.len() as f32;
+        (mx, mean, mx / mean.max(1e-6))
+    };
+    let mut out = String::from(
+        "### Figure A2 — FFN-input channel max |activation| (outlier suppression)\n\n",
+    );
+    let mut table = Table::new("", &["variant", "max", "mean", "max/mean (outlier ratio)"]);
+    for (name, v) in [("original", &orig), ("smoothquant", &after_sq), ("LET (ours)", &after_let)] {
+        let (mx, mean, ratio) = summarize(v);
+        let row = vec![name.to_string(), format!("{mx:.2}"), format!("{mean:.3}"), format!("{ratio:.1}")];
+        println!("  {}", row.join(" | "));
+        table.row(row);
+    }
+    out.push_str(&table.to_markdown());
+    ctx.write_results("figA2", &out)
+}

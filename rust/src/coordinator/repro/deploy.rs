@@ -1,0 +1,56 @@
+//! Table 3: deployment — weight memory (WM), running memory (RM) and
+//! decode throughput for FP vs packed W4/W3/W2 group-64 weights, via the
+//! pure-Rust serving engine (the MLC-LLM-on-A100 substitution; both are
+//! memory-bound weight-streaming decoders, DESIGN.md section 2/3).
+
+use anyhow::Result;
+
+use crate::config::QuantSetting;
+use crate::report::Table;
+use crate::serve::Engine;
+use crate::util::fmt_bytes;
+
+use super::weight_only::llama_models;
+use super::Ctx;
+
+pub fn table3(ctx: &mut Ctx) -> Result<()> {
+    let models = llama_models(ctx.opts.quick);
+    let settings = ["fp16", "w4a16g64", "w3a16g64", "w2a16g64"];
+    let n_tokens = if ctx.opts.quick { 128 } else { 512 };
+    let mut table = Table::new(
+        &format!("Table 3 — deployment via packed-gemv engine (decode {n_tokens} tokens)"),
+        &["model", "setting", "WM", "RM", "tok/s", "speedup_vs_fp"],
+    );
+    for model in &models {
+        let mut fp_tps = 0.0f64;
+        for setting_name in settings {
+            let setting = QuantSetting::parse(setting_name)?;
+            // deploy the *quantized* checkpoint for quant settings so the
+            // packed grid matches the calibrated model, FP otherwise
+            let params = if setting.wbits >= 16 {
+                ctx.trained(model)?
+            } else {
+                ctx.quantized(model, "omniquant", setting)?.0
+            };
+            let engine = Engine::build(&params, setting)?;
+            let stats = engine.batched_decode(1, n_tokens, 7);
+            if setting.wbits >= 16 {
+                fp_tps = stats.decode_tok_per_s;
+            }
+            let speedup = stats.decode_tok_per_s / fp_tps.max(1e-9);
+            let row = vec![
+                model.to_string(),
+                setting_name.to_string(),
+                fmt_bytes(engine.weight_bytes()),
+                fmt_bytes(stats.running_bytes),
+                format!("{:.1}", stats.decode_tok_per_s),
+                format!("{speedup:.2}x"),
+            ];
+            println!("  {}", row.join(" | "));
+            table.row(row);
+        }
+    }
+    let md = table.to_markdown();
+    print!("{md}");
+    ctx.write_results("table3", &md)
+}

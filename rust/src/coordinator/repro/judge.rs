@@ -1,0 +1,75 @@
+//! Figure 4: instruction-tuned model comparison under a judge. The paper
+//! uses GPT-4 over Vicuna prompts; we substitute the FP teacher model's
+//! NLL preference between two quantized models' greedy generations on the
+//! same prompts (both orders are symmetric here since NLL is
+//! position-free). Shape to reproduce: OmniQuant >= AWQ > RTN win rates.
+
+use anyhow::Result;
+
+use crate::config::QuantSetting;
+use crate::data::CorpusId;
+use crate::eval::judge_generations;
+use crate::report::Table;
+use crate::serve::Engine;
+use crate::util::Rng;
+
+use super::Ctx;
+
+fn generations(
+    engine: &Engine,
+    prompts: &[Vec<i32>],
+    n_new: usize,
+) -> Vec<Vec<i32>> {
+    let mut out = Vec::with_capacity(prompts.len());
+    let mut rng = Rng::new(11);
+    for p in prompts {
+        let (gen, _) = engine.generate(p, n_new, 0.7, &mut rng);
+        let mut full = p.clone();
+        full.extend(gen);
+        out.push(full);
+    }
+    out
+}
+
+pub fn fig4(ctx: &mut Ctx) -> Result<()> {
+    let model = if ctx.opts.quick { "omni-1m" } else { "omni-3m" };
+    let setting = QuantSetting::parse("w3a16g64")?;
+    let n_prompts = if ctx.opts.quick { 20 } else { 80 };
+    let n_new = 24;
+
+    let teacher = ctx.trained(model)?;
+    let vocab = ctx.runtime(model)?.model().vocab;
+    let corpus = ctx.corpus(CorpusId::Wiki, vocab).clone();
+    let prompts: Vec<Vec<i32>> = (0..n_prompts)
+        .map(|i| corpus.sample((5u64 << 32) + i as u64, 24))
+        .collect();
+
+    let mut gens = std::collections::BTreeMap::new();
+    for method in ["rtn", "awq", "omniquant"] {
+        let (qp, _, _) = ctx.quantized(model, method, setting)?;
+        let engine = Engine::build(&qp, setting)?;
+        gens.insert(method.to_string(), generations(&engine, &prompts, n_new));
+    }
+
+    let mut table = Table::new(
+        "Figure 4 — teacher-NLL judged pairwise win rates, w3a16g64",
+        &["pair", "wins_a", "wins_b", "ties", "win_rate_a_no_ties"],
+    );
+    for (a, b) in [("omniquant", "rtn"), ("awq", "rtn"), ("omniquant", "awq")] {
+        let rt = ctx.runtime(model)?;
+        let (wa, wb, ties) = judge_generations(rt, &teacher, &gens[a], &gens[b])?;
+        let rate = if wa + wb > 0 { 100.0 * wa as f64 / (wa + wb) as f64 } else { 50.0 };
+        let row = vec![
+            format!("{a} vs {b}"),
+            wa.to_string(),
+            wb.to_string(),
+            ties.to_string(),
+            format!("{rate:.1}%"),
+        ];
+        println!("  {}", row.join(" | "));
+        table.row(row);
+    }
+    let md = table.to_markdown();
+    print!("{md}");
+    ctx.write_results("fig4", &md)
+}

@@ -1,0 +1,70 @@
+//! In-repo pre-training: drives the AOT `train_step` graph (full AdamW
+//! inside the HLO) over the synthetic corpus. This is how checkpoints for
+//! every experiment are produced — the paper quantizes *trained* models,
+//! and quantization difficulty (outlier channels, heavy-tailed weights)
+//! only exists after training.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::Corpus;
+use crate::model::ModelParams;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+pub struct TrainOutcome {
+    pub params: ModelParams,
+    pub losses: Vec<f32>,
+    pub secs: f64,
+}
+
+pub fn pretrain(rt: &Runtime, cfg: &TrainConfig, corpus: &Corpus) -> Result<TrainOutcome> {
+    let t0 = std::time::Instant::now();
+    let m = rt.manifest();
+    let (b, t) = (m.train_batch, m.model.seq_len);
+    let mut rng = Rng::new(cfg.seed);
+    let params = ModelParams::init(m, &mut rng);
+    let n = params.flat.len();
+
+    let mut p = Tensor::new(&[n], params.flat.clone());
+    let mut mom = Tensor::zeros(&[n]);
+    let mut vel = Tensor::zeros(&[n]);
+    let mut losses = Vec::with_capacity(cfg.steps);
+
+    for step in 0..cfg.steps {
+        // linear warmup then cosine decay
+        let lr = if step < cfg.warmup {
+            cfg.lr * (step + 1) as f32 / cfg.warmup as f32
+        } else {
+            let p01 = (step - cfg.warmup) as f32 / (cfg.steps - cfg.warmup).max(1) as f32;
+            cfg.lr * 0.5 * (1.0 + (std::f32::consts::PI * p01).cos())
+        };
+        let toks = corpus.train_batch(step, b, t);
+        let outs = rt.exec(
+            "train_step",
+            &[
+                Value::F32(&p),
+                Value::F32(&mom),
+                Value::F32(&vel),
+                Value::Scalar(step as f32),
+                Value::Scalar(lr),
+                Value::I32(&toks, &[b, t]),
+            ],
+        )?;
+        let mut it = outs.into_iter();
+        p = it.next().unwrap();
+        mom = it.next().unwrap();
+        vel = it.next().unwrap();
+        let loss = it.next().unwrap().item();
+        losses.push(loss);
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            println!(
+                "  train step {step:>5}  loss {loss:.4}  ppl {:.2}  lr {lr:.2e}",
+                loss.exp()
+            );
+        }
+    }
+    let params = ModelParams::new(m, p.into_data())?;
+    Ok(TrainOutcome { params, losses, secs: t0.elapsed().as_secs_f64() })
+}

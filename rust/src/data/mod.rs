@@ -1,0 +1,16 @@
+//! Synthetic data substrate. The paper calibrates/evaluates on WikiText2 /
+//! C4 / PTB / Pile and six zero-shot suites; none are available offline, so
+//! we build distribution-controlled stand-ins (DESIGN.md section 3):
+//!
+//! * `corpus` — Zipf-Markov token streams: sparse per-token successor sets
+//!   with Zipfian weights and a topic mixture. Low-entropy enough that the
+//!   tiny transformers learn real structure; three distinct corpora stand
+//!   in for the paper's Wiki/C4/PTB calibration-robustness ablations.
+//! * `zeroshot` — option-ranking tasks scored by model NLL, the same metric
+//!   lm-eval-harness uses for PIQA/ARC/BoolQ/HellaSwag/Winogrande.
+
+pub mod corpus;
+pub mod zeroshot;
+
+pub use corpus::{Corpus, CorpusId};
+pub use zeroshot::{TaskKind, ZeroShotTask};

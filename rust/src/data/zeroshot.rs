@@ -1,0 +1,261 @@
+//! Synthetic zero-shot suites (Table 2 substitution).
+//!
+//! The paper's zero-shot metric is option ranking: score each candidate
+//! completion by model NLL and pick the lowest. We keep the metric and
+//! replace the task text with corpus-generated items; the six task kinds
+//! differ in option count, continuation length and distractor hardness —
+//! giving the same spread of task difficulty as PIQA vs ARC-c.
+
+use crate::util::Rng;
+
+use super::corpus::Corpus;
+#[cfg(test)]
+use super::corpus::CorpusId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// 2 options, random-token distractor (easy; PIQA stand-in).
+    PiqaS,
+    /// 4 options, unigram distractors (ARC-easy stand-in).
+    ArcES,
+    /// 4 options, continuation-from-wrong-context distractors (ARC-c).
+    ArcCS,
+    /// 2 options, true-vs-shuffled continuation (BoolQ stand-in).
+    BoolqS,
+    /// 4 options, long continuations (HellaSwag stand-in).
+    HellaswagS,
+    /// 2 options, near-miss distractor: one token corrupted (Winogrande).
+    WinograndeS,
+}
+
+impl TaskKind {
+    pub fn all() -> [TaskKind; 6] {
+        [TaskKind::PiqaS, TaskKind::ArcES, TaskKind::ArcCS,
+         TaskKind::BoolqS, TaskKind::HellaswagS, TaskKind::WinograndeS]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::PiqaS => "piqa-s",
+            TaskKind::ArcES => "arc-e-s",
+            TaskKind::ArcCS => "arc-c-s",
+            TaskKind::BoolqS => "boolq-s",
+            TaskKind::HellaswagS => "hellaswag-s",
+            TaskKind::WinograndeS => "winogrande-s",
+        }
+    }
+
+    pub fn n_options(&self) -> usize {
+        match self {
+            TaskKind::PiqaS | TaskKind::BoolqS | TaskKind::WinograndeS => 2,
+            _ => 4,
+        }
+    }
+
+    fn cont_len(&self) -> usize {
+        match self {
+            TaskKind::HellaswagS => 24,
+            TaskKind::ArcCS | TaskKind::ArcES => 12,
+            _ => 8,
+        }
+    }
+}
+
+/// One task item: a shared context and N candidate continuations, exactly
+/// one of which follows the corpus dynamics.
+#[derive(Clone, Debug)]
+pub struct Item {
+    pub context: Vec<i32>,
+    pub options: Vec<Vec<i32>>,
+    pub correct: usize,
+}
+
+pub struct ZeroShotTask {
+    pub kind: TaskKind,
+    pub items: Vec<Item>,
+    pub seq_len: usize,
+}
+
+impl ZeroShotTask {
+    pub fn generate(kind: TaskKind, corpus: &Corpus, n_items: usize, seq_len: usize, seed: u64) -> ZeroShotTask {
+        let mut rng = Rng::new(seed ^ kind.name().len() as u64 ^ 0x2E20_5407);
+        let clen = kind.cont_len();
+        let ctx_len = seq_len - clen - 1;
+        let mut items = Vec::with_capacity(n_items);
+        for i in 0..n_items {
+            let ctx_seed = (2u64 << 33) + seed.wrapping_mul(31).wrapping_add(i as u64);
+            let context = corpus.sample(ctx_seed, ctx_len);
+            let last = *context.last().unwrap() as usize;
+            let truth = corpus.continue_from(ctx_seed ^ 1, last, clen);
+            let nopt = kind.n_options();
+            let correct = rng.below(nopt);
+            let mut options = Vec::with_capacity(nopt);
+            for o in 0..nopt {
+                if o == correct {
+                    options.push(truth.clone());
+                    continue;
+                }
+                // Difficulty dial: distractors are on-chain alternative
+                // paths sharing the truth's random stream, diverging at
+                // `diverge_at` to the `rank`-th successor. Later divergence
+                // / better rank -> subtler distractor -> harder task. One
+                // off-chain corruption task (winogrande-s) rounds out the
+                // suite. This spreads FP accuracy like PIQA vs ARC-c and
+                // leaves headroom for quantization damage to show.
+                let (diverge_at, rank) = match kind {
+                    TaskKind::PiqaS => (0, 9),             // easy: whole path differs, bad branch
+                    TaskKind::ArcES => (clen / 3, 3),
+                    TaskKind::BoolqS => (clen / 2, 2),
+                    TaskKind::ArcCS => (clen - 4, 1),      // hard: 4-token tail, 2nd-best branch
+                    TaskKind::HellaswagS => (clen - 6, 1),
+                    TaskKind::WinograndeS => (clen - 2, 1), // hardest: 2-token tail
+                };
+                // vary the divergence rank across options so distractors differ
+                let s = corpus.diverge_from(ctx_seed ^ 1, last, clen, diverge_at, rank + o);
+                let s = if s == truth {
+                    // pathological successor table (duplicate targets):
+                    // fall back to a one-token corruption
+                    let mut t = truth.clone();
+                    let p = rng.below(t.len());
+                    t[p] = ((t[p] as usize + 1 + rng.below(corpus.vocab - 1)) % corpus.vocab) as i32;
+                    t
+                } else {
+                    s
+                };
+                options.push(s);
+            }
+            items.push(Item { context, options, correct });
+        }
+        ZeroShotTask { kind, items, seq_len }
+    }
+
+    /// Render (tokens, mask) rows of width `seq_len` for each option of
+    /// each item: context ++ option ++ pad; mask is 1 over option tokens.
+    /// Row order: item-major, option-minor.
+    pub fn render_rows(&self) -> (Vec<Vec<i32>>, Vec<Vec<f32>>) {
+        let mut toks = Vec::new();
+        let mut masks = Vec::new();
+        for item in &self.items {
+            for opt in &item.options {
+                let mut row = item.context.clone();
+                let mut mask = vec![0.0f32; item.context.len()];
+                row.extend(opt);
+                mask.extend(std::iter::repeat(1.0).take(opt.len()));
+                while row.len() < self.seq_len {
+                    row.push(0);
+                    mask.push(0.0);
+                }
+                toks.push(row);
+                masks.push(mask);
+            }
+        }
+        (toks, masks)
+    }
+
+    /// Score: per-option summed NLLs (same order as `render_rows`) ->
+    /// accuracy. Ties (rare) count as wrong, matching lm-eval-harness.
+    pub fn accuracy(&self, option_nlls: &[f32]) -> f32 {
+        let mut idx = 0usize;
+        let mut hits = 0usize;
+        for item in &self.items {
+            let n = item.options.len();
+            let scores = &option_nlls[idx..idx + n];
+            // normalize by option length (lm-eval "acc_norm" style) so
+            // length differences between options don't dominate.
+            let lens: Vec<f32> = item.options.iter().map(|o| o.len() as f32).collect();
+            let mut best = 0usize;
+            let mut best_v = f32::INFINITY;
+            for (o, (&s, &l)) in scores.iter().zip(&lens).enumerate() {
+                let v = s / l;
+                if v < best_v {
+                    best_v = v;
+                    best = o;
+                }
+            }
+            if best == item.correct {
+                hits += 1;
+            }
+            idx += n;
+        }
+        hits as f32 / self.items.len() as f32
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.items.iter().map(|i| i.options.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus::new(CorpusId::Wiki, 256)
+    }
+
+    #[test]
+    fn generates_deterministic_items() {
+        let c = corpus();
+        let a = ZeroShotTask::generate(TaskKind::PiqaS, &c, 8, 64, 1);
+        let b = ZeroShotTask::generate(TaskKind::PiqaS, &c, 8, 64, 1);
+        assert_eq!(a.items[3].context, b.items[3].context);
+        assert_eq!(a.items[3].correct, b.items[3].correct);
+    }
+
+    #[test]
+    fn rows_shape_and_mask() {
+        let c = corpus();
+        let t = ZeroShotTask::generate(TaskKind::ArcES, &c, 4, 64, 2);
+        let (toks, masks) = t.render_rows();
+        assert_eq!(toks.len(), 16); // 4 items x 4 options
+        for (row, mask) in toks.iter().zip(&masks) {
+            assert_eq!(row.len(), 64);
+            assert_eq!(mask.len(), 64);
+            let opt_toks = mask.iter().filter(|&&m| m > 0.0).count();
+            assert_eq!(opt_toks, 12);
+        }
+    }
+
+    #[test]
+    fn oracle_scorer_gets_perfect_accuracy() {
+        // An oracle that assigns NLL 0 to the correct option and 1 to others.
+        let c = corpus();
+        let t = ZeroShotTask::generate(TaskKind::BoolqS, &c, 10, 64, 3);
+        let mut nlls = Vec::new();
+        for item in &t.items {
+            for (o, _) in item.options.iter().enumerate() {
+                nlls.push(if o == item.correct { 0.1 } else { 8.0 });
+            }
+        }
+        assert_eq!(t.accuracy(&nlls), 1.0);
+    }
+
+    #[test]
+    fn random_scorer_near_chance() {
+        let c = corpus();
+        let t = ZeroShotTask::generate(TaskKind::ArcCS, &c, 200, 64, 4);
+        let mut rng = Rng::new(9);
+        let nlls: Vec<f32> = (0..t.n_rows()).map(|_| rng.f32()).collect();
+        let acc = t.accuracy(&nlls);
+        assert!((acc - 0.25).abs() < 0.12, "random acc {acc}");
+    }
+
+    #[test]
+    fn all_kinds_generate() {
+        let c = corpus();
+        for kind in TaskKind::all() {
+            let t = ZeroShotTask::generate(kind, &c, 3, 96, 5);
+            assert_eq!(t.items.len(), 3);
+            for item in &t.items {
+                assert_eq!(item.options.len(), kind.n_options());
+                assert!(item.correct < item.options.len());
+                // distractors differ from the truth
+                for (o, opt) in item.options.iter().enumerate() {
+                    if o != item.correct {
+                        assert_ne!(opt, &item.options[item.correct]);
+                    }
+                }
+            }
+        }
+    }
+}

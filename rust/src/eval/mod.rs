@@ -1,0 +1,196 @@
+//! Evaluation: perplexity (paper's primary metric), zero-shot option
+//! ranking (Table 2), l1-distance diagnostics (Table A2), activation
+//! outlier statistics (Figure A2) and the teacher-NLL judge (Figure 4).
+
+use anyhow::Result;
+
+use crate::config::QuantSetting;
+use crate::data::{Corpus, TaskKind, ZeroShotTask};
+use crate::model::ModelParams;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+
+/// Graph name for model NLL at a given activation bit-width.
+fn nll_graph(abits: u8, masked: bool) -> String {
+    let base = if masked { "model_nll_masked" } else { "model_nll" };
+    if abits >= 16 {
+        base.to_string()
+    } else {
+        format!("{base}_actq{abits}")
+    }
+}
+
+/// Perplexity over `n_batches` held-out eval batches of the corpus.
+/// Weight quantization is already baked into `params` (fake-quantized
+/// values); activation quantization happens in-graph per `setting.abits`.
+pub fn perplexity(
+    rt: &Runtime,
+    params: &ModelParams,
+    setting: &QuantSetting,
+    corpus: &Corpus,
+    n_batches: usize,
+) -> Result<f64> {
+    let m = rt.manifest();
+    let (b, t) = (m.eval_batch, m.model.seq_len);
+    let graph = nll_graph(setting.abits, false);
+    let pflat = Tensor::new(&[params.flat.len()], params.flat.clone());
+    let mut total = 0.0f64;
+    for i in 0..n_batches {
+        let toks = corpus.eval_batch(i, b, t);
+        let nll = rt.exec1(&graph, &[Value::F32(&pflat), Value::I32(&toks, &[b, t])])?;
+        total += nll.item() as f64;
+    }
+    Ok((total / n_batches as f64).exp())
+}
+
+/// Zero-shot accuracy for one task: render all (context ++ option) rows,
+/// batch them through the masked-NLL graph, rank options per item.
+pub fn zero_shot_accuracy(
+    rt: &Runtime,
+    params: &ModelParams,
+    setting: &QuantSetting,
+    task: &ZeroShotTask,
+) -> Result<f32> {
+    let m = rt.manifest();
+    let (b, t) = (m.eval_batch, m.model.seq_len);
+    assert_eq!(task.seq_len, t);
+    let graph = nll_graph(setting.abits, true);
+    let pflat = Tensor::new(&[params.flat.len()], params.flat.clone());
+    let (rows, masks) = task.render_rows();
+    let mut nlls: Vec<f32> = Vec::with_capacity(rows.len());
+    let mut i = 0usize;
+    while i < rows.len() {
+        // assemble one (b, t) batch, padding the tail with row 0
+        let mut toks = Vec::with_capacity(b * t);
+        let mut mask = Vec::with_capacity(b * t);
+        let n = (rows.len() - i).min(b);
+        for j in 0..b {
+            let src = if j < n { i + j } else { i };
+            toks.extend_from_slice(&rows[src]);
+            mask.extend_from_slice(&masks[src]);
+        }
+        let mask_t = Tensor::new(&[b, t], mask);
+        let out = rt.exec1(
+            &graph,
+            &[Value::F32(&pflat), Value::I32(&toks, &[b, t]), Value::F32(&mask_t)],
+        )?;
+        nlls.extend_from_slice(&out.data()[..n]);
+        i += n;
+    }
+    Ok(task.accuracy(&nlls))
+}
+
+/// Run the full six-task suite; returns (task name, accuracy) + average.
+pub fn zero_shot_suite(
+    rt: &Runtime,
+    params: &ModelParams,
+    setting: &QuantSetting,
+    corpus: &Corpus,
+    items_per_task: usize,
+    seed: u64,
+) -> Result<(Vec<(String, f32)>, f32)> {
+    let t = rt.manifest().model.seq_len;
+    let mut out = Vec::new();
+    let mut sum = 0.0f32;
+    for kind in TaskKind::all() {
+        let task = ZeroShotTask::generate(kind, corpus, items_per_task, t, seed);
+        let acc = zero_shot_accuracy(rt, params, setting, &task)?;
+        sum += acc;
+        out.push((kind.name().to_string(), acc));
+    }
+    let avg = sum / out.len() as f32;
+    Ok((out, avg))
+}
+
+/// Mean l1 distance between two parameter vectors' quantized linears only
+/// (Table A2's ||W - W_q||).
+pub fn weight_l1(fp: &ModelParams, q: &ModelParams) -> f32 {
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for (a, b) in fp.flat.iter().zip(&q.flat) {
+        sum += (a - b).abs() as f64;
+        n += 1;
+    }
+    (sum / n as f64) as f32
+}
+
+/// Per-channel max |activation| at the FFN input of one block — the
+/// Figure A2 visualization data (outliers before/after transformation).
+pub fn activation_channel_maxes(
+    rt: &Runtime,
+    params: &ModelParams,
+    block: usize,
+    corpus: &Corpus,
+) -> Result<Vec<f32>> {
+    let m = rt.manifest();
+    let (b, t) = (m.calib_batch, m.model.seq_len);
+    let toks = corpus.eval_batch(7, b, t);
+    let x0 = crate::calib::pipeline::embed_tokens(params, &toks, b, t)?;
+    // walk the stream to the requested block
+    let mut x = x0;
+    for blk in 0..block {
+        let w = params.block_flat(m, blk)?;
+        x = rt.exec1("block_fwd", &[Value::F32(&w), Value::F32(&x)])?;
+    }
+    let w = params.block_flat(m, block)?;
+    let outs = rt.exec("block_intermediates", &[Value::F32(&w), Value::F32(&x)])?;
+    // outs[5] = x2 (FFN input)
+    let x2 = &outs[5];
+    let d = *x2.shape().last().unwrap();
+    let flat = Tensor::new(&[x2.len() / d, d], x2.data().to_vec());
+    Ok(flat.col_abs_max())
+}
+
+/// Teacher-NLL judge (Figure 4 substitution): score generations from two
+/// quantized models under the FP teacher; lower summed NLL wins. Returns
+/// (wins_a, wins_b, ties).
+pub fn judge_generations(
+    rt: &Runtime,
+    teacher: &ModelParams,
+    gens_a: &[Vec<i32>],
+    gens_b: &[Vec<i32>],
+) -> Result<(usize, usize, usize)> {
+    let m = rt.manifest();
+    let (b, t) = (m.eval_batch, m.model.seq_len);
+    let pflat = Tensor::new(&[teacher.flat.len()], teacher.flat.clone());
+    let score = |gens: &[Vec<i32>]| -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        let mut i = 0usize;
+        while i < gens.len() {
+            let n = (gens.len() - i).min(b);
+            let mut toks = Vec::with_capacity(b * t);
+            let mut mask = Vec::with_capacity(b * t);
+            for j in 0..b {
+                let src = &gens[if j < n { i + j } else { i }];
+                let mut row: Vec<i32> = src.clone();
+                row.resize(t, 0);
+                let mut mk = vec![1.0f32; src.len().min(t)];
+                mk.resize(t, 0.0);
+                toks.extend_from_slice(&row);
+                mask.extend_from_slice(&mk);
+            }
+            let mask_t = Tensor::new(&[b, t], mask);
+            let r = rt.exec1(
+                "model_nll_masked",
+                &[Value::F32(&pflat), Value::I32(&toks, &[b, t]), Value::F32(&mask_t)],
+            )?;
+            out.extend_from_slice(&r.data()[..n]);
+            i += n;
+        }
+        Ok(out)
+    };
+    let sa = score(gens_a)?;
+    let sb = score(gens_b)?;
+    let (mut wa, mut wb, mut ties) = (0usize, 0usize, 0usize);
+    for (a, bv) in sa.iter().zip(&sb) {
+        let rel = (a - bv) / (a.abs() + bv.abs() + 1e-6);
+        if rel < -0.01 {
+            wa += 1;
+        } else if rel > 0.01 {
+            wb += 1;
+        } else {
+            ties += 1;
+        }
+    }
+    Ok((wa, wb, ties))
+}

@@ -1,0 +1,31 @@
+//! OmniQuant reproduction: omnidirectionally calibrated quantization for
+//! LLMs (Shao et al., ICLR 2024), as a three-layer Rust + JAX + Pallas
+//! system. The Rust crate is the runtime/coordination layer: it loads the
+//! AOT-lowered HLO graphs from `artifacts/` and owns calibration,
+//! quantization, evaluation, serving and the experiment harness.
+//!
+//! Layer map (see DESIGN.md):
+//! * L1/L2 (build time, `python/compile/`): Pallas kernels + jax graphs.
+//! * L3 (this crate): block-wise calibration engine (`calib`), quantizer
+//!   zoo (`quant`), PJRT runtime (`runtime`), deployment engine (`serve`),
+//!   evaluation (`eval`) and experiment drivers (`coordinator`).
+
+pub mod bench;
+pub mod config;
+pub mod json;
+pub mod linalg;
+pub mod report;
+pub mod tensor;
+pub mod util;
+
+pub mod data;
+pub mod model;
+pub mod runtime;
+
+pub mod quant;
+
+pub mod calib;
+pub mod eval;
+pub mod serve;
+
+pub mod coordinator;

@@ -1,0 +1,304 @@
+//! Dense linear algebra substrate: blocked matmul / gemv and the Cholesky
+//! machinery GPTQ needs (H = X^T X + damping, then the inverse-Cholesky
+//! column recurrences). No BLAS offline — these are hand-blocked for cache
+//! behaviour and good enough for the d <= 768 matrices in this repo.
+
+use crate::tensor::Tensor;
+
+/// C = A(m,k) @ B(k,n), blocked over k for locality.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape().len(), 2);
+    assert_eq!(b.shape().len(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    const KB: usize = 64;
+    for kk in (0..k).step_by(KB) {
+        let kend = (kk + KB).min(k);
+        for i in 0..m {
+            let arow = &ad[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for p in kk..kend {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bd[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// y = x(k) @ B(k,n) — row-major gemv against the stored layout.
+pub fn vecmat(x: &[f32], b: &Tensor) -> Vec<f32> {
+    let (k, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(x.len(), k);
+    let mut y = vec![0.0f32; n];
+    let bd = b.data();
+    for p in 0..k {
+        let xv = x[p];
+        if xv == 0.0 {
+            continue;
+        }
+        let brow = &bd[p * n..(p + 1) * n];
+        for j in 0..n {
+            y[j] += xv * brow[j];
+        }
+    }
+    y
+}
+
+/// H += X^T X for a batch of rows X(t,k) (Hessian accumulation for GPTQ).
+pub fn accumulate_gram(h: &mut Tensor, x: &Tensor) {
+    let (t, k) = (x.shape()[0], x.shape()[1]);
+    assert_eq!(h.shape(), &[k, k]);
+    let xd = x.data();
+    let hd = h.data_mut();
+    for r in 0..t {
+        let row = &xd[r * k..(r + 1) * k];
+        for i in 0..k {
+            let v = row[i];
+            if v == 0.0 {
+                continue;
+            }
+            let hrow = &mut hd[i * k..(i + 1) * k];
+            for j in 0..k {
+                hrow[j] += v * row[j];
+            }
+        }
+    }
+}
+
+/// Cholesky decomposition A = L L^T (lower triangular). Fails on
+/// non-positive-definite input.
+pub fn cholesky(a: &Tensor) -> Result<Tensor, String> {
+    let n = a.shape()[0];
+    assert_eq!(a.shape(), &[n, n]);
+    let ad = a.data();
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = ad[i * n + j] as f64;
+            for p in 0..j {
+                s -= l[i * n + p] * l[j * n + p];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(format!("cholesky: non-PD at pivot {i} (s={s:.3e})"));
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(Tensor::new(&[n, n], l.into_iter().map(|x| x as f32).collect()))
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Tensor, b: &[f32]) -> Vec<f32> {
+    let n = l.shape()[0];
+    let ld = l.data();
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for j in 0..i {
+            s -= ld[i * n + j] as f64 * y[j] as f64;
+        }
+        y[i] = (s / ld[i * n + i] as f64) as f32;
+    }
+    y
+}
+
+/// Solve L^T x = y (back substitution).
+pub fn solve_upper_t(l: &Tensor, y: &[f32]) -> Vec<f32> {
+    let n = l.shape()[0];
+    let ld = l.data();
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = y[i] as f64;
+        for j in (i + 1)..n {
+            s -= ld[j * n + i] as f64 * x[j] as f64;
+        }
+        x[i] = (s / ld[i * n + i] as f64) as f32;
+    }
+    x
+}
+
+/// A^{-1} via Cholesky (A symmetric positive definite).
+pub fn spd_inverse(a: &Tensor) -> Result<Tensor, String> {
+    let n = a.shape()[0];
+    let l = cholesky(a)?;
+    let mut inv = vec![0.0f32; n * n];
+    let mut e = vec![0.0f32; n];
+    for c in 0..n {
+        e.iter_mut().for_each(|x| *x = 0.0);
+        e[c] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_upper_t(&l, &y);
+        for r in 0..n {
+            inv[r * n + c] = x[r];
+        }
+    }
+    Ok(Tensor::new(&[n, n], inv))
+}
+
+/// Add `lambda * mean(diag)` damping to the diagonal (GPTQ-style percdamp),
+/// and set dead diagonal entries to 1 so the factorization stays PD.
+pub fn dampen(h: &mut Tensor, percdamp: f32) {
+    let n = h.shape()[0];
+    let hd = h.data_mut();
+    let mut diag_mean = 0.0f32;
+    for i in 0..n {
+        diag_mean += hd[i * n + i];
+    }
+    diag_mean /= n as f32;
+    let lam = percdamp * diag_mean.max(1e-8);
+    for i in 0..n {
+        if hd[i * n + i] == 0.0 {
+            hd[i * n + i] = 1.0;
+        }
+        hd[i * n + i] += lam;
+    }
+}
+
+/// Upper-triangular Cholesky of the *inverse* of H, as used by GPTQ:
+/// returns U with U upper-triangular such that H^{-1} = U^T U ... in
+/// GPTQ's formulation `Hinv = cholesky(H^{-1}, upper=True)`; the error
+/// propagation uses rows of this factor.
+pub fn gptq_hinv_factor(h: &Tensor, percdamp: f32) -> Result<Tensor, String> {
+    let mut hh = h.clone();
+    dampen(&mut hh, percdamp);
+    let inv = spd_inverse(&hh)?;
+    // Upper factor with inv = U^T U (torch.linalg.cholesky(·, upper=True)
+    // convention GPTQ uses): U = L^T for the lower Cholesky L of inv.
+    Ok(cholesky(&inv)?.transpose2())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        Tensor::from_fn(shape, |_| rng.normal())
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = rand_t(&mut rng, &[5, 5]);
+        let eye = Tensor::from_fn(&[5, 5], |i| if i % 6 == 0 { 1.0 } else { 0.0 });
+        let out = matmul(&a, &eye);
+        for (x, y) in out.data().iter().zip(a.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(matmul(&a, &b).data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn vecmat_matches_matmul() {
+        let mut rng = Rng::new(2);
+        let b = rand_t(&mut rng, &[7, 4]);
+        let x: Vec<f32> = (0..7).map(|_| rng.normal()).collect();
+        let xm = Tensor::new(&[1, 7], x.clone());
+        let full = matmul(&xm, &b);
+        let fast = vecmat(&x, &b);
+        for (u, v) in full.data().iter().zip(&fast) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_accumulation() {
+        let x = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut h = Tensor::zeros(&[2, 2]);
+        accumulate_gram(&mut h, &x);
+        // X^T X = [[10, 14], [14, 20]]
+        assert_eq!(h.data(), &[10.0, 14.0, 14.0, 20.0]);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(3);
+        let a = rand_t(&mut rng, &[6, 10]);
+        let mut h = Tensor::zeros(&[6, 6]);
+        accumulate_gram(&mut h, &a.transpose2());
+        dampen(&mut h, 0.01);
+        let l = cholesky(&h).unwrap();
+        let rec = matmul(&l, &l.transpose2());
+        for (x, y) in rec.data().iter().zip(h.data()) {
+            assert!((x - y).abs() < 1e-2 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigenvalue -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn spd_inverse_correct() {
+        let mut rng = Rng::new(4);
+        let a = rand_t(&mut rng, &[5, 8]);
+        let mut h = Tensor::zeros(&[5, 5]);
+        accumulate_gram(&mut h, &a.transpose2());
+        dampen(&mut h, 0.01);
+        let inv = spd_inverse(&h).unwrap();
+        let eye = matmul(&h, &inv);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((eye.at2(i, j) - want).abs() < 1e-3, "({i},{j}) {}", eye.at2(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let l = Tensor::new(&[2, 2], vec![2.0, 0.0, 1.0, 3.0]);
+        let y = solve_lower(&l, &[4.0, 11.0]); // y = [2, 3]
+        assert!((y[0] - 2.0).abs() < 1e-6 && (y[1] - 3.0).abs() < 1e-6);
+        let x = solve_upper_t(&l, &y); // L^T x = y
+        // L^T = [[2,1],[0,3]]; x = [1/2, 1] -> check 2x0 + x1 = 2, 3x1 = 3
+        assert!((x[1] - 1.0).abs() < 1e-6);
+        assert!((2.0 * x[0] + x[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hinv_factor_is_upper_and_valid() {
+        let mut rng = Rng::new(5);
+        let a = rand_t(&mut rng, &[4, 12]);
+        let mut h = Tensor::zeros(&[4, 4]);
+        accumulate_gram(&mut h, &a.transpose2());
+        let u = gptq_hinv_factor(&h, 0.01).unwrap();
+        // upper-triangular check
+        for i in 0..4 {
+            for j in 0..i {
+                assert_eq!(u.at2(i, j), 0.0);
+            }
+        }
+        // U^T U == H^{-1} (with damping)
+        let mut hh = h.clone();
+        dampen(&mut hh, 0.01);
+        let inv = spd_inverse(&hh).unwrap();
+        let rec = matmul(&u.transpose2(), &u);
+        for (x, y) in rec.data().iter().zip(inv.data()) {
+            assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()));
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! OmniQuant CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   train     pre-train a model on the synthetic corpus (AOT train_step)
+//!   quantize  block-wise quantize a checkpoint with any method
+//!   eval      perplexity + zero-shot evaluation of a checkpoint
+//!   serve     packed-weight decoding benchmark / generation
+//!   repro     regenerate a paper table/figure (see DESIGN.md index)
+//!   info      dump manifest / artifact info
+//!
+//! (Arg parsing is hand-rolled: no clap in the offline crate cache.)
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use omniquant::config::{CalibConfig, QuantSetting, TrainConfig};
+use omniquant::coordinator::{make_method, pretrain, repro};
+use omniquant::data::{Corpus, CorpusId};
+use omniquant::model::ModelParams;
+use omniquant::runtime::load_runtime;
+use omniquant::util::{fmt_bytes, Rng};
+use omniquant::{calib, eval, serve};
+
+/// Tiny flag parser: positionals + `--key value` + `--flag`.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, k: &str, default: &str) -> String {
+        self.get(k).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, k: &str, default: usize) -> Result<usize> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{k} {v}")),
+        }
+    }
+
+    pub fn f32_or(&self, k: &str, default: f32) -> Result<f32> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{k} {v}")),
+        }
+    }
+
+    pub fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+}
+
+fn default_ckpt(model: &str) -> String {
+    format!("ckpt/{model}.oqc")
+}
+
+fn calib_from_args(a: &Args) -> Result<CalibConfig> {
+    let mut c = match a.get("config") {
+        Some(path) => {
+            omniquant::config::ExperimentConfig::load(std::path::Path::new(path))?.calib
+        }
+        None => CalibConfig::default(),
+    };
+    c.samples = a.usize_or("samples", c.samples)?;
+    c.epochs = a.usize_or("epochs", c.epochs)?;
+    c.lr_lwc = a.f32_or("lr-lwc", c.lr_lwc)?;
+    c.lr_let = a.f32_or("lr-let", c.lr_let)?;
+    c.seed = a.usize_or("seed", c.seed as usize)? as u64;
+    Ok(c)
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let model = a.get_or("model", "omni-1m");
+    let rt = load_runtime(&model)?;
+    let mut cfg = TrainConfig::default();
+    cfg.steps = a.usize_or("steps", cfg.steps)?;
+    cfg.lr = a.f32_or("lr", cfg.lr)?;
+    cfg.seed = a.usize_or("seed", cfg.seed as usize)? as u64;
+    let corpus = Corpus::new(CorpusId::Wiki, rt.model().vocab);
+    println!("pre-training {model} for {} steps on {} ...", cfg.steps, corpus.id.name());
+    let out = pretrain(&rt, &cfg, &corpus)?;
+    let path = PathBuf::from(a.get_or("out", &default_ckpt(&model)));
+    out.params.save(&path)?;
+    println!(
+        "done in {:.1}s: loss {:.3} -> {:.3}, saved {}",
+        out.secs,
+        out.losses.first().unwrap_or(&f32::NAN),
+        out.losses.last().unwrap_or(&f32::NAN),
+        path.display()
+    );
+    Ok(())
+}
+
+fn cmd_quantize(a: &Args) -> Result<()> {
+    let model = a.get_or("model", "omni-1m");
+    let rt = load_runtime(&model)?;
+    let ckpt = PathBuf::from(a.get_or("ckpt", &default_ckpt(&model)));
+    let fp = ModelParams::load(rt.manifest(), &ckpt)?;
+    let setting = QuantSetting::parse(&a.get_or("setting", "w4a16"))?;
+    let method_name = a.get_or("method", "omniquant");
+    let calib_cfg = calib_from_args(a)?;
+    let mut method = make_method(&method_name, &calib_cfg)?;
+    let corpus = Corpus::new(
+        CorpusId::parse(&a.get_or("corpus", "wiki-s")).ok_or_else(|| anyhow!("bad corpus"))?,
+        rt.model().vocab,
+    );
+    println!("quantizing {model} to {} with {method_name} ...", setting.name());
+    let out = calib::quantize_model(
+        &rt, &fp, method.as_mut(), setting, &corpus, calib_cfg.samples, calib_cfg.seed,
+    )?;
+    let qpath = PathBuf::from(a.get_or(
+        "out",
+        &format!("ckpt/{model}-{}-{}.oqc", method_name, setting.name()),
+    ));
+    out.qparams.save(&qpath)?;
+    println!("done in {:.1}s, saved {}", out.secs, qpath.display());
+    for tr in &out.traces {
+        println!(
+            "  block {:>2}: |W-Wq| {:.5}  |X-Xq| {:.4}",
+            tr.block, tr.weight_l1, tr.out_l1
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(a: &Args) -> Result<()> {
+    let model = a.get_or("model", "omni-1m");
+    let rt = load_runtime(&model)?;
+    let ckpt = PathBuf::from(a.get_or("ckpt", &default_ckpt(&model)));
+    let params = ModelParams::load(rt.manifest(), &ckpt)?;
+    let setting = QuantSetting::parse(&a.get_or("setting", "fp16"))?;
+    let corpus = Corpus::new(
+        CorpusId::parse(&a.get_or("corpus", "wiki-s")).ok_or_else(|| anyhow!("bad corpus"))?,
+        rt.model().vocab,
+    );
+    let n = a.usize_or("batches", 8)?;
+    let ppl = eval::perplexity(&rt, &params, &setting, &corpus, n)?;
+    println!("{} ppl ({}): {:.3}", corpus.id.name(), setting.name(), ppl);
+    if a.has("zeroshot") {
+        let items = a.usize_or("items", 24)?;
+        let (per_task, avg) = eval::zero_shot_suite(&rt, &params, &setting, &corpus, items, 5)?;
+        for (name, acc) in per_task {
+            println!("  {name:<14} {:.2}%", 100.0 * acc);
+        }
+        println!("  {:<14} {:.2}%", "avg", 100.0 * avg);
+    }
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let model = a.get_or("model", "omni-1m");
+    let rt = load_runtime(&model)?;
+    let ckpt = PathBuf::from(a.get_or("ckpt", &default_ckpt(&model)));
+    let params = ModelParams::load(rt.manifest(), &ckpt)?;
+    let setting = QuantSetting::parse(&a.get_or("setting", "w4a16g64"))?;
+    let engine = serve::Engine::build(&params, setting)?;
+    let n_new = a.usize_or("tokens", 256)?;
+    let batch = a.usize_or("batch", 1)?;
+    println!(
+        "serving {model} at {}: weights {} ",
+        setting.name(),
+        fmt_bytes(engine.weight_bytes())
+    );
+    if a.has("generate") {
+        let corpus = Corpus::new(CorpusId::Wiki, rt.model().vocab);
+        let prompt = corpus.sample(99, 16);
+        let mut rng = Rng::new(1);
+        let (toks, stats) = engine.generate(&prompt, n_new, a.f32_or("temp", 0.0)?, &mut rng);
+        println!("prompt: {prompt:?}");
+        println!("generated: {toks:?}");
+        println!(
+            "prefill {:.1} ms, decode {:.1} tok/s, running {}",
+            stats.prefill_secs * 1e3,
+            stats.decode_tok_per_s,
+            fmt_bytes(stats.running_bytes)
+        );
+    } else {
+        let stats = engine.batched_decode(batch, n_new, 7);
+        println!(
+            "batched decode: batch={batch} tokens={n_new} -> {:.1} tok/s, running {}",
+            stats.decode_tok_per_s,
+            fmt_bytes(stats.running_bytes)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(a: &Args) -> Result<()> {
+    let model = a.get_or("model", "omni-1m");
+    let rt = load_runtime(&model)?;
+    let m = rt.manifest();
+    println!("model {}: family={} d={} L={} heads={} dff={} vocab={} T={}",
+        m.model.name, m.model.family, m.model.d_model, m.model.n_layers,
+        m.model.n_heads, m.model.d_ff, m.model.vocab, m.model.seq_len);
+    println!("params: {} ({} per block)", m.model_param_size(), m.block_param_size());
+    println!("graphs: {}", m.graphs.len());
+    for (name, g) in &m.graphs {
+        println!("  {name:<28} {} inputs, {} outputs", g.inputs.len(), g.outputs.len());
+    }
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: omniquant <train|quantize|eval|serve|repro|info> [--model M] [--help]\n\
+         \n\
+         train     --model M --steps N --lr X --out ckpt.oqc\n\
+         quantize  --model M --ckpt F --setting w4a16 --method omniquant\n\
+         \u{20}          --samples N --epochs N [--out F]\n\
+         eval      --model M --ckpt F [--setting S] [--corpus wiki-s|c4-s|ptb-s]\n\
+         \u{20}          [--zeroshot] [--batches N]\n\
+         serve     --model M --ckpt F --setting w4a16g64 [--tokens N] [--batch B]\n\
+         \u{20}          [--generate] [--temp X]\n\
+         repro     --exp <fig1|table1|table2|table3|table4|fig4|tableA1..A14|figA1..A3|all>\n\
+         \u{20}          [--quick] (reduced sizes/samples)\n\
+         info      --model M"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "repro" => repro::run(&args.get_or("exp", "all"), args.has("quick")),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => usage(),
+        other => bail!("unknown command '{other}' (try --help)"),
+    }
+}

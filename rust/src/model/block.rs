@@ -1,0 +1,134 @@
+//! Named access to one transformer block's weights + the flat layout
+//! round-trip used when talking to the AOT block graphs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{LayoutEntry, Manifest};
+use crate::tensor::Tensor;
+
+#[derive(Clone)]
+pub struct BlockWeights {
+    map: BTreeMap<String, Tensor>,
+    layout: Vec<LayoutEntry>,
+}
+
+impl BlockWeights {
+    pub fn from_flat(manifest: &Manifest, flat: &Tensor) -> Result<BlockWeights> {
+        let layout = manifest.block_layout.clone();
+        if flat.len() != manifest.block_param_size() {
+            bail!("block flat size {} vs layout {}", flat.len(), manifest.block_param_size());
+        }
+        let mut map = BTreeMap::new();
+        for e in &layout {
+            map.insert(
+                e.name.clone(),
+                Tensor::new(&e.shape, flat.data()[e.offset..e.offset + e.size].to_vec()),
+            );
+        }
+        Ok(BlockWeights { map, layout })
+    }
+
+    pub fn to_flat(&self) -> Tensor {
+        let size: usize = self.layout.iter().map(|e| e.size).sum();
+        let mut flat = vec![0.0f32; size];
+        for e in &self.layout {
+            let t = &self.map[&e.name];
+            flat[e.offset..e.offset + e.size].copy_from_slice(t.data());
+        }
+        Tensor::new(&[size], flat)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).ok_or_else(|| anyhow!("block weight '{name}' missing"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let e = self
+            .layout
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("block weight '{name}' not in layout"))?;
+        if t.shape() != e.shape.as_slice() {
+            bail!("block '{name}': shape {:?} vs {:?}", t.shape(), e.shape);
+        }
+        self.map.insert(name.to_string(), t);
+        Ok(())
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.layout.iter().map(|e| e.name.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    /// The quantized linears of this block: (name, cin, cout).
+    pub fn linear_names(family: &str) -> &'static [&'static str] {
+        if family == "llama" {
+            &["wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+        } else {
+            &["wq", "wk", "wv", "wo", "w1", "w2"]
+        }
+    }
+
+    /// Bias name for a linear ("wq" -> "bq", "w1" -> "b1").
+    pub fn bias_name(linear: &str) -> String {
+        format!("b{}", &linear[1..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "model": {"name": "m", "family": "llama", "d_model": 4, "n_layers": 1,
+                     "n_heads": 1, "d_ff": 8, "vocab": 16, "seq_len": 8, "head_dim": 4},
+          "batches": {"calib": 2, "eval": 2, "train": 2},
+          "block_layout": [
+            {"name": "ln1_w", "shape": [4], "offset": 0, "size": 4},
+            {"name": "wq", "shape": [4, 4], "offset": 4, "size": 16},
+            {"name": "bq", "shape": [4], "offset": 20, "size": 4}
+          ],
+          "model_layout": [{"name": "blk0.ln1_w", "shape": [4], "offset": 0, "size": 4},
+            {"name": "blk0.wq", "shape": [4, 4], "offset": 4, "size": 16},
+            {"name": "blk0.bq", "shape": [4], "offset": 20, "size": 4}],
+          "theta_layouts": {}, "quant_settings": {}, "graphs": {}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let m = manifest();
+        let flat = Tensor::from_fn(&[24], |i| i as f32);
+        let bw = BlockWeights::from_flat(&m, &flat).unwrap();
+        assert_eq!(bw.get("wq").unwrap().shape(), &[4, 4]);
+        assert_eq!(bw.get("wq").unwrap().at2(0, 0), 4.0);
+        assert_eq!(bw.to_flat(), flat);
+    }
+
+    #[test]
+    fn set_validates_shape() {
+        let m = manifest();
+        let mut bw = BlockWeights::from_flat(&m, &Tensor::zeros(&[24])).unwrap();
+        assert!(bw.set("wq", Tensor::zeros(&[4, 4])).is_ok());
+        assert!(bw.set("wq", Tensor::zeros(&[2, 2])).is_err());
+        assert!(bw.set("nope", Tensor::zeros(&[4])).is_err());
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(BlockWeights::bias_name("wq"), "bq");
+        assert_eq!(BlockWeights::bias_name("w1"), "b1");
+        assert_eq!(BlockWeights::linear_names("llama").len(), 7);
+        assert_eq!(BlockWeights::linear_names("opt").len(), 6);
+    }
+}

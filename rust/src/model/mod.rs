@@ -1,0 +1,281 @@
+//! Model parameter management: the flat parameter vector (matching the
+//! manifest layout emitted by `python/compile/layouts.py`), named-tensor
+//! access, initialization, and the `OQCK` checkpoint format.
+
+pub mod block;
+
+pub use block::BlockWeights;
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::{LayoutEntry, Manifest, ModelDesc};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Whole-model parameters as one flat vector + the layout to slice it.
+#[derive(Clone)]
+pub struct ModelParams {
+    pub flat: Vec<f32>,
+    layout: Vec<LayoutEntry>,
+    desc: ModelDesc,
+}
+
+impl ModelParams {
+    pub fn new(manifest: &Manifest, flat: Vec<f32>) -> Result<ModelParams> {
+        let want = manifest.model_param_size();
+        if flat.len() != want {
+            bail!("param vector has {} elements, layout wants {want}", flat.len());
+        }
+        Ok(ModelParams {
+            flat,
+            layout: manifest.model_layout.clone(),
+            desc: manifest.model.clone(),
+        })
+    }
+
+    /// Random initialization (embed/head 0.02 sigma, linears 1/sqrt(fan_in),
+    /// norms at 1, biases at 0) — same scheme the python test mirror uses.
+    ///
+    /// Outlier knob (DESIGN.md section 3): a few norm-weight channels are
+    /// initialized 4-8x larger. Trained LLMs (especially the OPT family)
+    /// develop exactly such systematic outlier channels over billions of
+    /// tokens; our budget is a few hundred steps, so the structure is
+    /// planted at init (training then keeps and uses it). This is what
+    /// makes per-token activation quantization genuinely hard — the regime
+    /// LET exists for.
+    pub fn init(manifest: &Manifest, rng: &mut Rng) -> ModelParams {
+        let mut flat = vec![0.0f32; manifest.model_param_size()];
+        // OPT-style models develop stronger outliers than RMSNorm models.
+        let n_outliers = if manifest.model.family == "opt" {
+            (manifest.model.d_model / 12).max(4)
+        } else {
+            (manifest.model.d_model / 24).max(3)
+        };
+        for e in &manifest.model_layout {
+            let base = e.name.rsplit('.').next().unwrap();
+            let dst = &mut flat[e.offset..e.offset + e.size];
+            if (base.starts_with("ln") && base.ends_with("_w")) || base == "lnf_w" {
+                dst.iter_mut().for_each(|x| *x = 1.0 + 0.05 * rng.normal());
+                if base != "lnf_w" {
+                    for _ in 0..n_outliers {
+                        let idx = rng.below(dst.len());
+                        dst[idx] = rng.uniform(8.0, 16.0);
+                    }
+                }
+            } else if base.starts_with('b') || base.ends_with("_b") {
+                // biases stay zero
+            } else if base == "embed" || base == "pos_embed" || base == "head" {
+                dst.iter_mut().for_each(|x| *x = 0.02 * rng.normal());
+            } else {
+                let fan_in = e.shape[0] as f32;
+                let s = 1.0 / fan_in.sqrt();
+                dst.iter_mut().for_each(|x| *x = s * rng.normal());
+            }
+        }
+        ModelParams { flat, layout: manifest.model_layout.clone(), desc: manifest.model.clone() }
+    }
+
+    pub fn desc(&self) -> &ModelDesc {
+        &self.desc
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&LayoutEntry> {
+        Manifest::entry(&self.layout, name)
+    }
+
+    /// Copy a named tensor out.
+    pub fn get(&self, name: &str) -> Result<Tensor> {
+        let e = self.entry(name)?;
+        Ok(Tensor::new(&e.shape, self.flat[e.offset..e.offset + e.size].to_vec()))
+    }
+
+    /// Overwrite a named tensor.
+    pub fn set(&mut self, name: &str, t: &Tensor) -> Result<()> {
+        let e = self.entry(name)?.clone();
+        if t.shape() != e.shape.as_slice() {
+            bail!("set '{name}': shape {:?} vs layout {:?}", t.shape(), e.shape);
+        }
+        self.flat[e.offset..e.offset + e.size].copy_from_slice(t.data());
+        Ok(())
+    }
+
+    /// The flat slice of one block's parameters (matches `block_layout`).
+    pub fn block_range(&self, manifest: &Manifest, i: usize) -> Result<std::ops::Range<usize>> {
+        let entries = manifest.block_entries(i);
+        let first = entries.first().ok_or_else(|| anyhow!("no block {i}"))?;
+        let last = entries.last().unwrap();
+        Ok(first.1.offset..last.1.offset + last.1.size)
+    }
+
+    pub fn block_flat(&self, manifest: &Manifest, i: usize) -> Result<Tensor> {
+        let r = self.block_range(manifest, i)?;
+        Ok(Tensor::new(&[r.len()], self.flat[r].to_vec()))
+    }
+
+    pub fn set_block_flat(&mut self, manifest: &Manifest, i: usize, t: &Tensor) -> Result<()> {
+        let r = self.block_range(manifest, i)?;
+        if t.len() != r.len() {
+            bail!("block {i}: {} vs {}", t.len(), r.len());
+        }
+        self.flat[r].copy_from_slice(t.data());
+        Ok(())
+    }
+
+    /// Total weight bytes at a given weight bit-width for the quantized
+    /// block linears + FP16 everything else (Fig. A3 model-bits metric).
+    pub fn model_bits(&self, wbits: f64) -> f64 {
+        let mut quantized = 0usize;
+        let mut fp = 0usize;
+        for e in &self.layout {
+            let base = e.name.rsplit('.').next().unwrap();
+            let is_linear = e.shape.len() == 2 && e.name.contains("blk");
+            if is_linear && !base.starts_with('b') {
+                quantized += e.size;
+            } else {
+                fp += e.size;
+            }
+        }
+        quantized as f64 * wbits + fp as f64 * 16.0
+    }
+
+    // -- checkpoint ---------------------------------------------------------
+
+    const MAGIC: &'static [u8; 4] = b"OQCK";
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p).ok();
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+        );
+        f.write_all(Self::MAGIC)?;
+        let name = self.desc.name.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        Tensor::new(&[self.flat.len()], self.flat.clone()).write_to(&mut f)?;
+        Ok(())
+    }
+
+    pub fn load(manifest: &Manifest, path: &Path) -> Result<ModelParams> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("{path:?}: not an OQCK checkpoint");
+        }
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let n = u32::from_le_bytes(b4) as usize;
+        let mut name = vec![0u8; n];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        if name != manifest.model.name {
+            bail!("checkpoint is for '{name}', manifest is '{}'", manifest.model.name);
+        }
+        let t = Tensor::read_from(&mut f)?;
+        ModelParams::new(manifest, t.into_data())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn mini_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "model": {"name": "m", "family": "llama", "d_model": 4, "n_layers": 2,
+                     "n_heads": 1, "d_ff": 8, "vocab": 16, "seq_len": 8, "head_dim": 4},
+          "batches": {"calib": 2, "eval": 2, "train": 2},
+          "block_layout": [
+            {"name": "ln1_w", "shape": [4], "offset": 0, "size": 4},
+            {"name": "wq", "shape": [4, 4], "offset": 4, "size": 16},
+            {"name": "bq", "shape": [4], "offset": 20, "size": 4}
+          ],
+          "model_layout": [
+            {"name": "embed", "shape": [16, 4], "offset": 0, "size": 64},
+            {"name": "blk0.ln1_w", "shape": [4], "offset": 64, "size": 4},
+            {"name": "blk0.wq", "shape": [4, 4], "offset": 68, "size": 16},
+            {"name": "blk0.bq", "shape": [4], "offset": 84, "size": 4},
+            {"name": "blk1.ln1_w", "shape": [4], "offset": 88, "size": 4},
+            {"name": "blk1.wq", "shape": [4, 4], "offset": 92, "size": 16},
+            {"name": "blk1.bq", "shape": [4], "offset": 108, "size": 4},
+            {"name": "head", "shape": [4, 16], "offset": 112, "size": 64}
+          ],
+          "theta_layouts": {},
+          "quant_settings": {},
+          "graphs": {}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let m = mini_manifest();
+        let mut rng = Rng::new(1);
+        let p = ModelParams::init(&m, &mut rng);
+        // norm weights: near 1 except the planted outlier channels (8-16x)
+        let ln = p.get("blk0.ln1_w").unwrap();
+        for &v in ln.data() {
+            assert!((0.5..=16.0).contains(&v), "{v}");
+        }
+        assert!(ln.data().iter().any(|&v| (v - 1.0).abs() < 0.3));
+        assert!(ln.abs_max() >= 8.0, "outlier channels planted");
+        assert_eq!(p.get("blk0.bq").unwrap().data(), &[0.0; 4]);
+        assert!(p.get("blk1.wq").unwrap().abs_max() > 0.0);
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let m = mini_manifest();
+        let mut rng = Rng::new(2);
+        let mut p = ModelParams::init(&m, &mut rng);
+        let t = Tensor::from_fn(&[4, 4], |i| i as f32);
+        p.set("blk0.wq", &t).unwrap();
+        assert_eq!(p.get("blk0.wq").unwrap(), t);
+        assert!(p.set("blk0.wq", &Tensor::zeros(&[2, 2])).is_err());
+    }
+
+    #[test]
+    fn block_flat_matches_layout() {
+        let m = mini_manifest();
+        let mut rng = Rng::new(3);
+        let p = ModelParams::init(&m, &mut rng);
+        let b0 = p.block_flat(&m, 0).unwrap();
+        assert_eq!(b0.len(), 24);
+        assert_eq!(&b0.data()[0..4], p.get("blk0.ln1_w").unwrap().data());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = mini_manifest();
+        let mut rng = Rng::new(4);
+        let p = ModelParams::init(&m, &mut rng);
+        let dir = std::env::temp_dir().join("oq_test_ckpt");
+        let path = dir.join("m.oqc");
+        p.save(&path).unwrap();
+        let q = ModelParams::load(&m, &path).unwrap();
+        assert_eq!(p.flat, q.flat);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn model_bits_scales_with_wbits() {
+        let m = mini_manifest();
+        let mut rng = Rng::new(5);
+        let p = ModelParams::init(&m, &mut rng);
+        let b4 = p.model_bits(4.0);
+        let b16 = p.model_bits(16.0);
+        assert!(b4 < b16);
+        // 2 blocks x 16 quantized weights = 32 elems difference base
+        assert!((b16 - b4 - 32.0 * 12.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,157 @@
+//! AWQ (Lin et al.): activation-aware weight quantization. Protects the
+//! weights attached to high-magnitude activation channels with a
+//! channel-wise scale s_j = max|X_j|^alpha, grid-searching alpha per site
+//! to minimize the post-quantization output error of the site's linears.
+//! Scales fold the same way LET scales do; shifts/attention scales are not
+//! used (that is exactly what separates OmniQuant's learned LET from it).
+
+use anyhow::Result;
+
+use crate::calib::fusion::{fuse_block, LetParams};
+use crate::linalg;
+use crate::model::BlockWeights;
+use crate::quant::fake_quant;
+use crate::tensor::Tensor;
+
+use super::{BlockCtx, BlockQuantizer, Intermediates};
+
+pub struct Awq {
+    pub grid: Vec<f32>,
+    /// rows of X sampled for the error evaluation
+    pub sample_rows: usize,
+}
+
+impl Default for Awq {
+    fn default() -> Self {
+        Awq { grid: (0..=6).map(|i| i as f32 / 6.0).collect(), sample_rows: 128 }
+    }
+}
+
+fn subsample_rows(x: &Tensor, n: usize) -> Tensor {
+    let (rows, cols) = (x.shape()[0], x.shape()[1]);
+    if rows <= n {
+        return x.clone();
+    }
+    let stride = rows / n;
+    let mut data = Vec::with_capacity(n * cols);
+    for i in 0..n {
+        data.extend_from_slice(x.row(i * stride));
+    }
+    Tensor::new(&[n, cols], data)
+}
+
+impl Awq {
+    /// || X W - (X/s) Q(sW) ||^2 summed over the site's linears.
+    fn site_error(
+        &self,
+        x: &Tensor,
+        ws: &[&Tensor],
+        s: &[f32],
+        wbits: u8,
+        group: usize,
+    ) -> f32 {
+        let sinv: Vec<f32> = s.iter().map(|v| 1.0 / v).collect();
+        let xs = x.scale_cols(&sinv);
+        let mut err = 0.0f32;
+        for w in ws {
+            let ref_out = linalg::matmul(x, w);
+            let wq = fake_quant(&w.scale_rows(s), wbits, group, None, None);
+            let got = linalg::matmul(&xs, &wq);
+            err += ref_out.sub(&got).data().iter().map(|e| e * e).sum::<f32>();
+        }
+        err
+    }
+
+    /// Best scale for one site over the alpha grid.
+    fn search_site(
+        &self,
+        x: &Tensor,
+        ws: &[&Tensor],
+        wbits: u8,
+        group: usize,
+    ) -> Vec<f32> {
+        let xa = x.col_abs_max();
+        let xs = subsample_rows(x, self.sample_rows);
+        let mut best: Vec<f32> = vec![1.0; xa.len()];
+        let mut best_err = f32::INFINITY;
+        for &alpha in &self.grid {
+            let s: Vec<f32> = xa
+                .iter()
+                .map(|&v| v.max(1e-5).powf(alpha).clamp(1e-3, 1e3))
+                .collect();
+            let err = self.site_error(&xs, ws, &s, wbits, group);
+            if err < best_err {
+                best_err = err;
+                best = s;
+            }
+        }
+        best
+    }
+}
+
+impl BlockQuantizer for Awq {
+    fn name(&self) -> &'static str {
+        "awq"
+    }
+
+    fn quantize_block(&mut self, ctx: &mut BlockCtx) -> Result<BlockWeights> {
+        let inter: Intermediates = ctx.intermediates(2)?;
+        let bw = &ctx.bw;
+        let d = ctx.rt.model().d_model;
+        let s = ctx.setting;
+        let mut p = LetParams::identity(d);
+        p.s1 = self.search_site(
+            &inter.x1,
+            &[bw.get("wq")?, bw.get("wk")?, bw.get("wv")?],
+            s.wbits,
+            s.group,
+        );
+        p.s2 = self.search_site(&inter.ao, &[bw.get("wo")?], s.wbits, s.group);
+        let ffn: Vec<&Tensor> = if ctx.family() == "llama" {
+            vec![bw.get("wg")?, bw.get("wu")?]
+        } else {
+            vec![bw.get("w1")?]
+        };
+        p.s3 = self.search_site(&inter.x2, &ffn, s.wbits, s.group);
+        fuse_block(ctx.family(), bw, &p, &mut |_n, w| {
+            fake_quant(w, s.wbits, s.group, None, None)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn subsample_preserves_cols() {
+        let x = Tensor::from_fn(&[100, 4], |i| i as f32);
+        let s = subsample_rows(&x, 10);
+        assert_eq!(s.shape(), &[10, 4]);
+        assert_eq!(s.row(0), x.row(0));
+    }
+
+    #[test]
+    fn search_prefers_scaling_with_outlier_channels() {
+        let mut rng = Rng::new(1);
+        // X with one huge channel; W iid. Scaling that channel down (alpha>0)
+        // reduces quantization error of X/s @ Q(sW) at low bits.
+        let mut x = Tensor::from_fn(&[64, 16], |_| rng.normal());
+        for r in 0..64 {
+            let v = x.at2(r, 3) * 30.0;
+            x.set2(r, 3, v);
+        }
+        let w = Tensor::from_fn(&[16, 8], |_| rng.normal() * 0.2);
+        let awq = Awq::default();
+        let s = awq.search_site(&x, &[&w], 3, 0);
+        // the outlier channel should get the largest migration scale
+        let max_idx = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max_idx, 3, "scales: {s:?}");
+    }
+}

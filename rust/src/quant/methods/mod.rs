@@ -1,0 +1,106 @@
+//! The quantizer zoo. Every method implements `BlockQuantizer` and runs
+//! inside the shared block-wise pipeline (`calib::pipeline`), which hands it
+//! a `BlockCtx`: the FP block weights, the quantized-stream inputs X_q, the
+//! FP targets, and graph access for intermediates.
+//!
+//! * `rtn`          — round-to-nearest MinMax (paper baseline "RTN")
+//! * `gptq`         — Hessian-based column reconstruction (Frantar et al.)
+//! * `awq`          — grid-searched activation-aware channel scaling
+//! * `smoothquant`  — fixed-alpha difficulty migration (Xiao et al.)
+//! * OmniQuant (LWC+LET) lives in `calib::engine` — it is the trained
+//!   method and needs the AOT gradient graphs.
+
+pub mod awq;
+pub mod gptq;
+pub mod rtn;
+pub mod smoothquant;
+
+use anyhow::Result;
+
+use crate::config::QuantSetting;
+use crate::model::BlockWeights;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+
+/// Everything a method may use to quantize one block.
+pub struct BlockCtx<'a> {
+    pub rt: &'a Runtime,
+    pub block_idx: usize,
+    pub setting: QuantSetting,
+    /// Full-precision block weights.
+    pub bw: BlockWeights,
+    pub wflat_fp: Tensor,
+    /// Quantized-stream inputs, one (B, T, d) tensor per calibration batch.
+    pub x_q: &'a [Tensor],
+    /// FP block outputs on the FP stream (the Eq. 1 targets).
+    pub targets: &'a [Tensor],
+}
+
+/// Per-linear input activations (flattened to (N, c)) captured from the
+/// `block_intermediates` graph on the quantized stream.
+pub struct Intermediates {
+    pub x1: Tensor,
+    pub q: Tensor,
+    pub k: Tensor,
+    pub v: Tensor,
+    pub ao: Tensor,
+    pub x2: Tensor,
+    pub mid: Tensor,
+}
+
+impl<'a> BlockCtx<'a> {
+    pub fn family(&self) -> &str {
+        &self.rt.model().family
+    }
+
+    /// The input activation feeding a given linear.
+    pub fn linear_input<'b>(inter: &'b Intermediates, linear: &str) -> &'b Tensor {
+        match linear {
+            "wq" | "wk" | "wv" => &inter.x1,
+            "wo" => &inter.ao,
+            "wg" | "wu" | "w1" => &inter.x2,
+            "wd" | "w2" => &inter.mid,
+            other => panic!("unknown linear {other}"),
+        }
+    }
+
+    /// Run the intermediates graph over up to `max_batches` calibration
+    /// batches and concatenate per-linear inputs as (N, c) matrices.
+    pub fn intermediates(&self, max_batches: usize) -> Result<Intermediates> {
+        let mut acc: Vec<Vec<Tensor>> = vec![Vec::new(); 7];
+        for xb in self.x_q.iter().take(max_batches.max(1)) {
+            let outs = self.rt.exec(
+                "block_intermediates",
+                &[Value::F32(&self.wflat_fp), Value::F32(xb)],
+            )?;
+            for (i, t) in outs.into_iter().take(7).enumerate() {
+                acc[i].push(t);
+            }
+        }
+        let flat2 = |ts: &Vec<Tensor>| -> Tensor {
+            let c = *ts[0].shape().last().unwrap();
+            let mut data = Vec::new();
+            for t in ts {
+                data.extend_from_slice(t.data());
+            }
+            let n = data.len() / c;
+            Tensor::new(&[n, c], data)
+        };
+        let mut it = acc.iter();
+        Ok(Intermediates {
+            x1: flat2(it.next().unwrap()),
+            q: flat2(it.next().unwrap()),
+            k: flat2(it.next().unwrap()),
+            v: flat2(it.next().unwrap()),
+            ao: flat2(it.next().unwrap()),
+            x2: flat2(it.next().unwrap()),
+            mid: flat2(it.next().unwrap()),
+        })
+    }
+}
+
+/// A block-wise post-training quantization method.
+pub trait BlockQuantizer {
+    fn name(&self) -> &'static str;
+    fn quantize_block(&mut self, ctx: &mut BlockCtx) -> Result<BlockWeights>;
+}

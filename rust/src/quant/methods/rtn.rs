@@ -1,0 +1,30 @@
+//! RTN (round-to-nearest) baseline: vanilla MinMax fake quantization of
+//! every block linear, no transformation, no learning. This is the
+//! "RTN" row in paper Tables 1 / A8-A11 and the `-LWC -LET` ablation.
+
+use anyhow::Result;
+
+use crate::calib::fusion::{fuse_block, LetParams};
+use crate::model::BlockWeights;
+use crate::quant::fake_quant;
+
+use super::{BlockCtx, BlockQuantizer};
+
+pub struct Rtn;
+
+impl BlockQuantizer for Rtn {
+    fn name(&self) -> &'static str {
+        "rtn"
+    }
+
+    fn quantize_block(&mut self, ctx: &mut BlockCtx) -> Result<BlockWeights> {
+        let d = ctx.rt.model().d_model;
+        let s = ctx.setting;
+        fuse_block(
+            ctx.family(),
+            &ctx.bw,
+            &LetParams::identity(d),
+            &mut |_name, w| fake_quant(w, s.wbits, s.group, None, None),
+        )
+    }
+}

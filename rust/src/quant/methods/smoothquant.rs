@@ -1,0 +1,120 @@
+//! SmoothQuant (Xiao et al.): migrate activation quantization difficulty to
+//! weights with a *hand-crafted* per-channel scale
+//!     s_j = max|X_j|^alpha / max|W_j|^(1-alpha)
+//! at every foldable linear input, then MinMax-quantize. The paper uses
+//! this as its main weight-activation baseline; it is also the
+//! initialization of OmniQuant's learnable scales.
+
+use anyhow::Result;
+
+use crate::calib::fusion::{fuse_block, LetParams};
+use crate::model::BlockWeights;
+use crate::quant::fake_quant;
+use crate::tensor::Tensor;
+
+use super::{BlockCtx, BlockQuantizer, Intermediates};
+
+pub struct SmoothQuant {
+    pub alpha: f32,
+}
+
+impl Default for SmoothQuant {
+    fn default() -> Self {
+        SmoothQuant { alpha: 0.5 }
+    }
+}
+
+/// max|W_j| per input channel j, maximized across the site's linears.
+fn weight_row_absmax(ws: &[&Tensor]) -> Vec<f32> {
+    let cin = ws[0].shape()[0];
+    let mut out = vec![0.0f32; cin];
+    for w in ws {
+        let cout = w.shape()[1];
+        for j in 0..cin {
+            for c in 0..cout {
+                out[j] = out[j].max(w.at2(j, c).abs());
+            }
+        }
+    }
+    out
+}
+
+/// The SmoothQuant migration scale for one site.
+pub fn smooth_scale(x_absmax: &[f32], w_absmax: &[f32], alpha: f32) -> Vec<f32> {
+    x_absmax
+        .iter()
+        .zip(w_absmax)
+        .map(|(&xa, &wa)| {
+            let s = xa.max(1e-5).powf(alpha) / wa.max(1e-5).powf(1.0 - alpha);
+            s.clamp(1e-3, 1e3)
+        })
+        .collect()
+}
+
+/// Build SmoothQuant LET scales (no shifts, no attention scale) from the
+/// captured per-linear inputs.
+pub fn smoothquant_let(
+    family: &str,
+    bw: &BlockWeights,
+    inter: &Intermediates,
+    alpha: f32,
+) -> Result<LetParams> {
+    let d = bw.get("wq")?.shape()[0];
+    let mut p = LetParams::identity(d);
+    // site 1: x1 -> wq/wk/wv
+    p.s1 = smooth_scale(
+        &inter.x1.col_abs_max(),
+        &weight_row_absmax(&[bw.get("wq")?, bw.get("wk")?, bw.get("wv")?]),
+        alpha,
+    );
+    // site 2: attention output -> wo (folds into wv columns)
+    p.s2 = smooth_scale(&inter.ao.col_abs_max(), &weight_row_absmax(&[bw.get("wo")?]), alpha);
+    // site 3: x2 -> first FFN linear(s)
+    let ffn: Vec<&Tensor> = if family == "llama" {
+        vec![bw.get("wg")?, bw.get("wu")?]
+    } else {
+        vec![bw.get("w1")?]
+    };
+    p.s3 = smooth_scale(&inter.x2.col_abs_max(), &weight_row_absmax(&ffn), alpha);
+    Ok(p)
+}
+
+impl BlockQuantizer for SmoothQuant {
+    fn name(&self) -> &'static str {
+        "smoothquant"
+    }
+
+    fn quantize_block(&mut self, ctx: &mut BlockCtx) -> Result<BlockWeights> {
+        let inter = ctx.intermediates(2)?;
+        let p = smoothquant_let(ctx.family(), &ctx.bw, &inter, self.alpha)?;
+        let s = ctx.setting;
+        fuse_block(ctx.family(), &ctx.bw, &p, &mut |_n, w| {
+            fake_quant(w, s.wbits, s.group, None, None)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_formula() {
+        let s = smooth_scale(&[8.0, 2.0], &[0.5, 0.5], 0.5);
+        // s = sqrt(xa)/sqrt(wa)
+        assert!((s[0] - (8.0f32).sqrt() / (0.5f32).sqrt()).abs() < 1e-5);
+        assert!(s[0] > s[1]); // outlier channel gets bigger migration
+    }
+
+    #[test]
+    fn scale_clamped() {
+        let s = smooth_scale(&[1e9, 0.0], &[1e-9, 1e9], 0.5);
+        assert!(s[0] <= 1e3 && s[1] >= 1e-3);
+    }
+
+    #[test]
+    fn row_absmax() {
+        let w = Tensor::new(&[2, 2], vec![1.0, -3.0, 0.5, 2.0]);
+        assert_eq!(weight_row_absmax(&[&w]), vec![3.0, 2.0]);
+    }
+}

@@ -1,0 +1,341 @@
+//! Quantization core: the asymmetric MinMax quantizer with (optional)
+//! learnable clipping strengths — paper Eq. (2) — plus group handling,
+//! bit-packing and the packed-weight GEMV deployment path.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` exactly: weights are
+//! (cin, cout), quant groups run along cin, statistics are per
+//! (group, out-channel). `fake_quant` here and the jax oracle agree to fp
+//! rounding (tested in `rust/tests/`).
+
+pub mod methods;
+pub mod pack;
+
+pub use pack::PackedMatrix;
+
+use crate::config::QuantSetting;
+use crate::tensor::Tensor;
+
+/// Effective group length along cin.
+pub fn group_len(cin: usize, group: usize) -> usize {
+    if group == 0 || group >= cin {
+        cin
+    } else {
+        group
+    }
+}
+
+pub fn n_groups(cin: usize, group: usize) -> usize {
+    cin / group_len(cin, group)
+}
+
+/// Per-(group, cout) quantization parameters.
+#[derive(Clone, Debug)]
+pub struct QuantParams {
+    pub h: Vec<f32>,  // (ng * cout) step sizes
+    pub z: Vec<f32>,  // (ng * cout) zero points (integer-valued)
+    pub ng: usize,
+    pub cout: usize,
+}
+
+/// Compute (h, z) from group statistics with clipping strengths
+/// gamma/beta in (0, 1] ((ng, cout) each, or None for MinMax = 1.0).
+pub fn quant_params(
+    w: &Tensor,
+    bits: u8,
+    group: usize,
+    gamma: Option<&[f32]>,
+    beta: Option<&[f32]>,
+) -> QuantParams {
+    let (cin, cout) = (w.shape()[0], w.shape()[1]);
+    let g = group_len(cin, group);
+    let ng = cin / g;
+    let qmax = (1u32 << bits) as f32 - 1.0;
+    let mut h = vec![0.0f32; ng * cout];
+    let mut z = vec![0.0f32; ng * cout];
+    let wd = w.data();
+    for gi in 0..ng {
+        for c in 0..cout {
+            let mut mn = f32::INFINITY;
+            let mut mx = f32::NEG_INFINITY;
+            for k in 0..g {
+                let v = wd[(gi * g + k) * cout + c];
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            let ga = gamma.map_or(1.0, |s| s[gi * cout + c]);
+            let be = beta.map_or(1.0, |s| s[gi * cout + c]);
+            let mut step = (ga * mx - be * mn) / qmax;
+            if step.abs() < 1e-8 {
+                step = 1e-8;
+            }
+            h[gi * cout + c] = step;
+            z[gi * cout + c] = -(be * mn / step).round();
+        }
+    }
+    QuantParams { h, z, ng, cout }
+}
+
+/// Quantize to integer codes (row-major (cin, cout), u8 per code for
+/// bits <= 8).
+pub fn quantize_codes(w: &Tensor, bits: u8, group: usize, qp: &QuantParams) -> Vec<u8> {
+    let (cin, cout) = (w.shape()[0], w.shape()[1]);
+    let g = group_len(cin, group);
+    let qmax = (1u32 << bits) as f32 - 1.0;
+    let wd = w.data();
+    let mut codes = vec![0u8; cin * cout];
+    for k in 0..cin {
+        let gi = k / g;
+        for c in 0..cout {
+            let h = qp.h[gi * qp.cout + c];
+            let z = qp.z[gi * qp.cout + c];
+            let q = ((wd[k * cout + c] / h).round() + z).clamp(0.0, qmax);
+            codes[k * cout + c] = q as u8;
+        }
+    }
+    codes
+}
+
+/// Dequantize integer codes back to f32.
+pub fn dequantize_codes(
+    codes: &[u8],
+    cin: usize,
+    cout: usize,
+    group: usize,
+    qp: &QuantParams,
+) -> Tensor {
+    let g = group_len(cin, group);
+    let mut out = vec![0.0f32; cin * cout];
+    for k in 0..cin {
+        let gi = k / g;
+        for c in 0..cout {
+            let h = qp.h[gi * qp.cout + c];
+            let z = qp.z[gi * qp.cout + c];
+            out[k * cout + c] = (codes[k * cout + c] as f32 - z) * h;
+        }
+    }
+    Tensor::new(&[cin, cout], out)
+}
+
+/// One-shot fake quantization (quantize-dequantize), the Rust twin of
+/// `ref.fake_quant_lwc` / `ref.fake_quant_minmax`.
+pub fn fake_quant(
+    w: &Tensor,
+    bits: u8,
+    group: usize,
+    gamma: Option<&[f32]>,
+    beta: Option<&[f32]>,
+) -> Tensor {
+    if bits >= 16 {
+        return w.clone();
+    }
+    let qp = quant_params(w, bits, group, gamma, beta);
+    let codes = quantize_codes(w, bits, group, &qp);
+    dequantize_codes(&codes, w.shape()[0], w.shape()[1], group, &qp)
+}
+
+/// MinMax (RTN) fake quantization.
+pub fn fake_quant_rtn(w: &Tensor, setting: &QuantSetting) -> Tensor {
+    fake_quant(w, setting.wbits, setting.group, None, None)
+}
+
+/// PACT-style fake quantization: absolute learnable thresholds per
+/// (group, out-channel) — Rust twin of `ref.fake_quant_pact` (Table A3).
+pub fn fake_quant_pact(w: &Tensor, bits: u8, group: usize, tmin: &[f32], tmax: &[f32]) -> Tensor {
+    let (cin, cout) = (w.shape()[0], w.shape()[1]);
+    let g = group_len(cin, group);
+    let qmax = (1u32 << bits) as f32 - 1.0;
+    let wd = w.data();
+    let mut out = vec![0.0f32; cin * cout];
+    for k in 0..cin {
+        let gi = k / g;
+        for c in 0..cout {
+            let lo = tmin[gi * cout + c];
+            let hi = tmax[gi * cout + c].max(lo + 1e-6);
+            let wc = wd[k * cout + c].clamp(lo, hi);
+            let h = (hi - lo) / qmax;
+            let z = -(lo / h).round();
+            let q = ((wc / h).round() + z).clamp(0.0, qmax);
+            out[k * cout + c] = (q - z) * h;
+        }
+    }
+    Tensor::new(&[cin, cout], out)
+}
+
+/// LSQ-style fake quantization: learned log-step and zero point — Rust twin
+/// of `ref.fake_quant_lsq` (Table A3).
+pub fn fake_quant_lsq(w: &Tensor, bits: u8, group: usize, log_h: &[f32], zp: &[f32]) -> Tensor {
+    let (cin, cout) = (w.shape()[0], w.shape()[1]);
+    let g = group_len(cin, group);
+    let qmax = (1u32 << bits) as f32 - 1.0;
+    let wd = w.data();
+    let mut out = vec![0.0f32; cin * cout];
+    for k in 0..cin {
+        let gi = k / g;
+        for c in 0..cout {
+            let h = log_h[gi * cout + c].exp();
+            let zr = zp[gi * cout + c].round();
+            let q = ((wd[k * cout + c] / h).round() + zr).clamp(0.0, qmax);
+            out[k * cout + c] = (q - zr) * h;
+        }
+    }
+    Tensor::new(&[cin, cout], out)
+}
+
+/// Per-token activation fake quantization (asymmetric MinMax over the last
+/// axis) — Rust twin of `ref.act_quant`, used by the serving engine when a
+/// weight-activation config is deployed.
+pub fn act_fake_quant_rows(x: &mut [f32], cols: usize, bits: u8) {
+    if bits >= 16 {
+        return;
+    }
+    let qmax = (1u32 << bits) as f32 - 1.0;
+    for row in x.chunks_mut(cols) {
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        let mut h = (mx - mn) / qmax;
+        if h < 1e-8 {
+            h = 1e-8;
+        }
+        let z = -(mn / h).round();
+        for v in row.iter_mut() {
+            let q = ((*v / h).round() + z).clamp(0.0, qmax);
+            *v = (q - z) * h;
+        }
+    }
+}
+
+/// Weight memory in bytes for a packed layer at `bits` with group scales
+/// (f16-equivalent bookkeeping: scale+zp per group stored as 2x2 bytes).
+pub fn packed_bytes(cin: usize, cout: usize, bits: u8, group: usize) -> usize {
+    let ng = n_groups(cin, group);
+    let payload = (cin * cout * bits as usize).div_ceil(8);
+    let meta = ng * cout * 4; // f16 scale + f16 zero point
+    payload + meta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_w(seed: u64, cin: usize, cout: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_fn(&[cin, cout], |_| rng.normal())
+    }
+
+    #[test]
+    fn fake_quant_levels_bounded() {
+        let w = rand_w(1, 64, 8);
+        let dq = fake_quant(&w, 3, 0, None, None);
+        for c in 0..8 {
+            let mut vals: Vec<f32> = (0..64).map(|k| dq.at2(k, c)).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup_by(|a, b| (*a - *b).abs() < 1e-7);
+            assert!(vals.len() <= 8, "col {c} has {} levels", vals.len());
+        }
+    }
+
+    #[test]
+    fn minmax_preserves_extremes() {
+        let w = rand_w(2, 128, 4).scale(3.0);
+        let dq = fake_quant(&w, 8, 0, None, None);
+        for c in 0..4 {
+            let col_max = (0..128).map(|k| w.at2(k, c)).fold(f32::MIN, f32::max);
+            let dq_max = (0..128).map(|k| dq.at2(k, c)).fold(f32::MIN, f32::max);
+            assert!((col_max - dq_max).abs() < 0.06);
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let w = rand_w(3, 256, 16);
+        let mut last = f32::INFINITY;
+        for bits in [2u8, 3, 4, 6, 8] {
+            let e = fake_quant(&w, bits, 0, None, None).mse(&w);
+            assert!(e < last, "bits {bits}: {e} !< {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn groupwise_no_worse() {
+        let mut rng = Rng::new(4);
+        // per-row scale variation makes groups matter
+        let w = Tensor::from_fn(&[128, 16], |i| {
+            let row = i / 16;
+            rng.normal() * (1.0 + (row as f32 / 16.0))
+        });
+        let e_pc = fake_quant(&w, 3, 0, None, None).mse(&w);
+        let e_g = fake_quant(&w, 3, 32, None, None).mse(&w);
+        assert!(e_g <= e_pc + 1e-6);
+    }
+
+    #[test]
+    fn clipping_strengths_shrink_range() {
+        let w = rand_w(5, 128, 4);
+        let ng_cout = 4;
+        let half = vec![0.5f32; ng_cout];
+        let dq = fake_quant(&w, 8, 0, Some(&half), Some(&half));
+        for c in 0..4 {
+            let wmax = (0..128).map(|k| w.at2(k, c)).fold(f32::MIN, f32::max);
+            let dmax = (0..128).map(|k| dq.at2(k, c)).fold(f32::MIN, f32::max);
+            assert!(dmax <= 0.5 * wmax + 0.05);
+        }
+    }
+
+    #[test]
+    fn codes_roundtrip_matches_fake_quant() {
+        let w = rand_w(6, 96, 12);
+        for (bits, group) in [(4u8, 0usize), (2, 32), (3, 32), (6, 0)] {
+            let qp = quant_params(&w, bits, group, None, None);
+            let codes = quantize_codes(&w, bits, group, &qp);
+            let dq = dequantize_codes(&codes, 96, 12, group, &qp);
+            let fq = fake_quant(&w, bits, group, None, None);
+            assert!(dq.mse(&fq) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn column_scale_equivariance() {
+        // The property the LET fusion relies on (DESIGN.md section 1).
+        let w = rand_w(7, 64, 8);
+        let s: Vec<f32> = (0..8).map(|i| 0.5 + 0.25 * i as f32).collect();
+        let ws = w.scale_cols(&s.iter().map(|x| 1.0 / x).collect::<Vec<_>>());
+        let a = fake_quant(&ws, 4, 32, None, None);
+        let b = fake_quant(&w, 4, 32, None, None)
+            .scale_cols(&s.iter().map(|x| 1.0 / x).collect::<Vec<_>>());
+        assert!(a.mse(&b) < 1e-10);
+    }
+
+    #[test]
+    fn act_quant_rows_reduces_precision_but_bounded() {
+        let mut rng = Rng::new(8);
+        let mut x: Vec<f32> = (0..4 * 32).map(|_| rng.normal()).collect();
+        let orig = x.clone();
+        act_fake_quant_rows(&mut x, 32, 4);
+        let max_err = x.iter().zip(&orig).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        // error bounded by one step
+        let range: f32 = orig.iter().fold(0.0f32, |m, &v| m.max(v.abs())) * 2.0;
+        assert!(max_err <= range / 15.0 + 1e-5);
+        assert!(max_err > 0.0);
+    }
+
+    #[test]
+    fn act_quant_16_noop() {
+        let mut x = vec![0.1f32, 0.22, -0.5];
+        let orig = x.clone();
+        act_fake_quant_rows(&mut x, 3, 16);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn packed_bytes_accounting() {
+        // 128x128 at 4 bits, g64: payload 8192 bytes + 2*128 groups * 4
+        assert_eq!(packed_bytes(128, 128, 4, 64), 8192 + 1024);
+        assert!(packed_bytes(128, 128, 2, 0) < packed_bytes(128, 128, 4, 0));
+    }
+}

@@ -1,0 +1,391 @@
+//! Bit-packed weight storage + the deployment GEMV hot path (Table 3).
+//!
+//! Layout: **row-major** — the cout codes of one input row k are packed
+//! consecutively into u32 words. GEMV then has the same structure the
+//! autovectorizer loves in a dense f32 gemv: broadcast x[k], unpack a word
+//! into 8/16/4 consecutive output lanes, fused multiply-add into a
+//! contiguous accumulator. Scale/zero-point are applied once per quant
+//! group via the factorization
+//!     y[c] = sum_g h[g,c] * (sum_{k in g} q[k,c] x[k]  -  z[g,c] * sum_{k in g} x[k])
+//! so the inner loop is pure unpack-FMA. (First implementation was
+//! column-major with per-element scalar unpack: 3-8x slower; see
+//! EXPERIMENTS.md section Perf.)
+
+use crate::tensor::Tensor;
+
+use super::{group_len, quant_params, quantize_codes, QuantParams};
+
+#[derive(Clone)]
+pub struct PackedMatrix {
+    pub cin: usize,
+    pub cout: usize,
+    pub bits: u8,
+    pub group: usize,
+    /// ceil(cout*bits/32) words per row, row-major.
+    words: Vec<u32>,
+    words_per_row: usize,
+    /// (ng, cout) row-major step sizes / zero points.
+    pub h: Vec<f32>,
+    pub z: Vec<f32>,
+    pub ng: usize,
+}
+
+impl PackedMatrix {
+    /// Pack a weight matrix with optional clipping strengths (the learned
+    /// gamma/beta from LWC, already sigmoided).
+    pub fn pack(
+        w: &Tensor,
+        bits: u8,
+        group: usize,
+        gamma: Option<&[f32]>,
+        beta: Option<&[f32]>,
+    ) -> PackedMatrix {
+        assert!((2..=8).contains(&bits), "packing supports 2..=8 bits");
+        let (cin, cout) = (w.shape()[0], w.shape()[1]);
+        let qp = quant_params(w, bits, group, gamma, beta);
+        let codes = quantize_codes(w, bits, group, &qp);
+        let words_per_row = (cout * bits as usize).div_ceil(32);
+        let mut words = vec![0u32; words_per_row * cin];
+        for k in 0..cin {
+            let row = &mut words[k * words_per_row..(k + 1) * words_per_row];
+            let mut bitpos = 0usize;
+            for c in 0..cout {
+                let q = codes[k * cout + c] as u32;
+                let word = bitpos / 32;
+                let off = bitpos % 32;
+                row[word] |= q << off;
+                let spill = 32usize.saturating_sub(off);
+                if (bits as usize) > spill {
+                    row[word + 1] |= q >> spill;
+                }
+                bitpos += bits as usize;
+            }
+        }
+        PackedMatrix {
+            cin,
+            cout,
+            bits,
+            group,
+            words,
+            words_per_row,
+            h: qp.h,
+            z: qp.z,
+            ng: qp.ng,
+        }
+    }
+
+    pub fn quant_params(&self) -> QuantParams {
+        QuantParams { h: self.h.clone(), z: self.z.clone(), ng: self.ng, cout: self.cout }
+    }
+
+    /// Payload bytes actually stored (packed codes + f32 scale/zp).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 4 + (self.h.len() + self.z.len()) * 4
+    }
+
+    /// Unpack code (k, c).
+    #[inline]
+    fn code(&self, k: usize, c: usize) -> u32 {
+        let bits = self.bits as usize;
+        let bitpos = c * bits;
+        let word = bitpos / 32;
+        let off = bitpos % 32;
+        let row = &self.words[k * self.words_per_row..];
+        let mask = (1u32 << bits) - 1;
+        let lo = row[word] >> off;
+        if off + bits <= 32 {
+            lo & mask
+        } else {
+            (lo | (row[word + 1] << (32 - off))) & mask
+        }
+    }
+
+    /// Full dequantization to f32 (cin, cout).
+    pub fn dequantize(&self) -> Tensor {
+        let g = group_len(self.cin, self.group);
+        let mut out = vec![0.0f32; self.cin * self.cout];
+        for k in 0..self.cin {
+            let gi = k / g;
+            for c in 0..self.cout {
+                let h = self.h[gi * self.cout + c];
+                let z = self.z[gi * self.cout + c];
+                out[k * self.cout + c] = (self.code(k, c) as f32 - z) * h;
+            }
+        }
+        Tensor::new(&[self.cin, self.cout], out)
+    }
+
+    /// y = x @ W from packed storage. `x.len() == cin`, `y.len() == cout`.
+    pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cin);
+        assert_eq!(y.len(), self.cout);
+        let g = group_len(self.cin, self.group);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        // group-local raw-code accumulator, shared epilogue applies (h, z)
+        let mut acc = vec![0.0f32; self.cout];
+        for gi in 0..self.ng {
+            acc.iter_mut().for_each(|v| *v = 0.0);
+            let mut xsum = 0.0f32;
+            for k in gi * g..(gi + 1) * g {
+                let xk = x[k];
+                xsum += xk;
+                if xk == 0.0 {
+                    continue;
+                }
+                let row = &self.words[k * self.words_per_row..(k + 1) * self.words_per_row];
+                match self.bits {
+                    4 => Self::fma_row_b4(row, xk, &mut acc),
+                    2 => Self::fma_row_b2(row, xk, &mut acc),
+                    3 => Self::fma_row_b3(row, xk, &mut acc),
+                    8 => Self::fma_row_b8(row, xk, &mut acc),
+                    _ => self.fma_row_generic(row, xk, &mut acc),
+                }
+            }
+            let hrow = &self.h[gi * self.cout..(gi + 1) * self.cout];
+            let zrow = &self.z[gi * self.cout..(gi + 1) * self.cout];
+            for c in 0..self.cout {
+                y[c] += hrow[c] * (acc[c] - zrow[c] * xsum);
+            }
+        }
+    }
+
+    /// 4-bit: one u32 -> 8 consecutive output lanes (vectorizable FMA).
+    #[inline]
+    fn fma_row_b4(row: &[u32], xk: f32, acc: &mut [f32]) {
+        let full = acc.len() / 8;
+        for (wi, &w) in row.iter().enumerate().take(full) {
+            let a = &mut acc[wi * 8..wi * 8 + 8];
+            a[0] += xk * (w & 15) as f32;
+            a[1] += xk * ((w >> 4) & 15) as f32;
+            a[2] += xk * ((w >> 8) & 15) as f32;
+            a[3] += xk * ((w >> 12) & 15) as f32;
+            a[4] += xk * ((w >> 16) & 15) as f32;
+            a[5] += xk * ((w >> 20) & 15) as f32;
+            a[6] += xk * ((w >> 24) & 15) as f32;
+            a[7] += xk * (w >> 28) as f32;
+        }
+        for c in full * 8..acc.len() {
+            let w = row[c / 8];
+            acc[c] += xk * ((w >> (4 * (c % 8))) & 15) as f32;
+        }
+    }
+
+    /// 2-bit: two u32 words -> 32 consecutive output lanes.
+    #[inline]
+    fn fma_row_b2(row: &[u32], xk: f32, acc: &mut [f32]) {
+        let full = acc.len() / 32;
+        for wi in 0..full {
+            let w0 = row[wi * 2];
+            let w1 = row[wi * 2 + 1];
+            let a = &mut acc[wi * 32..wi * 32 + 32];
+            for j in 0..16 {
+                a[j] += xk * ((w0 >> (2 * j)) & 3) as f32;
+                a[16 + j] += xk * ((w1 >> (2 * j)) & 3) as f32;
+            }
+        }
+        for c in full * 32..acc.len() {
+            let w = row[c / 16];
+            acc[c] += xk * ((w >> (2 * (c % 16))) & 3) as f32;
+        }
+    }
+
+    /// 3-bit: three u32 words -> 32 consecutive output lanes, all shift
+    /// amounts constant (two codes straddle word boundaries and are
+    /// stitched explicitly).
+    #[inline]
+    fn fma_row_b3(row: &[u32], xk: f32, acc: &mut [f32]) {
+        let full = acc.len() / 32;
+        for wi in 0..full {
+            let w0 = row[wi * 3];
+            let w1 = row[wi * 3 + 1];
+            let w2 = row[wi * 3 + 2];
+            let a = &mut acc[wi * 32..wi * 32 + 32];
+            // codes 0..10 live in w0 (bits 0..30); code 10 straddles w0/w1
+            a[0] += xk * (w0 & 7) as f32;
+            a[1] += xk * ((w0 >> 3) & 7) as f32;
+            a[2] += xk * ((w0 >> 6) & 7) as f32;
+            a[3] += xk * ((w0 >> 9) & 7) as f32;
+            a[4] += xk * ((w0 >> 12) & 7) as f32;
+            a[5] += xk * ((w0 >> 15) & 7) as f32;
+            a[6] += xk * ((w0 >> 18) & 7) as f32;
+            a[7] += xk * ((w0 >> 21) & 7) as f32;
+            a[8] += xk * ((w0 >> 24) & 7) as f32;
+            a[9] += xk * ((w0 >> 27) & 7) as f32;
+            a[10] += xk * (((w0 >> 30) | (w1 << 2)) & 7) as f32;
+            a[11] += xk * ((w1 >> 1) & 7) as f32;
+            a[12] += xk * ((w1 >> 4) & 7) as f32;
+            a[13] += xk * ((w1 >> 7) & 7) as f32;
+            a[14] += xk * ((w1 >> 10) & 7) as f32;
+            a[15] += xk * ((w1 >> 13) & 7) as f32;
+            a[16] += xk * ((w1 >> 16) & 7) as f32;
+            a[17] += xk * ((w1 >> 19) & 7) as f32;
+            a[18] += xk * ((w1 >> 22) & 7) as f32;
+            a[19] += xk * ((w1 >> 25) & 7) as f32;
+            a[20] += xk * ((w1 >> 28) & 7) as f32;
+            a[21] += xk * (((w1 >> 31) | (w2 << 1)) & 7) as f32;
+            a[22] += xk * ((w2 >> 2) & 7) as f32;
+            a[23] += xk * ((w2 >> 5) & 7) as f32;
+            a[24] += xk * ((w2 >> 8) & 7) as f32;
+            a[25] += xk * ((w2 >> 11) & 7) as f32;
+            a[26] += xk * ((w2 >> 14) & 7) as f32;
+            a[27] += xk * ((w2 >> 17) & 7) as f32;
+            a[28] += xk * ((w2 >> 20) & 7) as f32;
+            a[29] += xk * ((w2 >> 23) & 7) as f32;
+            a[30] += xk * ((w2 >> 26) & 7) as f32;
+            a[31] += xk * (w2 >> 29) as f32;
+        }
+        // ragged tail
+        let bits = 3usize;
+        let mask = 7u32;
+        for c in full * 32..acc.len() {
+            let bitpos = c * bits;
+            let word = bitpos / 32;
+            let off = bitpos % 32;
+            let lo = row[word] >> off;
+            let q = if off + bits <= 32 {
+                lo & mask
+            } else {
+                (lo | (row[word + 1] << (32 - off))) & mask
+            };
+            acc[c] += xk * q as f32;
+        }
+    }
+
+    /// 8-bit: one u32 -> 4 consecutive output lanes.
+    #[inline]
+    fn fma_row_b8(row: &[u32], xk: f32, acc: &mut [f32]) {
+        let full = acc.len() / 4;
+        for (wi, &w) in row.iter().enumerate().take(full) {
+            let a = &mut acc[wi * 4..wi * 4 + 4];
+            a[0] += xk * (w & 255) as f32;
+            a[1] += xk * ((w >> 8) & 255) as f32;
+            a[2] += xk * ((w >> 16) & 255) as f32;
+            a[3] += xk * (w >> 24) as f32;
+        }
+        for c in full * 4..acc.len() {
+            let w = row[c / 4];
+            acc[c] += xk * ((w >> (8 * (c % 4))) & 255) as f32;
+        }
+    }
+
+    /// Generic path (3/5/6/7 bits): codes may span word boundaries.
+    #[inline]
+    fn fma_row_generic(&self, row: &[u32], xk: f32, acc: &mut [f32]) {
+        let bits = self.bits as usize;
+        let mask = (1u32 << bits) - 1;
+        let mut bitpos = 0usize;
+        for a in acc.iter_mut() {
+            let word = bitpos / 32;
+            let off = bitpos % 32;
+            let lo = row[word] >> off;
+            let q = if off + bits <= 32 {
+                lo & mask
+            } else {
+                (lo | (row[word + 1] << (32 - off))) & mask
+            };
+            *a += xk * q as f32;
+            bitpos += bits;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+    use crate::quant::fake_quant;
+    use crate::util::Rng;
+
+    fn rand_w(seed: u64, cin: usize, cout: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::from_fn(&[cin, cout], |_| rng.normal())
+    }
+
+    #[test]
+    fn pack_dequant_matches_fake_quant() {
+        let w = rand_w(1, 128, 24);
+        for (bits, group) in [(2u8, 0usize), (2, 32), (3, 32), (4, 0), (4, 64), (6, 32), (8, 0)] {
+            let p = PackedMatrix::pack(&w, bits, group, None, None);
+            let dq = p.dequantize();
+            let fq = fake_quant(&w, bits, group, None, None);
+            assert!(dq.mse(&fq) < 1e-12, "bits={bits} group={group}");
+        }
+    }
+
+    #[test]
+    fn gemv_matches_dense_dequant() {
+        let mut rng = Rng::new(2);
+        let w = rand_w(3, 96, 40);
+        let x: Vec<f32> = (0..96).map(|_| rng.normal()).collect();
+        for (bits, group) in [(2u8, 32usize), (3, 32), (4, 32), (4, 0), (6, 0), (8, 32)] {
+            let p = PackedMatrix::pack(&w, bits, group, None, None);
+            let dq = p.dequantize();
+            let want = linalg::vecmat(&x, &dq);
+            let mut got = vec![0.0f32; 40];
+            p.gemv(&x, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "bits={bits} {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_ragged_cout() {
+        // cout not a multiple of the per-word lane count exercises tails
+        let mut rng = Rng::new(9);
+        for cout in [7usize, 13, 33] {
+            let w = rand_w(10 + cout as u64, 64, cout);
+            let x: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+            for bits in [2u8, 4, 8] {
+                let p = PackedMatrix::pack(&w, bits, 32, None, None);
+                let want = linalg::vecmat(&x, &p.dequantize());
+                let mut got = vec![0.0f32; cout];
+                p.gemv(&x, &mut got);
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "bits={bits} cout={cout}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_with_clipping() {
+        let mut rng = Rng::new(4);
+        let w = rand_w(5, 64, 8);
+        let gamma = vec![0.9f32; 2 * 8];
+        let beta = vec![0.85f32; 2 * 8];
+        let p = PackedMatrix::pack(&w, 4, 32, Some(&gamma), Some(&beta));
+        let x: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let mut got = vec![0.0f32; 8];
+        p.gemv(&x, &mut got);
+        let want = linalg::vecmat(&x, &p.dequantize());
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn bytes_shrink_with_bits() {
+        let w = rand_w(6, 256, 256);
+        let b4 = PackedMatrix::pack(&w, 4, 64, None, None).bytes();
+        let b3 = PackedMatrix::pack(&w, 3, 64, None, None).bytes();
+        let b2 = PackedMatrix::pack(&w, 2, 64, None, None).bytes();
+        assert!(b2 < b3 && b3 < b4);
+        let fp = 256 * 256 * 4;
+        assert!(b4 < fp / 6, "b4 {b4} not small vs fp {fp}");
+    }
+
+    #[test]
+    fn code_extraction_spanning_words() {
+        // 3-bit codes cross u32 boundaries; verify round-trip of raw codes.
+        let w = rand_w(7, 64, 37);
+        let p = PackedMatrix::pack(&w, 3, 0, None, None);
+        let qp = p.quant_params();
+        let codes = crate::quant::quantize_codes(&w, 3, 0, &qp);
+        for k in 0..64 {
+            for c in 0..37 {
+                assert_eq!(p.code(k, c), codes[k * 37 + c] as u32, "({k},{c})");
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Table formatting + results emission for the experiment drivers: every
+//! paper table/figure reproduction renders through this so EXPERIMENTS.md
+//! and `results/*.md` have a consistent shape.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned markdown table builder.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}\n", self.title);
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let _ = write!(s, " {:w$} |", cells[i], w = widths[i]);
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<w$}|", "", w = w + 2);
+        }
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(r, &widths));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+/// Format a perplexity the way the paper's tables do: large collapses are
+/// reported in scientific shorthand ("2.1e3"), normal values with 2 decimals.
+pub fn fmt_ppl(p: f64) -> String {
+    if !p.is_finite() {
+        "inf".into()
+    } else if p >= 1000.0 {
+        let exp = p.log10().floor() as i32;
+        let mant = p / 10f64.powi(exp);
+        format!("{mant:.1}e{exp}")
+    } else {
+        format!("{p:.2}")
+    }
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.2}", 100.0 * x)
+}
+
+/// Write a results file under `results/` and echo the path.
+pub fn write_results(dir: &Path, name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.md"));
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown_alignment() {
+        let mut t = Table::new("T", &["method", "ppl"]);
+        t.row(vec!["RTN".into(), "1.1e5".into()]);
+        t.row(vec!["OmniQuant".into(), "15.47".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.contains("| method    |"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        Table::new("", &["a", "b"]).row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a"]);
+        t.row(vec!["x,y".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn ppl_formatting_matches_paper_style() {
+        assert_eq!(fmt_ppl(15.474), "15.47");
+        assert_eq!(fmt_ppl(113000.0), "1.1e5");
+        assert_eq!(fmt_ppl(2100.0), "2.1e3");
+        assert_eq!(fmt_ppl(f64::INFINITY), "inf");
+    }
+}

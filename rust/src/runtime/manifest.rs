@@ -1,0 +1,259 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/<model>/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelDesc {
+    pub name: String,
+    pub family: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub head_dim: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphDesc {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantInfo {
+    pub wbits: u8,
+    pub abits: u8,
+    pub group: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: ModelDesc,
+    pub calib_batch: usize,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+    pub block_layout: Vec<LayoutEntry>,
+    pub model_layout: Vec<LayoutEntry>,
+    pub theta_layouts: BTreeMap<String, Vec<LayoutEntry>>,
+    pub quant_settings: BTreeMap<String, QuantInfo>,
+    pub graphs: BTreeMap<String, GraphDesc>,
+}
+
+fn parse_layout(j: &Json) -> Result<Vec<LayoutEntry>, String> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(LayoutEntry {
+                name: e.field("name")?.as_str()?.to_string(),
+                shape: e.field("shape")?.usize_list()?,
+                offset: e.field("offset")?.as_usize()?,
+                size: e.field("size")?.as_usize()?,
+            })
+        })
+        .collect()
+}
+
+fn parse_iospec(e: &Json, default_name: &str) -> Result<IoSpec, String> {
+    Ok(IoSpec {
+        name: e.get("name").map(|n| n.as_str().map(String::from)).transpose()?
+            .unwrap_or_else(|| default_name.to_string()),
+        shape: e.field("shape")?.usize_list()?,
+        dtype: e.field("dtype")?.as_str()?.to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text)?;
+        let m = j.field("model")?;
+        let model = ModelDesc {
+            name: m.field("name")?.as_str()?.to_string(),
+            family: m.field("family")?.as_str()?.to_string(),
+            d_model: m.field("d_model")?.as_usize()?,
+            n_layers: m.field("n_layers")?.as_usize()?,
+            n_heads: m.field("n_heads")?.as_usize()?,
+            d_ff: m.field("d_ff")?.as_usize()?,
+            vocab: m.field("vocab")?.as_usize()?,
+            seq_len: m.field("seq_len")?.as_usize()?,
+            head_dim: m.field("head_dim")?.as_usize()?,
+        };
+        let b = j.field("batches")?;
+        let mut theta_layouts = BTreeMap::new();
+        for (k, v) in j.field("theta_layouts")?.as_obj()? {
+            theta_layouts.insert(k.clone(), parse_layout(v)?);
+        }
+        let mut quant_settings = BTreeMap::new();
+        for (k, v) in j.field("quant_settings")?.as_obj()? {
+            quant_settings.insert(
+                k.clone(),
+                QuantInfo {
+                    wbits: v.field("wbits")?.as_usize()? as u8,
+                    abits: v.field("abits")?.as_usize()? as u8,
+                    group: v.field("group")?.as_usize()?,
+                },
+            );
+        }
+        let mut graphs = BTreeMap::new();
+        for (k, v) in j.field("graphs")?.as_obj()? {
+            let inputs = v
+                .field("inputs")?
+                .as_arr()?
+                .iter()
+                .enumerate()
+                .map(|(i, e)| parse_iospec(e, &format!("arg{i}")))
+                .collect::<Result<Vec<_>, String>>()?;
+            let outputs = v
+                .field("outputs")?
+                .as_arr()?
+                .iter()
+                .enumerate()
+                .map(|(i, e)| parse_iospec(e, &format!("out{i}")))
+                .collect::<Result<Vec<_>, String>>()?;
+            graphs.insert(
+                k.clone(),
+                GraphDesc { file: v.field("file")?.as_str()?.to_string(), inputs, outputs },
+            );
+        }
+        Ok(Manifest {
+            model,
+            calib_batch: b.field("calib")?.as_usize()?,
+            eval_batch: b.field("eval")?.as_usize()?,
+            train_batch: b.field("train")?.as_usize()?,
+            block_layout: parse_layout(j.field("block_layout")?)?,
+            model_layout: parse_layout(j.field("model_layout")?)?,
+            theta_layouts,
+            quant_settings,
+            graphs,
+        })
+    }
+
+    pub fn block_param_size(&self) -> usize {
+        self.block_layout.last().map(|e| e.offset + e.size).unwrap_or(0)
+    }
+
+    pub fn model_param_size(&self) -> usize {
+        self.model_layout.last().map(|e| e.offset + e.size).unwrap_or(0)
+    }
+
+    pub fn theta_size(&self, setting: &str) -> Result<usize> {
+        let lay = self
+            .theta_layouts
+            .get(setting)
+            .ok_or_else(|| anyhow!("no theta layout for '{setting}'"))?;
+        Ok(lay.last().map(|e| e.offset + e.size).unwrap_or(0))
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphDesc> {
+        self.graphs.get(name).ok_or_else(|| {
+            anyhow!("graph '{name}' not in manifest (have: {:?})", self.graphs.keys().take(8).collect::<Vec<_>>())
+        })
+    }
+
+    /// Locate a layout entry by name within a layout list.
+    pub fn entry<'a>(layout: &'a [LayoutEntry], name: &str) -> Result<&'a LayoutEntry> {
+        layout
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("layout entry '{name}' missing"))
+    }
+
+    /// All entries for block `i` in the model layout, stripped of prefix.
+    pub fn block_entries(&self, i: usize) -> Vec<(String, LayoutEntry)> {
+        let prefix = format!("blk{i}.");
+        self.model_layout
+            .iter()
+            .filter(|e| e.name.starts_with(&prefix))
+            .map(|e| (e.name[prefix.len()..].to_string(), e.clone()))
+            .collect()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        // block layouts inside the model layout must match the standalone
+        // block layout (offsets are relative, sizes/order identical).
+        for i in 0..self.model.n_layers {
+            let entries = self.block_entries(i);
+            if entries.len() != self.block_layout.len() {
+                bail!("block {i}: {} entries vs layout {}", entries.len(), self.block_layout.len());
+            }
+            for ((nm, e), be) in entries.iter().zip(&self.block_layout) {
+                if nm != &be.name || e.size != be.size || e.shape != be.shape {
+                    bail!("block {i} entry {nm} mismatches block layout {}", be.name);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "model": {"name": "m", "family": "llama", "d_model": 4, "n_layers": 1,
+                 "n_heads": 1, "d_ff": 8, "vocab": 16, "seq_len": 8, "head_dim": 4},
+      "batches": {"calib": 2, "eval": 2, "train": 2},
+      "block_layout": [{"name": "w", "shape": [4, 4], "offset": 0, "size": 16}],
+      "model_layout": [
+        {"name": "embed", "shape": [16, 4], "offset": 0, "size": 64},
+        {"name": "blk0.w", "shape": [4, 4], "offset": 64, "size": 16}
+      ],
+      "theta_layouts": {"w4a4": [{"name": "g", "shape": [1, 4], "offset": 0, "size": 4}]},
+      "quant_settings": {"w4a4": {"wbits": 4, "abits": 4, "group": 0}},
+      "graphs": {"g": {"file": "g.hlo.txt",
+        "inputs": [{"name": "x", "shape": [2, 4], "dtype": "float32"}],
+        "outputs": [{"shape": [2, 4], "dtype": "float32"}]}}
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.model.d_model, 4);
+        assert_eq!(m.block_param_size(), 16);
+        assert_eq!(m.model_param_size(), 80);
+        assert_eq!(m.theta_size("w4a4").unwrap(), 4);
+        assert_eq!(m.graph("g").unwrap().inputs[0].shape, vec![2, 4]);
+        assert!(m.graph("nope").is_err());
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn block_entries_strip_prefix() {
+        let m = Manifest::parse(MINI).unwrap();
+        let e = m.block_entries(0);
+        assert_eq!(e.len(), 1);
+        assert_eq!(e[0].0, "w");
+        assert_eq!(e[0].1.offset, 64);
+    }
+}

@@ -1,0 +1,219 @@
+//! PJRT runtime: loads the AOT-lowered HLO text artifacts and executes them
+//! on the CPU PJRT client via the `xla` crate. The executable cache means
+//! each graph compiles once per process; the calibration inner loop then
+//! only pays buffer transfer + execute.
+//!
+//! Interchange is HLO *text* — xla_extension 0.5.1 rejects jax >= 0.5
+//! serialized protos (64-bit instruction ids); the text parser reassigns
+//! ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+
+pub use manifest::{GraphDesc, LayoutEntry, Manifest, ModelDesc, QuantInfo};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+/// A graph input value.
+pub enum Value<'a> {
+    F32(&'a Tensor),
+    I32(&'a [i32], &'a [usize]),
+    Scalar(f32),
+}
+
+impl Value<'_> {
+    fn shape(&self) -> Vec<usize> {
+        match self {
+            Value::F32(t) => t.shape().to_vec(),
+            Value::I32(_, s) => s.to_vec(),
+            Value::Scalar(_) => vec![],
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) | Value::Scalar(_) => "float32",
+            Value::I32(..) => "int32",
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Value::Scalar(x) => Ok(xla::Literal::scalar(*x)),
+            Value::F32(t) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    t.shape(),
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal create: {e:?}"))
+            }
+            Value::I32(v, shape) => {
+                let bytes: &[u8] =
+                    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal create: {e:?}"))
+            }
+        }
+    }
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// (graph, executions) counters for the perf report.
+    exec_counts: RefCell<HashMap<String, usize>>,
+}
+
+impl Runtime {
+    /// `dir` is the per-model artifact directory, e.g. `artifacts/omni-1m`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn for_model(artifacts_root: &Path, model: &str) -> Result<Runtime> {
+        Self::load(&artifacts_root.join(model))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn model(&self) -> &ModelDesc {
+        &self.manifest.model
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let desc = self.manifest.graph(name)?;
+        let path = self.dir.join(&desc.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling graph '{name}': {e:?}"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of graphs (amortizes XLA compile time up front).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.compile(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute a graph by name, with shape/dtype validation against the
+    /// manifest, returning all outputs as f32 tensors (the only output
+    /// dtype the graph suite produces).
+    pub fn exec(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        let desc = self.manifest.graph(name)?.clone();
+        if inputs.len() != desc.inputs.len() {
+            bail!("graph '{name}': {} inputs given, {} expected", inputs.len(), desc.inputs.len());
+        }
+        for (v, spec) in inputs.iter().zip(&desc.inputs) {
+            if v.shape() != spec.shape {
+                bail!(
+                    "graph '{name}' input '{}': shape {:?} given, {:?} expected",
+                    spec.name, v.shape(), spec.shape
+                );
+            }
+            if v.dtype() != spec.dtype {
+                bail!(
+                    "graph '{name}' input '{}': dtype {} given, {} expected",
+                    spec.name, v.dtype(), spec.dtype
+                );
+            }
+        }
+        self.compile(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
+        *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch '{name}': {e:?}"))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose '{name}': {e:?}"))?;
+        if parts.len() != desc.outputs.len() {
+            bail!("graph '{name}': {} outputs, {} expected", parts.len(), desc.outputs.len());
+        }
+        parts
+            .into_iter()
+            .zip(&desc.outputs)
+            .map(|(lit, spec)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output of '{name}' not f32: {e:?}"))?;
+                Ok(Tensor::new(&spec.shape, data))
+            })
+            .collect()
+    }
+
+    /// Convenience: single-output graphs.
+    pub fn exec1(&self, name: &str, inputs: &[Value]) -> Result<Tensor> {
+        let mut out = self.exec(name, inputs)?;
+        if out.len() != 1 {
+            bail!("graph '{name}' has {} outputs, expected 1", out.len());
+        }
+        Ok(out.pop().unwrap())
+    }
+
+    pub fn exec_counts(&self) -> HashMap<String, usize> {
+        self.exec_counts.borrow().clone()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Resolve the artifacts root: $OMNIQUANT_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var_os("OMNIQUANT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Load a runtime, with a helpful error if artifacts are missing.
+pub fn load_runtime(model: &str) -> Result<Runtime> {
+    let root = artifacts_root();
+    Runtime::for_model(&root, model).with_context(|| {
+        format!("loading artifacts for '{model}' from {root:?} (run: make artifacts MODELS={model})")
+    })
+}

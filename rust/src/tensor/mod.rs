@@ -1,0 +1,355 @@
+//! Row-major f32 tensor. Deliberately small: contiguous storage, shape
+//! metadata, the elementwise / reduction / reshape operations the
+//! coordinator needs, and a versioned binary serialization (`OQT1`) used by
+//! checkpoints. Heavy math (matmul, Cholesky) lives in `linalg`.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} does not match {} elements", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|i| f(i)).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// 2-D accessors (rows = shape[0]).
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.shape[1] + c]
+    }
+
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.shape[1] + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.shape[1];
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.shape[1];
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(&[c, r], out)
+    }
+
+    // -- elementwise ------------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    pub fn add(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a + b)
+    }
+
+    pub fn sub(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a - b)
+    }
+
+    pub fn mul(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// Scale column c of a 2-D tensor by s[c].
+    pub fn scale_cols(&self, s: &[f32]) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(s.len(), self.shape[1]);
+        let c = self.shape[1];
+        let mut out = self.clone();
+        for (i, x) in out.data.iter_mut().enumerate() {
+            *x *= s[i % c];
+        }
+        out
+    }
+
+    /// Scale row r of a 2-D tensor by s[r].
+    pub fn scale_rows(&self, s: &[f32]) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(s.len(), self.shape[0]);
+        let c = self.shape[1];
+        let mut out = self.clone();
+        for (i, x) in out.data.iter_mut().enumerate() {
+            *x *= s[i / c];
+        }
+        out
+    }
+
+    // -- reductions -------------------------------------------------------
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() { 0.0 } else { self.sum() / self.data.len() as f32 }
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn l1_dist(&self, o: &Tensor) -> f32 {
+        assert_eq!(self.shape, o.shape);
+        let s: f32 = self.data.iter().zip(&o.data).map(|(&a, &b)| (a - b).abs()).sum();
+        s / self.data.len() as f32
+    }
+
+    pub fn mse(&self, o: &Tensor) -> f32 {
+        assert_eq!(self.shape, o.shape);
+        let s: f32 = self.data.iter().zip(&o.data).map(|(&a, &b)| (a - b) * (a - b)).sum();
+        s / self.data.len() as f32
+    }
+
+    /// Per-column max |x| of a 2-D tensor (activation outlier statistics).
+    pub fn col_abs_max(&self) -> Vec<f32> {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j] = out[j].max(self.data[i * c + j].abs());
+            }
+        }
+        out
+    }
+
+    /// Per-column (min, max) of a 2-D tensor.
+    pub fn col_min_max(&self) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut mn = vec![f32::INFINITY; c];
+        let mut mx = vec![f32::NEG_INFINITY; c];
+        for i in 0..r {
+            for j in 0..c {
+                let v = self.data[i * c + j];
+                mn[j] = mn[j].min(v);
+                mx[j] = mx[j].max(v);
+            }
+        }
+        (mn, mx)
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    const MAGIC: &'static [u8; 4] = b"OQT1";
+
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(Self::MAGIC)?;
+        w.write_all(&(self.shape.len() as u32).to_le_bytes())?;
+        for &s in &self.shape {
+            w.write_all(&(s as u64).to_le_bytes())?;
+        }
+        // bulk little-endian f32
+        let bytes: Vec<u8> = self.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        w.write_all(&bytes)
+    }
+
+    pub fn read_from(r: &mut impl Read) -> std::io::Result<Tensor> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad tensor magic"));
+        }
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let ndim = u32::from_le_bytes(b4) as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        let mut b8 = [0u8; 8];
+        for _ in 0..ndim {
+            r.read_exact(&mut b8)?;
+            shape.push(u64::from_le_bytes(b8) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut buf = vec![0u8; n * 4];
+        r.read_exact(&mut buf)?;
+        let data = buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        Ok(Tensor { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_fn(&[2, 3], |i| i as f32);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::from_fn(&[3, 4], |i| i as f32);
+        let tt = t.transpose2().transpose2();
+        assert_eq!(t, tt);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::full(&[4], 2.0);
+        let b = Tensor::full(&[4], 3.0);
+        assert_eq!(a.add(&b).data(), &[5.0; 4]);
+        assert_eq!(a.mul(&b).data(), &[6.0; 4]);
+        assert_eq!(b.sub(&a).data(), &[1.0; 4]);
+        assert_eq!(a.scale(0.5).data(), &[1.0; 4]);
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let t = Tensor::ones(&[2, 3]);
+        let sc = t.scale_cols(&[1.0, 2.0, 3.0]);
+        assert_eq!(sc.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(sc.row(1), &[1.0, 2.0, 3.0]);
+        let sr = t.scale_rows(&[5.0, 7.0]);
+        assert_eq!(sr.row(0), &[5.0; 3]);
+        assert_eq!(sr.row(1), &[7.0; 3]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::new(&[2, 2], vec![1.0, -4.0, 2.0, 3.0]);
+        assert_eq!(t.sum(), 2.0);
+        assert_eq!(t.abs_max(), 4.0);
+        let (mn, mx) = t.col_min_max();
+        assert_eq!(mn, vec![1.0, -4.0]);
+        assert_eq!(mx, vec![2.0, 3.0]);
+        assert_eq!(t.col_abs_max(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn distances() {
+        let a = Tensor::new(&[3], vec![0.0, 0.0, 0.0]);
+        let b = Tensor::new(&[3], vec![1.0, -1.0, 2.0]);
+        assert!((a.l1_dist(&b) - 4.0 / 3.0).abs() < 1e-6);
+        assert!((a.mse(&b) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let t = Tensor::from_fn(&[3, 5], |i| (i as f32).sin());
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let back = Tensor::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn serialization_rejects_garbage() {
+        let mut bad: &[u8] = b"NOPE....";
+        assert!(Tensor::read_from(&mut bad).is_err());
+    }
+}
