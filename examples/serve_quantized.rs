@@ -46,7 +46,7 @@ fn main() -> Result<()> {
             calib::quantize_model(&rt, &fp, method.as_mut(), setting, &corpus, 8, 1)?.qparams
         };
         let engine = Engine::build(&params, setting)?;
-        let stats = engine.batched_decode(4, 128, 9);
+        let stats = engine.batched_decode(4, 16, 128, 9);
         if setting.wbits >= 16 {
             fp_tps = stats.decode_tok_per_s;
         }

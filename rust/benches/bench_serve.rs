@@ -1,43 +1,35 @@
-//! End-to-end serving bench (Table 3 shape): decode tokens/s at each
-//! weight bit-width from the packed-weight engine, per model size.
-//! Uses freshly initialized weights — throughput is content-independent.
+//! End-to-end serving bench: sequential vs lockstep vs continuous-batching
+//! decode tokens/s from the packed-weight engine (Table 3's regime, plus
+//! the scheduler this repo adds on top). Runs on a synthetic model — no
+//! artifacts or PJRT needed — and refreshes the tracked `BENCH_serve.json`
+//! snapshot (batch-8 suite) at the repo root, wherever it is run from.
 
-use omniquant::bench::Bencher;
-use omniquant::config::QuantSetting;
-use omniquant::model::ModelParams;
-use omniquant::runtime::Runtime;
-use omniquant::serve::Engine;
-use omniquant::util::{fmt_bytes, Rng};
+use omniquant::serve::bench::{run, write_json, ServeBenchOpts};
 
 fn main() {
-    let b = Bencher { warmup: 1, reps: 5, max_secs: 30.0 };
-    let root = std::path::Path::new("artifacts");
-    for model in ["omni-1m", "omni-3m", "omni-7m"] {
-        let Ok(rt) = Runtime::for_model(root, model) else {
-            eprintln!("skipping {model}: artifacts missing (make artifacts)");
-            continue;
-        };
-        let mut rng = Rng::new(7);
-        let params = ModelParams::init(rt.manifest(), &mut rng);
-        let mut fp_tps = 0.0;
-        for setting_name in ["fp16", "w4a16g64", "w3a16g64", "w2a16g64"] {
-            let setting = QuantSetting::parse(setting_name).unwrap();
-            let engine = Engine::build(&params, setting).unwrap();
-            let n_tokens = 96usize;
-            let r = b.run(&format!("{model} {setting_name} decode x{n_tokens}"), || {
-                std::hint::black_box(engine.batched_decode(1, n_tokens, 3));
-            });
-            let tps = n_tokens as f64 / (r.median_ms / 1e3);
-            if setting.wbits >= 16 {
-                fp_tps = tps;
+    let quick = std::env::args().any(|a| a == "--quick");
+    // the crate lives at <repo>/rust, so the tracked snapshot is one up
+    let snapshot = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_serve.json");
+    for batch in [1usize, 4, 8, 16] {
+        let mut opts = ServeBenchOpts::new(quick);
+        opts.batch = batch;
+        match run(&opts) {
+            Ok(report) => {
+                println!("== serve suite, batch {batch} ==");
+                for l in &report.lines {
+                    println!("{l}");
+                }
+                if batch == 8 {
+                    match write_json(&report, &snapshot) {
+                        Ok(()) => println!("wrote {}", snapshot.display()),
+                        Err(e) => eprintln!("failed writing {}: {e:#}", snapshot.display()),
+                    }
+                }
+                println!();
             }
-            println!(
-                "{r}  {:.0} tok/s ({:.2}x vs fp)  WM {}",
-                tps,
-                tps / fp_tps.max(1e-9),
-                fmt_bytes(engine.weight_bytes())
-            );
+            Err(e) => eprintln!("serve bench (batch {batch}) failed: {e:#}"),
         }
-        println!();
     }
 }

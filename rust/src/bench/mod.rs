@@ -1,8 +1,13 @@
 //! Hand-rolled micro/macro benchmark harness (criterion is not in the
 //! offline crate cache). Warmup + N timed repetitions, reports
 //! median / p10 / p90, and can be embedded by the experiment drivers.
+//! Also hosts the machine-readable `BENCH_*.json` snapshot writer used to
+//! track the perf trajectory across PRs.
 
+use crate::json::Json;
 use crate::util::stats;
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -19,6 +24,35 @@ impl BenchResult {
     pub fn throughput(&self, items: f64) -> f64 {
         items / (self.median_ms / 1e3)
     }
+
+    /// Machine-readable form for `BENCH_*.json` snapshots.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("reps".to_string(), Json::Num(self.reps as f64));
+        m.insert("median_ms".to_string(), Json::Num(self.median_ms));
+        m.insert("p10_ms".to_string(), Json::Num(self.p10_ms));
+        m.insert("p90_ms".to_string(), Json::Num(self.p90_ms));
+        m.insert("mean_ms".to_string(), Json::Num(self.mean_ms));
+        Json::Obj(m)
+    }
+}
+
+/// Write a machine-readable benchmark snapshot. By convention snapshots
+/// live at the repo root as `BENCH_<suite>.json` (see
+/// `scripts/bench_snapshot.sh`), one JSON object per suite with a "bench"
+/// discriminator plus suite-specific entries.
+pub fn write_snapshot(
+    path: &Path,
+    bench: &str,
+    entries: Vec<(String, Json)>,
+) -> std::io::Result<()> {
+    let mut m = BTreeMap::new();
+    m.insert("bench".to_string(), Json::Str(bench.to_string()));
+    for (k, v) in entries {
+        m.insert(k, v);
+    }
+    std::fs::write(path, format!("{}\n", Json::Obj(m)))
 }
 
 impl std::fmt::Display for BenchResult {
@@ -102,6 +136,24 @@ mod tests {
         let b = Bencher { warmup: 0, reps: 100, max_secs: 0.0 };
         let r = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(2)));
         assert!(r.reps >= 3 && r.reps < 100);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let r = BenchResult {
+            name: "gemm".into(), reps: 5, median_ms: 1.5, p10_ms: 1.0, p90_ms: 2.0, mean_ms: 1.6,
+        };
+        let dir = std::env::temp_dir().join("oq_bench_snap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_snapshot(&path, "test", vec![("gemm".to_string(), r.to_json())]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(text.trim()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "test");
+        let g = j.get("gemm").unwrap();
+        assert_eq!(g.get("reps").unwrap().as_usize().unwrap(), 5);
+        assert!((g.get("median_ms").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

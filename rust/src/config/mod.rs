@@ -150,6 +150,55 @@ impl TrainConfig {
     }
 }
 
+/// Continuous-batching serve parameters (`serve --continuous`, `[serve]`
+/// table). Arrivals are open-loop: mean inter-arrival gap in scheduler
+/// steps, exponential (Poisson-ish) via the deterministic RNG.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// KV pool slots == max co-resident sequences.
+    pub slots: usize,
+    /// Synthetic workload size.
+    pub requests: usize,
+    pub mean_interarrival_steps: f64,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            slots: 8,
+            requests: 32,
+            mean_interarrival_steps: 4.0,
+            prompt_len: 16,
+            max_new_tokens: 64,
+            temperature: 0.0,
+            seed: 7,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_toml(v: &BTreeMap<String, TomlValue>) -> Result<ServeConfig> {
+        let mut c = ServeConfig::default();
+        for (k, val) in v {
+            match k.as_str() {
+                "slots" => c.slots = val.as_int()? as usize,
+                "requests" => c.requests = val.as_int()? as usize,
+                "interarrival" => c.mean_interarrival_steps = val.as_float()?,
+                "prompt_len" => c.prompt_len = val.as_int()? as usize,
+                "max_new_tokens" => c.max_new_tokens = val.as_int()? as usize,
+                "temperature" => c.temperature = val.as_float()? as f32,
+                "seed" => c.seed = val.as_int()? as u64,
+                other => return Err(anyhow!("unknown serve key '{other}'")),
+            }
+        }
+        Ok(c)
+    }
+}
+
 /// Top-level experiment configuration file.
 #[derive(Clone, Debug, Default)]
 pub struct ExperimentConfig {
@@ -158,6 +207,7 @@ pub struct ExperimentConfig {
     pub checkpoint: String,
     pub calib: CalibConfig,
     pub train: TrainConfig,
+    pub serve: ServeConfig,
 }
 
 impl ExperimentConfig {
@@ -185,6 +235,9 @@ impl ExperimentConfig {
         }
         if let Some(t) = doc.tables.get("train") {
             cfg.train = TrainConfig::from_toml(t)?;
+        }
+        if let Some(t) = doc.tables.get("serve") {
+            cfg.serve = ServeConfig::from_toml(t)?;
         }
         Ok(cfg)
     }
@@ -242,8 +295,32 @@ lr = 0.001
     }
 
     #[test]
+    fn serve_config_parse_and_defaults() {
+        let cfg = ExperimentConfig::parse(
+            r#"
+model = "omni-1m"
+
+[serve]
+slots = 16
+requests = 64
+interarrival = 2.5
+max_new_tokens = 32
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.slots, 16);
+        assert_eq!(cfg.serve.requests, 64);
+        assert!((cfg.serve.mean_interarrival_steps - 2.5).abs() < 1e-12);
+        assert_eq!(cfg.serve.max_new_tokens, 32);
+        assert_eq!(cfg.serve.prompt_len, 16); // default preserved
+        let d = ExperimentConfig::parse("model = \"m\"").unwrap();
+        assert_eq!(d.serve.slots, ServeConfig::default().slots);
+    }
+
+    #[test]
     fn unknown_keys_rejected() {
         assert!(ExperimentConfig::parse("bogus = 1").is_err());
         assert!(ExperimentConfig::parse("[calib]\nnope = 2").is_err());
+        assert!(ExperimentConfig::parse("[serve]\nnope = 2").is_err());
     }
 }

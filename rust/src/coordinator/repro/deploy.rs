@@ -33,7 +33,7 @@ pub fn table3(ctx: &mut Ctx) -> Result<()> {
                 ctx.quantized(model, "omniquant", setting)?.0
             };
             let engine = Engine::build(&params, setting)?;
-            let stats = engine.batched_decode(1, n_tokens, 7);
+            let stats = engine.batched_decode(1, 16, n_tokens, 7);
             if setting.wbits >= 16 {
                 fp_tps = stats.decode_tok_per_s;
             }
@@ -53,4 +53,32 @@ pub fn table3(ctx: &mut Ctx) -> Result<()> {
     let md = table.to_markdown();
     print!("{md}");
     ctx.write_results("table3", &md)
+}
+
+/// `repro --exp serve-bench`: sequential vs lockstep vs continuous-batching
+/// decode throughput on a synthetic quantized model (no artifacts / PJRT
+/// needed — runs on a clean machine), writing the machine-readable
+/// `BENCH_serve.json` snapshot into the current directory so the serving
+/// perf trajectory is tracked from this PR onward.
+pub fn serve_bench(ctx: &mut Ctx) -> Result<()> {
+    let opts = crate::serve::bench::ServeBenchOpts::new(ctx.opts.quick);
+    let report = crate::serve::bench::run(&opts)?;
+    for l in &report.lines {
+        println!("  {l}");
+    }
+    let path = std::path::Path::new("BENCH_serve.json");
+    crate::serve::bench::write_json(&report, path)?;
+    println!("[repro] wrote {}", path.display());
+    let md = format!(
+        "### serve-bench — continuous batching vs lockstep (batch {}, {} prompt + {} new tokens, {})\n\n\
+         ```\n{}\n```\n\n\
+         continuous vs lockstep decode speedup: {:.2}x (target >= 2x at batch >= 8)\n",
+        opts.batch,
+        opts.prompt_len,
+        opts.new_tokens,
+        opts.setting,
+        report.lines.join("\n"),
+        report.speedup_continuous_vs_lockstep,
+    );
+    ctx.write_results("serve-bench", &md)
 }

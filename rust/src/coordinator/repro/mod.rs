@@ -194,6 +194,7 @@ pub fn run_experiment(ctx: &mut Ctx, exp: &str) -> Result<()> {
         "tableA12" | "tableA13" => weight_act::tables_a12_a13(ctx),
         "tableA14" => weight_act::table_a14(ctx),
         "table3" => deploy::table3(ctx),
+        "serve-bench" => deploy::serve_bench(ctx),
         "table4" => ablations::table4(ctx),
         "tableA1" => ablations::table_a1(ctx),
         "tableA2" => ablations::table_a2(ctx),
@@ -215,6 +216,7 @@ pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "table1", "table2", "table3", "table4", "fig4",
     "tableA1", "tableA2", "tableA3", "tableA4", "tableA5", "tableA6", "tableA7",
     "tableA8", "tableA9", "tableA12", "tableA14", "figA1", "figA2", "figA3",
+    "serve-bench",
 ];
 
 /// CLI entrypoint.

@@ -15,11 +15,12 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use omniquant::config::{CalibConfig, QuantSetting, TrainConfig};
+use omniquant::config::{CalibConfig, QuantSetting, ServeConfig, TrainConfig};
 use omniquant::coordinator::{make_method, pretrain, repro};
 use omniquant::data::{Corpus, CorpusId};
 use omniquant::model::ModelParams;
 use omniquant::runtime::load_runtime;
+use omniquant::serve::sched;
 use omniquant::util::{fmt_bytes, Rng};
 use omniquant::{calib, eval, serve};
 
@@ -176,22 +177,92 @@ fn cmd_eval(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn serve_cfg_from_args(a: &Args) -> Result<ServeConfig> {
+    let mut c = match a.get("config") {
+        Some(path) => {
+            omniquant::config::ExperimentConfig::load(std::path::Path::new(path))?.serve
+        }
+        None => ServeConfig::default(),
+    };
+    c.slots = a.usize_or("slots", c.slots)?;
+    c.requests = a.usize_or("requests", c.requests)?;
+    if let Some(v) = a.get("interarrival") {
+        c.mean_interarrival_steps = v.parse().with_context(|| format!("--interarrival {v}"))?;
+    }
+    c.prompt_len = a.usize_or("prompt-len", c.prompt_len)?;
+    c.max_new_tokens = a.usize_or("tokens", c.max_new_tokens)?;
+    c.temperature = a.f32_or("temp", c.temperature)?;
+    c.seed = a.usize_or("seed", c.seed as usize)? as u64;
+    Ok(c)
+}
+
+/// Continuous-batching serve over a synthetic open-loop workload
+/// (Poisson-ish staggered arrivals), printing the metrics summary and
+/// optionally a JSON snapshot (`--json FILE`).
+fn cmd_serve_continuous(a: &Args, engine: &serve::Engine) -> Result<()> {
+    let cfg = serve_cfg_from_args(a)?;
+    println!(
+        "continuous serve: {} requests, mean gap {:.1} steps, {} slots, prompt {} + max {} tokens",
+        cfg.requests, cfg.mean_interarrival_steps, cfg.slots, cfg.prompt_len, cfg.max_new_tokens
+    );
+    let spec = sched::WorkloadSpec {
+        requests: cfg.requests,
+        mean_interarrival_steps: cfg.mean_interarrival_steps,
+        prompt_len: cfg.prompt_len,
+        max_new_tokens: cfg.max_new_tokens,
+        temperature: cfg.temperature,
+    };
+    let requests = sched::synthetic_workload(&spec, engine.desc.vocab, cfg.seed);
+    let scfg = sched::SchedConfig {
+        slots: cfg.slots,
+        slot_tokens: cfg.prompt_len + cfg.max_new_tokens + 1,
+        eos: None,
+    };
+    let mut scheduler = sched::Scheduler::new(engine, scfg);
+    for r in requests {
+        scheduler.submit(r)?;
+    }
+    let summary = scheduler.run()?;
+    println!("{summary}");
+    if let Some(path) = a.get("json") {
+        std::fs::write(path, format!("{}\n", summary.to_json()))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(a: &Args) -> Result<()> {
     let model = a.get_or("model", "omni-1m");
-    let rt = load_runtime(&model)?;
-    let ckpt = PathBuf::from(a.get_or("ckpt", &default_ckpt(&model)));
-    let params = ModelParams::load(rt.manifest(), &ckpt)?;
+    // `--synthetic` (or `--model synthetic`) serves a freshly initialized
+    // synthetic model: no artifacts, checkpoint or PJRT needed — the
+    // clean-machine path for the continuous scheduler and packed engine.
+    let params = if a.has("synthetic") || model == "synthetic" {
+        let family = a.get_or("family", "llama");
+        if family != "llama" && family != "opt" {
+            bail!("--family must be 'llama' or 'opt', got '{family}'");
+        }
+        let m = omniquant::runtime::Manifest::synthetic_small("synthetic", &family);
+        let mut rng = Rng::new(7);
+        ModelParams::init(&m, &mut rng)
+    } else {
+        let rt = load_runtime(&model)?;
+        let ckpt = PathBuf::from(a.get_or("ckpt", &default_ckpt(&model)));
+        ModelParams::load(rt.manifest(), &ckpt)?
+    };
     let setting = QuantSetting::parse(&a.get_or("setting", "w4a16g64"))?;
     let engine = serve::Engine::build(&params, setting)?;
     let n_new = a.usize_or("tokens", 256)?;
     let batch = a.usize_or("batch", 1)?;
     println!(
-        "serving {model} at {}: weights {} ",
+        "serving {} at {}: weights {} ",
+        engine.desc.name,
         setting.name(),
         fmt_bytes(engine.weight_bytes())
     );
-    if a.has("generate") {
-        let corpus = Corpus::new(CorpusId::Wiki, rt.model().vocab);
+    if a.has("continuous") {
+        cmd_serve_continuous(a, &engine)?;
+    } else if a.has("generate") {
+        let corpus = Corpus::new(CorpusId::Wiki, engine.desc.vocab);
         let prompt = corpus.sample(99, 16);
         let mut rng = Rng::new(1);
         let (toks, stats) = engine.generate(&prompt, n_new, a.f32_or("temp", 0.0)?, &mut rng);
@@ -204,9 +275,12 @@ fn cmd_serve(a: &Args) -> Result<()> {
             fmt_bytes(stats.running_bytes)
         );
     } else {
-        let stats = engine.batched_decode(batch, n_new, 7);
+        let prompt_len = a.usize_or("prompt-len", 16)?;
+        let stats = engine.batched_decode(batch, prompt_len, n_new, 7);
         println!(
-            "batched decode: batch={batch} tokens={n_new} -> {:.1} tok/s, running {}",
+            "batched decode: batch={batch} prompt={prompt_len} tokens={n_new} -> \
+             prefill {:.1} ms, {:.1} tok/s, running {}",
+            stats.prefill_secs * 1e3,
             stats.decode_tok_per_s,
             fmt_bytes(stats.running_bytes)
         );
@@ -229,28 +303,39 @@ fn cmd_info(a: &Args) -> Result<()> {
     Ok(())
 }
 
-fn usage() -> ! {
-    eprintln!(
-        "usage: omniquant <train|quantize|eval|serve|repro|info> [--model M] [--help]\n\
-         \n\
-         train     --model M --steps N --lr X --out ckpt.oqc\n\
-         quantize  --model M --ckpt F --setting w4a16 --method omniquant\n\
-         \u{20}          --samples N --epochs N [--out F]\n\
-         eval      --model M --ckpt F [--setting S] [--corpus wiki-s|c4-s|ptb-s]\n\
-         \u{20}          [--zeroshot] [--batches N]\n\
-         serve     --model M --ckpt F --setting w4a16g64 [--tokens N] [--batch B]\n\
-         \u{20}          [--generate] [--temp X]\n\
-         repro     --exp <fig1|table1|table2|table3|table4|fig4|tableA1..A14|figA1..A3|all>\n\
-         \u{20}          [--quick] (reduced sizes/samples)\n\
-         info      --model M"
-    );
-    std::process::exit(2)
+const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|repro|info> [--model M] [--help]\n\
+    \n\
+    train     --model M --steps N --lr X --out ckpt.oqc\n\
+    quantize  --model M --ckpt F --setting w4a16 --method omniquant\n\
+    \u{20}          --samples N --epochs N [--out F]\n\
+    eval      --model M --ckpt F [--setting S] [--corpus wiki-s|c4-s|ptb-s]\n\
+    \u{20}          [--zeroshot] [--batches N]\n\
+    serve     --model M --ckpt F --setting w4a16g64 [--tokens N] [--batch B]\n\
+    \u{20}          [--prompt-len P] [--generate] [--temp X] [--synthetic]\n\
+    \u{20}          [--continuous --requests N --interarrival X --slots S --json F]\n\
+    \u{20}          (--continuous: open-loop staggered arrivals through the\n\
+    \u{20}           pooled-KV continuous-batching scheduler; --synthetic: serve\n\
+    \u{20}           a fresh synthetic model, no artifacts/PJRT needed)\n\
+    repro     --exp <fig1|table1|table2|table3|table4|fig4|tableA1..A14|figA1..A3\n\
+    \u{20}          |serve-bench|all> [--quick] (reduced sizes/samples)\n\
+    info      --model M";
+
+/// Print usage and exit. Explicit `help`/`--help`/`-h` is a successful
+/// invocation (exit 0, stdout); a usage *error* reports on stderr with
+/// exit 2.
+fn usage(code: i32) -> ! {
+    if code == 0 {
+        println!("{USAGE}");
+    } else {
+        eprintln!("{USAGE}");
+    }
+    std::process::exit(code)
 }
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        usage();
+        usage(2);
     }
     let cmd = argv[0].clone();
     let args = Args::parse(&argv[1..]);
@@ -261,7 +346,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "repro" => repro::run(&args.get_or("exp", "all"), args.has("quick")),
         "info" => cmd_info(&args),
-        "help" | "--help" | "-h" => usage(),
+        "help" | "--help" | "-h" => usage(0),
         other => bail!("unknown command '{other}' (try --help)"),
     }
 }

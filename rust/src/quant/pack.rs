@@ -149,6 +149,65 @@ impl PackedMatrix {
         }
     }
 
+    /// Y = X @ W from packed storage for a whole batch: `xs` is (b, cin)
+    /// row-major, `ys` is (b, cout) row-major. The packed words of each
+    /// weight row are unpacked **once** per call and FMA'd into every
+    /// sequence's accumulator, so the matrix is streamed once per decode
+    /// step for the whole batch instead of once per sequence — the
+    /// memory-bandwidth amortization continuous batching exists for.
+    ///
+    /// Bit-for-bit identical to calling `gemv` on each row of `xs`: the
+    /// unpack produces exact integer codes in f32 (codes are <= 255, exact
+    /// in f32, and `0.0 + 1.0 * q == q`), and the per-row FMA order over
+    /// (group, k, c) and the group epilogue are the same as `gemv`'s.
+    pub fn gemm(&self, xs: &[f32], b: usize, ys: &mut [f32]) {
+        assert_eq!(xs.len(), b * self.cin);
+        assert_eq!(ys.len(), b * self.cout);
+        if b == 0 {
+            return;
+        }
+        let g = group_len(self.cin, self.group);
+        ys.iter_mut().for_each(|v| *v = 0.0);
+        let mut qrow = vec![0.0f32; self.cout];
+        let mut acc = vec![0.0f32; b * self.cout];
+        let mut xsum = vec![0.0f32; b];
+        for gi in 0..self.ng {
+            acc.iter_mut().for_each(|v| *v = 0.0);
+            xsum.iter_mut().for_each(|v| *v = 0.0);
+            for k in gi * g..(gi + 1) * g {
+                let row = &self.words[k * self.words_per_row..(k + 1) * self.words_per_row];
+                qrow.iter_mut().for_each(|v| *v = 0.0);
+                match self.bits {
+                    4 => Self::fma_row_b4(row, 1.0, &mut qrow),
+                    2 => Self::fma_row_b2(row, 1.0, &mut qrow),
+                    3 => Self::fma_row_b3(row, 1.0, &mut qrow),
+                    8 => Self::fma_row_b8(row, 1.0, &mut qrow),
+                    _ => self.fma_row_generic(row, 1.0, &mut qrow),
+                }
+                for s in 0..b {
+                    let xk = xs[s * self.cin + k];
+                    xsum[s] += xk;
+                    if xk == 0.0 {
+                        continue;
+                    }
+                    let a = &mut acc[s * self.cout..(s + 1) * self.cout];
+                    for (av, qv) in a.iter_mut().zip(&qrow) {
+                        *av += xk * qv;
+                    }
+                }
+            }
+            let hrow = &self.h[gi * self.cout..(gi + 1) * self.cout];
+            let zrow = &self.z[gi * self.cout..(gi + 1) * self.cout];
+            for s in 0..b {
+                let a = &acc[s * self.cout..(s + 1) * self.cout];
+                let y = &mut ys[s * self.cout..(s + 1) * self.cout];
+                for c in 0..self.cout {
+                    y[c] += hrow[c] * (a[c] - zrow[c] * xsum[s]);
+                }
+            }
+        }
+    }
+
     /// 4-bit: one u32 -> 8 consecutive output lanes (vectorizable FMA).
     #[inline]
     fn fma_row_b4(row: &[u32], xk: f32, acc: &mut [f32]) {
@@ -362,6 +421,50 @@ mod tests {
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
         }
+    }
+
+    #[test]
+    fn gemm_matches_gemv_bit_for_bit() {
+        // the continuous scheduler's correctness rests on this: a sequence's
+        // activations through the batched path must be *identical* to the
+        // per-sequence gemv path, whatever the co-scheduled batch is.
+        let mut rng = Rng::new(21);
+        for (cin, cout) in [(64usize, 48usize), (96, 33)] {
+            let w = rand_w(100 + cout as u64, cin, cout);
+            for (bits, group) in [(2u8, 32usize), (3, 32), (4, 0), (4, 32), (6, 32), (8, 0)] {
+                let p = PackedMatrix::pack(&w, bits, group, None, None);
+                for b in [1usize, 3, 8] {
+                    let xs: Vec<f32> = (0..b * cin).map(|_| rng.normal()).collect();
+                    let mut ys = vec![0.0f32; b * cout];
+                    p.gemm(&xs, b, &mut ys);
+                    for s in 0..b {
+                        let mut want = vec![0.0f32; cout];
+                        p.gemv(&xs[s * cin..(s + 1) * cin], &mut want);
+                        for (a, e) in ys[s * cout..(s + 1) * cout].iter().zip(&want) {
+                            assert_eq!(
+                                a.to_bits(),
+                                e.to_bits(),
+                                "bits={bits} group={group} b={b} s={s}: {a} vs {e}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_handles_zero_rows_and_empty_batch() {
+        let w = rand_w(31, 64, 24);
+        let p = PackedMatrix::pack(&w, 4, 32, None, None);
+        let xs = vec![0.0f32; 2 * 64];
+        let mut ys = vec![1.0f32; 2 * 24];
+        p.gemm(&xs, 2, &mut ys);
+        let mut want = vec![0.0f32; 24];
+        p.gemv(&xs[..64], &mut want);
+        assert_eq!(&ys[..24], &want[..]);
+        let mut empty: Vec<f32> = Vec::new();
+        p.gemm(&[], 0, &mut empty); // no-op, must not panic
     }
 
     #[test]

@@ -198,6 +198,100 @@ impl Manifest {
             .collect()
     }
 
+    /// The small synthetic preset (d=128, 4 layers, 4 heads, d_ff=384,
+    /// vocab=512, T=256) shared by `serve --synthetic`, the quick serve
+    /// bench and the artifact-free example — one definition so they can
+    /// never drift apart.
+    pub fn synthetic_small(name: &str, family: &str) -> Manifest {
+        Self::synthetic(name, family, 128, 4, 4, 384, 512, 256)
+    }
+
+    /// Build an in-memory manifest for a synthetic model — the same layout
+    /// `python/compile/layouts.py` emits, so `ModelParams::init` and
+    /// `serve::Engine::build` work without any on-disk artifacts (and
+    /// therefore without the `pjrt` feature). Used by the serve scheduler
+    /// tests, the serve benches and the artifact-free examples. The
+    /// `graphs` table is empty: such a manifest drives the pure-Rust
+    /// serving path only, not the PJRT calibration graphs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic(
+        name: &str,
+        family: &str,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        d_ff: usize,
+        vocab: usize,
+        seq_len: usize,
+    ) -> Manifest {
+        assert!(d_model % n_heads == 0, "d_model {d_model} not divisible by {n_heads} heads");
+        assert!(family == "llama" || family == "opt", "family must be llama or opt");
+        fn push(v: &mut Vec<LayoutEntry>, off: &mut usize, name: &str, shape: &[usize]) {
+            let size = shape.iter().product();
+            v.push(LayoutEntry { name: name.to_string(), shape: shape.to_vec(), offset: *off, size });
+            *off += size;
+        }
+        // One block's layout: norms first, then each linear followed by its
+        // bias, in `BlockWeights::linear_names` order.
+        let linears: &[(&str, [usize; 2])] = if family == "llama" {
+            &[
+                ("wq", [0, 0]), ("wk", [0, 0]), ("wv", [0, 0]), ("wo", [0, 0]),
+                ("wg", [0, 1]), ("wu", [0, 1]), ("wd", [1, 0]),
+            ]
+        } else {
+            &[
+                ("wq", [0, 0]), ("wk", [0, 0]), ("wv", [0, 0]), ("wo", [0, 0]),
+                ("w1", [0, 1]), ("w2", [1, 0]),
+            ]
+        };
+        let dims = [d_model, d_ff]; // index into via the 0/1 codes above
+        let mut block_layout = Vec::new();
+        let mut boff = 0usize;
+        for nm in ["ln1_w", "ln1_b", "ln2_w", "ln2_b"] {
+            push(&mut block_layout, &mut boff, nm, &[d_model]);
+        }
+        for (nm, [ci, co]) in linears {
+            let shape = [dims[*ci], dims[*co]];
+            push(&mut block_layout, &mut boff, nm, &shape);
+            push(&mut block_layout, &mut boff, &crate::model::BlockWeights::bias_name(nm), &[shape[1]]);
+        }
+        let mut model_layout = Vec::new();
+        let mut moff = 0usize;
+        push(&mut model_layout, &mut moff, "embed", &[vocab, d_model]);
+        if family == "opt" {
+            push(&mut model_layout, &mut moff, "pos_embed", &[seq_len, d_model]);
+        }
+        for i in 0..n_layers {
+            for e in &block_layout {
+                push(&mut model_layout, &mut moff, &format!("blk{i}.{}", e.name), &e.shape);
+            }
+        }
+        push(&mut model_layout, &mut moff, "lnf_w", &[d_model]);
+        push(&mut model_layout, &mut moff, "lnf_b", &[d_model]);
+        push(&mut model_layout, &mut moff, "head", &[d_model, vocab]);
+        Manifest {
+            model: ModelDesc {
+                name: name.to_string(),
+                family: family.to_string(),
+                d_model,
+                n_layers,
+                n_heads,
+                d_ff,
+                vocab,
+                seq_len,
+                head_dim: d_model / n_heads,
+            },
+            calib_batch: 2,
+            eval_batch: 2,
+            train_batch: 2,
+            block_layout,
+            model_layout,
+            theta_layouts: BTreeMap::new(),
+            quant_settings: BTreeMap::new(),
+            graphs: BTreeMap::new(),
+        }
+    }
+
     pub fn validate(&self) -> Result<()> {
         // block layouts inside the model layout must match the standalone
         // block layout (offsets are relative, sizes/order identical).
@@ -246,6 +340,29 @@ mod tests {
         assert_eq!(m.graph("g").unwrap().inputs[0].shape, vec![2, 4]);
         assert!(m.graph("nope").is_err());
         m.validate().unwrap();
+    }
+
+    #[test]
+    fn synthetic_manifest_validates() {
+        for family in ["llama", "opt"] {
+            let m = Manifest::synthetic("syn", family, 32, 2, 2, 64, 128, 64);
+            m.validate().unwrap();
+            assert_eq!(m.model.head_dim, 16);
+            assert!(m.model_param_size() > 0);
+            assert_eq!(
+                m.model_param_size(),
+                m.model_layout.last().map(|e| e.offset + e.size).unwrap()
+            );
+            assert!(Manifest::entry(&m.model_layout, "blk1.wq").is_ok());
+            assert!(Manifest::entry(&m.model_layout, "blk0.ln2_b").is_ok());
+            assert!(Manifest::entry(&m.model_layout, "head").is_ok());
+            assert_eq!(Manifest::entry(&m.model_layout, "pos_embed").is_ok(), family == "opt");
+            // params built on it slice correctly
+            let mut rng = crate::util::Rng::new(1);
+            let p = crate::model::ModelParams::init(&m, &mut rng);
+            assert_eq!(p.get("embed").unwrap().shape(), &[128, 32]);
+            assert_eq!(p.block_flat(&m, 1).unwrap().len(), m.block_param_size());
+        }
     }
 
     #[test]

@@ -6,16 +6,20 @@
 //! Interchange is HLO *text* — xla_extension 0.5.1 rejects jax >= 0.5
 //! serialized protos (64-bit instruction ids); the text parser reassigns
 //! ids (see /opt/xla-example/README.md).
+//!
+//! The whole XLA-backed implementation is gated behind the `pjrt` cargo
+//! feature (see rust/Cargo.toml). Without it, `Runtime` is an
+//! unconstructible stub whose constructors return a clear error, so the
+//! packed serving engine, the continuous-batching scheduler and all
+//! artifact-free tests build and run on a clean machine.
 
 pub mod manifest;
 
 pub use manifest::{GraphDesc, LayoutEntry, Manifest, ModelDesc, QuantInfo};
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::tensor::Tensor;
 
@@ -26,6 +30,7 @@ pub enum Value<'a> {
     Scalar(f32),
 }
 
+#[allow(dead_code)]
 impl Value<'_> {
     fn shape(&self) -> Vec<usize> {
         match self {
@@ -41,167 +46,248 @@ impl Value<'_> {
             Value::I32(..) => "int32",
         }
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        match self {
-            Value::Scalar(x) => Ok(xla::Literal::scalar(*x)),
-            Value::F32(t) => {
-                let bytes: &[u8] = unsafe {
-                    std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::F32,
-                    t.shape(),
-                    bytes,
-                )
-                .map_err(|e| anyhow!("literal create: {e:?}"))
-            }
-            Value::I32(v, shape) => {
-                let bytes: &[u8] =
-                    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::S32,
-                    shape,
-                    bytes,
-                )
-                .map_err(|e| anyhow!("literal create: {e:?}"))
-            }
-        }
-    }
 }
 
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-    /// (graph, executions) counters for the perf report.
-    exec_counts: RefCell<HashMap<String, usize>>,
-}
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-impl Runtime {
-    /// `dir` is the per-model artifact directory, e.g. `artifacts/omni-1m`.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        manifest.validate()?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            dir: dir.to_path_buf(),
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            exec_counts: RefCell::new(HashMap::new()),
-        })
-    }
+    use anyhow::{anyhow, bail, Result};
 
-    pub fn for_model(artifacts_root: &Path, model: &str) -> Result<Runtime> {
-        Self::load(&artifacts_root.join(model))
-    }
+    use super::{Manifest, ModelDesc, Value};
+    use crate::tensor::Tensor;
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn model(&self) -> &ModelDesc {
-        &self.manifest.model
-    }
-
-    fn compile(&self, name: &str) -> Result<()> {
-        if self.cache.borrow().contains_key(name) {
-            return Ok(());
-        }
-        let desc = self.manifest.graph(name)?;
-        let path = self.dir.join(&desc.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing HLO {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling graph '{name}': {e:?}"))?;
-        self.cache.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Pre-compile a set of graphs (amortizes XLA compile time up front).
-    pub fn warmup(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.compile(n)?;
-        }
-        Ok(())
-    }
-
-    /// Execute a graph by name, with shape/dtype validation against the
-    /// manifest, returning all outputs as f32 tensors (the only output
-    /// dtype the graph suite produces).
-    pub fn exec(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
-        let desc = self.manifest.graph(name)?.clone();
-        if inputs.len() != desc.inputs.len() {
-            bail!("graph '{name}': {} inputs given, {} expected", inputs.len(), desc.inputs.len());
-        }
-        for (v, spec) in inputs.iter().zip(&desc.inputs) {
-            if v.shape() != spec.shape {
-                bail!(
-                    "graph '{name}' input '{}': shape {:?} given, {:?} expected",
-                    spec.name, v.shape(), spec.shape
-                );
-            }
-            if v.dtype() != spec.dtype {
-                bail!(
-                    "graph '{name}' input '{}': dtype {} given, {} expected",
-                    spec.name, v.dtype(), spec.dtype
-                );
+    impl Value<'_> {
+        fn to_literal(&self) -> Result<xla::Literal> {
+            match self {
+                Value::Scalar(x) => Ok(xla::Literal::scalar(*x)),
+                Value::F32(t) => {
+                    let bytes: &[u8] = unsafe {
+                        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+                    };
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        t.shape(),
+                        bytes,
+                    )
+                    .map_err(|e| anyhow!("literal create: {e:?}"))
+                }
+                Value::I32(v, shape) => {
+                    let bytes: &[u8] = unsafe {
+                        std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                    };
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::S32,
+                        shape,
+                        bytes,
+                    )
+                    .map_err(|e| anyhow!("literal create: {e:?}"))
+                }
             }
         }
-        self.compile(name)?;
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
-        *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
-        let mut tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch '{name}': {e:?}"))?;
-        let parts = tuple
-            .decompose_tuple()
-            .map_err(|e| anyhow!("decompose '{name}': {e:?}"))?;
-        if parts.len() != desc.outputs.len() {
-            bail!("graph '{name}': {} outputs, {} expected", parts.len(), desc.outputs.len());
-        }
-        parts
-            .into_iter()
-            .zip(&desc.outputs)
-            .map(|(lit, spec)| {
-                let data = lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("output of '{name}' not f32: {e:?}"))?;
-                Ok(Tensor::new(&spec.shape, data))
+    }
+
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        manifest: Manifest,
+        cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+        /// (graph, executions) counters for the perf report.
+        exec_counts: RefCell<HashMap<String, usize>>,
+    }
+
+    impl Runtime {
+        /// `dir` is the per-model artifact directory, e.g. `artifacts/omni-1m`.
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            let manifest = Manifest::load(dir)?;
+            manifest.validate()?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+            Ok(Runtime {
+                client,
+                dir: dir.to_path_buf(),
+                manifest,
+                cache: RefCell::new(HashMap::new()),
+                exec_counts: RefCell::new(HashMap::new()),
             })
-            .collect()
-    }
-
-    /// Convenience: single-output graphs.
-    pub fn exec1(&self, name: &str, inputs: &[Value]) -> Result<Tensor> {
-        let mut out = self.exec(name, inputs)?;
-        if out.len() != 1 {
-            bail!("graph '{name}' has {} outputs, expected 1", out.len());
         }
-        Ok(out.pop().unwrap())
-    }
 
-    pub fn exec_counts(&self) -> HashMap<String, usize> {
-        self.exec_counts.borrow().clone()
-    }
+        pub fn for_model(artifacts_root: &Path, model: &str) -> Result<Runtime> {
+            Self::load(&artifacts_root.join(model))
+        }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn model(&self) -> &ModelDesc {
+            &self.manifest.model
+        }
+
+        fn compile(&self, name: &str) -> Result<()> {
+            if self.cache.borrow().contains_key(name) {
+                return Ok(());
+            }
+            let desc = self.manifest.graph(name)?;
+            let path = self.dir.join(&desc.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling graph '{name}': {e:?}"))?;
+            self.cache.borrow_mut().insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Pre-compile a set of graphs (amortizes XLA compile time up front).
+        pub fn warmup(&self, names: &[&str]) -> Result<()> {
+            for n in names {
+                self.compile(n)?;
+            }
+            Ok(())
+        }
+
+        /// Execute a graph by name, with shape/dtype validation against the
+        /// manifest, returning all outputs as f32 tensors (the only output
+        /// dtype the graph suite produces).
+        pub fn exec(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+            let desc = self.manifest.graph(name)?.clone();
+            if inputs.len() != desc.inputs.len() {
+                bail!("graph '{name}': {} inputs given, {} expected", inputs.len(), desc.inputs.len());
+            }
+            for (v, spec) in inputs.iter().zip(&desc.inputs) {
+                if v.shape() != spec.shape {
+                    bail!(
+                        "graph '{name}' input '{}': shape {:?} given, {:?} expected",
+                        spec.name, v.shape(), spec.shape
+                    );
+                }
+                if v.dtype() != spec.dtype {
+                    bail!(
+                        "graph '{name}' input '{}': dtype {} given, {} expected",
+                        spec.name, v.dtype(), spec.dtype
+                    );
+                }
+            }
+            self.compile(name)?;
+            let literals: Vec<xla::Literal> =
+                inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+            let cache = self.cache.borrow();
+            let exe = cache.get(name).unwrap();
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
+            *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+            let mut tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch '{name}': {e:?}"))?;
+            let parts = tuple
+                .decompose_tuple()
+                .map_err(|e| anyhow!("decompose '{name}': {e:?}"))?;
+            if parts.len() != desc.outputs.len() {
+                bail!("graph '{name}': {} outputs, {} expected", parts.len(), desc.outputs.len());
+            }
+            parts
+                .into_iter()
+                .zip(&desc.outputs)
+                .map(|(lit, spec)| {
+                    let data = lit
+                        .to_vec::<f32>()
+                        .map_err(|e| anyhow!("output of '{name}' not f32: {e:?}"))?;
+                    Ok(Tensor::new(&spec.shape, data))
+                })
+                .collect()
+        }
+
+        /// Convenience: single-output graphs.
+        pub fn exec1(&self, name: &str, inputs: &[Value]) -> Result<Tensor> {
+            let mut out = self.exec(name, inputs)?;
+            if out.len() != 1 {
+                bail!("graph '{name}' has {} outputs, expected 1", out.len());
+            }
+            Ok(out.pop().unwrap())
+        }
+
+        pub fn exec_counts(&self) -> HashMap<String, usize> {
+            self.exec_counts.borrow().clone()
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::{Manifest, ModelDesc, Value};
+    use crate::tensor::Tensor;
+
+    /// Stub compiled when the `pjrt` feature is off. It cannot be
+    /// constructed (the `Infallible` field), so every method body after a
+    /// failed `load` is statically unreachable; the constructors return a
+    /// clear, actionable error instead of a link failure.
+    pub struct Runtime {
+        #[allow(dead_code)]
+        never: std::convert::Infallible,
+    }
+
+    const NO_PJRT: &str = "built without the `pjrt` feature: the XLA/PJRT runtime \
+        (AOT HLO execution for the train/quantize/eval paths) is unavailable. \
+        Rebuild with `--features pjrt` and the vendored `xla` crate (see \
+        rust/Cargo.toml). The packed-weight serving engine, the continuous-batching \
+        scheduler and the serve benchmarks do not need PJRT.";
+
+    impl Runtime {
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            bail!("cannot load artifacts from {dir:?}: {NO_PJRT}")
+        }
+
+        pub fn for_model(artifacts_root: &Path, model: &str) -> Result<Runtime> {
+            Self::load(&artifacts_root.join(model))
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        pub fn model(&self) -> &ModelDesc {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        pub fn warmup(&self, _names: &[&str]) -> Result<()> {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        pub fn exec(&self, _name: &str, _inputs: &[Value]) -> Result<Vec<Tensor>> {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        pub fn exec1(&self, _name: &str, _inputs: &[Value]) -> Result<Tensor> {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        pub fn exec_counts(&self) -> HashMap<String, usize> {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+
+        pub fn platform(&self) -> String {
+            unreachable!("stub Runtime cannot be constructed")
+        }
+    }
+}
+
+pub use imp::Runtime;
 
 /// Resolve the artifacts root: $OMNIQUANT_ARTIFACTS or ./artifacts.
 pub fn artifacts_root() -> PathBuf {

@@ -1,0 +1,181 @@
+//! Deterministic serving benchmark: sequential vs lockstep vs
+//! continuous-batching decode throughput on a synthetic quantized model
+//! (no artifacts, no PJRT), emitted as human-readable lines and as the
+//! machine-readable `BENCH_serve.json` snapshot so the serving-perf
+//! trajectory is tracked PR over PR. Shared by `benches/bench_serve.rs`,
+//! `repro --exp serve-bench` and `scripts/bench_snapshot.sh`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::QuantSetting;
+use crate::json::Json;
+use crate::model::ModelParams;
+use crate::runtime::Manifest;
+use crate::util::Rng;
+
+use super::sched::{synthetic_workload, SchedConfig, Scheduler, WorkloadSpec};
+use super::Engine;
+
+#[derive(Clone, Debug)]
+pub struct ServeBenchOpts {
+    pub quick: bool,
+    /// Decode batch width (slots for the continuous mode).
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub new_tokens: usize,
+    pub setting: String,
+    pub seed: u64,
+}
+
+impl ServeBenchOpts {
+    pub fn new(quick: bool) -> ServeBenchOpts {
+        ServeBenchOpts {
+            quick,
+            batch: 8,
+            prompt_len: 16,
+            new_tokens: if quick { 48 } else { 128 },
+            setting: "w4a16g64".into(),
+            seed: 7,
+        }
+    }
+}
+
+pub struct ServeBenchReport {
+    /// Entries for `bench::write_snapshot` (the BENCH_serve.json body).
+    pub entries: Vec<(String, Json)>,
+    pub lines: Vec<String>,
+    pub speedup_continuous_vs_lockstep: f64,
+}
+
+/// Run the three-mode suite on one synthetic quantized model. Everything
+/// except wall-clock timings is deterministic in `opts.seed`.
+pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
+    let b = opts.batch.max(1);
+    let (p, n) = (opts.prompt_len.max(1), opts.new_tokens.max(1));
+    // quick: the shared small preset; full: big enough that weight
+    // streaming dominates while staying CI-friendly
+    let m = if opts.quick {
+        Manifest::synthetic_small("serve-bench", "llama")
+    } else {
+        let seq_len = (p + n + 8).next_power_of_two();
+        Manifest::synthetic("serve-bench", "llama", 192, 6, 6, 576, 768, seq_len)
+    };
+    let vocab = m.model.vocab;
+    let mut rng = Rng::new(opts.seed);
+    let params = ModelParams::init(&m, &mut rng);
+    let setting = QuantSetting::parse(&opts.setting)?;
+    let engine = Engine::build(&params, setting)?;
+    let mut lines = Vec::new();
+
+    fn median(mut xs: Vec<f64>) -> f64 {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[xs.len() / 2]
+    }
+    // warmup + median over repetitions: the snapshot tracks the perf
+    // trajectory PR over PR, so one-shot cache-cold samples won't do
+    let reps = if opts.quick { 3 } else { 5 };
+    std::hint::black_box(engine.batched_decode(1, p, 8, opts.seed));
+
+    // 1. sequential: one request at a time (batch width 1)
+    let mut seq_samples = Vec::with_capacity(reps);
+    for r in 0..reps {
+        let mut secs = 0.0;
+        for s in 0..b {
+            secs += engine.batched_decode(1, p, n, opts.seed + (r * b + s) as u64).decode_secs;
+        }
+        seq_samples.push((b * n) as f64 / secs.max(1e-9));
+    }
+    let sequential_tps = median(seq_samples);
+
+    // 2. lockstep: the seed per-sequence gemv loop at full width. Keep the
+    //    whole median-throughput rep so every reported field (tok/s,
+    //    prefill, RM) describes the same run.
+    let mut lock_runs: Vec<crate::serve::GenStats> =
+        (0..reps).map(|_| engine.batched_decode(b, p, n, opts.seed)).collect();
+    lock_runs.sort_by(|x, y| x.decode_tok_per_s.partial_cmp(&y.decode_tok_per_s).unwrap());
+    let lock = lock_runs[lock_runs.len() / 2].clone();
+    let lockstep_tps = lock.decode_tok_per_s;
+
+    // 3. continuous: staggered open-loop arrivals through the batched-GEMM
+    //    scheduler; 3x more requests than slots at a fast arrival rate so
+    //    admission/retire churns while the batch stays near full width
+    let spec = WorkloadSpec {
+        requests: 3 * b,
+        mean_interarrival_steps: 0.5,
+        prompt_len: p,
+        max_new_tokens: n,
+        temperature: 0.0,
+    };
+    let mut cont_runs = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let reqs = synthetic_workload(&spec, vocab, opts.seed);
+        let cfg = SchedConfig { slots: b, slot_tokens: p + n + 1, eos: None };
+        let mut sch = Scheduler::new(&engine, cfg);
+        for r in reqs {
+            sch.submit(r)?;
+        }
+        cont_runs.push(sch.run()?);
+    }
+    // as with lockstep: report the median-throughput rep in full
+    cont_runs.sort_by(|x, y| x.decode_tok_per_s.partial_cmp(&y.decode_tok_per_s).unwrap());
+    let summary = cont_runs[cont_runs.len() / 2].clone();
+    let continuous_tps = summary.decode_tok_per_s;
+    let speedup = continuous_tps / lockstep_tps.max(1e-9);
+
+    lines.push(format!("sequential (width 1)    {sequential_tps:>9.1} tok/s"));
+    lines.push(format!(
+        "lockstep per-seq gemv   {lockstep_tps:>9.1} tok/s  (prefill {:.1} ms, RM {})",
+        lock.prefill_secs * 1e3,
+        crate::util::fmt_bytes(lock.running_bytes)
+    ));
+    lines.push(format!(
+        "continuous gemm x{b:<3}    {continuous_tps:>9.1} tok/s  \
+         ({speedup:.2}x vs lockstep; ttft p50 {:.1} ms, width mean {:.1}, RM {})",
+        summary.ttft_p50_ms,
+        summary.mean_batch_width,
+        crate::util::fmt_bytes(summary.peak_running_bytes)
+    ));
+
+    let num = |v: f64| Json::Num(v);
+    let mut seq_o = BTreeMap::new();
+    seq_o.insert("tok_per_s".to_string(), num(sequential_tps));
+    let mut lock_o = BTreeMap::new();
+    lock_o.insert("tok_per_s".to_string(), num(lockstep_tps));
+    lock_o.insert("prefill_secs".to_string(), num(lock.prefill_secs));
+    lock_o.insert("decode_secs".to_string(), num(lock.decode_secs));
+    lock_o.insert("running_bytes".to_string(), num(lock.running_bytes as f64));
+    let mut modes = BTreeMap::new();
+    modes.insert("sequential".to_string(), Json::Obj(seq_o));
+    modes.insert("lockstep".to_string(), Json::Obj(lock_o));
+    modes.insert("continuous".to_string(), summary.to_json());
+
+    let entries = vec![
+        (
+            "model".to_string(),
+            Json::Str(format!(
+                "llama d={} L={} heads={} dff={} vocab={}",
+                m.model.d_model, m.model.n_layers, m.model.n_heads, m.model.d_ff, m.model.vocab
+            )),
+        ),
+        ("setting".to_string(), Json::Str(setting.name())),
+        ("weight_bytes".to_string(), num(engine.weight_bytes() as f64)),
+        ("batch".to_string(), num(b as f64)),
+        ("prompt_len".to_string(), num(p as f64)),
+        ("new_tokens".to_string(), num(n as f64)),
+        ("seed".to_string(), num(opts.seed as f64)),
+        ("reps".to_string(), num(reps as f64)),
+        ("quick".to_string(), Json::Bool(opts.quick)),
+        ("modes".to_string(), Json::Obj(modes)),
+        ("speedup_continuous_vs_lockstep".to_string(), num(speedup)),
+    ];
+    Ok(ServeBenchReport { entries, lines, speedup_continuous_vs_lockstep: speedup })
+}
+
+/// Write the report as a `BENCH_serve.json` snapshot.
+pub fn write_json(report: &ServeBenchReport, path: &Path) -> Result<()> {
+    crate::bench::write_snapshot(path, "serve", report.entries.clone())?;
+    Ok(())
+}

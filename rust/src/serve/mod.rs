@@ -7,6 +7,16 @@
 //! Supports both model families (RMSNorm+SwiGLU+RoPE / LayerNorm+ReLU+pos),
 //! greedy or temperature sampling, lockstep-batched decoding and a KV
 //! cache; weight/running-memory accounting matches Table 3's WM/RM columns.
+//!
+//! Beyond the per-sequence paths, `forward_step` decodes a whole batch of
+//! co-scheduled sequences against the pooled KV cache (`sched::KvPool`),
+//! stacking activations so every packed weight matrix is streamed once per
+//! step via the batched `gemm` kernels — the substrate of the
+//! continuous-batching scheduler in [`sched`] and the serve benchmark in
+//! [`bench`].
+
+pub mod bench;
+pub mod sched;
 
 use anyhow::{bail, Result};
 
@@ -31,6 +41,37 @@ impl LinearStore {
                 y.copy_from_slice(&out);
             }
             LinearStore::Packed(p) => p.gemv(x, y),
+        }
+    }
+
+    /// Batched Y = X @ W: `xs` is (b, cin) row-major, `ys` (b, cout). The
+    /// weight matrix is streamed exactly once for the whole batch (k-major
+    /// for FP, group/k-major unpack-once for packed); the per-row
+    /// accumulation order is identical to `gemv`, so each output row is
+    /// bit-for-bit what `gemv` would produce for that row alone.
+    fn gemm(&self, xs: &[f32], b: usize, ys: &mut [f32]) {
+        match self {
+            LinearStore::Fp(w) => {
+                let (cin, cout) = (w.shape()[0], w.shape()[1]);
+                assert_eq!(xs.len(), b * cin);
+                assert_eq!(ys.len(), b * cout);
+                ys.iter_mut().for_each(|v| *v = 0.0);
+                let wd = w.data();
+                for p in 0..cin {
+                    let wrow = &wd[p * cout..(p + 1) * cout];
+                    for s in 0..b {
+                        let xv = xs[s * cin + p];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let yrow = &mut ys[s * cout..(s + 1) * cout];
+                        for j in 0..cout {
+                            yrow[j] += xv * wrow[j];
+                        }
+                    }
+                }
+            }
+            LinearStore::Packed(p) => p.gemm(xs, b, ys),
         }
     }
 
@@ -116,6 +157,34 @@ fn layernorm(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
 
 fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
+}
+
+/// Row-wise `ys[s] += bias` over a (b, bias.len()) matrix — the same zip
+/// the per-sequence path uses, applied per row.
+fn add_bias_rows(ys: &mut [f32], bias: &[f32], b: usize) {
+    let n = bias.len();
+    for s in 0..b {
+        ys[s * n..(s + 1) * n].iter_mut().zip(bias).for_each(|(y, bv)| *y += bv);
+    }
+}
+
+/// Batched projection epilogue: ys = xs @ W, then `+= bias` per row.
+fn gemm_bias_rows(w: &LinearStore, bias: &[f32], xs: &[f32], b: usize, ys: &mut [f32]) {
+    w.gemm(xs, b, ys);
+    add_bias_rows(ys, bias, b);
+}
+
+/// Batched residual epilogue: xs[s] += proj[s] + bias — the exact
+/// `x[i] += x1[i] + b[i]` loop of `forward_token`, per row.
+fn residual_add_rows(xs: &mut [f32], proj: &[f32], bias: &[f32], b: usize) {
+    let d = bias.len();
+    for s in 0..b {
+        let xrow = &mut xs[s * d..(s + 1) * d];
+        let prow = &proj[s * d..(s + 1) * d];
+        for i in 0..d {
+            xrow[i] += prow[i] + bias[i];
+        }
+    }
 }
 
 impl Engine {
@@ -328,6 +397,167 @@ impl Engine {
         logits
     }
 
+    /// One decoder step for `b` co-scheduled sequences: consume `tokens[s]`
+    /// at each sequence's current KV length in its pooled slot, append this
+    /// step's K/V, and leave logits in `scratch.logits` (b, vocab).
+    ///
+    /// Activations are stacked into (b, d) matrices so every weight matrix
+    /// — packed or FP — is streamed **once per step for the whole batch**
+    /// via the batched `gemm` path (the memory-bandwidth win of Table 3's
+    /// regime). Per-row arithmetic is bit-identical to `forward_token`, so
+    /// a sequence's outputs never depend on its co-scheduled batch.
+    pub fn forward_step(
+        &self,
+        tokens: &[i32],
+        slots: &[sched::SlotId],
+        pool: &mut sched::KvPool,
+        scratch: &mut BatchScratch,
+    ) {
+        let b = tokens.len();
+        assert_eq!(slots.len(), b);
+        assert!(b > 0, "forward_step on an empty batch");
+        assert!(b <= scratch.cap, "batch {b} exceeds scratch capacity {}", scratch.cap);
+        let d = self.desc.d_model;
+        let dff = self.desc.d_ff;
+        let BatchScratch { xs, x1, q, k, v, ao, ff1, ff2, scores, logits, .. } = scratch;
+        for s in 0..b {
+            let x = &mut xs[s * d..(s + 1) * d];
+            x.copy_from_slice(self.embed.row(tokens[s] as usize));
+            if let Some(p) = &self.pos {
+                let pos = pool.len(slots[s]);
+                for (xi, pv) in x.iter_mut().zip(p.row(pos.min(self.desc.seq_len - 1))) {
+                    *xi += pv;
+                }
+            }
+        }
+        let llama = self.desc.family == "llama";
+        let norm = if llama { rmsnorm } else { layernorm };
+        for (li, blk) in self.blocks.iter().enumerate() {
+            // --- attention ---
+            for s in 0..b {
+                norm(&xs[s * d..(s + 1) * d], &blk.ln1_w, &blk.ln1_b, &mut x1[s * d..(s + 1) * d]);
+            }
+            for (name, dst) in [("wq", &mut *q), ("wk", &mut *k), ("wv", &mut *v)] {
+                let (_, w, bias) = blk.linear(name);
+                gemm_bias_rows(w, bias, &x1[..b * d], b, &mut dst[..b * d]);
+            }
+            if llama {
+                for s in 0..b {
+                    let pos = pool.len(slots[s]);
+                    self.rope_inplace(&mut q[s * d..(s + 1) * d], pos);
+                    self.rope_inplace(&mut k[s * d..(s + 1) * d], pos);
+                }
+            }
+            for s in 0..b {
+                pool.append(slots[s], li, &k[s * d..(s + 1) * d], &v[s * d..(s + 1) * d]);
+            }
+            // attention over each sequence's own pooled cache (ragged
+            // lengths; tiny next to the weight streaming the gemms share)
+            let hd = self.desc.head_dim;
+            let scale = 1.0 / (hd as f32).sqrt();
+            for s in 0..b {
+                let t = pool.len(slots[s]) + 1;
+                let kc = pool.k_slice(slots[s], li, t);
+                let vc = pool.v_slice(slots[s], li, t);
+                let qrow = &q[s * d..(s + 1) * d];
+                let aorow = &mut ao[s * d..(s + 1) * d];
+                aorow.iter_mut().for_each(|a| *a = 0.0);
+                for h in 0..self.desc.n_heads {
+                    let base = h * hd;
+                    let sc = &mut scores[..t];
+                    for ti in 0..t {
+                        let krow = &kc[ti * d + base..ti * d + base + hd];
+                        let mut sdot = 0.0f32;
+                        for j in 0..hd {
+                            sdot += qrow[base + j] * krow[j];
+                        }
+                        sc[ti] = sdot * scale;
+                    }
+                    let mx = sc.iter().fold(f32::MIN, |m, &x| m.max(x));
+                    let mut denom = 0.0f32;
+                    for x in sc.iter_mut() {
+                        *x = (*x - mx).exp();
+                        denom += *x;
+                    }
+                    for ti in 0..t {
+                        let pattn = sc[ti] / denom;
+                        let vrow = &vc[ti * d + base..ti * d + base + hd];
+                        for j in 0..hd {
+                            aorow[base + j] += pattn * vrow[j];
+                        }
+                    }
+                }
+            }
+            {
+                let (_, w, bias) = blk.linear("wo");
+                w.gemm(&ao[..b * d], b, &mut x1[..b * d]);
+                residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
+            }
+            // --- ffn ---
+            for s in 0..b {
+                norm(&xs[s * d..(s + 1) * d], &blk.ln2_w, &blk.ln2_b, &mut x1[s * d..(s + 1) * d]);
+            }
+            if llama {
+                {
+                    let (_, w, bias) = blk.linear("wg");
+                    gemm_bias_rows(w, bias, &x1[..b * d], b, &mut ff1[..b * dff]);
+                }
+                {
+                    let (_, w, bias) = blk.linear("wu");
+                    gemm_bias_rows(w, bias, &x1[..b * d], b, &mut ff2[..b * dff]);
+                }
+                for i in 0..b * dff {
+                    ff1[i] = silu(ff1[i]) * ff2[i];
+                }
+                let (_, w, bias) = blk.linear("wd");
+                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d]);
+                residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
+            } else {
+                {
+                    // fused bias + ReLU, as in `forward_token`
+                    let (_, w, bias) = blk.linear("w1");
+                    w.gemm(&x1[..b * d], b, &mut ff1[..b * dff]);
+                    for s in 0..b {
+                        ff1[s * dff..(s + 1) * dff]
+                            .iter_mut()
+                            .zip(bias)
+                            .for_each(|(y, bv)| *y = (*y + bv).max(0.0));
+                    }
+                }
+                let (_, w, bias) = blk.linear("w2");
+                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d]);
+                residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
+            }
+        }
+        for s in 0..b {
+            pool.advance(slots[s]);
+        }
+        for s in 0..b {
+            norm(&xs[s * d..(s + 1) * d], &self.lnf_w, &self.lnf_b, &mut x1[s * d..(s + 1) * d]);
+        }
+        let vocab = self.desc.vocab;
+        self.head.gemm(&x1[..b * d], b, &mut logits[..b * vocab]);
+    }
+
+    /// Scratch for `forward_step` over at most `cap` co-scheduled
+    /// sequences attending over at most `max_t` cached positions.
+    pub fn new_batch_scratch(&self, cap: usize, max_t: usize) -> BatchScratch {
+        let d = self.desc.d_model;
+        BatchScratch {
+            cap,
+            xs: vec![0.0; cap * d],
+            x1: vec![0.0; cap * d],
+            q: vec![0.0; cap * d],
+            k: vec![0.0; cap * d],
+            v: vec![0.0; cap * d],
+            ao: vec![0.0; cap * d],
+            ff1: vec![0.0; cap * self.desc.d_ff],
+            ff2: vec![0.0; cap * self.desc.d_ff],
+            scores: vec![0.0; max_t + 1],
+            logits: vec![0.0; cap * self.desc.vocab],
+        }
+    }
+
     pub fn new_scratch(&self) -> Scratch {
         Scratch {
             x1: vec![0.0; self.desc.d_model],
@@ -374,24 +604,51 @@ impl Engine {
         (out, stats)
     }
 
-    /// Lockstep-batched decode from scratch for `batch` sequences
-    /// (the Table 3 measurement: generate `n_new` tokens, report tok/s
-    /// aggregated over the batch).
-    pub fn batched_decode(&self, batch: usize, n_new: usize, seed: u64) -> GenStats {
+    /// Lockstep-batched decode for `batch` sequences (the Table 3
+    /// measurement): prefill a `prompt_len`-token random prompt per
+    /// sequence, then generate `n_new` tokens per sequence with the
+    /// *per-sequence* gemv loop, reporting the prefill and decode phases
+    /// separately. This is the pre-scheduler baseline the continuous
+    /// scheduler (`sched::Scheduler`, measured in `serve::bench`) is
+    /// compared against: it streams every packed matrix once per sequence
+    /// per token, where the scheduler streams it once per step.
+    pub fn batched_decode(
+        &self,
+        batch: usize,
+        prompt_len: usize,
+        n_new: usize,
+        seed: u64,
+    ) -> GenStats {
+        let prompt_len = prompt_len.max(1);
         let mut rng = Rng::new(seed);
-        let mut caches: Vec<KvCache> = (0..batch).map(|_| self.new_cache(n_new + 1)).collect();
+        let mut caches: Vec<KvCache> =
+            (0..batch).map(|_| self.new_cache(prompt_len + n_new + 1)).collect();
         let mut scratch = self.new_scratch();
-        let mut tokens: Vec<i32> = (0..batch).map(|_| rng.below(self.desc.vocab) as i32).collect();
+        let prompts: Vec<Vec<i32>> = (0..batch)
+            .map(|_| (0..prompt_len).map(|_| rng.below(self.desc.vocab) as i32).collect())
+            .collect();
         let t0 = std::time::Instant::now();
+        let mut tokens: Vec<i32> = Vec::with_capacity(batch);
+        for (s, cache) in caches.iter_mut().enumerate() {
+            let mut logits = Vec::new();
+            for &tok in &prompts[s] {
+                logits = self.forward_token(tok, cache, &mut scratch);
+            }
+            // the first generated token belongs to the prefill phase (it is
+            // what TTFT delivers); decode then measures pure generation
+            tokens.push(sample(&logits, 0.0, &mut rng));
+        }
+        let prefill_secs = t0.elapsed().as_secs_f64();
+        let td = std::time::Instant::now();
         for _ in 0..n_new {
             for (s, cache) in caches.iter_mut().enumerate() {
                 let logits = self.forward_token(tokens[s], cache, &mut scratch);
                 tokens[s] = sample(&logits, 0.0, &mut rng);
             }
         }
-        let decode_secs = t0.elapsed().as_secs_f64();
+        let decode_secs = td.elapsed().as_secs_f64();
         GenStats {
-            prefill_secs: 0.0,
+            prefill_secs,
             decode_secs,
             decode_tok_per_s: (batch * n_new) as f64 / decode_secs.max(1e-9),
             running_bytes: self.running_bytes(&caches),
@@ -408,6 +665,44 @@ pub struct Scratch {
     ff1: Vec<f32>,
     ff2: Vec<f32>,
     scores: Vec<f32>,
+}
+
+/// Preallocated activations for a batched `forward_step` over up to `cap`
+/// co-scheduled sequences (row s of each buffer belongs to sequence s).
+pub struct BatchScratch {
+    cap: usize,
+    xs: Vec<f32>,
+    x1: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ao: Vec<f32>,
+    ff1: Vec<f32>,
+    ff2: Vec<f32>,
+    scores: Vec<f32>,
+    /// (cap, vocab) logits left by the last `forward_step`.
+    pub logits: Vec<f32>,
+}
+
+impl BatchScratch {
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Scratch bytes (counted into running memory alongside the KV pool).
+    pub fn bytes(&self) -> usize {
+        (self.xs.len()
+            + self.x1.len()
+            + self.q.len()
+            + self.k.len()
+            + self.v.len()
+            + self.ao.len()
+            + self.ff1.len()
+            + self.ff2.len()
+            + self.scores.len()
+            + self.logits.len())
+            * 4
+    }
 }
 
 #[derive(Clone, Debug)]

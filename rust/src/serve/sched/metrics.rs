@@ -1,0 +1,187 @@
+//! Serving metrics: queue wait, time-to-first-token, per-step latency
+//! percentiles, decode throughput and peak running memory (the RM column
+//! of Table 3, extended to a pooled multi-tenant cache).
+
+use std::collections::BTreeMap;
+
+use crate::json::Json;
+use crate::util::{fmt_bytes, stats};
+
+/// Per-request lifecycle record, written at retire time.
+#[derive(Clone, Debug)]
+pub struct RequestMetrics {
+    pub id: usize,
+    pub arrival_step: usize,
+    pub admit_step: usize,
+    pub finish_step: usize,
+    /// Steps spent in the admission queue after becoming visible.
+    pub queue_wait_steps: usize,
+    /// Wall time from arrival to the first emitted token (queue wait +
+    /// prefill + first sample).
+    pub ttft_secs: f64,
+    pub prefill_secs: f64,
+    /// Tokens emitted for this request.
+    pub tokens: usize,
+}
+
+/// Raw counters accumulated by the scheduler.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: Vec<RequestMetrics>,
+    /// Wall ms of each decode step (forward + sampling + retire checks).
+    pub step_ms: Vec<f32>,
+    /// Live sequences in each decode step.
+    pub step_width: Vec<usize>,
+    pub decode_tokens: usize,
+    pub decode_secs: f64,
+    pub prefill_secs: f64,
+    pub peak_running_bytes: usize,
+    pub total_secs: f64,
+    pub steps: usize,
+}
+
+impl ServeMetrics {
+    pub fn summary(&self) -> ServeSummary {
+        let ttft: Vec<f32> = self.requests.iter().map(|r| (r.ttft_secs * 1e3) as f32).collect();
+        let waits: Vec<f32> = self.requests.iter().map(|r| r.queue_wait_steps as f32).collect();
+        let widths: Vec<f32> = self.step_width.iter().map(|&w| w as f32).collect();
+        let tokens: usize = self.requests.iter().map(|r| r.tokens).sum();
+        ServeSummary {
+            requests: self.requests.len(),
+            tokens,
+            decode_tokens: self.decode_tokens,
+            decode_tok_per_s: self.decode_tokens as f64 / self.decode_secs.max(1e-9),
+            total_tok_per_s: tokens as f64 / self.total_secs.max(1e-9),
+            ttft_p50_ms: stats::median(&ttft) as f64,
+            ttft_p90_ms: stats::percentile(&ttft, 0.9) as f64,
+            step_p50_ms: stats::median(&self.step_ms) as f64,
+            step_p90_ms: stats::percentile(&self.step_ms, 0.9) as f64,
+            step_p99_ms: stats::percentile(&self.step_ms, 0.99) as f64,
+            mean_queue_wait_steps: stats::mean(&waits) as f64,
+            mean_batch_width: stats::mean(&widths) as f64,
+            prefill_secs: self.prefill_secs,
+            decode_secs: self.decode_secs,
+            total_secs: self.total_secs,
+            steps: self.steps,
+            peak_running_bytes: self.peak_running_bytes,
+        }
+    }
+}
+
+/// Aggregated view of one serve run, renderable as text or as the
+/// `BENCH_serve.json` "continuous" block.
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    pub requests: usize,
+    pub tokens: usize,
+    pub decode_tokens: usize,
+    /// Tokens/s over the decode phase only (the Table 3 measurement).
+    pub decode_tok_per_s: f64,
+    /// Tokens/s over the whole run (queue + prefill + decode).
+    pub total_tok_per_s: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p90_ms: f64,
+    pub step_p50_ms: f64,
+    pub step_p90_ms: f64,
+    pub step_p99_ms: f64,
+    pub mean_queue_wait_steps: f64,
+    pub mean_batch_width: f64,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub total_secs: f64,
+    pub steps: usize,
+    pub peak_running_bytes: usize,
+}
+
+impl ServeSummary {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("requests".to_string(), Json::Num(self.requests as f64));
+        m.insert("tokens".to_string(), Json::Num(self.tokens as f64));
+        m.insert("decode_tokens".to_string(), Json::Num(self.decode_tokens as f64));
+        m.insert("decode_tok_per_s".to_string(), Json::Num(self.decode_tok_per_s));
+        m.insert("total_tok_per_s".to_string(), Json::Num(self.total_tok_per_s));
+        m.insert("ttft_p50_ms".to_string(), Json::Num(self.ttft_p50_ms));
+        m.insert("ttft_p90_ms".to_string(), Json::Num(self.ttft_p90_ms));
+        m.insert("step_p50_ms".to_string(), Json::Num(self.step_p50_ms));
+        m.insert("step_p90_ms".to_string(), Json::Num(self.step_p90_ms));
+        m.insert("step_p99_ms".to_string(), Json::Num(self.step_p99_ms));
+        m.insert("mean_queue_wait_steps".to_string(), Json::Num(self.mean_queue_wait_steps));
+        m.insert("mean_batch_width".to_string(), Json::Num(self.mean_batch_width));
+        m.insert("prefill_secs".to_string(), Json::Num(self.prefill_secs));
+        m.insert("decode_secs".to_string(), Json::Num(self.decode_secs));
+        m.insert("total_secs".to_string(), Json::Num(self.total_secs));
+        m.insert("steps".to_string(), Json::Num(self.steps as f64));
+        m.insert("peak_running_bytes".to_string(), Json::Num(self.peak_running_bytes as f64));
+        Json::Obj(m)
+    }
+}
+
+impl std::fmt::Display for ServeSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "served {} requests / {} tokens in {:.2}s: decode {:.1} tok/s (overall {:.1} tok/s)",
+            self.requests, self.tokens, self.total_secs, self.decode_tok_per_s, self.total_tok_per_s
+        )?;
+        writeln!(
+            f,
+            "ttft p50 {:.1} ms, p90 {:.1} ms; per-step p50 {:.2} / p90 {:.2} / p99 {:.2} ms",
+            self.ttft_p50_ms, self.ttft_p90_ms, self.step_p50_ms, self.step_p90_ms, self.step_p99_ms
+        )?;
+        write!(
+            f,
+            "queue wait mean {:.1} steps; batch width mean {:.1} over {} steps; peak RM {}",
+            self.mean_queue_wait_steps,
+            self.mean_batch_width,
+            self.steps,
+            fmt_bytes(self.peak_running_bytes)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, arrival: usize, admit: usize, tokens: usize, ttft: f64) -> RequestMetrics {
+        RequestMetrics {
+            id,
+            arrival_step: arrival,
+            admit_step: admit,
+            finish_step: admit + tokens,
+            queue_wait_steps: admit - arrival,
+            ttft_secs: ttft,
+            prefill_secs: 0.001,
+            tokens,
+        }
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let m = ServeMetrics {
+            requests: vec![req(0, 0, 0, 10, 0.010), req(1, 2, 4, 6, 0.030)],
+            step_ms: vec![1.0, 2.0, 3.0],
+            step_width: vec![1, 2, 2],
+            decode_tokens: 16,
+            decode_secs: 2.0,
+            prefill_secs: 0.002,
+            peak_running_bytes: 1024,
+            total_secs: 4.0,
+            steps: 3,
+        };
+        let s = m.summary();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.tokens, 16);
+        assert!((s.decode_tok_per_s - 8.0).abs() < 1e-9);
+        assert!((s.total_tok_per_s - 4.0).abs() < 1e-9);
+        assert!((s.ttft_p50_ms - 20.0).abs() < 1e-3);
+        assert!((s.mean_queue_wait_steps - 1.0).abs() < 1e-9);
+        assert!((s.mean_batch_width - 5.0 / 3.0).abs() < 1e-6);
+        let j = s.to_json();
+        assert!((j.get("decode_tok_per_s").unwrap().as_f64().unwrap() - 8.0).abs() < 1e-9);
+        assert_eq!(j.get("steps").unwrap().as_usize().unwrap(), 3);
+        let text = format!("{s}");
+        assert!(text.contains("decode 8.0 tok/s"), "{text}");
+    }
+}

@@ -1,0 +1,205 @@
+//! Slab-style pooled KV cache for the continuous-batching scheduler.
+//!
+//! One contiguous allocation holds `n_slots` fixed-size KV slots; a live
+//! sequence leases a slot at admission and the slot returns to the free
+//! list when the sequence retires (EOS / max tokens), so a new request can
+//! join the running batch mid-flight instead of waiting for a lockstep
+//! batch to drain. Fixed-size slots keep the memory accounting trivial —
+//! running memory is one slab, the RM column of Table 3; a paged layout
+//! (and a quantized KV cache) are the listed follow-ons in ROADMAP.md.
+
+/// Handle to a leased slot. Only the pool mints these (the field is
+/// crate-private), so holding one proves a lease happened.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotId(pub(crate) usize);
+
+impl SlotId {
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Pooled per-layer KV storage, indexed `[slot][layer][t][d]`.
+pub struct KvPool {
+    n_slots: usize,
+    layers: usize,
+    slot_len: usize,
+    d: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    lens: Vec<usize>,
+    leased: Vec<bool>,
+    free: Vec<usize>,
+    peak_leased: usize,
+}
+
+impl KvPool {
+    pub fn new(n_slots: usize, layers: usize, slot_len: usize, d: usize) -> KvPool {
+        assert!(n_slots > 0 && layers > 0 && slot_len > 0 && d > 0);
+        KvPool {
+            n_slots,
+            layers,
+            slot_len,
+            d,
+            k: vec![0.0; n_slots * layers * slot_len * d],
+            v: vec![0.0; n_slots * layers * slot_len * d],
+            lens: vec![0; n_slots],
+            leased: vec![false; n_slots],
+            free: (0..n_slots).rev().collect(),
+            peak_leased: 0,
+        }
+    }
+
+    /// Lease a free slot, or `None` when the pool is saturated. A freshly
+    /// leased slot always starts at KV length 0.
+    pub fn lease(&mut self) -> Option<SlotId> {
+        let s = self.free.pop()?;
+        assert!(!self.leased[s], "KvPool invariant violated: slot {s} double-leased");
+        self.leased[s] = true;
+        self.lens[s] = 0;
+        self.peak_leased = self.peak_leased.max(self.leased_slots());
+        Some(SlotId(s))
+    }
+
+    /// Return a slot to the free list (sequence retired).
+    pub fn release(&mut self, slot: SlotId) {
+        let s = slot.0;
+        assert!(self.leased[s], "KvPool invariant violated: releasing free slot {s}");
+        self.leased[s] = false;
+        self.lens[s] = 0;
+        self.free.push(s);
+    }
+
+    /// Cached positions for a leased slot.
+    pub fn len(&self, slot: SlotId) -> usize {
+        self.lens[slot.0]
+    }
+
+    /// Token capacity of every slot.
+    pub fn slot_tokens(&self) -> usize {
+        self.slot_len
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn leased_slots(&self) -> usize {
+        self.n_slots - self.free.len()
+    }
+
+    /// High-water mark of concurrently leased slots.
+    pub fn peak_leased(&self) -> usize {
+        self.peak_leased
+    }
+
+    /// Whole-slab bytes. The pool preallocates, so this is also its
+    /// running-memory contribution (Table 3 'RM').
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    #[inline]
+    fn base(&self, slot: usize, layer: usize) -> usize {
+        (slot * self.layers + layer) * self.slot_len * self.d
+    }
+
+    /// Write one position's K/V for one layer at the slot's current length.
+    /// Lengths advance once per decode step via `advance`, after all layers
+    /// have appended (mirroring `KvCache`'s end-of-step `len` bump).
+    pub(crate) fn append(&mut self, slot: SlotId, layer: usize, k: &[f32], v: &[f32]) {
+        let t = self.lens[slot.0];
+        assert!(t < self.slot_len, "KvPool slot {} overflow at {t} tokens", slot.0);
+        let o = self.base(slot.0, layer) + t * self.d;
+        self.k[o..o + self.d].copy_from_slice(k);
+        self.v[o..o + self.d].copy_from_slice(v);
+    }
+
+    pub(crate) fn advance(&mut self, slot: SlotId) {
+        let t = self.lens[slot.0];
+        assert!(t < self.slot_len, "KvPool slot {} advanced past capacity", slot.0);
+        self.lens[slot.0] = t + 1;
+    }
+
+    /// First `t` cached positions of one layer, contiguous `(t, d)`.
+    pub(crate) fn k_slice(&self, slot: SlotId, layer: usize, t: usize) -> &[f32] {
+        let o = self.base(slot.0, layer);
+        &self.k[o..o + t * self.d]
+    }
+
+    pub(crate) fn v_slice(&self, slot: SlotId, layer: usize, t: usize) -> &[f32] {
+        let o = self.base(slot.0, layer);
+        &self.v[o..o + t * self.d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_release_cycle() {
+        let mut p = KvPool::new(3, 2, 4, 8);
+        let a = p.lease().unwrap();
+        let b = p.lease().unwrap();
+        let c = p.lease().unwrap();
+        assert!(p.lease().is_none(), "saturated pool must refuse leases");
+        assert_ne!(a.index(), b.index());
+        assert_ne!(b.index(), c.index());
+        assert_ne!(a.index(), c.index());
+        assert_eq!(p.leased_slots(), 3);
+        p.release(b);
+        assert_eq!(p.free_slots(), 1);
+        let b2 = p.lease().unwrap();
+        assert_eq!(p.len(b2), 0, "recycled slot starts empty");
+        p.release(a);
+        p.release(b2);
+        p.release(c);
+        assert_eq!(p.free_slots(), 3);
+        assert_eq!(p.peak_leased(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "releasing free slot")]
+    fn double_release_panics() {
+        let mut p = KvPool::new(2, 1, 4, 8);
+        let a = p.lease().unwrap();
+        let stale = a;
+        p.release(a);
+        p.release(stale);
+    }
+
+    #[test]
+    fn append_advance_roundtrip() {
+        let mut p = KvPool::new(2, 2, 4, 3);
+        let s = p.lease().unwrap();
+        for t in 0..3 {
+            for l in 0..2 {
+                p.append(s, l, &[t as f32; 3], &[-(t as f32); 3]);
+            }
+            p.advance(s);
+        }
+        assert_eq!(p.len(s), 3);
+        assert_eq!(
+            p.k_slice(s, 1, 3),
+            &[0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0]
+        );
+        assert_eq!(p.v_slice(s, 0, 2), &[0.0, 0.0, 0.0, -1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn slot_overflow_panics() {
+        let mut p = KvPool::new(1, 1, 2, 2);
+        let s = p.lease().unwrap();
+        for _ in 0..2 {
+            p.append(s, 0, &[0.0; 2], &[0.0; 2]);
+            p.advance(s);
+        }
+        p.append(s, 0, &[0.0; 2], &[0.0; 2]);
+    }
+}

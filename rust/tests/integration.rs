@@ -1,9 +1,12 @@
 //! Integration tests over the real AOT artifacts (omni-test / opt-test).
-//! Requires `make artifacts MODELS="omni-test opt-test"`.
+//! Requires `make artifacts MODELS="omni-test opt-test"` and a build with
+//! `--features pjrt` (without it the whole file is compiled out — the
+//! artifact-free contracts live in `tests/sched.rs` and the unit tests).
 //!
 //! These pin down the cross-language contracts: runtime <-> manifest,
 //! Rust fusion == calibration-graph semantics, pipeline propagation, and
 //! the serve engine against the HLO model forward.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 use std::sync::{Mutex, OnceLock};

@@ -1,0 +1,199 @@
+//! Continuous-batching scheduler invariants over a synthetic model — no
+//! artifacts and no PJRT, so these run on a clean machine (`cargo test`).
+//!
+//! Pinned invariants:
+//! * a request's emitted tokens are identical to `Engine::generate` with
+//!   the same seed, whatever else shares the batch (co-scheduling can
+//!   never change an output);
+//! * the KvPool never double-leases a slot and frees every slot once the
+//!   workload drains;
+//! * the batched `forward_step` path matches the per-sequence
+//!   `forward_token` path bit-for-bit on packed weights.
+
+use omniquant::config::QuantSetting;
+use omniquant::model::ModelParams;
+use omniquant::runtime::Manifest;
+use omniquant::serve::sched::{
+    synthetic_workload, KvPool, Request, SchedConfig, Scheduler, WorkloadSpec,
+};
+use omniquant::serve::Engine;
+use omniquant::util::Rng;
+
+const VOCAB: usize = 96;
+
+fn engine(family: &str, setting: &str, seed: u64) -> Engine {
+    let m = Manifest::synthetic("sched-test", family, 32, 2, 2, 64, VOCAB, 128);
+    let mut rng = Rng::new(seed);
+    let params = ModelParams::init(&m, &mut rng);
+    Engine::build(&params, QuantSetting::parse(setting).unwrap()).unwrap()
+}
+
+#[test]
+fn outputs_independent_of_batch_composition() {
+    for (family, setting) in [("llama", "w4a16g32"), ("opt", "w3a16g32")] {
+        let eng = engine(family, setting, 11);
+        let mut wl_rng = Rng::new(5);
+        let reqs: Vec<Request> = (0..5)
+            .map(|id| Request {
+                id,
+                prompt: (0..3 + id).map(|_| wl_rng.below(VOCAB) as i32).collect(),
+                max_new_tokens: 4 + 2 * id,
+                temperature: if id % 2 == 0 { 0.0 } else { 0.8 },
+                seed: 1000 + id as u64,
+                arrival_step: [0usize, 0, 1, 3, 7][id],
+            })
+            .collect();
+
+        // reference: the per-sequence engine path with the same seed
+        let expect: Vec<Vec<i32>> = reqs
+            .iter()
+            .map(|r| {
+                let mut rng = Rng::new(r.seed);
+                eng.generate(&r.prompt, r.max_new_tokens, r.temperature, &mut rng).0
+            })
+            .collect();
+
+        // crowded: 2 slots for 5 staggered requests forces queueing, slot
+        // recycling and ragged co-scheduled batches
+        let mut sch = Scheduler::new(&eng, SchedConfig { slots: 2, slot_tokens: 64, eos: None });
+        for r in reqs.iter().cloned() {
+            sch.submit(r).unwrap();
+        }
+        sch.run().unwrap();
+        for r in &reqs {
+            assert_eq!(
+                sch.output(r.id).unwrap(),
+                &expect[r.id][..],
+                "{family} crowded req {}",
+                r.id
+            );
+        }
+        assert_eq!(sch.pool().free_slots(), 2, "all slots reclaimed after drain");
+        assert_eq!(sch.pool().leased_slots(), 0);
+        assert_eq!(sch.pool().peak_leased(), 2, "{family}: crowding reached full width");
+
+        // solo: each request alone in the scheduler emits the same tokens
+        for r in &reqs {
+            let mut solo =
+                Scheduler::new(&eng, SchedConfig { slots: 1, slot_tokens: 64, eos: None });
+            let mut req = r.clone();
+            req.arrival_step = 0;
+            solo.submit(req).unwrap();
+            solo.run().unwrap();
+            assert_eq!(
+                solo.output(r.id).unwrap(),
+                &expect[r.id][..],
+                "{family} solo req {}",
+                r.id
+            );
+        }
+    }
+}
+
+#[test]
+fn forward_step_matches_forward_token_bit_for_bit() {
+    for (family, setting) in [("llama", "w2a16g32"), ("llama", "w4a16g32"), ("opt", "w4a16")] {
+        let eng = engine(family, setting, 9);
+        let tokens = [5i32, 17, 3, 9];
+        // per-sequence reference path
+        let mut cache = eng.new_cache(8);
+        let mut scratch = eng.new_scratch();
+        let mut want = Vec::new();
+        for &t in &tokens {
+            want = eng.forward_token(t, &mut cache, &mut scratch);
+        }
+        // pooled batched path, width 1
+        let mut pool = KvPool::new(1, eng.desc.n_layers, 8, eng.desc.d_model);
+        let slot = pool.lease().unwrap();
+        let mut bs = eng.new_batch_scratch(1, 8);
+        for &t in &tokens {
+            eng.forward_step(&[t], &[slot], &mut pool, &mut bs);
+        }
+        let got = &bs.logits[..eng.desc.vocab];
+        assert_eq!(want.len(), got.len());
+        for (c, (a, b)) in want.iter().zip(got).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{family} {setting} logit {c}: {a} vs {b}"
+            );
+        }
+        assert_eq!(pool.len(slot), tokens.len());
+    }
+}
+
+#[test]
+fn eos_retires_early() {
+    let eng = engine("llama", "w4a16g32", 3);
+    let prompt = vec![1, 2, 3];
+    let mut rng = Rng::new(42);
+    let (toks, _) = eng.generate(&prompt, 8, 0.0, &mut rng);
+    let eos = toks[2];
+    let pos = toks.iter().position(|&t| t == eos).unwrap();
+    let mut sch = Scheduler::new(&eng, SchedConfig { slots: 1, slot_tokens: 64, eos: Some(eos) });
+    sch.submit(Request {
+        id: 0,
+        prompt,
+        max_new_tokens: 8,
+        temperature: 0.0,
+        seed: 42,
+        arrival_step: 0,
+    })
+    .unwrap();
+    sch.run().unwrap();
+    assert_eq!(sch.output(0).unwrap(), &toks[..pos + 1], "stops at the first EOS");
+    assert_eq!(sch.pool().free_slots(), 1);
+}
+
+#[test]
+fn submit_rejects_invalid_requests() {
+    let eng = engine("llama", "w4a16g32", 1);
+    let mut sch = Scheduler::new(&eng, SchedConfig { slots: 1, slot_tokens: 8, eos: None });
+    let base = Request {
+        id: 0,
+        prompt: vec![1, 2],
+        max_new_tokens: 2,
+        temperature: 0.0,
+        seed: 1,
+        arrival_step: 0,
+    };
+    assert!(sch.submit(Request { prompt: vec![], ..base.clone() }).is_err(), "empty prompt");
+    assert!(
+        sch.submit(Request { max_new_tokens: 0, ..base.clone() }).is_err(),
+        "zero new tokens"
+    );
+    assert!(
+        sch.submit(Request { prompt: vec![1; 5], max_new_tokens: 4, ..base.clone() }).is_err(),
+        "prompt + new tokens exceeds slot capacity"
+    );
+    assert!(sch.submit(base).is_ok());
+}
+
+#[test]
+fn staggered_workload_queues_and_drains() {
+    let eng = engine("llama", "w4a16g32", 2);
+    let spec = WorkloadSpec {
+        requests: 12,
+        mean_interarrival_steps: 0.5,
+        prompt_len: 4,
+        max_new_tokens: 6,
+        temperature: 0.0,
+    };
+    let reqs = synthetic_workload(&spec, eng.desc.vocab, 3);
+    let mut sch = Scheduler::new(&eng, SchedConfig { slots: 3, slot_tokens: 16, eos: None });
+    for r in reqs {
+        sch.submit(r).unwrap();
+    }
+    let summary = sch.run().unwrap();
+    assert_eq!(summary.requests, 12);
+    assert_eq!(summary.tokens, 12 * 6, "no EOS configured: every request runs to max_new");
+    assert!(summary.decode_tokens > 0 && summary.decode_tok_per_s > 0.0);
+    assert!(
+        sch.metrics.requests.iter().any(|r| r.queue_wait_steps > 0),
+        "12 fast arrivals into 3 slots must queue"
+    );
+    assert!(summary.mean_batch_width > 1.0, "continuous batching actually batched");
+    assert!(summary.peak_running_bytes > eng.weight_bytes());
+    assert_eq!(sch.pool().free_slots(), 3);
+    assert_eq!(sch.pool().peak_leased(), 3);
+}

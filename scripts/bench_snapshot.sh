@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Deterministic serving benchmark snapshot.
+#
+# Runs the sequential / lockstep / continuous serve suite on a synthetic
+# quantized model (no artifacts or PJRT needed) and writes the
+# machine-readable BENCH_serve.json at the repo root, plus
+# results/serve-bench.md. Pass extra flags through to `repro`
+# (e.g. drop --quick for the bigger model).
+#
+#   scripts/bench_snapshot.sh            # quick snapshot (default)
+#   scripts/bench_snapshot.sh --full     # full-size model
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+QUICK="--quick"
+for arg in "$@"; do
+  if [ "$arg" = "--full" ]; then
+    QUICK=""
+  fi
+done
+
+cargo run --quiet --release --manifest-path rust/Cargo.toml -- \
+  repro --exp serve-bench $QUICK
+
+echo "snapshot: $(pwd)/BENCH_serve.json"
