@@ -13,7 +13,9 @@ use anyhow::Result;
 use omniquant::config::QuantSetting;
 use omniquant::model::ModelParams;
 use omniquant::runtime::Manifest;
-use omniquant::serve::sched::{synthetic_workload, SchedConfig, Scheduler, WorkloadSpec};
+use omniquant::serve::sched::{
+    synthetic_workload, KvStoreKind, SchedConfig, Scheduler, WorkloadSpec,
+};
 use omniquant::serve::Engine;
 use omniquant::util::{fmt_bytes, Rng};
 
@@ -41,7 +43,9 @@ fn main() -> Result<()> {
         fmt_bytes(lock.running_bytes)
     );
 
-    // continuous: staggered arrivals, pooled KV slots, batched GEMM decode
+    // continuous: staggered arrivals, pooled KV, batched GEMM decode —
+    // once per KV backend (slab f32 reference, vLLM-style paged blocks,
+    // paged 8-bit group-quantized blocks) at equal token capacity
     let spec = WorkloadSpec {
         requests: 2 * slots,
         mean_interarrival_steps: 1.5,
@@ -49,18 +53,26 @@ fn main() -> Result<()> {
         max_new_tokens: new_tokens,
         temperature: 0.2,
     };
-    let requests = synthetic_workload(&spec, manifest.model.vocab, 7);
-    let cfg = SchedConfig { slots, slot_tokens: prompt_len + new_tokens + 1, eos: None };
-    let mut scheduler = Scheduler::new(&engine, cfg);
-    for r in requests {
-        scheduler.submit(r)?;
+    for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+        let requests = synthetic_workload(&spec, manifest.model.vocab, 7);
+        let cfg = SchedConfig {
+            slots,
+            slot_tokens: prompt_len + new_tokens + 1,
+            eos: None,
+            kv,
+            block_tokens: 16,
+        };
+        let mut scheduler = Scheduler::new(&engine, cfg);
+        for r in requests {
+            scheduler.submit(r)?;
+        }
+        let summary = scheduler.run()?;
+        println!("\ncontinuous x{slots} [kv {}]:", kv.name());
+        println!("{summary}");
+        println!(
+            "continuous vs lockstep decode speedup: {:.2}x",
+            summary.decode_tok_per_s / lock.decode_tok_per_s.max(1e-9)
+        );
     }
-    let summary = scheduler.run()?;
-    println!("continuous x{slots}:");
-    println!("{summary}");
-    println!(
-        "\ncontinuous vs lockstep decode speedup: {:.2}x",
-        summary.decode_tok_per_s / lock.decode_tok_per_s.max(1e-9)
-    );
     Ok(())
 }

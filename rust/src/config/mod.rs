@@ -164,6 +164,11 @@ pub struct ServeConfig {
     pub max_new_tokens: usize,
     pub temperature: f32,
     pub seed: u64,
+    /// KV storage backend: "slab" | "paged" | "paged-q8" (parsed by
+    /// `serve::sched::KvStoreKind`, which this layer stays decoupled from).
+    pub kv: String,
+    /// Tokens per KV block for the paged backends.
+    pub block_tokens: usize,
 }
 
 impl Default for ServeConfig {
@@ -176,6 +181,8 @@ impl Default for ServeConfig {
             max_new_tokens: 64,
             temperature: 0.0,
             seed: 7,
+            kv: "slab".into(),
+            block_tokens: 16,
         }
     }
 }
@@ -192,6 +199,8 @@ impl ServeConfig {
                 "max_new_tokens" => c.max_new_tokens = val.as_int()? as usize,
                 "temperature" => c.temperature = val.as_float()? as f32,
                 "seed" => c.seed = val.as_int()? as u64,
+                "kv" => c.kv = val.as_str()?.to_string(),
+                "block_tokens" => c.block_tokens = val.as_int()? as usize,
                 other => return Err(anyhow!("unknown serve key '{other}'")),
             }
         }
@@ -305,6 +314,8 @@ slots = 16
 requests = 64
 interarrival = 2.5
 max_new_tokens = 32
+kv = "paged-q8"
+block_tokens = 32
 "#,
         )
         .unwrap();
@@ -313,8 +324,12 @@ max_new_tokens = 32
         assert!((cfg.serve.mean_interarrival_steps - 2.5).abs() < 1e-12);
         assert_eq!(cfg.serve.max_new_tokens, 32);
         assert_eq!(cfg.serve.prompt_len, 16); // default preserved
+        assert_eq!(cfg.serve.kv, "paged-q8");
+        assert_eq!(cfg.serve.block_tokens, 32);
         let d = ExperimentConfig::parse("model = \"m\"").unwrap();
         assert_eq!(d.serve.slots, ServeConfig::default().slots);
+        assert_eq!(d.serve.kv, "slab");
+        assert_eq!(d.serve.block_tokens, 16);
     }
 
     #[test]

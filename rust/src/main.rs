@@ -193,6 +193,10 @@ fn serve_cfg_from_args(a: &Args) -> Result<ServeConfig> {
     c.max_new_tokens = a.usize_or("tokens", c.max_new_tokens)?;
     c.temperature = a.f32_or("temp", c.temperature)?;
     c.seed = a.usize_or("seed", c.seed as usize)? as u64;
+    if let Some(v) = a.get("kv") {
+        c.kv = v.to_string();
+    }
+    c.block_tokens = a.usize_or("block-tokens", c.block_tokens)?;
     Ok(c)
 }
 
@@ -201,9 +205,17 @@ fn serve_cfg_from_args(a: &Args) -> Result<ServeConfig> {
 /// optionally a JSON snapshot (`--json FILE`).
 fn cmd_serve_continuous(a: &Args, engine: &serve::Engine) -> Result<()> {
     let cfg = serve_cfg_from_args(a)?;
+    let kv = sched::KvStoreKind::parse(&cfg.kv)?;
     println!(
-        "continuous serve: {} requests, mean gap {:.1} steps, {} slots, prompt {} + max {} tokens",
-        cfg.requests, cfg.mean_interarrival_steps, cfg.slots, cfg.prompt_len, cfg.max_new_tokens
+        "continuous serve: {} requests, mean gap {:.1} steps, {} slots, prompt {} + max {} \
+         tokens, kv {} ({}-token blocks)",
+        cfg.requests,
+        cfg.mean_interarrival_steps,
+        cfg.slots,
+        cfg.prompt_len,
+        cfg.max_new_tokens,
+        kv.name(),
+        cfg.block_tokens
     );
     let spec = sched::WorkloadSpec {
         requests: cfg.requests,
@@ -217,6 +229,8 @@ fn cmd_serve_continuous(a: &Args, engine: &serve::Engine) -> Result<()> {
         slots: cfg.slots,
         slot_tokens: cfg.prompt_len + cfg.max_new_tokens + 1,
         eos: None,
+        kv,
+        block_tokens: cfg.block_tokens,
     };
     let mut scheduler = sched::Scheduler::new(engine, scfg);
     for r in requests {
@@ -312,10 +326,13 @@ const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|repro|info> [--
     \u{20}          [--zeroshot] [--batches N]\n\
     serve     --model M --ckpt F --setting w4a16g64 [--tokens N] [--batch B]\n\
     \u{20}          [--prompt-len P] [--generate] [--temp X] [--synthetic]\n\
-    \u{20}          [--continuous --requests N --interarrival X --slots S --json F]\n\
+    \u{20}          [--continuous --requests N --interarrival X --slots S --json F\n\
+    \u{20}           --kv slab|paged|paged-q8 --block-tokens B]\n\
     \u{20}          (--continuous: open-loop staggered arrivals through the\n\
-    \u{20}           pooled-KV continuous-batching scheduler; --synthetic: serve\n\
-    \u{20}           a fresh synthetic model, no artifacts/PJRT needed)\n\
+    \u{20}           pooled-KV continuous-batching scheduler; --kv picks the KV\n\
+    \u{20}           store: slab f32 slots, vLLM-style paged blocks, or paged\n\
+    \u{20}           8-bit group-quantized blocks; --synthetic: serve a fresh\n\
+    \u{20}           synthetic model, no artifacts/PJRT needed)\n\
     repro     --exp <fig1|table1|table2|table3|table4|fig4|tableA1..A14|figA1..A3\n\
     \u{20}          |serve-bench|all> [--quick] (reduced sizes/samples)\n\
     info      --model M";

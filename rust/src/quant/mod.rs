@@ -10,7 +10,7 @@
 pub mod methods;
 pub mod pack;
 
-pub use pack::PackedMatrix;
+pub use pack::{GemmScratch, PackedMatrix};
 
 use crate::config::QuantSetting;
 use crate::tensor::Tensor;
@@ -208,6 +208,58 @@ pub fn act_fake_quant_rows(x: &mut [f32], cols: usize, bits: u8) {
     }
 }
 
+/// Number of quant groups in one `d`-length row at `group` lanes per group
+/// (a ragged tail gets its own group). Row-layout twin of `n_groups`, used
+/// by the Q8 KV cache where rows are cached K/V vectors along `d`.
+pub fn q8_row_groups(d: usize, group: usize) -> usize {
+    d.div_ceil(group_len(d, group))
+}
+
+/// Asymmetric 8-bit min-max quantization of one row (e.g. a cached K/V
+/// vector), group-wise along the row — the same `(h, z)` formulation as
+/// `quant_params` (h = range/qmax, z = -round(min/h)), restated for a
+/// single row so the KV cache can quantize each appended vector in one
+/// pass. `codes` is `row.len()` u8; `scales` is `[h, z]` per group, so
+/// `2 * q8_row_groups(row.len(), group)` f32.
+pub fn quantize_row_q8(row: &[f32], group: usize, codes: &mut [u8], scales: &mut [f32]) {
+    let g = group_len(row.len(), group);
+    debug_assert_eq!(codes.len(), row.len());
+    debug_assert_eq!(scales.len(), 2 * q8_row_groups(row.len(), group));
+    for (gi, chunk) in row.chunks(g).enumerate() {
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &x in chunk {
+            mn = mn.min(x);
+            mx = mx.max(x);
+        }
+        let mut h = (mx - mn) / 255.0;
+        if h < 1e-8 {
+            h = 1e-8;
+        }
+        let z = -(mn / h).round();
+        scales[2 * gi] = h;
+        scales[2 * gi + 1] = z;
+        for (j, &x) in chunk.iter().enumerate() {
+            codes[gi * g + j] = ((x / h).round() + z).clamp(0.0, 255.0) as u8;
+        }
+    }
+}
+
+/// Inverse of `quantize_row_q8`: rebuild the f32 row from codes + per-group
+/// `[h, z]` scales.
+pub fn dequantize_row_q8(codes: &[u8], group: usize, scales: &[f32], out: &mut [f32]) {
+    let g = group_len(out.len(), group);
+    debug_assert_eq!(codes.len(), out.len());
+    debug_assert_eq!(scales.len(), 2 * q8_row_groups(out.len(), group));
+    for (gi, chunk) in out.chunks_mut(g).enumerate() {
+        let h = scales[2 * gi];
+        let z = scales[2 * gi + 1];
+        for (j, o) in chunk.iter_mut().enumerate() {
+            *o = (codes[gi * g + j] as f32 - z) * h;
+        }
+    }
+}
+
 /// Weight memory in bytes for a packed layer at `bits` with group scales
 /// (f16-equivalent bookkeeping: scale+zp per group stored as 2x2 bytes).
 pub fn packed_bytes(cin: usize, cout: usize, bits: u8, group: usize) -> usize {
@@ -330,6 +382,44 @@ mod tests {
         let orig = x.clone();
         act_fake_quant_rows(&mut x, 3, 16);
         assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn q8_row_roundtrip_error_bounded() {
+        let mut rng = Rng::new(11);
+        for (d, group) in [(192usize, 64usize), (128, 64), (100, 32), (32, 64), (64, 0)] {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal() * 3.0).collect();
+            let ng = q8_row_groups(d, group);
+            let mut codes = vec![0u8; d];
+            let mut scales = vec![0.0f32; 2 * ng];
+            quantize_row_q8(&row, group, &mut codes, &mut scales);
+            let mut back = vec![0.0f32; d];
+            dequantize_row_q8(&codes, group, &scales, &mut back);
+            let g = group_len(d, group);
+            for (i, (&a, &b)) in back.iter().zip(&row).enumerate() {
+                // round-trip error is at most 1.5 steps of the element's
+                // group (0.5 from rounding, up to 1 more when the clamp at
+                // the grid edge bites)
+                let h = scales[2 * (i / g)];
+                assert!(
+                    (a - b).abs() <= 1.5 * h + 1e-6,
+                    "d={d} group={group} lane {i}: |{a} - {b}| > 1.5*{h}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn q8_row_constant_row_is_exact() {
+        let row = vec![0.25f32; 48];
+        let mut codes = vec![0u8; 48];
+        let mut scales = vec![0.0f32; 2 * q8_row_groups(48, 16)];
+        quantize_row_q8(&row, 16, &mut codes, &mut scales);
+        let mut back = vec![0.0f32; 48];
+        dequantize_row_q8(&codes, 16, &scales, &mut back);
+        for &b in &back {
+            assert!((b - 0.25).abs() < 1e-6, "degenerate range must round-trip, got {b}");
+        }
     }
 
     #[test]

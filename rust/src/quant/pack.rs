@@ -15,6 +15,41 @@ use crate::tensor::Tensor;
 
 use super::{group_len, quant_params, quantize_codes, QuantParams};
 
+/// Caller-owned scratch for [`PackedMatrix::gemm`]: the unpack row, the
+/// per-sequence raw-code accumulators and the per-sequence x-sums that
+/// used to be heap-allocated on every call. Holding one of these in the
+/// decode loop's scratch (as `Engine::new_batch_scratch` does) takes
+/// malloc churn out of the per-step hot path; buffers grow monotonically
+/// to the largest (batch, cout) seen and are sliced to exact size per
+/// call, so reuse never changes the arithmetic.
+#[derive(Default)]
+pub struct GemmScratch {
+    qrow: Vec<f32>,
+    acc: Vec<f32>,
+    xsum: Vec<f32>,
+}
+
+impl GemmScratch {
+    /// Pre-size for a `(b, cout)` gemm so later calls never allocate.
+    pub fn reserve(&mut self, b: usize, cout: usize) {
+        if self.qrow.len() < cout {
+            self.qrow.resize(cout, 0.0);
+        }
+        if self.acc.len() < b * cout {
+            self.acc.resize(b * cout, 0.0);
+        }
+        if self.xsum.len() < b {
+            self.xsum.resize(b, 0.0);
+        }
+    }
+
+    /// Current footprint (counted into running memory with the rest of the
+    /// decode scratch).
+    pub fn bytes(&self) -> usize {
+        (self.qrow.len() + self.acc.len() + self.xsum.len()) * 4
+    }
+}
+
 #[derive(Clone)]
 pub struct PackedMatrix {
     pub cin: usize,
@@ -160,7 +195,11 @@ impl PackedMatrix {
     /// unpack produces exact integer codes in f32 (codes are <= 255, exact
     /// in f32, and `0.0 + 1.0 * q == q`), and the per-row FMA order over
     /// (group, k, c) and the group epilogue are the same as `gemv`'s.
-    pub fn gemm(&self, xs: &[f32], b: usize, ys: &mut [f32]) {
+    ///
+    /// `scratch` replaces the per-call `qrow`/`acc`/`xsum` heap
+    /// allocations; every buffer is zeroed before use, so a shared scratch
+    /// carries no state between calls.
+    pub fn gemm(&self, xs: &[f32], b: usize, ys: &mut [f32], scratch: &mut GemmScratch) {
         assert_eq!(xs.len(), b * self.cin);
         assert_eq!(ys.len(), b * self.cout);
         if b == 0 {
@@ -168,9 +207,11 @@ impl PackedMatrix {
         }
         let g = group_len(self.cin, self.group);
         ys.iter_mut().for_each(|v| *v = 0.0);
-        let mut qrow = vec![0.0f32; self.cout];
-        let mut acc = vec![0.0f32; b * self.cout];
-        let mut xsum = vec![0.0f32; b];
+        scratch.reserve(b, self.cout);
+        let GemmScratch { qrow, acc, xsum } = scratch;
+        let qrow = &mut qrow[..self.cout];
+        let acc = &mut acc[..b * self.cout];
+        let xsum = &mut xsum[..b];
         for gi in 0..self.ng {
             acc.iter_mut().for_each(|v| *v = 0.0);
             xsum.iter_mut().for_each(|v| *v = 0.0);
@@ -191,7 +232,7 @@ impl PackedMatrix {
                         continue;
                     }
                     let a = &mut acc[s * self.cout..(s + 1) * self.cout];
-                    for (av, qv) in a.iter_mut().zip(&qrow) {
+                    for (av, qv) in a.iter_mut().zip(qrow.iter()) {
                         *av += xk * qv;
                     }
                 }
@@ -429,6 +470,9 @@ mod tests {
         // activations through the batched path must be *identical* to the
         // per-sequence gemv path, whatever the co-scheduled batch is.
         let mut rng = Rng::new(21);
+        // one scratch reused across every size: `reserve` grows it
+        // monotonically and slices exact, so reuse must not change bits
+        let mut gs = GemmScratch::default();
         for (cin, cout) in [(64usize, 48usize), (96, 33)] {
             let w = rand_w(100 + cout as u64, cin, cout);
             for (bits, group) in [(2u8, 32usize), (3, 32), (4, 0), (4, 32), (6, 32), (8, 0)] {
@@ -436,7 +480,7 @@ mod tests {
                 for b in [1usize, 3, 8] {
                     let xs: Vec<f32> = (0..b * cin).map(|_| rng.normal()).collect();
                     let mut ys = vec![0.0f32; b * cout];
-                    p.gemm(&xs, b, &mut ys);
+                    p.gemm(&xs, b, &mut ys, &mut gs);
                     for s in 0..b {
                         let mut want = vec![0.0f32; cout];
                         p.gemv(&xs[s * cin..(s + 1) * cin], &mut want);
@@ -459,12 +503,13 @@ mod tests {
         let p = PackedMatrix::pack(&w, 4, 32, None, None);
         let xs = vec![0.0f32; 2 * 64];
         let mut ys = vec![1.0f32; 2 * 24];
-        p.gemm(&xs, 2, &mut ys);
+        let mut gs = GemmScratch::default();
+        p.gemm(&xs, 2, &mut ys, &mut gs);
         let mut want = vec![0.0f32; 24];
         p.gemv(&xs[..64], &mut want);
         assert_eq!(&ys[..24], &want[..]);
         let mut empty: Vec<f32> = Vec::new();
-        p.gemm(&[], 0, &mut empty); // no-op, must not panic
+        p.gemm(&[], 0, &mut empty, &mut gs); // no-op, must not panic
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Deterministic serving benchmark: sequential vs lockstep vs
 //! continuous-batching decode throughput on a synthetic quantized model
-//! (no artifacts, no PJRT), emitted as human-readable lines and as the
-//! machine-readable `BENCH_serve.json` snapshot so the serving-perf
-//! trajectory is tracked PR over PR. Shared by `benches/bench_serve.rs`,
-//! `repro --exp serve-bench` and `scripts/bench_snapshot.sh`.
+//! (no artifacts, no PJRT), with the continuous mode swept over the three
+//! KV-store backends (slab / paged / paged-q8) at equal token capacity so
+//! the tok/s and RM deltas of paging + KV quantization are tracked
+//! together. Emitted as human-readable lines and as the machine-readable
+//! `BENCH_serve.json` snapshot so the serving-perf trajectory is tracked
+//! PR over PR. Shared by `benches/bench_serve.rs`, `repro --exp
+//! serve-bench` and `scripts/bench_snapshot.sh`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -16,8 +19,13 @@ use crate::model::ModelParams;
 use crate::runtime::Manifest;
 use crate::util::Rng;
 
-use super::sched::{synthetic_workload, SchedConfig, Scheduler, WorkloadSpec};
+use super::sched::{synthetic_workload, KvStoreKind, SchedConfig, Scheduler, WorkloadSpec};
 use super::Engine;
+
+/// Tokens per KV block for the paged backends in the bench sweep (one
+/// const so the SchedConfig and the snapshot's `kv_block_tokens` entry
+/// can never disagree).
+const BENCH_BLOCK_TOKENS: usize = 16;
 
 #[derive(Clone, Debug)]
 pub struct ServeBenchOpts {
@@ -101,7 +109,11 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
 
     // 3. continuous: staggered open-loop arrivals through the batched-GEMM
     //    scheduler; 3x more requests than slots at a fast arrival rate so
-    //    admission/retire churns while the batch stays near full width
+    //    admission/retire churns while the batch stays near full width.
+    //    Swept over the three KV-store backends at equal token capacity:
+    //    slab is the bit-for-bit reference, paged shares the arena
+    //    block-wise, paged-q8 additionally stores K/V as 8-bit
+    //    group-quantized codes (the RM cut).
     let spec = WorkloadSpec {
         requests: 3 * b,
         mean_interarrival_steps: 0.5,
@@ -109,34 +121,76 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         max_new_tokens: n,
         temperature: 0.0,
     };
-    let mut cont_runs = Vec::with_capacity(reps);
-    for _ in 0..reps {
-        let reqs = synthetic_workload(&spec, vocab, opts.seed);
-        let cfg = SchedConfig { slots: b, slot_tokens: p + n + 1, eos: None };
-        let mut sch = Scheduler::new(&engine, cfg);
-        for r in reqs {
-            sch.submit(r)?;
-        }
-        cont_runs.push(sch.run()?);
-    }
-    // as with lockstep: report the median-throughput rep in full
-    cont_runs.sort_by(|x, y| x.decode_tok_per_s.partial_cmp(&y.decode_tok_per_s).unwrap());
-    let summary = cont_runs[cont_runs.len() / 2].clone();
-    let continuous_tps = summary.decode_tok_per_s;
-    let speedup = continuous_tps / lockstep_tps.max(1e-9);
-
     lines.push(format!("sequential (width 1)    {sequential_tps:>9.1} tok/s"));
     lines.push(format!(
         "lockstep per-seq gemv   {lockstep_tps:>9.1} tok/s  (prefill {:.1} ms, RM {})",
         lock.prefill_secs * 1e3,
         crate::util::fmt_bytes(lock.running_bytes)
     ));
+    let mut modes = BTreeMap::new();
+    let mut speedup = 0.0;
+    let mut slab_arena = 0usize;
+    let mut q8_arena = 0usize;
+    let mut slab_bpt = 0usize;
+    let mut q8_bpt = 0usize;
+    for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+        let mut cont_runs = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let reqs = synthetic_workload(&spec, vocab, opts.seed);
+            let cfg = SchedConfig {
+                slots: b,
+                slot_tokens: p + n + 1,
+                eos: None,
+                kv: kind,
+                block_tokens: BENCH_BLOCK_TOKENS,
+            };
+            let mut sch = Scheduler::new(&engine, cfg);
+            for r in reqs {
+                sch.submit(r)?;
+            }
+            cont_runs.push(sch.run()?);
+        }
+        // as with lockstep: report the median-throughput rep in full
+        cont_runs.sort_by(|x, y| x.decode_tok_per_s.partial_cmp(&y.decode_tok_per_s).unwrap());
+        let summary = cont_runs[cont_runs.len() / 2].clone();
+        let tps = summary.decode_tok_per_s;
+        match kind {
+            KvStoreKind::SlabF32 => {
+                speedup = tps / lockstep_tps.max(1e-9);
+                slab_arena = summary.kv_arena_bytes;
+                slab_bpt = summary.kv_bytes_per_token;
+            }
+            KvStoreKind::PagedQ8 => {
+                q8_arena = summary.kv_arena_bytes;
+                q8_bpt = summary.kv_bytes_per_token;
+            }
+            KvStoreKind::PagedF32 => {}
+        }
+        lines.push(format!(
+            "continuous {:<8} x{b:<3}{tps:>9.1} tok/s  \
+             ({:.2}x vs lockstep; ttft p50 {:.1} ms, width mean {:.1}, RM {}, \
+             KV {} @ {} B/token)",
+            kind.name(),
+            tps / lockstep_tps.max(1e-9),
+            summary.ttft_p50_ms,
+            summary.mean_batch_width,
+            crate::util::fmt_bytes(summary.peak_running_bytes),
+            crate::util::fmt_bytes(summary.kv_arena_bytes),
+            summary.kv_bytes_per_token,
+        ));
+        // "continuous" stays the slab entry so the snapshot series started
+        // in PR 1 keeps its meaning; the new backends get their own keys
+        let key = match kind {
+            KvStoreKind::SlabF32 => "continuous".to_string(),
+            _ => format!("continuous_{}", kind.name().replace('-', "_")),
+        };
+        modes.insert(key, summary.to_json());
+    }
     lines.push(format!(
-        "continuous gemm x{b:<3}    {continuous_tps:>9.1} tok/s  \
-         ({speedup:.2}x vs lockstep; ttft p50 {:.1} ms, width mean {:.1}, RM {})",
-        summary.ttft_p50_ms,
-        summary.mean_batch_width,
-        crate::util::fmt_bytes(summary.peak_running_bytes)
+        "kv arena q8 vs slab: {:.2}x smaller ({} vs {} B/token)",
+        slab_arena as f64 / q8_arena.max(1) as f64,
+        q8_bpt,
+        slab_bpt,
     ));
 
     let num = |v: f64| Json::Num(v);
@@ -147,10 +201,8 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
     lock_o.insert("prefill_secs".to_string(), num(lock.prefill_secs));
     lock_o.insert("decode_secs".to_string(), num(lock.decode_secs));
     lock_o.insert("running_bytes".to_string(), num(lock.running_bytes as f64));
-    let mut modes = BTreeMap::new();
     modes.insert("sequential".to_string(), Json::Obj(seq_o));
     modes.insert("lockstep".to_string(), Json::Obj(lock_o));
-    modes.insert("continuous".to_string(), summary.to_json());
 
     let entries = vec![
         (
@@ -168,8 +220,17 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         ("seed".to_string(), num(opts.seed as f64)),
         ("reps".to_string(), num(reps as f64)),
         ("quick".to_string(), Json::Bool(opts.quick)),
+        ("kv_block_tokens".to_string(), num(BENCH_BLOCK_TOKENS as f64)),
         ("modes".to_string(), Json::Obj(modes)),
         ("speedup_continuous_vs_lockstep".to_string(), num(speedup)),
+        (
+            "kv_arena_ratio_q8_vs_slab".to_string(),
+            num(slab_arena as f64 / q8_arena.max(1) as f64),
+        ),
+        (
+            "kv_bytes_per_token_ratio_q8_vs_slab".to_string(),
+            num(slab_bpt as f64 / q8_bpt.max(1) as f64),
+        ),
     ];
     Ok(ServeBenchReport { entries, lines, speedup_continuous_vs_lockstep: speedup })
 }

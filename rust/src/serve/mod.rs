@@ -13,7 +13,11 @@
 //! stacking activations so every packed weight matrix is streamed once per
 //! step via the batched `gemm` kernels — the substrate of the
 //! continuous-batching scheduler in [`sched`] and the serve benchmark in
-//! [`bench`].
+//! [`bench`]. The pool is backend-agnostic (`sched::KvStoreKind`): slab
+//! f32 slots, vLLM-style paged blocks, or paged 8-bit group-quantized
+//! blocks; attention reads go through `KvPool::layer_kv`, which borrows
+//! the slab arena zero-copy and gathers/dequantizes paged blocks into
+//! per-step scratch.
 
 pub mod bench;
 pub mod sched;
@@ -22,7 +26,7 @@ use anyhow::{bail, Result};
 
 use crate::config::QuantSetting;
 use crate::model::ModelParams;
-use crate::quant::PackedMatrix;
+use crate::quant::{GemmScratch, PackedMatrix};
 use crate::runtime::ModelDesc;
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -48,8 +52,10 @@ impl LinearStore {
     /// weight matrix is streamed exactly once for the whole batch (k-major
     /// for FP, group/k-major unpack-once for packed); the per-row
     /// accumulation order is identical to `gemv`, so each output row is
-    /// bit-for-bit what `gemv` would produce for that row alone.
-    fn gemm(&self, xs: &[f32], b: usize, ys: &mut [f32]) {
+    /// bit-for-bit what `gemv` would produce for that row alone. `scratch`
+    /// backs the packed path's unpack/accumulator buffers (no per-call
+    /// allocation); the FP path doesn't need it.
+    fn gemm(&self, xs: &[f32], b: usize, ys: &mut [f32], scratch: &mut GemmScratch) {
         match self {
             LinearStore::Fp(w) => {
                 let (cin, cout) = (w.shape()[0], w.shape()[1]);
@@ -71,7 +77,7 @@ impl LinearStore {
                     }
                 }
             }
-            LinearStore::Packed(p) => p.gemm(xs, b, ys),
+            LinearStore::Packed(p) => p.gemm(xs, b, ys, scratch),
         }
     }
 
@@ -169,8 +175,15 @@ fn add_bias_rows(ys: &mut [f32], bias: &[f32], b: usize) {
 }
 
 /// Batched projection epilogue: ys = xs @ W, then `+= bias` per row.
-fn gemm_bias_rows(w: &LinearStore, bias: &[f32], xs: &[f32], b: usize, ys: &mut [f32]) {
-    w.gemm(xs, b, ys);
+fn gemm_bias_rows(
+    w: &LinearStore,
+    bias: &[f32],
+    xs: &[f32],
+    b: usize,
+    ys: &mut [f32],
+    scratch: &mut GemmScratch,
+) {
+    w.gemm(xs, b, ys, scratch);
     add_bias_rows(ys, bias, b);
 }
 
@@ -419,7 +432,8 @@ impl Engine {
         assert!(b <= scratch.cap, "batch {b} exceeds scratch capacity {}", scratch.cap);
         let d = self.desc.d_model;
         let dff = self.desc.d_ff;
-        let BatchScratch { xs, x1, q, k, v, ao, ff1, ff2, scores, logits, .. } = scratch;
+        let BatchScratch { xs, x1, q, k, v, ao, ff1, ff2, scores, logits, kv_k, kv_v, gemm, .. } =
+            scratch;
         for s in 0..b {
             let x = &mut xs[s * d..(s + 1) * d];
             x.copy_from_slice(self.embed.row(tokens[s] as usize));
@@ -439,7 +453,7 @@ impl Engine {
             }
             for (name, dst) in [("wq", &mut *q), ("wk", &mut *k), ("wv", &mut *v)] {
                 let (_, w, bias) = blk.linear(name);
-                gemm_bias_rows(w, bias, &x1[..b * d], b, &mut dst[..b * d]);
+                gemm_bias_rows(w, bias, &x1[..b * d], b, &mut dst[..b * d], &mut *gemm);
             }
             if llama {
                 for s in 0..b {
@@ -452,13 +466,16 @@ impl Engine {
                 pool.append(slots[s], li, &k[s * d..(s + 1) * d], &v[s * d..(s + 1) * d]);
             }
             // attention over each sequence's own pooled cache (ragged
-            // lengths; tiny next to the weight streaming the gemms share)
+            // lengths; tiny next to the weight streaming the gemms share).
+            // `layer_kv` yields contiguous (t, d) views: the slab backend
+            // borrows its arena directly, the paged backends walk the
+            // sequence's block table and gather (Q8: dequantize) into the
+            // per-step kv_k/kv_v scratch
             let hd = self.desc.head_dim;
             let scale = 1.0 / (hd as f32).sqrt();
             for s in 0..b {
                 let t = pool.len(slots[s]) + 1;
-                let kc = pool.k_slice(slots[s], li, t);
-                let vc = pool.v_slice(slots[s], li, t);
+                let (kc, vc) = pool.layer_kv(slots[s], li, t, &mut *kv_k, &mut *kv_v);
                 let qrow = &q[s * d..(s + 1) * d];
                 let aorow = &mut ao[s * d..(s + 1) * d];
                 aorow.iter_mut().for_each(|a| *a = 0.0);
@@ -490,7 +507,7 @@ impl Engine {
             }
             {
                 let (_, w, bias) = blk.linear("wo");
-                w.gemm(&ao[..b * d], b, &mut x1[..b * d]);
+                w.gemm(&ao[..b * d], b, &mut x1[..b * d], &mut *gemm);
                 residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
             }
             // --- ffn ---
@@ -500,23 +517,23 @@ impl Engine {
             if llama {
                 {
                     let (_, w, bias) = blk.linear("wg");
-                    gemm_bias_rows(w, bias, &x1[..b * d], b, &mut ff1[..b * dff]);
+                    gemm_bias_rows(w, bias, &x1[..b * d], b, &mut ff1[..b * dff], &mut *gemm);
                 }
                 {
                     let (_, w, bias) = blk.linear("wu");
-                    gemm_bias_rows(w, bias, &x1[..b * d], b, &mut ff2[..b * dff]);
+                    gemm_bias_rows(w, bias, &x1[..b * d], b, &mut ff2[..b * dff], &mut *gemm);
                 }
                 for i in 0..b * dff {
                     ff1[i] = silu(ff1[i]) * ff2[i];
                 }
                 let (_, w, bias) = blk.linear("wd");
-                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d]);
+                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d], &mut *gemm);
                 residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
             } else {
                 {
                     // fused bias + ReLU, as in `forward_token`
                     let (_, w, bias) = blk.linear("w1");
-                    w.gemm(&x1[..b * d], b, &mut ff1[..b * dff]);
+                    w.gemm(&x1[..b * d], b, &mut ff1[..b * dff], &mut *gemm);
                     for s in 0..b {
                         ff1[s * dff..(s + 1) * dff]
                             .iter_mut()
@@ -525,7 +542,7 @@ impl Engine {
                     }
                 }
                 let (_, w, bias) = blk.linear("w2");
-                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d]);
+                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d], &mut *gemm);
                 residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
             }
         }
@@ -536,13 +553,18 @@ impl Engine {
             norm(&xs[s * d..(s + 1) * d], &self.lnf_w, &self.lnf_b, &mut x1[s * d..(s + 1) * d]);
         }
         let vocab = self.desc.vocab;
-        self.head.gemm(&x1[..b * d], b, &mut logits[..b * vocab]);
+        self.head.gemm(&x1[..b * d], b, &mut logits[..b * vocab], gemm);
     }
 
     /// Scratch for `forward_step` over at most `cap` co-scheduled
-    /// sequences attending over at most `max_t` cached positions.
+    /// sequences attending over at most `max_t` cached positions. All
+    /// buffers — including the packed-gemm scratch and the paged-KV
+    /// gather buffers — are sized up front, so the decode loop never
+    /// allocates.
     pub fn new_batch_scratch(&self, cap: usize, max_t: usize) -> BatchScratch {
         let d = self.desc.d_model;
+        let mut gemm = GemmScratch::default();
+        gemm.reserve(cap, d.max(self.desc.d_ff).max(self.desc.vocab));
         BatchScratch {
             cap,
             xs: vec![0.0; cap * d],
@@ -555,6 +577,9 @@ impl Engine {
             ff2: vec![0.0; cap * self.desc.d_ff],
             scores: vec![0.0; max_t + 1],
             logits: vec![0.0; cap * self.desc.vocab],
+            kv_k: vec![0.0; (max_t + 1) * d],
+            kv_v: vec![0.0; (max_t + 1) * d],
+            gemm,
         }
     }
 
@@ -682,6 +707,12 @@ pub struct BatchScratch {
     scores: Vec<f32>,
     /// (cap, vocab) logits left by the last `forward_step`.
     pub logits: Vec<f32>,
+    /// Per-step contiguous K/V gather/dequant targets for the paged KV
+    /// backends ((max_t, d) each; untouched by the slab backend).
+    kv_k: Vec<f32>,
+    kv_v: Vec<f32>,
+    /// Unpack/accumulator scratch for the packed `gemm` kernels.
+    gemm: GemmScratch,
 }
 
 impl BatchScratch {
@@ -700,8 +731,11 @@ impl BatchScratch {
             + self.ff1.len()
             + self.ff2.len()
             + self.scores.len()
-            + self.logits.len())
+            + self.logits.len()
+            + self.kv_k.len()
+            + self.kv_v.len())
             * 4
+            + self.gemm.bytes()
     }
 }
 

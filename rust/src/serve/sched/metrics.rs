@@ -38,6 +38,16 @@ pub struct ServeMetrics {
     pub peak_running_bytes: usize,
     pub total_secs: f64,
     pub steps: usize,
+    /// KV backend name (slab | paged | paged-q8).
+    pub kv_store: String,
+    /// Preallocated KV arena bytes (the pool's RM contribution).
+    pub kv_arena_bytes: usize,
+    /// Bytes one cached token occupies across all layers (codes + scales).
+    pub kv_bytes_per_token: usize,
+    /// Tokens per allocation block (slab: the whole slot).
+    pub kv_block_tokens: usize,
+    /// High-water mark of KV blocks in use (block-granular RM).
+    pub peak_kv_blocks: usize,
 }
 
 impl ServeMetrics {
@@ -64,6 +74,11 @@ impl ServeMetrics {
             total_secs: self.total_secs,
             steps: self.steps,
             peak_running_bytes: self.peak_running_bytes,
+            kv_store: self.kv_store.clone(),
+            kv_arena_bytes: self.kv_arena_bytes,
+            kv_bytes_per_token: self.kv_bytes_per_token,
+            kv_block_tokens: self.kv_block_tokens,
+            peak_kv_blocks: self.peak_kv_blocks,
         }
     }
 }
@@ -91,6 +106,11 @@ pub struct ServeSummary {
     pub total_secs: f64,
     pub steps: usize,
     pub peak_running_bytes: usize,
+    pub kv_store: String,
+    pub kv_arena_bytes: usize,
+    pub kv_bytes_per_token: usize,
+    pub kv_block_tokens: usize,
+    pub peak_kv_blocks: usize,
 }
 
 impl ServeSummary {
@@ -113,6 +133,11 @@ impl ServeSummary {
         m.insert("total_secs".to_string(), Json::Num(self.total_secs));
         m.insert("steps".to_string(), Json::Num(self.steps as f64));
         m.insert("peak_running_bytes".to_string(), Json::Num(self.peak_running_bytes as f64));
+        m.insert("kv_store".to_string(), Json::Str(self.kv_store.clone()));
+        m.insert("kv_arena_bytes".to_string(), Json::Num(self.kv_arena_bytes as f64));
+        m.insert("kv_bytes_per_token".to_string(), Json::Num(self.kv_bytes_per_token as f64));
+        m.insert("kv_block_tokens".to_string(), Json::Num(self.kv_block_tokens as f64));
+        m.insert("peak_kv_blocks".to_string(), Json::Num(self.peak_kv_blocks as f64));
         Json::Obj(m)
     }
 }
@@ -129,13 +154,22 @@ impl std::fmt::Display for ServeSummary {
             "ttft p50 {:.1} ms, p90 {:.1} ms; per-step p50 {:.2} / p90 {:.2} / p99 {:.2} ms",
             self.ttft_p50_ms, self.ttft_p90_ms, self.step_p50_ms, self.step_p90_ms, self.step_p99_ms
         )?;
-        write!(
+        writeln!(
             f,
             "queue wait mean {:.1} steps; batch width mean {:.1} over {} steps; peak RM {}",
             self.mean_queue_wait_steps,
             self.mean_batch_width,
             self.steps,
             fmt_bytes(self.peak_running_bytes)
+        )?;
+        write!(
+            f,
+            "kv {}: arena {}, {} B/token, {}-token blocks, peak {} blocks",
+            self.kv_store,
+            fmt_bytes(self.kv_arena_bytes),
+            self.kv_bytes_per_token,
+            self.kv_block_tokens,
+            self.peak_kv_blocks
         )
     }
 }
@@ -169,6 +203,11 @@ mod tests {
             peak_running_bytes: 1024,
             total_secs: 4.0,
             steps: 3,
+            kv_store: "paged-q8".into(),
+            kv_arena_bytes: 512,
+            kv_bytes_per_token: 72,
+            kv_block_tokens: 16,
+            peak_kv_blocks: 5,
         };
         let s = m.summary();
         assert_eq!(s.requests, 2);
@@ -181,7 +220,11 @@ mod tests {
         let j = s.to_json();
         assert!((j.get("decode_tok_per_s").unwrap().as_f64().unwrap() - 8.0).abs() < 1e-9);
         assert_eq!(j.get("steps").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("kv_store").unwrap().as_str().unwrap(), "paged-q8");
+        assert_eq!(j.get("kv_bytes_per_token").unwrap().as_usize().unwrap(), 72);
+        assert_eq!(j.get("peak_kv_blocks").unwrap().as_usize().unwrap(), 5);
         let text = format!("{s}");
         assert!(text.contains("decode 8.0 tok/s"), "{text}");
+        assert!(text.contains("kv paged-q8"), "{text}");
     }
 }

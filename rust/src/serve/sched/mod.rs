@@ -15,10 +15,14 @@
 //!
 //! * **admission** — requests sit in an arrival-ordered queue
 //!   ([`Scheduler::submit`]); each scheduler tick admits every visible
-//!   request (its `arrival_step` has passed) for which the [`KvPool`] has a
-//!   free slot. The pool is a slab of fixed-size KV slots leased to live
-//!   sequences and reclaimed at retire, so admission is O(1) and running
-//!   memory is one preallocated slab (Table 3 'RM').
+//!   request (its `arrival_step` has passed) for which the [`KvPool`] can
+//!   reserve capacity: a free slot under the slab backend, a free handle
+//!   *plus enough free blocks* under the paged backends
+//!   ([`KvPool::can_admit`]). When blocks are exhausted the request stays
+//!   queued — back-pressure, never a panic — until retiring sequences
+//!   return blocks. The pool preallocates one arena whatever the backend,
+//!   so running memory stays a single constant slab (Table 3 'RM'), and
+//!   the `paged-q8` backend shrinks it ~3.6x (see [`pool`]).
 //! * **prefill** — the admitted prompt is driven through
 //!   [`Engine::forward_step`] token by token into the leased slot, and the
 //!   first token is sampled from the final prompt logits (this is the
@@ -44,7 +48,7 @@ pub mod metrics;
 pub mod pool;
 
 pub use metrics::{RequestMetrics, ServeMetrics, ServeSummary};
-pub use pool::{KvPool, SlotId};
+pub use pool::{KvPool, KvStoreKind, SlotId};
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -76,10 +80,28 @@ pub struct SchedConfig {
     /// KV pool slots == maximum co-resident sequences (decode batch width).
     pub slots: usize,
     /// KV token capacity per slot; `submit` rejects requests whose
-    /// `prompt + max_new_tokens` exceed it.
+    /// `prompt + max_new_tokens` exceed it. The pool's total token budget
+    /// is `slots * slot_tokens` for every backend, so backends compare at
+    /// equal capacity.
     pub slot_tokens: usize,
     /// Optional end-of-sequence token: sampling it retires the request.
     pub eos: Option<i32>,
+    /// KV storage backend (slab | paged | paged-q8).
+    pub kv: KvStoreKind,
+    /// Tokens per block for the paged backends (ignored by slab).
+    pub block_tokens: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            slots: 8,
+            slot_tokens: 128,
+            eos: None,
+            kv: KvStoreKind::SlabF32,
+            block_tokens: 16,
+        }
+    }
 }
 
 struct Pending {
@@ -119,14 +141,20 @@ impl<'e> Scheduler<'e> {
     pub fn new(engine: &'e Engine, cfg: SchedConfig) -> Scheduler<'e> {
         assert!(cfg.slots > 0 && cfg.slot_tokens > 0);
         let pool = KvPool::new(
+            cfg.kv,
             cfg.slots,
             engine.desc.n_layers,
             cfg.slot_tokens,
             engine.desc.d_model,
+            cfg.block_tokens,
         );
         let scratch = engine.new_batch_scratch(cfg.slots, cfg.slot_tokens);
         let metrics = ServeMetrics {
             peak_running_bytes: engine.weight_bytes() + pool.bytes() + scratch.bytes(),
+            kv_store: pool.kind().name().to_string(),
+            kv_arena_bytes: pool.bytes(),
+            kv_bytes_per_token: pool.bytes_per_token(),
+            kv_block_tokens: pool.block_tokens(),
             ..ServeMetrics::default()
         };
         Scheduler {
@@ -192,6 +220,7 @@ impl<'e> Scheduler<'e> {
         self.decode();
         self.tick += 1;
         self.metrics.steps = self.tick;
+        self.metrics.peak_kv_blocks = self.pool.peak_blocks();
     }
 
     /// Drive to completion; errors out (rather than spinning) if progress
@@ -216,14 +245,27 @@ impl<'e> Scheduler<'e> {
         Ok(self.metrics.summary())
     }
 
+    /// Worst-case cached positions a request reserves: the whole prompt
+    /// plus every token it may decode (the last sampled token is never
+    /// fed back, so this over-reserves by one — the same slack the slab
+    /// slot check always had).
+    fn need_tokens(req: &Request) -> usize {
+        req.prompt.len() + req.max_new_tokens
+    }
+
     fn admit(&mut self) {
         for p in self.pending.iter_mut() {
             if p.visible.is_none() && p.req.arrival_step <= self.tick {
                 p.visible = Some(Instant::now());
             }
         }
-        while self.pending.front().is_some_and(|p| p.visible.is_some())
-            && self.pool.free_slots() > 0
+        // FIFO with back-pressure: when the head request's blocks don't
+        // fit (pool saturated, or block exhaustion under the paged
+        // backends) it stays queued until retiring sequences free capacity
+        while self
+            .pending
+            .front()
+            .is_some_and(|p| p.visible.is_some() && self.pool.can_admit(Self::need_tokens(&p.req)))
         {
             let p = self.pending.pop_front().unwrap();
             self.start(p);
@@ -236,7 +278,10 @@ impl<'e> Scheduler<'e> {
     fn start(&mut self, p: Pending) {
         let visible_at = p.visible.expect("admit only starts visible requests");
         let req = p.req;
-        let slot = self.pool.lease().expect("admit checked a slot is free");
+        let slot = self
+            .pool
+            .lease(Self::need_tokens(&req))
+            .expect("admit checked the pool can host this request");
         let mut rng = Rng::new(req.seed);
         let t0 = Instant::now();
         for &tok in &req.prompt {

@@ -1,15 +1,103 @@
-//! Slab-style pooled KV cache for the continuous-batching scheduler.
+//! Pooled KV cache for the continuous-batching scheduler, behind a unified
+//! `KvStore`-style backend selector ([`KvStoreKind`]).
 //!
-//! One contiguous allocation holds `n_slots` fixed-size KV slots; a live
-//! sequence leases a slot at admission and the slot returns to the free
-//! list when the sequence retires (EOS / max tokens), so a new request can
-//! join the running batch mid-flight instead of waiting for a lockstep
-//! batch to drain. Fixed-size slots keep the memory accounting trivial —
-//! running memory is one slab, the RM column of Table 3; a paged layout
-//! (and a quantized KV cache) are the listed follow-ons in ROADMAP.md.
+//! Three storage backends share one front-end (lease / append / advance /
+//! read), so the scheduler and `Engine::forward_step` are backend-agnostic:
+//!
+//! * **`slab`** ([`KvStoreKind::SlabF32`]) — the original layout and the
+//!   bit-for-bit reference: one contiguous f32 arena indexed
+//!   `[slot][layer][t][d]`, every sequence owning a fixed `slot_len`-token
+//!   slot. Reads borrow straight into the arena (zero copy).
+//! * **`paged`** ([`KvStoreKind::PagedF32`]) — vLLM-style paging: the
+//!   arena is split into fixed-size blocks of `block_tokens` positions
+//!   (all layers of a position live in the same block) and each sequence
+//!   maps logical positions onto blocks through a per-sequence block
+//!   table. A request reserves only `ceil(need / block_tokens)` blocks,
+//!   so long and short sequences share the arena instead of every request
+//!   paying the worst-case slot.
+//! * **`paged-q8`** ([`KvStoreKind::PagedQ8`]) — the paged layout with K/V
+//!   rows stored as asymmetric 8-bit codes, group-quantized along `d`
+//!   ([`KV_GROUP`] lanes per group) with one f32 `(h, z)` pair per group
+//!   per row — the same min-max formulation as the weight quantizer
+//!   (`quant::quant_params`, restated per row by `quant::quantize_row_q8`).
+//!   Appends quantize in one pass; reads dequantize block runs into the
+//!   caller's per-step scratch. Cuts KV bytes/token ~3.6x at the bench
+//!   model's d=192 (1536 -> 432 B per token-layer), which is most of the
+//!   Table 3 'RM' column once weights are packed.
+//!
+//! Block layout of the paged backends, with `B = block_tokens`:
+//!
+//! ```text
+//!   arena:   [block 0][block 1][block 2] ... [block n_blocks-1]
+//!   block:   [layer 0: B rows of d][layer 1: B rows of d] ... [layer L-1]
+//!
+//!   seq s, logical position t  ->  block table[s][t / B], row t % B
+//!
+//!   table[s] = [7, 2, 9]    // any free blocks, in logical order:
+//!                           // t in [0,B) lives in block 7,
+//!                           // t in [B,2B) in block 2, ...
+//! ```
+//!
+//! A Q8 block additionally carries scales: codes are u8 `[layer][row][d]`,
+//! scales are f32 `[layer][row][2 * ng]` = `[h, z]` per `KV_GROUP`-lane
+//! group of the row.
+//!
+//! Capacity is reserved in full at lease time, so appends never allocate
+//! and block exhaustion can never strand a mid-flight sequence; the
+//! admission back-pressure lives in the scheduler, which keeps a request
+//! queued while [`KvPool::can_admit`] says its blocks don't fit yet.
+//! Every read/write accessor asserts the handle is actually leased — a
+//! `SlotId` retained after `release` panics instead of silently reading
+//! another sequence's KV.
 
-/// Handle to a leased slot. Only the pool mints these (the field is
-/// crate-private), so holding one proves a lease happened.
+use anyhow::{bail, Result};
+
+use crate::quant::{dequantize_row_q8, q8_row_groups, quantize_row_q8};
+
+/// Quant group width (lanes of `d`) for the `paged-q8` backend's per-row
+/// scales. 64 keeps the scale overhead at ~2 f32 pairs per head-dim-sized
+/// run while staying below one group per head at the bench model sizes.
+pub const KV_GROUP: usize = 64;
+
+/// KV storage backend selector, threaded from `[serve]` config / the
+/// `serve --continuous --kv` flag down to the pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvStoreKind {
+    /// Contiguous per-slot f32 slabs (the bit-for-bit reference layout).
+    SlabF32,
+    /// Block-paged f32 storage with per-sequence block tables.
+    PagedF32,
+    /// Block-paged 8-bit group-quantized storage.
+    PagedQ8,
+}
+
+impl KvStoreKind {
+    pub fn parse(s: &str) -> Result<KvStoreKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "slab" | "slab-f32" => Ok(KvStoreKind::SlabF32),
+            "paged" | "paged-f32" => Ok(KvStoreKind::PagedF32),
+            "paged-q8" | "q8" => Ok(KvStoreKind::PagedQ8),
+            other => bail!("unknown kv store '{other}' (expected slab|paged|paged-q8)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvStoreKind::SlabF32 => "slab",
+            KvStoreKind::PagedF32 => "paged",
+            KvStoreKind::PagedQ8 => "paged-q8",
+        }
+    }
+
+    pub fn paged(&self) -> bool {
+        !matches!(self, KvStoreKind::SlabF32)
+    }
+}
+
+/// Handle to a leased sequence slot. Only the pool mints these (the field
+/// is crate-private), so holding one proves a lease happened — and every
+/// accessor re-checks the lease is still live, so a stale handle panics
+/// instead of aliasing another sequence's cache.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SlotId(pub(crate) usize);
 
@@ -19,63 +107,165 @@ impl SlotId {
     }
 }
 
-/// Pooled per-layer KV storage, indexed `[slot][layer][t][d]`.
+/// Backend storage arenas (see the module docs for layouts). The slab and
+/// paged f32 backends share one representation — a slab is just a paged
+/// arena whose blocks are `slot_len` tokens and identity-mapped to slots —
+/// so the backend kind lives only in `KvPool::kind`, never duplicated
+/// here.
+enum Store {
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    Q8 { qk: Vec<u8>, qv: Vec<u8>, sk: Vec<f32>, sv: Vec<f32> },
+}
+
+/// Pooled per-layer KV storage for co-scheduled sequences.
 pub struct KvPool {
+    kind: KvStoreKind,
     n_slots: usize,
     layers: usize,
+    /// Maximum cached tokens a single sequence may reserve.
     slot_len: usize,
     d: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    /// Tokens per block (slab: == `slot_len`, one implicit block per slot).
+    block_tokens: usize,
+    n_blocks: usize,
+    /// Q8 scale groups per cached row.
+    ng: usize,
+    store: Store,
     lens: Vec<usize>,
+    /// Reserved token capacity per leased sequence.
+    caps: Vec<usize>,
     leased: Vec<bool>,
     free: Vec<usize>,
+    /// Per-sequence block tables (paged backends; empty for slab).
+    tables: Vec<Vec<u32>>,
+    block_free: Vec<u32>,
     peak_leased: usize,
+    peak_blocks: usize,
 }
 
 impl KvPool {
-    pub fn new(n_slots: usize, layers: usize, slot_len: usize, d: usize) -> KvPool {
+    /// Build a pool whose total token budget matches a slab of
+    /// `n_slots * slot_len` positions, whatever the backend — so backends
+    /// are compared at equal capacity. `block_tokens` is clamped into
+    /// `1..=slot_len` and ignored by the slab backend.
+    pub fn new(
+        kind: KvStoreKind,
+        n_slots: usize,
+        layers: usize,
+        slot_len: usize,
+        d: usize,
+        block_tokens: usize,
+    ) -> KvPool {
         assert!(n_slots > 0 && layers > 0 && slot_len > 0 && d > 0);
+        let (block_tokens, n_blocks) = if kind.paged() {
+            let bt = block_tokens.clamp(1, slot_len);
+            (bt, (n_slots * slot_len).div_ceil(bt))
+        } else {
+            (slot_len, n_slots)
+        };
+        let ng = q8_row_groups(d, KV_GROUP);
+        // slab: n_blocks == n_slots and block_tokens == slot_len, so this
+        // is exactly the original n_slots * layers * slot_len * d slab
+        let rows = n_blocks * layers * block_tokens;
+        let store = match kind {
+            KvStoreKind::SlabF32 | KvStoreKind::PagedF32 => Store::F32 {
+                k: vec![0.0; rows * d],
+                v: vec![0.0; rows * d],
+            },
+            KvStoreKind::PagedQ8 => Store::Q8 {
+                qk: vec![0u8; rows * d],
+                qv: vec![0u8; rows * d],
+                sk: vec![0.0; rows * 2 * ng],
+                sv: vec![0.0; rows * 2 * ng],
+            },
+        };
         KvPool {
+            kind,
             n_slots,
             layers,
             slot_len,
             d,
-            k: vec![0.0; n_slots * layers * slot_len * d],
-            v: vec![0.0; n_slots * layers * slot_len * d],
+            block_tokens,
+            n_blocks,
+            ng,
+            store,
             lens: vec![0; n_slots],
+            caps: vec![0; n_slots],
             leased: vec![false; n_slots],
             free: (0..n_slots).rev().collect(),
+            tables: vec![Vec::new(); n_slots],
+            block_free: if kind.paged() { (0..n_blocks as u32).rev().collect() } else { Vec::new() },
             peak_leased: 0,
+            peak_blocks: 0,
         }
     }
 
-    /// Lease a free slot, or `None` when the pool is saturated. A freshly
-    /// leased slot always starts at KV length 0.
-    pub fn lease(&mut self) -> Option<SlotId> {
+    /// Admission check: a free sequence handle, plus — for the paged
+    /// backends — enough free blocks to reserve `tokens` worst-case. The
+    /// scheduler queues (back-pressure) while this is false.
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        if self.free.is_empty() || tokens == 0 || tokens > self.slot_len {
+            return false;
+        }
+        match self.kind {
+            KvStoreKind::SlabF32 => true,
+            _ => tokens.div_ceil(self.block_tokens) <= self.block_free.len(),
+        }
+    }
+
+    /// Lease capacity for a sequence of up to `tokens` cached positions,
+    /// or `None` when the pool cannot admit it yet. Blocks are reserved in
+    /// full here, so appends never allocate and never run out mid-flight.
+    /// A freshly leased sequence always starts at KV length 0.
+    pub fn lease(&mut self, tokens: usize) -> Option<SlotId> {
+        if !self.can_admit(tokens) {
+            return None;
+        }
         let s = self.free.pop()?;
         assert!(!self.leased[s], "KvPool invariant violated: slot {s} double-leased");
+        debug_assert!(self.tables[s].is_empty());
         self.leased[s] = true;
         self.lens[s] = 0;
+        self.caps[s] = tokens;
+        if self.kind.paged() {
+            for _ in 0..tokens.div_ceil(self.block_tokens) {
+                let b = self.block_free.pop().expect("can_admit checked the block budget");
+                self.tables[s].push(b);
+            }
+        }
         self.peak_leased = self.peak_leased.max(self.leased_slots());
+        self.peak_blocks = self.peak_blocks.max(self.blocks_in_use());
         Some(SlotId(s))
     }
 
-    /// Return a slot to the free list (sequence retired).
+    /// Return a sequence's handle and blocks to the free lists (retired).
     pub fn release(&mut self, slot: SlotId) {
         let s = slot.0;
         assert!(self.leased[s], "KvPool invariant violated: releasing free slot {s}");
         self.leased[s] = false;
         self.lens[s] = 0;
+        self.caps[s] = 0;
+        let mut table = std::mem::take(&mut self.tables[s]);
+        self.block_free.append(&mut table);
         self.free.push(s);
     }
 
-    /// Cached positions for a leased slot.
+    #[inline]
+    fn check(&self, slot: SlotId) {
+        assert!(
+            self.leased[slot.0],
+            "KvPool: slot {} is not leased (stale handle after release?)",
+            slot.0
+        );
+    }
+
+    /// Cached positions for a leased sequence.
     pub fn len(&self, slot: SlotId) -> usize {
+        self.check(slot);
         self.lens[slot.0]
     }
 
-    /// Token capacity of every slot.
+    /// Maximum token capacity a single sequence may reserve.
     pub fn slot_tokens(&self) -> usize {
         self.slot_len
     }
@@ -92,114 +282,422 @@ impl KvPool {
         self.n_slots - self.free.len()
     }
 
-    /// High-water mark of concurrently leased slots.
+    /// High-water mark of concurrently leased sequences.
     pub fn peak_leased(&self) -> usize {
         self.peak_leased
     }
 
-    /// Whole-slab bytes. The pool preallocates, so this is also its
+    pub fn kind(&self) -> KvStoreKind {
+        self.kind
+    }
+
+    /// Tokens per allocation block (slab: the whole slot).
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        match self.kind {
+            KvStoreKind::SlabF32 => self.free.len(),
+            _ => self.block_free.len(),
+        }
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.n_blocks - self.free_blocks()
+    }
+
+    /// High-water mark of blocks in use (block-granular RM).
+    pub fn peak_blocks(&self) -> usize {
+        self.peak_blocks
+    }
+
+    /// Whole-arena bytes. The pool preallocates, so this is also its
     /// running-memory contribution (Table 3 'RM').
     pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * 4
+        match &self.store {
+            Store::F32 { k, v } => (k.len() + v.len()) * 4,
+            Store::Q8 { qk, qv, sk, sv } => qk.len() + qv.len() + (sk.len() + sv.len()) * 4,
+        }
     }
 
+    /// Bytes one cached token occupies across all layers (K + V codes +
+    /// scales) — the backend-comparable "KV bytes/token" metric.
+    pub fn bytes_per_token(&self) -> usize {
+        match self.kind {
+            KvStoreKind::SlabF32 | KvStoreKind::PagedF32 => self.layers * self.d * 2 * 4,
+            KvStoreKind::PagedQ8 => self.layers * (self.d * 2 + self.ng * 2 * 4 * 2),
+        }
+    }
+
+    /// First arena row of (block `blk`, `layer`) — *the* block-layout
+    /// formula, shared by every accessor so the layout can only change in
+    /// one place. Under the slab backend each slot is one implicit block
+    /// (`block_tokens == slot_len`), so `blk` is the slot index.
     #[inline]
-    fn base(&self, slot: usize, layer: usize) -> usize {
-        (slot * self.layers + layer) * self.slot_len * self.d
+    fn block_row(&self, blk: usize, layer: usize) -> usize {
+        (blk * self.layers + layer) * self.block_tokens
     }
 
-    /// Write one position's K/V for one layer at the slot's current length.
-    /// Lengths advance once per decode step via `advance`, after all layers
-    /// have appended (mirroring `KvCache`'s end-of-step `len` bump).
+    /// Arena offsets for the row of (slot `s`, `layer`, position `t`):
+    /// `(code/f32 base, q8 scale base)`.
+    #[inline]
+    fn offsets(&self, s: usize, layer: usize, t: usize) -> (usize, usize) {
+        let (blk, within) = match self.kind {
+            KvStoreKind::SlabF32 => (s, t),
+            _ => (self.tables[s][t / self.block_tokens] as usize, t % self.block_tokens),
+        };
+        let row = self.block_row(blk, layer) + within;
+        (row * self.d, row * 2 * self.ng)
+    }
+
+    /// Write one position's K/V for one layer at the sequence's current
+    /// length. Lengths advance once per decode step via `advance`, after
+    /// all layers have appended (mirroring `KvCache`'s end-of-step `len`
+    /// bump). The Q8 backend quantizes here, in one pass.
     pub(crate) fn append(&mut self, slot: SlotId, layer: usize, k: &[f32], v: &[f32]) {
-        let t = self.lens[slot.0];
-        assert!(t < self.slot_len, "KvPool slot {} overflow at {t} tokens", slot.0);
-        let o = self.base(slot.0, layer) + t * self.d;
-        self.k[o..o + self.d].copy_from_slice(k);
-        self.v[o..o + self.d].copy_from_slice(v);
+        self.check(slot);
+        let s = slot.0;
+        let t = self.lens[s];
+        assert!(t < self.caps[s], "KvPool slot {s} overflow at {t} tokens (cap {})", self.caps[s]);
+        let d = self.d;
+        let (base, sbase) = self.offsets(s, layer, t);
+        match &mut self.store {
+            Store::F32 { k: ka, v: va } => {
+                ka[base..base + d].copy_from_slice(k);
+                va[base..base + d].copy_from_slice(v);
+            }
+            Store::Q8 { qk, qv, sk, sv } => {
+                let ng2 = 2 * self.ng;
+                quantize_row_q8(k, KV_GROUP, &mut qk[base..base + d], &mut sk[sbase..sbase + ng2]);
+                quantize_row_q8(v, KV_GROUP, &mut qv[base..base + d], &mut sv[sbase..sbase + ng2]);
+            }
+        }
     }
 
     pub(crate) fn advance(&mut self, slot: SlotId) {
-        let t = self.lens[slot.0];
-        assert!(t < self.slot_len, "KvPool slot {} advanced past capacity", slot.0);
-        self.lens[slot.0] = t + 1;
+        self.check(slot);
+        let s = slot.0;
+        let t = self.lens[s];
+        assert!(t < self.caps[s], "KvPool slot {s} advanced past capacity {}", self.caps[s]);
+        self.lens[s] = t + 1;
     }
 
-    /// First `t` cached positions of one layer, contiguous `(t, d)`.
-    pub(crate) fn k_slice(&self, slot: SlotId, layer: usize, t: usize) -> &[f32] {
-        let o = self.base(slot.0, layer);
-        &self.k[o..o + t * self.d]
-    }
-
-    pub(crate) fn v_slice(&self, slot: SlotId, layer: usize, t: usize) -> &[f32] {
-        let o = self.base(slot.0, layer);
-        &self.v[o..o + t * self.d]
+    /// Contiguous `(t, d)` views of the first `t` cached K/V rows of one
+    /// layer. The slab backend borrows straight into its arena (zero
+    /// copy, bit-for-bit the pre-paging behaviour); the paged backends
+    /// walk the sequence's block table and gather — for Q8, dequantize —
+    /// block runs into the caller's per-step scratch buffers.
+    pub(crate) fn layer_kv<'a>(
+        &'a self,
+        slot: SlotId,
+        layer: usize,
+        t: usize,
+        kbuf: &'a mut Vec<f32>,
+        vbuf: &'a mut Vec<f32>,
+    ) -> (&'a [f32], &'a [f32]) {
+        self.check(slot);
+        let s = slot.0;
+        let d = self.d;
+        debug_assert!(t <= self.caps[s]);
+        if self.kind == KvStoreKind::SlabF32 {
+            // zero copy: the slot's layer run is contiguous in the arena
+            let Store::F32 { k, v } = &self.store else {
+                unreachable!("slab backend stores f32")
+            };
+            let o = self.block_row(s, layer) * d;
+            return (&k[o..o + t * d], &v[o..o + t * d]);
+        }
+        if kbuf.len() < t * d {
+            kbuf.resize(t * d, 0.0);
+        }
+        if vbuf.len() < t * d {
+            vbuf.resize(t * d, 0.0);
+        }
+        let bt = self.block_tokens;
+        let ng2 = 2 * self.ng;
+        let mut done = 0usize;
+        for &blk in &self.tables[s] {
+            if done >= t {
+                break;
+            }
+            let run = bt.min(t - done);
+            let row0 = self.block_row(blk as usize, layer);
+            match &self.store {
+                Store::F32 { k, v } => {
+                    kbuf[done * d..(done + run) * d]
+                        .copy_from_slice(&k[row0 * d..(row0 + run) * d]);
+                    vbuf[done * d..(done + run) * d]
+                        .copy_from_slice(&v[row0 * d..(row0 + run) * d]);
+                }
+                Store::Q8 { qk, qv, sk, sv } => {
+                    for r in 0..run {
+                        let (c0, s0) = ((row0 + r) * d, (row0 + r) * ng2);
+                        dequantize_row_q8(
+                            &qk[c0..c0 + d],
+                            KV_GROUP,
+                            &sk[s0..s0 + ng2],
+                            &mut kbuf[(done + r) * d..(done + r + 1) * d],
+                        );
+                        dequantize_row_q8(
+                            &qv[c0..c0 + d],
+                            KV_GROUP,
+                            &sv[s0..s0 + ng2],
+                            &mut vbuf[(done + r) * d..(done + r + 1) * d],
+                        );
+                    }
+                }
+            }
+            done += run;
+        }
+        (&kbuf[..t * d], &vbuf[..t * d])
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
+
+    fn read<'a>(
+        p: &'a KvPool,
+        s: SlotId,
+        layer: usize,
+        t: usize,
+        kb: &'a mut Vec<f32>,
+        vb: &'a mut Vec<f32>,
+    ) -> (&'a [f32], &'a [f32]) {
+        p.layer_kv(s, layer, t, kb, vb)
+    }
 
     #[test]
     fn lease_release_cycle() {
-        let mut p = KvPool::new(3, 2, 4, 8);
-        let a = p.lease().unwrap();
-        let b = p.lease().unwrap();
-        let c = p.lease().unwrap();
-        assert!(p.lease().is_none(), "saturated pool must refuse leases");
-        assert_ne!(a.index(), b.index());
-        assert_ne!(b.index(), c.index());
-        assert_ne!(a.index(), c.index());
-        assert_eq!(p.leased_slots(), 3);
-        p.release(b);
-        assert_eq!(p.free_slots(), 1);
-        let b2 = p.lease().unwrap();
-        assert_eq!(p.len(b2), 0, "recycled slot starts empty");
-        p.release(a);
-        p.release(b2);
-        p.release(c);
-        assert_eq!(p.free_slots(), 3);
-        assert_eq!(p.peak_leased(), 3);
+        for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            let mut p = KvPool::new(kind, 3, 2, 4, 8, 2);
+            let a = p.lease(4).unwrap();
+            let b = p.lease(4).unwrap();
+            let c = p.lease(4).unwrap();
+            assert!(p.lease(4).is_none(), "{kind:?}: saturated pool must refuse leases");
+            assert_ne!(a.index(), b.index());
+            assert_ne!(b.index(), c.index());
+            assert_ne!(a.index(), c.index());
+            assert_eq!(p.leased_slots(), 3);
+            p.release(b);
+            assert_eq!(p.free_slots(), 1);
+            let b2 = p.lease(4).unwrap();
+            assert_eq!(p.len(b2), 0, "recycled slot starts empty");
+            p.release(a);
+            p.release(b2);
+            p.release(c);
+            assert_eq!(p.free_slots(), 3);
+            assert_eq!(p.peak_leased(), 3);
+            assert_eq!(p.free_blocks(), p.n_blocks(), "{kind:?}: all blocks reclaimed");
+        }
     }
 
     #[test]
     #[should_panic(expected = "releasing free slot")]
     fn double_release_panics() {
-        let mut p = KvPool::new(2, 1, 4, 8);
-        let a = p.lease().unwrap();
+        let mut p = KvPool::new(KvStoreKind::SlabF32, 2, 1, 4, 8, 0);
+        let a = p.lease(4).unwrap();
         let stale = a;
         p.release(a);
         p.release(stale);
     }
 
     #[test]
+    #[should_panic(expected = "not leased")]
+    fn stale_handle_read_panics() {
+        // a retained SlotId after release must never read another
+        // sequence's KV — every accessor checks the lease
+        let mut p = KvPool::new(KvStoreKind::SlabF32, 2, 1, 4, 8, 0);
+        let a = p.lease(4).unwrap();
+        let stale = a;
+        p.release(a);
+        let _ = p.len(stale);
+    }
+
+    #[test]
+    #[should_panic(expected = "not leased")]
+    fn stale_handle_append_panics() {
+        let mut p = KvPool::new(KvStoreKind::PagedF32, 1, 1, 4, 2, 2);
+        let a = p.lease(4).unwrap();
+        p.release(a);
+        p.append(a, 0, &[0.0; 2], &[0.0; 2]);
+    }
+
+    #[test]
     fn append_advance_roundtrip() {
-        let mut p = KvPool::new(2, 2, 4, 3);
-        let s = p.lease().unwrap();
-        for t in 0..3 {
-            for l in 0..2 {
-                p.append(s, l, &[t as f32; 3], &[-(t as f32); 3]);
+        for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32] {
+            let mut p = KvPool::new(kind, 2, 2, 4, 3, 2);
+            let s = p.lease(4).unwrap();
+            for t in 0..3 {
+                for l in 0..2 {
+                    p.append(s, l, &[t as f32; 3], &[-(t as f32); 3]);
+                }
+                p.advance(s);
             }
-            p.advance(s);
+            assert_eq!(p.len(s), 3);
+            let (mut kb, mut vb) = (Vec::new(), Vec::new());
+            let (k, _) = read(&p, s, 1, 3, &mut kb, &mut vb);
+            assert_eq!(k, &[0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0], "{kind:?}");
+            let (mut kb, mut vb) = (Vec::new(), Vec::new());
+            let (_, v) = read(&p, s, 0, 2, &mut kb, &mut vb);
+            assert_eq!(v, &[0.0, 0.0, 0.0, -1.0, -1.0, -1.0], "{kind:?}");
         }
-        assert_eq!(p.len(s), 3);
-        assert_eq!(
-            p.k_slice(s, 1, 3),
-            &[0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0]
-        );
-        assert_eq!(p.v_slice(s, 0, 2), &[0.0, 0.0, 0.0, -1.0, -1.0, -1.0]);
     }
 
     #[test]
     #[should_panic(expected = "overflow")]
     fn slot_overflow_panics() {
-        let mut p = KvPool::new(1, 1, 2, 2);
-        let s = p.lease().unwrap();
+        let mut p = KvPool::new(KvStoreKind::SlabF32, 1, 1, 2, 2, 0);
+        let s = p.lease(2).unwrap();
         for _ in 0..2 {
             p.append(s, 0, &[0.0; 2], &[0.0; 2]);
             p.advance(s);
         }
         p.append(s, 0, &[0.0; 2], &[0.0; 2]);
+    }
+
+    #[test]
+    fn paged_matches_slab_bit_for_bit() {
+        // random appends through both f32 backends read back identically,
+        // across block boundaries and ragged final blocks
+        let (layers, cap, d, bt) = (3usize, 11usize, 6usize, 4usize);
+        let mut slab = KvPool::new(KvStoreKind::SlabF32, 2, layers, cap, d, 0);
+        let mut paged = KvPool::new(KvStoreKind::PagedF32, 2, layers, cap, d, bt);
+        let a = slab.lease(cap).unwrap();
+        let b = paged.lease(cap).unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..cap {
+            for l in 0..layers {
+                let kr: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let vr: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                slab.append(a, l, &kr, &vr);
+                paged.append(b, l, &kr, &vr);
+            }
+            slab.advance(a);
+            paged.advance(b);
+        }
+        for l in 0..layers {
+            for t in [1usize, bt, bt + 1, cap] {
+                let (mut kb1, mut vb1) = (Vec::new(), Vec::new());
+                let (mut kb2, mut vb2) = (Vec::new(), Vec::new());
+                let (ks, vs) = read(&slab, a, l, t, &mut kb1, &mut vb1);
+                let (kp, vp) = read(&paged, b, l, t, &mut kb2, &mut vb2);
+                for (x, y) in ks.iter().zip(kp).chain(vs.iter().zip(vp)) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "layer {l} t {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_q8_roundtrip_error_bounded() {
+        let (layers, cap, d, bt) = (2usize, 9usize, 32usize, 4usize);
+        let mut p = KvPool::new(KvStoreKind::PagedQ8, 1, layers, cap, d, bt);
+        let s = p.lease(cap).unwrap();
+        let mut rng = Rng::new(5);
+        let mut rows: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for _ in 0..cap {
+            for l in 0..layers {
+                let kr: Vec<f32> = (0..d).map(|_| rng.normal() * 2.0).collect();
+                let vr: Vec<f32> = (0..d).map(|_| rng.normal() * 2.0).collect();
+                p.append(s, l, &kr, &vr);
+                if l == 0 {
+                    rows.push((kr, vr));
+                }
+            }
+            p.advance(s);
+        }
+        let (mut kb, mut vb) = (Vec::new(), Vec::new());
+        let (k, v) = p.layer_kv(s, 0, cap, &mut kb, &mut vb);
+        for (t, (kr, vr)) in rows.iter().enumerate() {
+            // per-group step = range/255; round-trip is within 1.5 steps
+            let bound = |row: &[f32]| {
+                let mn = row.iter().fold(f32::INFINITY, |m, &x| m.min(x));
+                let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+                1.5 * (mx - mn) / 255.0 + 1e-6
+            };
+            for (a, b) in k[t * d..(t + 1) * d].iter().zip(kr) {
+                assert!((a - b).abs() <= bound(kr), "k t={t}: {a} vs {b}");
+            }
+            for (a, b) in v[t * d..(t + 1) * d].iter().zip(vr) {
+                assert!((a - b).abs() <= bound(vr), "v t={t}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_allocator_hygiene_across_churn() {
+        // admit/retire churn with mixed sizes: tables never share a block,
+        // and a full drain returns every block exactly once
+        let mut p = KvPool::new(KvStoreKind::PagedF32, 4, 2, 16, 4, 4);
+        assert_eq!(p.n_blocks(), 16);
+        let mut live: Vec<SlotId> = Vec::new();
+        let mut rng = Rng::new(17);
+        for round in 0..50 {
+            if !live.is_empty() && (round % 3 == 0 || p.free_slots() == 0) {
+                let s = live.remove(rng.below(live.len()));
+                p.release(s);
+            }
+            let tokens = 1 + rng.below(16);
+            if let Some(s) = p.lease(tokens) {
+                live.push(s);
+            }
+            // no block belongs to two live tables
+            let mut seen = std::collections::HashSet::new();
+            for s in &live {
+                for &b in &p.tables[s.0] {
+                    assert!(seen.insert(b), "block {b} double-allocated (round {round})");
+                }
+            }
+            assert_eq!(seen.len() + p.block_free.len(), p.n_blocks(), "blocks leaked");
+        }
+        for s in live {
+            p.release(s);
+        }
+        assert_eq!(p.free_blocks(), p.n_blocks(), "full drain reclaims every block");
+        assert_eq!(p.free_slots(), 4);
+    }
+
+    #[test]
+    fn block_backpressure_no_panic() {
+        // 4 handles over 10 blocks of 4 tokens: three 10-token leases take
+        // 9 blocks, so a handle is still free but an 8-token lease must be
+        // refused (only 1 free block), not panic
+        let mut p = KvPool::new(KvStoreKind::PagedF32, 4, 1, 10, 4, 4);
+        assert_eq!(p.n_blocks(), 10);
+        let a = p.lease(10).unwrap();
+        let b = p.lease(10).unwrap();
+        let c = p.lease(10).unwrap();
+        assert_eq!(p.blocks_in_use(), 9);
+        assert!(p.free_slots() > 0, "a sequence handle is still free");
+        assert!(!p.can_admit(8), "1 free block cannot host 8 tokens");
+        assert!(p.lease(8).is_none());
+        assert!(p.can_admit(4));
+        p.release(a);
+        assert!(p.can_admit(8), "released blocks are admissible again");
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.peak_blocks(), 9);
+        assert_eq!(p.free_blocks(), 10);
+    }
+
+    #[test]
+    fn q8_arena_ratio_at_bench_dims() {
+        // the acceptance target: >= 3.5x smaller KV arena at equal token
+        // capacity, at the full bench model's dimensions (d=192, L=6)
+        let (slots, layers, slot_len, d) = (8usize, 6usize, 145usize, 192usize);
+        let slab = KvPool::new(KvStoreKind::SlabF32, slots, layers, slot_len, d, 0);
+        let q8 = KvPool::new(KvStoreKind::PagedQ8, slots, layers, slot_len, d, 16);
+        let ratio = slab.bytes() as f64 / q8.bytes() as f64;
+        assert!(ratio >= 3.5, "arena ratio {ratio:.3} < 3.5");
+        let bpt = slab.bytes_per_token() as f64 / q8.bytes_per_token() as f64;
+        assert!(bpt >= 3.5, "bytes/token ratio {bpt:.3} < 3.5");
     }
 }

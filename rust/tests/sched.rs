@@ -4,17 +4,21 @@
 //! Pinned invariants:
 //! * a request's emitted tokens are identical to `Engine::generate` with
 //!   the same seed, whatever else shares the batch (co-scheduling can
-//!   never change an output);
-//! * the KvPool never double-leases a slot and frees every slot once the
-//!   workload drains;
+//!   never change an output) — and whichever *f32* KV backend backs the
+//!   pool: the paged backend must be bit-for-bit the slab backend;
+//! * the KvPool never double-leases a slot or block, frees everything
+//!   once the workload drains, and block exhaustion queues instead of
+//!   panicking;
 //! * the batched `forward_step` path matches the per-sequence
-//!   `forward_token` path bit-for-bit on packed weights.
+//!   `forward_token` path bit-for-bit on packed weights;
+//! * the paged-q8 backend serves the same workload shape end to end with
+//!   a strictly smaller KV arena.
 
 use omniquant::config::QuantSetting;
 use omniquant::model::ModelParams;
 use omniquant::runtime::Manifest;
 use omniquant::serve::sched::{
-    synthetic_workload, KvPool, Request, SchedConfig, Scheduler, WorkloadSpec,
+    synthetic_workload, KvPool, KvStoreKind, Request, SchedConfig, Scheduler, WorkloadSpec,
 };
 use omniquant::serve::Engine;
 use omniquant::util::Rng;
@@ -29,7 +33,7 @@ fn engine(family: &str, setting: &str, seed: u64) -> Engine {
 }
 
 #[test]
-fn outputs_independent_of_batch_composition() {
+fn outputs_independent_of_batch_composition_and_kv_backend() {
     for (family, setting) in [("llama", "w4a16g32"), ("opt", "w3a16g32")] {
         let eng = engine(family, setting, 11);
         let mut wl_rng = Rng::new(5);
@@ -54,28 +58,41 @@ fn outputs_independent_of_batch_composition() {
             .collect();
 
         // crowded: 2 slots for 5 staggered requests forces queueing, slot
-        // recycling and ragged co-scheduled batches
-        let mut sch = Scheduler::new(&eng, SchedConfig { slots: 2, slot_tokens: 64, eos: None });
-        for r in reqs.iter().cloned() {
-            sch.submit(r).unwrap();
-        }
-        sch.run().unwrap();
-        for r in &reqs {
+        // recycling and ragged co-scheduled batches. The paged backend
+        // (4-token blocks, so every sequence spans several blocks) must
+        // emit bit-identical tokens to the slab reference.
+        for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32] {
+            let cfg =
+                SchedConfig { slots: 2, slot_tokens: 64, eos: None, kv, block_tokens: 4 };
+            let mut sch = Scheduler::new(&eng, cfg);
+            for r in reqs.iter().cloned() {
+                sch.submit(r).unwrap();
+            }
+            sch.run().unwrap();
+            for r in &reqs {
+                assert_eq!(
+                    sch.output(r.id).unwrap(),
+                    &expect[r.id][..],
+                    "{family} {kv:?} crowded req {}",
+                    r.id
+                );
+            }
+            assert_eq!(sch.pool().free_slots(), 2, "all slots reclaimed after drain");
+            assert_eq!(sch.pool().leased_slots(), 0);
+            assert_eq!(sch.pool().peak_leased(), 2, "{family}: crowding reached full width");
             assert_eq!(
-                sch.output(r.id).unwrap(),
-                &expect[r.id][..],
-                "{family} crowded req {}",
-                r.id
+                sch.pool().free_blocks(),
+                sch.pool().n_blocks(),
+                "{family} {kv:?}: every block reclaimed after drain"
             );
         }
-        assert_eq!(sch.pool().free_slots(), 2, "all slots reclaimed after drain");
-        assert_eq!(sch.pool().leased_slots(), 0);
-        assert_eq!(sch.pool().peak_leased(), 2, "{family}: crowding reached full width");
 
         // solo: each request alone in the scheduler emits the same tokens
         for r in &reqs {
-            let mut solo =
-                Scheduler::new(&eng, SchedConfig { slots: 1, slot_tokens: 64, eos: None });
+            let mut solo = Scheduler::new(
+                &eng,
+                SchedConfig { slots: 1, slot_tokens: 64, ..Default::default() },
+            );
             let mut req = r.clone();
             req.arrival_step = 0;
             solo.submit(req).unwrap();
@@ -93,32 +110,35 @@ fn outputs_independent_of_batch_composition() {
 #[test]
 fn forward_step_matches_forward_token_bit_for_bit() {
     for (family, setting) in [("llama", "w2a16g32"), ("llama", "w4a16g32"), ("opt", "w4a16")] {
-        let eng = engine(family, setting, 9);
-        let tokens = [5i32, 17, 3, 9];
-        // per-sequence reference path
-        let mut cache = eng.new_cache(8);
-        let mut scratch = eng.new_scratch();
-        let mut want = Vec::new();
-        for &t in &tokens {
-            want = eng.forward_token(t, &mut cache, &mut scratch);
+        for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32] {
+            let eng = engine(family, setting, 9);
+            let tokens = [5i32, 17, 3, 9];
+            // per-sequence reference path
+            let mut cache = eng.new_cache(8);
+            let mut scratch = eng.new_scratch();
+            let mut want = Vec::new();
+            for &t in &tokens {
+                want = eng.forward_token(t, &mut cache, &mut scratch);
+            }
+            // pooled batched path, width 1; 3-token blocks make the reads
+            // span block boundaries with a ragged tail
+            let mut pool = KvPool::new(kv, 1, eng.desc.n_layers, 8, eng.desc.d_model, 3);
+            let slot = pool.lease(tokens.len()).unwrap();
+            let mut bs = eng.new_batch_scratch(1, 8);
+            for &t in &tokens {
+                eng.forward_step(&[t], &[slot], &mut pool, &mut bs);
+            }
+            let got = &bs.logits[..eng.desc.vocab];
+            assert_eq!(want.len(), got.len());
+            for (c, (a, b)) in want.iter().zip(got).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{family} {setting} {kv:?} logit {c}: {a} vs {b}"
+                );
+            }
+            assert_eq!(pool.len(slot), tokens.len());
         }
-        // pooled batched path, width 1
-        let mut pool = KvPool::new(1, eng.desc.n_layers, 8, eng.desc.d_model);
-        let slot = pool.lease().unwrap();
-        let mut bs = eng.new_batch_scratch(1, 8);
-        for &t in &tokens {
-            eng.forward_step(&[t], &[slot], &mut pool, &mut bs);
-        }
-        let got = &bs.logits[..eng.desc.vocab];
-        assert_eq!(want.len(), got.len());
-        for (c, (a, b)) in want.iter().zip(got).enumerate() {
-            assert_eq!(
-                a.to_bits(),
-                b.to_bits(),
-                "{family} {setting} logit {c}: {a} vs {b}"
-            );
-        }
-        assert_eq!(pool.len(slot), tokens.len());
     }
 }
 
@@ -130,25 +150,32 @@ fn eos_retires_early() {
     let (toks, _) = eng.generate(&prompt, 8, 0.0, &mut rng);
     let eos = toks[2];
     let pos = toks.iter().position(|&t| t == eos).unwrap();
-    let mut sch = Scheduler::new(&eng, SchedConfig { slots: 1, slot_tokens: 64, eos: Some(eos) });
-    sch.submit(Request {
-        id: 0,
-        prompt,
-        max_new_tokens: 8,
-        temperature: 0.0,
-        seed: 42,
-        arrival_step: 0,
-    })
-    .unwrap();
-    sch.run().unwrap();
-    assert_eq!(sch.output(0).unwrap(), &toks[..pos + 1], "stops at the first EOS");
-    assert_eq!(sch.pool().free_slots(), 1);
+    for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32] {
+        let mut sch = Scheduler::new(
+            &eng,
+            SchedConfig { slots: 1, slot_tokens: 64, eos: Some(eos), kv, block_tokens: 4 },
+        );
+        sch.submit(Request {
+            id: 0,
+            prompt: prompt.clone(),
+            max_new_tokens: 8,
+            temperature: 0.0,
+            seed: 42,
+            arrival_step: 0,
+        })
+        .unwrap();
+        sch.run().unwrap();
+        assert_eq!(sch.output(0).unwrap(), &toks[..pos + 1], "{kv:?} stops at the first EOS");
+        assert_eq!(sch.pool().free_slots(), 1);
+        assert_eq!(sch.pool().free_blocks(), sch.pool().n_blocks());
+    }
 }
 
 #[test]
 fn submit_rejects_invalid_requests() {
     let eng = engine("llama", "w4a16g32", 1);
-    let mut sch = Scheduler::new(&eng, SchedConfig { slots: 1, slot_tokens: 8, eos: None });
+    let mut sch =
+        Scheduler::new(&eng, SchedConfig { slots: 1, slot_tokens: 8, ..Default::default() });
     let base = Request {
         id: 0,
         prompt: vec![1, 2],
@@ -179,21 +206,104 @@ fn staggered_workload_queues_and_drains() {
         max_new_tokens: 6,
         temperature: 0.0,
     };
-    let reqs = synthetic_workload(&spec, eng.desc.vocab, 3);
-    let mut sch = Scheduler::new(&eng, SchedConfig { slots: 3, slot_tokens: 16, eos: None });
-    for r in reqs {
-        sch.submit(r).unwrap();
+    for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32] {
+        let reqs = synthetic_workload(&spec, eng.desc.vocab, 3);
+        let mut sch = Scheduler::new(
+            &eng,
+            SchedConfig { slots: 3, slot_tokens: 16, eos: None, kv, block_tokens: 4 },
+        );
+        for r in reqs {
+            sch.submit(r).unwrap();
+        }
+        let summary = sch.run().unwrap();
+        assert_eq!(summary.requests, 12);
+        assert_eq!(summary.tokens, 12 * 6, "no EOS configured: every request runs to max_new");
+        assert!(summary.decode_tokens > 0 && summary.decode_tok_per_s > 0.0);
+        assert!(
+            sch.metrics.requests.iter().any(|r| r.queue_wait_steps > 0),
+            "12 fast arrivals into 3 slots must queue"
+        );
+        assert!(summary.mean_batch_width > 1.0, "continuous batching actually batched");
+        assert!(summary.peak_running_bytes > eng.weight_bytes());
+        assert_eq!(sch.pool().free_slots(), 3);
+        assert_eq!(sch.pool().peak_leased(), 3, "{kv:?}");
+        assert_eq!(sch.pool().free_blocks(), sch.pool().n_blocks());
+    }
+}
+
+#[test]
+fn paged_q8_serves_and_drains_with_smaller_arena() {
+    let eng = engine("llama", "w4a16g32", 2);
+    let spec = WorkloadSpec {
+        requests: 10,
+        mean_interarrival_steps: 0.5,
+        prompt_len: 4,
+        max_new_tokens: 6,
+        temperature: 0.0,
+    };
+    let mk = |kv| SchedConfig { slots: 3, slot_tokens: 16, eos: None, kv, block_tokens: 4 };
+    let mut q8 = Scheduler::new(&eng, mk(KvStoreKind::PagedQ8));
+    for r in synthetic_workload(&spec, eng.desc.vocab, 3) {
+        q8.submit(r).unwrap();
+    }
+    let summary = q8.run().unwrap();
+    assert_eq!(summary.requests, 10);
+    assert_eq!(summary.tokens, 10 * 6, "q8 decode runs every request to max_new");
+    assert_eq!(q8.pool().free_slots(), 3, "all slots reclaimed");
+    assert_eq!(q8.pool().free_blocks(), q8.pool().n_blocks(), "all blocks reclaimed");
+    assert!(summary.peak_kv_blocks > 0);
+    // the whole point: a strictly smaller arena than the f32 slab at the
+    // same (slots, slot_tokens) capacity
+    let slab = Scheduler::new(&eng, mk(KvStoreKind::SlabF32));
+    let (slab_arena, q8_arena) = (slab.pool().bytes(), q8.pool().bytes());
+    assert!(
+        (q8_arena as f64) < slab_arena as f64 / 3.0,
+        "q8 arena {q8_arena} not >3x under slab {slab_arena}"
+    );
+    assert!(summary.kv_bytes_per_token < slab.pool().bytes_per_token());
+}
+
+#[test]
+fn block_exhaustion_backpressure_queues() {
+    let eng = engine("llama", "w4a16g32", 4);
+    // 4 handles x 30-token budget -> ceil(120/8) = 15 blocks of 8; every
+    // request needs 6 + 24 = 30 tokens = 4 blocks, so only 3 sequences fit
+    // concurrently: the 4th queues on *blocks* while a handle is free —
+    // and nothing panics
+    let cfg = SchedConfig {
+        slots: 4,
+        slot_tokens: 30,
+        eos: None,
+        kv: KvStoreKind::PagedF32,
+        block_tokens: 8,
+    };
+    let mut sch = Scheduler::new(&eng, cfg);
+    assert_eq!(sch.pool().n_blocks(), 15);
+    let mut wl_rng = Rng::new(8);
+    for id in 0..6 {
+        sch.submit(Request {
+            id,
+            prompt: (0..6).map(|_| wl_rng.below(VOCAB) as i32).collect(),
+            max_new_tokens: 24,
+            temperature: 0.0,
+            seed: 100 + id as u64,
+            arrival_step: 0,
+        })
+        .unwrap();
     }
     let summary = sch.run().unwrap();
-    assert_eq!(summary.requests, 12);
-    assert_eq!(summary.tokens, 12 * 6, "no EOS configured: every request runs to max_new");
-    assert!(summary.decode_tokens > 0 && summary.decode_tok_per_s > 0.0);
+    assert_eq!(summary.requests, 6, "every request completes despite block pressure");
+    assert_eq!(summary.tokens, 6 * 24);
+    assert_eq!(
+        sch.pool().peak_leased(),
+        3,
+        "block budget (not the 4 handles) caps concurrency at 3"
+    );
+    assert_eq!(summary.peak_kv_blocks, 12, "3 concurrent sequences x 4 blocks");
     assert!(
         sch.metrics.requests.iter().any(|r| r.queue_wait_steps > 0),
-        "12 fast arrivals into 3 slots must queue"
+        "the 4th simultaneous arrival must wait for blocks"
     );
-    assert!(summary.mean_batch_width > 1.0, "continuous batching actually batched");
-    assert!(summary.peak_running_bytes > eng.weight_bytes());
-    assert_eq!(sch.pool().free_slots(), 3);
-    assert_eq!(sch.pool().peak_leased(), 3);
+    assert_eq!(sch.pool().free_blocks(), 15, "drain returns every block");
+    assert_eq!(sch.pool().free_slots(), 4);
 }

@@ -2,10 +2,11 @@
 # Deterministic serving benchmark snapshot.
 #
 # Runs the sequential / lockstep / continuous serve suite on a synthetic
-# quantized model (no artifacts or PJRT needed) and writes the
-# machine-readable BENCH_serve.json at the repo root, plus
-# results/serve-bench.md. Pass extra flags through to `repro`
-# (e.g. drop --quick for the bigger model).
+# quantized model (no artifacts or PJRT needed) — the continuous mode is
+# swept over the three KV-store backends (slab / paged / paged-q8) at
+# equal token capacity — and writes the machine-readable BENCH_serve.json
+# at the repo root, plus results/serve-bench.md. Pass extra flags through
+# to `repro` (e.g. drop --quick for the bigger model).
 #
 #   scripts/bench_snapshot.sh            # quick snapshot (default)
 #   scripts/bench_snapshot.sh --full     # full-size model
