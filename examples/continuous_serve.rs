@@ -6,7 +6,9 @@
 //! Builds a synthetic LLaMA-style model, packs it at W4A16g64, fires an
 //! open-loop Poisson-ish workload at the scheduler, and compares the
 //! continuous batched-GEMM decode throughput against the lockstep
-//! per-sequence baseline (`Engine::batched_decode`).
+//! per-sequence baseline (`Engine::batched_decode`). The decode fan-out
+//! runs on one worker per core (`threads: 0`); lane-sharding is
+//! bit-exact, so the emitted tokens match the single-threaded run.
 
 use anyhow::Result;
 
@@ -61,6 +63,7 @@ fn main() -> Result<()> {
             eos: None,
             kv,
             block_tokens: 16,
+            threads: 0, // one worker per available core
         };
         let mut scheduler = Scheduler::new(&engine, cfg);
         for r in requests {

@@ -169,6 +169,9 @@ pub struct ServeConfig {
     pub kv: String,
     /// Tokens per KV block for the paged backends.
     pub block_tokens: usize,
+    /// Worker threads for the batched decode fan-out; 0 = one per
+    /// available core. Sharding is bit-exact, so this only changes speed.
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -183,6 +186,7 @@ impl Default for ServeConfig {
             seed: 7,
             kv: "slab".into(),
             block_tokens: 16,
+            threads: 0,
         }
     }
 }
@@ -201,6 +205,7 @@ impl ServeConfig {
                 "seed" => c.seed = val.as_int()? as u64,
                 "kv" => c.kv = val.as_str()?.to_string(),
                 "block_tokens" => c.block_tokens = val.as_int()? as usize,
+                "threads" => c.threads = val.as_int()? as usize,
                 other => return Err(anyhow!("unknown serve key '{other}'")),
             }
         }
@@ -316,6 +321,7 @@ interarrival = 2.5
 max_new_tokens = 32
 kv = "paged-q8"
 block_tokens = 32
+threads = 4
 "#,
         )
         .unwrap();
@@ -326,10 +332,12 @@ block_tokens = 32
         assert_eq!(cfg.serve.prompt_len, 16); // default preserved
         assert_eq!(cfg.serve.kv, "paged-q8");
         assert_eq!(cfg.serve.block_tokens, 32);
+        assert_eq!(cfg.serve.threads, 4);
         let d = ExperimentConfig::parse("model = \"m\"").unwrap();
         assert_eq!(d.serve.slots, ServeConfig::default().slots);
         assert_eq!(d.serve.kv, "slab");
         assert_eq!(d.serve.block_tokens, 16);
+        assert_eq!(d.serve.threads, 0, "default: one worker per core");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 pub mod methods;
 pub mod pack;
 
-pub use pack::{GemmScratch, PackedMatrix};
+pub use pack::{GemmScratch, PackedMatrix, GEMM_SHARD_LANES};
 
 use crate::config::QuantSetting;
 use crate::tensor::Tensor;

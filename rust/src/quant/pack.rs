@@ -12,8 +12,16 @@
 //! EXPERIMENTS.md section Perf.)
 
 use crate::tensor::Tensor;
+use crate::util::{StripedMut, ThreadPool};
 
 use super::{group_len, quant_params, quantize_codes, QuantParams};
+
+/// Lane alignment for multi-threaded gemm shards. 32 lanes x `bits` bits
+/// is a whole number of u32 words for every supported width, so a shard
+/// whose first lane is a multiple of 32 starts exactly at bit 0 of a
+/// packed word — the unmodified `fma_row_b{2,3,4,8}`/generic kernels then
+/// apply to the word sub-slice as if it were a narrower matrix.
+pub const GEMM_SHARD_LANES: usize = 32;
 
 /// Caller-owned scratch for [`PackedMatrix::gemm`]: the unpack row, the
 /// per-sequence raw-code accumulators and the per-sequence x-sums that
@@ -49,6 +57,15 @@ impl GemmScratch {
         (self.qrow.len() + self.acc.len() + self.xsum.len()) * 4
     }
 }
+
+/// Shared pointer to the per-shard scratch array of [`PackedMatrix::gemm_mt`];
+/// each shard dereferences only its own index, so borrows never alias.
+struct ScratchPtr(*mut GemmScratch);
+
+// SAFETY: shard i touches only scratches[i], and shard indices are
+// distinct — the pool hands each shard exclusive access to one element.
+unsafe impl Send for ScratchPtr {}
+unsafe impl Sync for ScratchPtr {}
 
 #[derive(Clone)]
 pub struct PackedMatrix {
@@ -205,18 +222,85 @@ impl PackedMatrix {
         if b == 0 {
             return;
         }
+        let out = StripedMut::new(ys, b, self.cout);
+        self.gemm_lanes(xs, b, 0, self.cout, &out, scratch);
+    }
+
+    /// Multi-threaded `gemm`: the `cout` lanes are split into contiguous
+    /// shards (aligned to [`GEMM_SHARD_LANES`], so every shard starts on a
+    /// packed-word boundary for any bit width) and fanned across `pool`,
+    /// shard `i` using `scratches[i]`. Output lanes are independent and
+    /// each lane's `(group, k)` accumulation order is unchanged, so the
+    /// result is **bit-for-bit identical** to `gemm`/`gemv` at any thread
+    /// count — the partition decides ownership of a lane, never the order
+    /// of the additions inside it (see `util::threads`).
+    pub fn gemm_mt(
+        &self,
+        xs: &[f32],
+        b: usize,
+        ys: &mut [f32],
+        scratches: &mut [GemmScratch],
+        pool: &ThreadPool,
+    ) {
+        assert_eq!(xs.len(), b * self.cin);
+        assert_eq!(ys.len(), b * self.cout);
+        assert!(
+            scratches.len() >= pool.threads(),
+            "gemm_mt needs one GemmScratch per pool thread ({} < {})",
+            scratches.len(),
+            pool.threads()
+        );
+        if b == 0 {
+            return;
+        }
+        let out = StripedMut::new(ys, b, self.cout);
+        let sp = ScratchPtr(scratches.as_mut_ptr());
+        pool.run_ranges(self.cout, GEMM_SHARD_LANES, &|i, c0, c1| {
+            // SAFETY: shard indices are distinct, so each shard holds an
+            // exclusive &mut to its own scratch for the whole call.
+            let scratch = unsafe { &mut *sp.0.add(i) };
+            self.gemm_lanes(xs, b, c0, c1, &out, scratch);
+        });
+    }
+
+    /// Compute output lanes `[c0, c1)` of Y = X @ W into the column
+    /// stripes `ys[s*cout + c0 .. s*cout + c1]` — the shared core of
+    /// `gemm` (full range) and `gemm_mt` (one call per shard). `c0` must
+    /// be a multiple of [`GEMM_SHARD_LANES`]: the shard's packed words
+    /// then start exactly at lane `c0`'s bit 0, so the unmodified fma
+    /// kernels run on the word sub-slice. Per-sequence `xsum` is
+    /// recomputed per shard in the same `k` order, giving every shard the
+    /// bit-identical value the serial epilogue uses.
+    fn gemm_lanes(
+        &self,
+        xs: &[f32],
+        b: usize,
+        c0: usize,
+        c1: usize,
+        out: &StripedMut,
+        scratch: &mut GemmScratch,
+    ) {
+        debug_assert!(c0 < c1 && c1 <= self.cout);
+        debug_assert_eq!(c0 % GEMM_SHARD_LANES, 0);
+        let w = c1 - c0;
         let g = group_len(self.cin, self.group);
-        ys.iter_mut().for_each(|v| *v = 0.0);
-        scratch.reserve(b, self.cout);
+        // 32 lanes span exactly `bits` words, so an aligned c0 lands on a
+        // word boundary for every bit width
+        let word0 = c0 * self.bits as usize / 32;
+        scratch.reserve(b, w);
         let GemmScratch { qrow, acc, xsum } = scratch;
-        let qrow = &mut qrow[..self.cout];
-        let acc = &mut acc[..b * self.cout];
+        let qrow = &mut qrow[..w];
+        let acc = &mut acc[..b * w];
         let xsum = &mut xsum[..b];
+        for s in 0..b {
+            // SAFETY: stripes [c0, c1) are disjoint across concurrent shards
+            unsafe { out.stripe(s, c0, c1) }.iter_mut().for_each(|v| *v = 0.0);
+        }
         for gi in 0..self.ng {
             acc.iter_mut().for_each(|v| *v = 0.0);
             xsum.iter_mut().for_each(|v| *v = 0.0);
             for k in gi * g..(gi + 1) * g {
-                let row = &self.words[k * self.words_per_row..(k + 1) * self.words_per_row];
+                let row = &self.words[k * self.words_per_row + word0..(k + 1) * self.words_per_row];
                 qrow.iter_mut().for_each(|v| *v = 0.0);
                 match self.bits {
                     4 => Self::fma_row_b4(row, 1.0, &mut qrow),
@@ -231,18 +315,19 @@ impl PackedMatrix {
                     if xk == 0.0 {
                         continue;
                     }
-                    let a = &mut acc[s * self.cout..(s + 1) * self.cout];
+                    let a = &mut acc[s * w..(s + 1) * w];
                     for (av, qv) in a.iter_mut().zip(qrow.iter()) {
                         *av += xk * qv;
                     }
                 }
             }
-            let hrow = &self.h[gi * self.cout..(gi + 1) * self.cout];
-            let zrow = &self.z[gi * self.cout..(gi + 1) * self.cout];
+            let hrow = &self.h[gi * self.cout + c0..gi * self.cout + c1];
+            let zrow = &self.z[gi * self.cout + c0..gi * self.cout + c1];
             for s in 0..b {
-                let a = &acc[s * self.cout..(s + 1) * self.cout];
-                let y = &mut ys[s * self.cout..(s + 1) * self.cout];
-                for c in 0..self.cout {
+                let a = &acc[s * w..(s + 1) * w];
+                // SAFETY: same disjoint stripe as the zeroing pass above
+                let y = unsafe { out.stripe(s, c0, c1) };
+                for c in 0..w {
                     y[c] += hrow[c] * (a[c] - zrow[c] * xsum[s]);
                 }
             }
@@ -492,6 +577,49 @@ mod tests {
                             );
                         }
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_mt_matches_gemv_bit_for_bit_across_thread_counts() {
+        // the sharded path's whole contract: whatever the thread count,
+        // every output lane is bit-identical to the single-sequence gemv.
+        // Ragged couts (not multiples of the per-word lane counts 8/32/4,
+        // nor of the 32-lane shard alignment) exercise the tail paths of
+        // every fma kernel *inside* a shard, and the 97-lane case gives
+        // the last shard a width-1 stripe at 4 threads.
+        let mut rng = Rng::new(33);
+        for (cin, cout) in [(64usize, 97usize), (96, 33)] {
+            let w = rand_w(200 + cout as u64, cin, cout);
+            for (bits, group) in [(2u8, 32usize), (3, 32), (4, 32), (5, 0), (6, 32), (8, 0)] {
+                let p = PackedMatrix::pack(&w, bits, group, None, None);
+                for threads in [1usize, 2, 4] {
+                    let pool = ThreadPool::new(threads);
+                    let mut scratches: Vec<GemmScratch> =
+                        (0..pool.threads()).map(|_| GemmScratch::default()).collect();
+                    for b in [1usize, 5] {
+                        let xs: Vec<f32> = (0..b * cin).map(|_| rng.normal()).collect();
+                        let mut ys = vec![0.0f32; b * cout];
+                        p.gemm_mt(&xs, b, &mut ys, &mut scratches, &pool);
+                        for s in 0..b {
+                            let mut want = vec![0.0f32; cout];
+                            p.gemv(&xs[s * cin..(s + 1) * cin], &mut want);
+                            let row = ys[s * cout..(s + 1) * cout].iter();
+                            for (c, (a, e)) in row.zip(&want).enumerate() {
+                                assert_eq!(
+                                    a.to_bits(),
+                                    e.to_bits(),
+                                    "bits={bits} group={group} threads={threads} \
+                                     b={b} s={s} c={c}: {a} vs {e}"
+                                );
+                            }
+                        }
+                    }
+                    // empty batch through the sharded path stays a no-op
+                    let mut empty: Vec<f32> = Vec::new();
+                    p.gemm_mt(&[], 0, &mut empty, &mut scratches, &pool);
                 }
             }
         }

@@ -19,7 +19,9 @@ use crate::model::ModelParams;
 use crate::runtime::Manifest;
 use crate::util::Rng;
 
-use super::sched::{synthetic_workload, KvStoreKind, SchedConfig, Scheduler, WorkloadSpec};
+use super::sched::{
+    synthetic_workload, KvStoreKind, SchedConfig, Scheduler, ServeSummary, WorkloadSpec,
+};
 use super::Engine;
 
 /// Tokens per KV block for the paged backends in the bench sweep (one
@@ -79,7 +81,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
     let mut lines = Vec::new();
 
     fn median(mut xs: Vec<f64>) -> f64 {
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         xs[xs.len() / 2]
     }
     // warmup + median over repetitions: the snapshot tracks the perf
@@ -103,7 +105,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
     //    prefill, RM) describes the same run.
     let mut lock_runs: Vec<crate::serve::GenStats> =
         (0..reps).map(|_| engine.batched_decode(b, p, n, opts.seed)).collect();
-    lock_runs.sort_by(|x, y| x.decode_tok_per_s.partial_cmp(&y.decode_tok_per_s).unwrap());
+    lock_runs.sort_by(|x, y| x.decode_tok_per_s.total_cmp(&y.decode_tok_per_s));
     let lock = lock_runs[lock_runs.len() / 2].clone();
     let lockstep_tps = lock.decode_tok_per_s;
 
@@ -129,11 +131,13 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
     ));
     let mut modes = BTreeMap::new();
     let mut speedup = 0.0;
+    let mut slab_tps = 0.0;
     let mut slab_arena = 0usize;
     let mut q8_arena = 0usize;
     let mut slab_bpt = 0usize;
     let mut q8_bpt = 0usize;
-    for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+    // one median-of-reps continuous run for a (kv, threads) point
+    let run_continuous = |kind: KvStoreKind, threads: usize| -> Result<ServeSummary> {
         let mut cont_runs = Vec::with_capacity(reps);
         for _ in 0..reps {
             let reqs = synthetic_workload(&spec, vocab, opts.seed);
@@ -143,6 +147,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
                 eos: None,
                 kv: kind,
                 block_tokens: BENCH_BLOCK_TOKENS,
+                threads,
             };
             let mut sch = Scheduler::new(&engine, cfg);
             for r in reqs {
@@ -151,12 +156,16 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
             cont_runs.push(sch.run()?);
         }
         // as with lockstep: report the median-throughput rep in full
-        cont_runs.sort_by(|x, y| x.decode_tok_per_s.partial_cmp(&y.decode_tok_per_s).unwrap());
-        let summary = cont_runs[cont_runs.len() / 2].clone();
+        cont_runs.sort_by(|x, y| x.decode_tok_per_s.total_cmp(&y.decode_tok_per_s));
+        Ok(cont_runs[cont_runs.len() / 2].clone())
+    };
+    for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+        let summary = run_continuous(kind, 1)?;
         let tps = summary.decode_tok_per_s;
         match kind {
             KvStoreKind::SlabF32 => {
                 speedup = tps / lockstep_tps.max(1e-9);
+                slab_tps = tps;
                 slab_arena = summary.kv_arena_bytes;
                 slab_bpt = summary.kv_bytes_per_token;
             }
@@ -193,6 +202,25 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         slab_bpt,
     ));
 
+    // 4. thread scaling on the slab backend: the same workload with the
+    //    batched GEMM + KV-gather fan-out on 2 and 4 workers (the kv
+    //    sweep above is the 1-thread point). Lane-sharding is bit-exact,
+    //    so this row isolates pure wall-clock speedup — the multi-core
+    //    multiplier on the Table 3 decode regime.
+    let mut thread_speedup_4 = 0.0;
+    for threads in [2usize, 4] {
+        let summary = run_continuous(KvStoreKind::SlabF32, threads)?;
+        let tps = summary.decode_tok_per_s;
+        let rel = tps / slab_tps.max(1e-9);
+        if threads == 4 {
+            thread_speedup_4 = rel;
+        }
+        lines.push(format!(
+            "continuous slab t{threads} x{b:<3}{tps:>9.1} tok/s  ({rel:.2}x vs 1 thread)"
+        ));
+        modes.insert(format!("continuous_t{threads}"), summary.to_json());
+    }
+
     let num = |v: f64| Json::Num(v);
     let mut seq_o = BTreeMap::new();
     seq_o.insert("tok_per_s".to_string(), num(sequential_tps));
@@ -223,6 +251,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         ("kv_block_tokens".to_string(), num(BENCH_BLOCK_TOKENS as f64)),
         ("modes".to_string(), Json::Obj(modes)),
         ("speedup_continuous_vs_lockstep".to_string(), num(speedup)),
+        ("speedup_threads_4_vs_1".to_string(), num(thread_speedup_4)),
         (
             "kv_arena_ratio_q8_vs_slab".to_string(),
             num(slab_arena as f64 / q8_arena.max(1) as f64),

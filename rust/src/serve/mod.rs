@@ -18,6 +18,14 @@
 //! blocks; attention reads go through `KvPool::layer_kv`, which borrows
 //! the slab arena zero-copy and gathers/dequantizes paged blocks into
 //! per-step scratch.
+//!
+//! The batched step fans its work — the independent `cout` lanes of every
+//! gemm (packed and FP, including the vocab-wide head) and the token rows
+//! of the paged-KV gathers — across a persistent worker pool owned by
+//! [`BatchScratch`] (`util::ThreadPool`, sized by
+//! `Engine::new_batch_scratch`'s `threads`, 0 = one per core). Sharding
+//! never splits a per-lane reduction, so outputs are bit-for-bit
+//! identical at any thread count; the knob trades nothing but wall-clock.
 
 pub mod bench;
 pub mod sched;
@@ -29,7 +37,7 @@ use crate::model::ModelParams;
 use crate::quant::{GemmScratch, PackedMatrix};
 use crate::runtime::ModelDesc;
 use crate::tensor::Tensor;
-use crate::util::Rng;
+use crate::util::{Rng, StripedMut, ThreadPool};
 
 /// A linear layer in the serving engine: packed low-bit or FP32.
 pub enum LinearStore {
@@ -52,32 +60,52 @@ impl LinearStore {
     /// weight matrix is streamed exactly once for the whole batch (k-major
     /// for FP, group/k-major unpack-once for packed); the per-row
     /// accumulation order is identical to `gemv`, so each output row is
-    /// bit-for-bit what `gemv` would produce for that row alone. `scratch`
-    /// backs the packed path's unpack/accumulator buffers (no per-call
+    /// bit-for-bit what `gemv` would produce for that row alone —
+    /// whatever the thread count: both variants shard the independent
+    /// `cout` lanes across `pool`, never a reduction (see
+    /// `util::threads`). `scratches` backs the packed path's
+    /// unpack/accumulator buffers, one per pool thread (no per-call
     /// allocation); the FP path doesn't need it.
-    fn gemm(&self, xs: &[f32], b: usize, ys: &mut [f32], scratch: &mut GemmScratch) {
+    fn gemm(
+        &self,
+        xs: &[f32],
+        b: usize,
+        ys: &mut [f32],
+        scratches: &mut [GemmScratch],
+        pool: &ThreadPool,
+    ) {
         match self {
             LinearStore::Fp(w) => {
                 let (cin, cout) = (w.shape()[0], w.shape()[1]);
                 assert_eq!(xs.len(), b * cin);
                 assert_eq!(ys.len(), b * cout);
-                ys.iter_mut().for_each(|v| *v = 0.0);
+                if b == 0 {
+                    return;
+                }
                 let wd = w.data();
-                for p in 0..cin {
-                    let wrow = &wd[p * cout..(p + 1) * cout];
+                let out = StripedMut::new(ys, b, cout);
+                pool.run_ranges(cout, 1, &|_i, c0, c1| {
                     for s in 0..b {
-                        let xv = xs[s * cin + p];
-                        if xv == 0.0 {
-                            continue;
-                        }
-                        let yrow = &mut ys[s * cout..(s + 1) * cout];
-                        for j in 0..cout {
-                            yrow[j] += xv * wrow[j];
+                        // SAFETY: stripes [c0, c1) are disjoint across shards
+                        unsafe { out.stripe(s, c0, c1) }.iter_mut().for_each(|v| *v = 0.0);
+                    }
+                    for p in 0..cin {
+                        let wrow = &wd[p * cout + c0..p * cout + c1];
+                        for s in 0..b {
+                            let xv = xs[s * cin + p];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            // SAFETY: same disjoint stripe as above
+                            let yrow = unsafe { out.stripe(s, c0, c1) };
+                            for (y, wv) in yrow.iter_mut().zip(wrow) {
+                                *y += xv * wv;
+                            }
                         }
                     }
-                }
+                });
             }
-            LinearStore::Packed(p) => p.gemm(xs, b, ys, scratch),
+            LinearStore::Packed(p) => p.gemm_mt(xs, b, ys, scratches, pool),
         }
     }
 
@@ -105,8 +133,15 @@ struct ServeBlock {
 }
 
 impl ServeBlock {
+    /// Look up a projection by manifest name. A malformed manifest (wrong
+    /// family's linear set, a typo in a checkpoint) dies with the missing
+    /// name and the names that *are* present — not a context-free
+    /// `Option::unwrap` panic three frames deep in a decode step.
     fn linear(&self, name: &str) -> &(String, LinearStore, Vec<f32>) {
-        self.linears.iter().find(|(n, _, _)| n == name).unwrap()
+        self.linears.iter().find(|(n, _, _)| n == name).unwrap_or_else(|| {
+            let have: Vec<&str> = self.linears.iter().map(|(n, _, _)| n.as_str()).collect();
+            panic!("ServeBlock: no linear '{name}' in this block (manifest has {have:?})")
+        })
     }
 }
 
@@ -181,9 +216,10 @@ fn gemm_bias_rows(
     xs: &[f32],
     b: usize,
     ys: &mut [f32],
-    scratch: &mut GemmScratch,
+    scratches: &mut [GemmScratch],
+    pool: &ThreadPool,
 ) {
-    w.gemm(xs, b, ys, scratch);
+    w.gemm(xs, b, ys, scratches, pool);
     add_bias_rows(ys, bias, b);
 }
 
@@ -432,8 +468,23 @@ impl Engine {
         assert!(b <= scratch.cap, "batch {b} exceeds scratch capacity {}", scratch.cap);
         let d = self.desc.d_model;
         let dff = self.desc.d_ff;
-        let BatchScratch { xs, x1, q, k, v, ao, ff1, ff2, scores, logits, kv_k, kv_v, gemm, .. } =
-            scratch;
+        let BatchScratch {
+            xs,
+            x1,
+            q,
+            k,
+            v,
+            ao,
+            ff1,
+            ff2,
+            scores,
+            logits,
+            kv_k,
+            kv_v,
+            gemm,
+            pool: tp,
+            ..
+        } = scratch;
         for s in 0..b {
             let x = &mut xs[s * d..(s + 1) * d];
             x.copy_from_slice(self.embed.row(tokens[s] as usize));
@@ -453,7 +504,7 @@ impl Engine {
             }
             for (name, dst) in [("wq", &mut *q), ("wk", &mut *k), ("wv", &mut *v)] {
                 let (_, w, bias) = blk.linear(name);
-                gemm_bias_rows(w, bias, &x1[..b * d], b, &mut dst[..b * d], &mut *gemm);
+                gemm_bias_rows(w, bias, &x1[..b * d], b, &mut dst[..b * d], &mut gemm[..], tp);
             }
             if llama {
                 for s in 0..b {
@@ -475,7 +526,7 @@ impl Engine {
             let scale = 1.0 / (hd as f32).sqrt();
             for s in 0..b {
                 let t = pool.len(slots[s]) + 1;
-                let (kc, vc) = pool.layer_kv(slots[s], li, t, &mut *kv_k, &mut *kv_v);
+                let (kc, vc) = pool.layer_kv(slots[s], li, t, &mut *kv_k, &mut *kv_v, tp);
                 let qrow = &q[s * d..(s + 1) * d];
                 let aorow = &mut ao[s * d..(s + 1) * d];
                 aorow.iter_mut().for_each(|a| *a = 0.0);
@@ -507,7 +558,7 @@ impl Engine {
             }
             {
                 let (_, w, bias) = blk.linear("wo");
-                w.gemm(&ao[..b * d], b, &mut x1[..b * d], &mut *gemm);
+                w.gemm(&ao[..b * d], b, &mut x1[..b * d], &mut gemm[..], tp);
                 residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
             }
             // --- ffn ---
@@ -515,25 +566,22 @@ impl Engine {
                 norm(&xs[s * d..(s + 1) * d], &blk.ln2_w, &blk.ln2_b, &mut x1[s * d..(s + 1) * d]);
             }
             if llama {
-                {
-                    let (_, w, bias) = blk.linear("wg");
-                    gemm_bias_rows(w, bias, &x1[..b * d], b, &mut ff1[..b * dff], &mut *gemm);
-                }
-                {
-                    let (_, w, bias) = blk.linear("wu");
-                    gemm_bias_rows(w, bias, &x1[..b * d], b, &mut ff2[..b * dff], &mut *gemm);
+                for (name, dst) in [("wg", &mut *ff1), ("wu", &mut *ff2)] {
+                    let (_, w, bias) = blk.linear(name);
+                    let dst = &mut dst[..b * dff];
+                    gemm_bias_rows(w, bias, &x1[..b * d], b, dst, &mut gemm[..], tp);
                 }
                 for i in 0..b * dff {
                     ff1[i] = silu(ff1[i]) * ff2[i];
                 }
                 let (_, w, bias) = blk.linear("wd");
-                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d], &mut *gemm);
+                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d], &mut gemm[..], tp);
                 residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
             } else {
                 {
                     // fused bias + ReLU, as in `forward_token`
                     let (_, w, bias) = blk.linear("w1");
-                    w.gemm(&x1[..b * d], b, &mut ff1[..b * dff], &mut *gemm);
+                    w.gemm(&x1[..b * d], b, &mut ff1[..b * dff], &mut gemm[..], tp);
                     for s in 0..b {
                         ff1[s * dff..(s + 1) * dff]
                             .iter_mut()
@@ -542,7 +590,7 @@ impl Engine {
                     }
                 }
                 let (_, w, bias) = blk.linear("w2");
-                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d], &mut *gemm);
+                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d], &mut gemm[..], tp);
                 residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
             }
         }
@@ -553,18 +601,27 @@ impl Engine {
             norm(&xs[s * d..(s + 1) * d], &self.lnf_w, &self.lnf_b, &mut x1[s * d..(s + 1) * d]);
         }
         let vocab = self.desc.vocab;
-        self.head.gemm(&x1[..b * d], b, &mut logits[..b * vocab], gemm);
+        self.head.gemm(&x1[..b * d], b, &mut logits[..b * vocab], &mut gemm[..], tp);
     }
 
     /// Scratch for `forward_step` over at most `cap` co-scheduled
     /// sequences attending over at most `max_t` cached positions. All
-    /// buffers — including the packed-gemm scratch and the paged-KV
-    /// gather buffers — are sized up front, so the decode loop never
-    /// allocates.
-    pub fn new_batch_scratch(&self, cap: usize, max_t: usize) -> BatchScratch {
+    /// buffers — including one packed-gemm scratch per worker thread and
+    /// the paged-KV gather buffers — are sized up front, so the decode
+    /// loop never allocates. `threads` sizes the persistent worker pool
+    /// the gemm/KV-gather fan-out runs on (0 = one per available core);
+    /// the sharding is bit-exact, so the count only changes speed.
+    pub fn new_batch_scratch(&self, cap: usize, max_t: usize, threads: usize) -> BatchScratch {
         let d = self.desc.d_model;
-        let mut gemm = GemmScratch::default();
-        gemm.reserve(cap, d.max(self.desc.d_ff).max(self.desc.vocab));
+        let pool = ThreadPool::new(threads);
+        let max_cout = d.max(self.desc.d_ff).max(self.desc.vocab);
+        let gemm: Vec<GemmScratch> = (0..pool.threads())
+            .map(|_| {
+                let mut g = GemmScratch::default();
+                g.reserve(cap, max_cout);
+                g
+            })
+            .collect();
         BatchScratch {
             cap,
             xs: vec![0.0; cap * d],
@@ -580,6 +637,7 @@ impl Engine {
             kv_k: vec![0.0; (max_t + 1) * d],
             kv_v: vec![0.0; (max_t + 1) * d],
             gemm,
+            pool,
         }
     }
 
@@ -711,13 +769,22 @@ pub struct BatchScratch {
     /// backends ((max_t, d) each; untouched by the slab backend).
     kv_k: Vec<f32>,
     kv_v: Vec<f32>,
-    /// Unpack/accumulator scratch for the packed `gemm` kernels.
-    gemm: GemmScratch,
+    /// Unpack/accumulator scratch for the packed `gemm` kernels, one per
+    /// worker thread (shard `i` of a fan-out owns `gemm[i]`).
+    gemm: Vec<GemmScratch>,
+    /// Persistent worker pool the engine fans the batched gemms and
+    /// paged-KV gathers across (1 thread = the serial reference path).
+    pool: ThreadPool,
 }
 
 impl BatchScratch {
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    /// Worker threads the decode fan-out runs on (>= 1).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Scratch bytes (counted into running memory alongside the KV pool).
@@ -735,7 +802,7 @@ impl BatchScratch {
             + self.kv_k.len()
             + self.kv_v.len())
             * 4
-            + self.gemm.bytes()
+            + self.gemm.iter().map(|g| g.bytes()).sum::<usize>()
     }
 }
 
@@ -747,17 +814,40 @@ pub struct GenStats {
     pub running_bytes: usize,
 }
 
+/// Greedy argmax (`temp <= 0`) or temperature sampling. NaN logits — a
+/// single poisoned lane from an upstream numeric bug — are skipped, never
+/// propagated: the old `partial_cmp().unwrap()` argmax panicked on the
+/// first NaN, killing the whole scheduler mid-batch. On finite logits the
+/// behaviour (and thus every seeded sampling stream) is unchanged.
 pub fn sample(logits: &[f32], temp: f32, rng: &mut Rng) -> i32 {
     if temp <= 0.0 {
         return logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .filter(|(_, v)| !v.is_nan())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as i32)
             .unwrap_or(0);
     }
-    let mx = logits.iter().fold(f32::MIN, |m, &x| m.max(x));
-    let weights: Vec<f32> = logits.iter().map(|&x| ((x - mx) / temp).exp()).collect();
+    let mx = logits.iter().filter(|v| !v.is_nan()).fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let weights: Vec<f32> = logits
+        .iter()
+        .map(|&x| {
+            if x.is_nan() {
+                0.0
+            } else if x == mx {
+                // exp((mx - mx)/temp) == 1 exactly for finite mx, and this
+                // keeps a +inf logit the certain choice (where the naive
+                // formula would produce inf - inf = NaN), agreeing with
+                // the greedy path
+                1.0
+            } else {
+                // x < mx, so this is exp(-inf) == 0 when mx is +inf and
+                // the unchanged finite formula otherwise
+                ((x - mx) / temp).exp()
+            }
+        })
+        .collect();
     rng.categorical(&weights) as i32
 }
 
@@ -769,6 +859,56 @@ mod tests {
     fn sample_greedy_argmax() {
         let mut rng = Rng::new(1);
         assert_eq!(sample(&[0.1, 5.0, 0.2], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sample_greedy_survives_nan_logits() {
+        // regression: a NaN logit used to panic the partial_cmp unwrap and
+        // take the scheduler down mid-batch; now it is skipped
+        let mut rng = Rng::new(3);
+        assert_eq!(sample(&[0.1, f32::NAN, 5.0, 0.2], 0.0, &mut rng), 2);
+        assert_eq!(sample(&[f32::NAN, 1.0], 0.0, &mut rng), 1);
+        // degenerate all-NaN input falls back to token 0 instead of dying
+        assert_eq!(sample(&[f32::NAN, f32::NAN], 0.0, &mut rng), 0);
+        assert_eq!(sample(&[], 0.0, &mut rng), 0);
+    }
+
+    #[test]
+    fn sample_temperature_survives_nan_logits() {
+        // NaN logits get zero weight: the NaN lane is never drawn
+        let mut rng = Rng::new(4);
+        for _ in 0..64 {
+            let t = sample(&[1.0, f32::NAN, 2.0, f32::NEG_INFINITY], 0.7, &mut rng);
+            assert_ne!(t, 1, "NaN lane must never be sampled");
+        }
+        // a +inf logit is the certain choice at any temperature, matching
+        // the greedy path (regression: it used to weight to NaN / zero).
+        // (>= 15/16 tolerates categorical()'s one-in-2^24 r == 0.0 edge.)
+        let mut inf_hits = 0;
+        for _ in 0..16 {
+            inf_hits += usize::from(sample(&[1.0, f32::INFINITY, 2.0], 0.7, &mut rng) == 1);
+            assert_eq!(sample(&[1.0, f32::INFINITY, 2.0], 0.0, &mut rng), 1);
+        }
+        assert!(inf_hits >= 15, "+inf lane drawn {inf_hits}/16 times");
+    }
+
+    #[test]
+    #[should_panic(expected = "no linear 'wq'")]
+    fn missing_linear_panics_with_names() {
+        // a malformed manifest must die naming the missing matrix and the
+        // available ones, not with a bare Option::unwrap
+        let blk = ServeBlock {
+            ln1_w: vec![1.0],
+            ln1_b: vec![0.0],
+            ln2_w: vec![1.0],
+            ln2_b: vec![0.0],
+            linears: vec![(
+                "w1".to_string(),
+                LinearStore::Fp(Tensor::new(&[1, 1], vec![0.0])),
+                vec![0.0],
+            )],
+        };
+        let _ = blk.linear("wq");
     }
 
     #[test]

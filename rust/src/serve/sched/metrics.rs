@@ -48,6 +48,8 @@ pub struct ServeMetrics {
     pub kv_block_tokens: usize,
     /// High-water mark of KV blocks in use (block-granular RM).
     pub peak_kv_blocks: usize,
+    /// Worker threads the decode fan-out ran on (>= 1).
+    pub threads: usize,
 }
 
 impl ServeMetrics {
@@ -79,6 +81,7 @@ impl ServeMetrics {
             kv_bytes_per_token: self.kv_bytes_per_token,
             kv_block_tokens: self.kv_block_tokens,
             peak_kv_blocks: self.peak_kv_blocks,
+            threads: self.threads,
         }
     }
 }
@@ -111,6 +114,8 @@ pub struct ServeSummary {
     pub kv_bytes_per_token: usize,
     pub kv_block_tokens: usize,
     pub peak_kv_blocks: usize,
+    /// Worker threads the decode fan-out ran on (>= 1).
+    pub threads: usize,
 }
 
 impl ServeSummary {
@@ -138,6 +143,7 @@ impl ServeSummary {
         m.insert("kv_bytes_per_token".to_string(), Json::Num(self.kv_bytes_per_token as f64));
         m.insert("kv_block_tokens".to_string(), Json::Num(self.kv_block_tokens as f64));
         m.insert("peak_kv_blocks".to_string(), Json::Num(self.peak_kv_blocks as f64));
+        m.insert("threads".to_string(), Json::Num(self.threads as f64));
         Json::Obj(m)
     }
 }
@@ -156,10 +162,12 @@ impl std::fmt::Display for ServeSummary {
         )?;
         writeln!(
             f,
-            "queue wait mean {:.1} steps; batch width mean {:.1} over {} steps; peak RM {}",
+            "queue wait mean {:.1} steps; batch width mean {:.1} over {} steps / {} threads; \
+             peak RM {}",
             self.mean_queue_wait_steps,
             self.mean_batch_width,
             self.steps,
+            self.threads,
             fmt_bytes(self.peak_running_bytes)
         )?;
         write!(
@@ -208,6 +216,7 @@ mod tests {
             kv_bytes_per_token: 72,
             kv_block_tokens: 16,
             peak_kv_blocks: 5,
+            threads: 4,
         };
         let s = m.summary();
         assert_eq!(s.requests, 2);
@@ -223,8 +232,10 @@ mod tests {
         assert_eq!(j.get("kv_store").unwrap().as_str().unwrap(), "paged-q8");
         assert_eq!(j.get("kv_bytes_per_token").unwrap().as_usize().unwrap(), 72);
         assert_eq!(j.get("peak_kv_blocks").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 4);
         let text = format!("{s}");
         assert!(text.contains("decode 8.0 tok/s"), "{text}");
         assert!(text.contains("kv paged-q8"), "{text}");
+        assert!(text.contains("4 threads"), "{text}");
     }
 }

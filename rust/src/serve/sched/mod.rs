@@ -31,10 +31,14 @@
 //!   activations are stacked into a `(width, d)` matrix and every packed
 //!   weight matrix is streamed **once per step for the whole batch**
 //!   through `PackedMatrix::gemm` / `LinearStore::gemm`, instead of once
-//!   per sequence. Per-row arithmetic is bit-identical to the
-//!   single-sequence `gemv` path, and each request samples from its own
-//!   seeded RNG stream — so a request's output never depends on what else
-//!   shares the batch (tested in `tests/sched.rs`).
+//!   per sequence — and the independent output lanes of every gemm (plus
+//!   the paged-KV gathers) are sharded across a persistent worker pool
+//!   ([`SchedConfig::threads`], `util::ThreadPool`). Per-row, per-lane
+//!   arithmetic is bit-identical to the single-sequence `gemv` path at
+//!   any thread count, and each request samples from its own seeded RNG
+//!   stream — so a request's output never depends on what else shares
+//!   the batch, or on how many cores served it (tested in
+//!   `tests/sched.rs`).
 //! * **retire** — on EOS or `max_new_tokens` the slot is released back to
 //!   the pool, per-request metrics are recorded, and the next queued
 //!   request can be admitted on the following tick.
@@ -90,6 +94,10 @@ pub struct SchedConfig {
     pub kv: KvStoreKind,
     /// Tokens per block for the paged backends (ignored by slab).
     pub block_tokens: usize,
+    /// Worker threads for the batched GEMM / paged-KV-gather fan-out
+    /// (0 = one per available core). Lane-sharding is bit-exact, so the
+    /// count changes wall-clock only — never a single emitted token.
+    pub threads: usize,
 }
 
 impl Default for SchedConfig {
@@ -100,6 +108,7 @@ impl Default for SchedConfig {
             eos: None,
             kv: KvStoreKind::SlabF32,
             block_tokens: 16,
+            threads: 1,
         }
     }
 }
@@ -148,13 +157,14 @@ impl<'e> Scheduler<'e> {
             engine.desc.d_model,
             cfg.block_tokens,
         );
-        let scratch = engine.new_batch_scratch(cfg.slots, cfg.slot_tokens);
+        let scratch = engine.new_batch_scratch(cfg.slots, cfg.slot_tokens, cfg.threads);
         let metrics = ServeMetrics {
             peak_running_bytes: engine.weight_bytes() + pool.bytes() + scratch.bytes(),
             kv_store: pool.kind().name().to_string(),
             kv_arena_bytes: pool.bytes(),
             kv_bytes_per_token: pool.bytes_per_token(),
             kv_block_tokens: pool.block_tokens(),
+            threads: scratch.threads(),
             ..ServeMetrics::default()
         };
         Scheduler {

@@ -53,6 +53,7 @@
 use anyhow::{bail, Result};
 
 use crate::quant::{dequantize_row_q8, q8_row_groups, quantize_row_q8};
+use crate::util::{StripedMut, ThreadPool};
 
 /// Quant group width (lanes of `d`) for the `paged-q8` backend's per-row
 /// scales. 64 keeps the scale overhead at ~2 f32 pairs per head-dim-sized
@@ -391,7 +392,10 @@ impl KvPool {
     /// layer. The slab backend borrows straight into its arena (zero
     /// copy, bit-for-bit the pre-paging behaviour); the paged backends
     /// walk the sequence's block table and gather — for Q8, dequantize —
-    /// block runs into the caller's per-step scratch buffers.
+    /// block runs into the caller's per-step scratch buffers, fanned
+    /// across `pool` in contiguous token-row shards (each cached row is
+    /// copied/dequantized independently, so the fan-out is bit-exact at
+    /// any thread count; see `util::threads`).
     pub(crate) fn layer_kv<'a>(
         &'a self,
         slot: SlotId,
@@ -399,6 +403,7 @@ impl KvPool {
         t: usize,
         kbuf: &'a mut Vec<f32>,
         vbuf: &'a mut Vec<f32>,
+        pool: &ThreadPool,
     ) -> (&'a [f32], &'a [f32]) {
         self.check(slot);
         let s = slot.0;
@@ -418,43 +423,66 @@ impl KvPool {
         if vbuf.len() < t * d {
             vbuf.resize(t * d, 0.0);
         }
+        let kview = StripedMut::new(&mut kbuf[..t * d], t, d);
+        let vview = StripedMut::new(&mut vbuf[..t * d], t, d);
+        // block-aligned shards keep whole-block memcpys inside one shard
+        pool.run_ranges(t, self.block_tokens, &|_i, r0, r1| {
+            self.gather_rows(s, layer, r0, r1, &kview, &vview);
+        });
+        (&kbuf[..t * d], &vbuf[..t * d])
+    }
+
+    /// Gather (Q8: dequantize) cached rows `[r0, r1)` of `(slot s, layer)`
+    /// into the destination row views — one shard of `layer_kv`'s
+    /// fan-out. Walks the block table run-wise, so a block-aligned shard
+    /// still does whole-block `copy_from_slice`s.
+    fn gather_rows(
+        &self,
+        s: usize,
+        layer: usize,
+        r0: usize,
+        r1: usize,
+        kview: &StripedMut,
+        vview: &StripedMut,
+    ) {
         let bt = self.block_tokens;
+        let d = self.d;
         let ng2 = 2 * self.ng;
-        let mut done = 0usize;
-        for &blk in &self.tables[s] {
-            if done >= t {
-                break;
-            }
-            let run = bt.min(t - done);
-            let row0 = self.block_row(blk as usize, layer);
+        let mut r = r0;
+        while r < r1 {
+            let blk = self.tables[s][r / bt] as usize;
+            let within = r % bt;
+            let run = (bt - within).min(r1 - r);
+            let row0 = self.block_row(blk, layer) + within;
             match &self.store {
                 Store::F32 { k, v } => {
-                    kbuf[done * d..(done + run) * d]
+                    // SAFETY: shards own disjoint [r0, r1) row ranges
+                    unsafe { kview.rows(r, r + run) }
                         .copy_from_slice(&k[row0 * d..(row0 + run) * d]);
-                    vbuf[done * d..(done + run) * d]
+                    unsafe { vview.rows(r, r + run) }
                         .copy_from_slice(&v[row0 * d..(row0 + run) * d]);
                 }
                 Store::Q8 { qk, qv, sk, sv } => {
-                    for r in 0..run {
-                        let (c0, s0) = ((row0 + r) * d, (row0 + r) * ng2);
+                    for i in 0..run {
+                        let (c0, s0) = ((row0 + i) * d, (row0 + i) * ng2);
+                        // SAFETY: as above — row r+i lies inside this shard
                         dequantize_row_q8(
                             &qk[c0..c0 + d],
                             KV_GROUP,
                             &sk[s0..s0 + ng2],
-                            &mut kbuf[(done + r) * d..(done + r + 1) * d],
+                            unsafe { kview.rows(r + i, r + i + 1) },
                         );
                         dequantize_row_q8(
                             &qv[c0..c0 + d],
                             KV_GROUP,
                             &sv[s0..s0 + ng2],
-                            &mut vbuf[(done + r) * d..(done + r + 1) * d],
+                            unsafe { vview.rows(r + i, r + i + 1) },
                         );
                     }
                 }
             }
-            done += run;
+            r += run;
         }
-        (&kbuf[..t * d], &vbuf[..t * d])
     }
 }
 
@@ -471,7 +499,7 @@ mod tests {
         kb: &'a mut Vec<f32>,
         vb: &'a mut Vec<f32>,
     ) -> (&'a [f32], &'a [f32]) {
-        p.layer_kv(s, layer, t, kb, vb)
+        p.layer_kv(s, layer, t, kb, vb, &ThreadPool::serial())
     }
 
     #[test]
@@ -615,7 +643,7 @@ mod tests {
             p.advance(s);
         }
         let (mut kb, mut vb) = (Vec::new(), Vec::new());
-        let (k, v) = p.layer_kv(s, 0, cap, &mut kb, &mut vb);
+        let (k, v) = p.layer_kv(s, 0, cap, &mut kb, &mut vb, &ThreadPool::serial());
         for (t, (kr, vr)) in rows.iter().enumerate() {
             // per-group step = range/255; round-trip is within 1.5 steps
             let bound = |row: &[f32]| {
@@ -628,6 +656,47 @@ mod tests {
             }
             for (a, b) in v[t * d..(t + 1) * d].iter().zip(vr) {
                 assert!((a - b).abs() <= bound(vr), "v t={t}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_gather_matches_serial_bit_for_bit() {
+        // the layer_kv fan-out shards token rows; every row is gathered
+        // (Q8: dequantized) independently, so a threaded read must be
+        // bit-identical to the serial one — including ragged final blocks
+        // and reads that stop mid-block
+        for kind in [KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            let (layers, cap, d, bt) = (2usize, 13usize, 8usize, 3usize);
+            let mut p = KvPool::new(kind, 1, layers, cap, d, bt);
+            let s = p.lease(cap).unwrap();
+            let mut rng = Rng::new(7);
+            for _ in 0..cap {
+                for l in 0..layers {
+                    let kr: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                    let vr: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                    p.append(s, l, &kr, &vr);
+                }
+                p.advance(s);
+            }
+            let serial = ThreadPool::serial();
+            for threads in [2usize, 4] {
+                let tp = ThreadPool::new(threads);
+                for l in 0..layers {
+                    for t in [1usize, bt, bt + 2, cap] {
+                        let (mut k1, mut v1) = (Vec::new(), Vec::new());
+                        let (mut k2, mut v2) = (Vec::new(), Vec::new());
+                        let (ks, vs) = p.layer_kv(s, l, t, &mut k1, &mut v1, &serial);
+                        let (kp, vp) = p.layer_kv(s, l, t, &mut k2, &mut v2, &tp);
+                        for (x, y) in ks.iter().zip(kp).chain(vs.iter().zip(vp)) {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "{kind:?} threads={threads} layer {l} t {t}"
+                            );
+                        }
+                    }
+                }
             }
         }
     }

@@ -1,9 +1,12 @@
-//! Substrate utilities: RNG, statistics, timing.
+//! Substrate utilities: RNG, statistics, timing, and the persistent
+//! worker pool behind the serve path's sharded kernels.
 
 pub mod rng;
 pub mod stats;
+pub mod threads;
 
 pub use rng::Rng;
+pub use threads::{StripedMut, ThreadPool};
 
 use std::time::Instant;
 

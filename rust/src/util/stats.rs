@@ -17,13 +17,17 @@ pub fn std(xs: &[f32]) -> f32 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32).sqrt()
 }
 
-/// p in [0,1]; linear interpolation between order statistics.
+/// p in [0,1]; linear interpolation between order statistics. Non-finite
+/// samples (a NaN from a poisoned timer, ±inf) are dropped before sorting
+/// — one bad `step_ms` sample must not panic (the old
+/// `partial_cmp().unwrap()` sort) or poison a whole end-of-run summary —
+/// and the sort itself uses `total_cmp`, which is total on all of f32.
 pub fn percentile(xs: &[f32], p: f64) -> f32 {
-    if xs.is_empty() {
+    let mut v: Vec<f32> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f32> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f32::total_cmp);
     let pos = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -104,5 +108,19 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std(&[]), 0.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // regression: one NaN used to panic the partial_cmp sort and take
+        // the whole end-of-run summary down with it
+        let xs = [3.0, f32::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 3.0);
+        assert_eq!(median(&xs), 2.0);
+        // non-finite-only input degrades to the empty-input answer
+        assert_eq!(percentile(&[f32::NAN, f32::INFINITY], 0.5), 0.0);
+        // infinities are dropped, not propagated into the interpolation
+        assert_eq!(percentile(&[1.0, f32::INFINITY, 3.0], 1.0), 3.0);
     }
 }

@@ -1,0 +1,400 @@
+//! Persistent worker pool for the serve path's data-parallel kernels.
+//!
+//! The decode hot loop (`PackedMatrix::gemm`, the FP fallback in
+//! `LinearStore::gemm`, the paged/Q8 KV gathers in `KvPool::layer_kv`)
+//! is built entirely from **independent output lanes**: output lane `c`
+//! of a GEMM depends only on column `c` of the weight matrix, and row `t`
+//! of a KV gather depends only on cached row `t`. Sharding such a kernel
+//! means giving each worker a contiguous slice of the output and letting
+//! it run the *unmodified* scalar loop over that slice.
+//!
+//! # Why lane-sharding is exact
+//!
+//! Floating-point addition is not associative, so naive parallel
+//! reductions change results with the thread count. Lane sharding never
+//! splits a reduction: every per-lane accumulation (the `(group, k)` loop
+//! of a packed GEMM, the `k` loop of the FP GEMM) runs start-to-finish on
+//! one worker, in exactly the order the single-threaded kernel uses. The
+//! partition only decides *which* worker owns a lane, never the order of
+//! the additions inside it — so results are **bit-for-bit identical** to
+//! the serial path at any thread count (pinned by the parity tests in
+//! `quant::pack` and `tests/sched.rs`).
+//!
+//! # Shape
+//!
+//! [`ThreadPool::new`] spawns `threads - 1` persistent workers
+//! (`threads == 1` spawns none and runs everything inline; `0` resolves
+//! to `std::thread::available_parallelism`). [`ThreadPool::run`] publishes
+//! a type-erased job, the submitting thread claims shards alongside the
+//! workers (so a sleepy worker can never stall the step), and returns
+//! only when every shard has finished — the closure's borrows never
+//! escape the call. A shard that panics is caught, the job is drained,
+//! and the panic resumes on the submitting thread, so a poisoned decode
+//! step fails loudly instead of deadlocking the pool.
+//!
+//! [`ThreadPool::run_ranges`] layers the partition on top: `n` items are
+//! split into at most `threads` contiguous ranges whose starts are
+//! multiples of `align` — the packed GEMM uses `align = 32` lanes so
+//! every shard begins exactly on a `u32` word boundary for *any* bit
+//! width (32 lanes x `bits` bits is a whole number of words).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A shard task: called once per shard index in `0..shards`.
+type Task = dyn Fn(usize) + Sync;
+
+/// Upper bound on worker threads (a config typo should degrade to "many
+/// threads", not fork-bomb the host).
+const MAX_THREADS: usize = 256;
+
+struct Job {
+    /// Lifetime-erased pointer to the submitted task. Valid for the whole
+    /// job: `run` does not return until every shard has reported done.
+    task: *const Task,
+    /// Next shard index to claim.
+    next: usize,
+    /// Shards finished (including panicked ones).
+    done: usize,
+    total: usize,
+    /// First panic payload out of any shard, re-raised by `run`.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+// SAFETY: the raw task pointer is only dereferenced while `run` is
+// blocked waiting for the job, which keeps the underlying closure alive.
+unsafe impl Send for Job {}
+
+#[derive(Default)]
+struct State {
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signals workers that a job (or shutdown) is available.
+    work: Condvar,
+    /// Signals the submitter that the last shard finished.
+    done: Condvar,
+}
+
+/// Persistent `std::thread` worker pool (no external dependencies).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Build a pool of `threads` workers; `0` resolves to the machine's
+    /// available parallelism. `threads == 1` spawns no OS threads — every
+    /// `run` executes inline, which is the serial reference path.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            threads
+        }
+        .clamp(1, MAX_THREADS);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("omniq-worker-{i}"))
+                    .spawn(move || worker(sh))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, threads }
+    }
+
+    /// The serial pool: one thread, everything inline.
+    pub fn serial() -> ThreadPool {
+        ThreadPool::new(1)
+    }
+
+    /// Worker count this pool fans out over (>= 1, submitter included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `task(i)` once for every shard `i in 0..shards`, concurrently
+    /// across the pool, returning when all shards are done. The submitter
+    /// participates, so progress never depends on a worker waking up.
+    /// Shards must touch disjoint data; a panicking shard is re-raised
+    /// here after the remaining shards drain. Not reentrant: `task` must
+    /// not call back into the pool.
+    pub fn run(&self, shards: usize, task: &Task) {
+        if shards == 0 {
+            return;
+        }
+        if self.workers.is_empty() || shards == 1 {
+            for i in 0..shards {
+                task(i);
+            }
+            return;
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        assert!(st.job.is_none(), "ThreadPool::run is not reentrant");
+        st.job =
+            Some(Job { task: task as *const Task, next: 0, done: 0, total: shards, panic: None });
+        self.shared.work.notify_all();
+        loop {
+            let job = st.job.as_mut().expect("job lives until run() takes it");
+            if job.next < job.total {
+                let i = job.next;
+                job.next += 1;
+                drop(st);
+                let result = catch_unwind(AssertUnwindSafe(|| task(i)));
+                st = self.shared.state.lock().unwrap();
+                let job = st.job.as_mut().expect("job lives until run() takes it");
+                job.done += 1;
+                if let Err(payload) = result {
+                    job.panic.get_or_insert(payload);
+                }
+            } else if job.done < job.total {
+                st = self.shared.done.wait(st).unwrap();
+            } else {
+                break;
+            }
+        }
+        let job = st.job.take().expect("job lives until run() takes it");
+        drop(st);
+        if let Some(payload) = job.panic {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Partition `0..n` into at most `threads` contiguous ranges whose
+    /// starts are multiples of `align`, and run `f(shard, start, end)`
+    /// across the pool. Every shard is non-empty; with one shard (or a
+    /// serial pool) `f(0, 0, n)` runs inline. The partition decides only
+    /// *ownership* of items, never the iteration order inside a range —
+    /// the exactness contract in the module docs.
+    pub fn run_ranges(&self, n: usize, align: usize, f: &(dyn Fn(usize, usize, usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let align = align.max(1);
+        let units = n.div_ceil(align);
+        let shards = self.threads.min(units);
+        if shards <= 1 {
+            f(0, 0, n);
+            return;
+        }
+        let per = units / shards;
+        let extra = units % shards;
+        self.run(shards, &|i| {
+            let u0 = i * per + i.min(extra);
+            let u1 = u0 + per + usize::from(i < extra);
+            let (c0, c1) = ((u0 * align).min(n), (u1 * align).min(n));
+            if c0 < c1 {
+                f(i, c0, c1);
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker(shared: Arc<Shared>) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let claim = match st.job.as_mut() {
+            Some(j) if j.next < j.total => {
+                let i = j.next;
+                j.next += 1;
+                Some((j.task, i))
+            }
+            _ => None,
+        };
+        match claim {
+            Some((task, i)) => {
+                drop(st);
+                // SAFETY: `run` keeps the task alive until `done == total`,
+                // and this shard reports done only after the call returns.
+                let task: &Task = unsafe { &*task };
+                let result = catch_unwind(AssertUnwindSafe(|| task(i)));
+                st = shared.state.lock().unwrap();
+                if let Some(j) = st.job.as_mut() {
+                    j.done += 1;
+                    if let Err(payload) = result {
+                        j.panic.get_or_insert(payload);
+                    }
+                    if j.done == j.total {
+                        shared.done.notify_all();
+                    }
+                }
+            }
+            None => st = shared.work.wait(st).unwrap(),
+        }
+    }
+}
+
+/// Shared mutable view of a row-major `(rows, cols)` f32 matrix for shard
+/// writers that each own a disjoint slice — the column stripes of a
+/// sharded GEMM output, or the row ranges of a sharded KV gather. The
+/// aliasing discipline lives at the call site (the pool hands every shard
+/// a distinct, non-overlapping range), so the accessors are `unsafe`.
+pub struct StripedMut {
+    ptr: *mut f32,
+    rows: usize,
+    cols: usize,
+}
+
+// SAFETY: all access goes through the unsafe accessors, whose contract
+// (disjoint ranges per concurrent caller) makes shared use sound.
+unsafe impl Send for StripedMut {}
+unsafe impl Sync for StripedMut {}
+
+impl StripedMut {
+    pub fn new(m: &mut [f32], rows: usize, cols: usize) -> StripedMut {
+        assert_eq!(m.len(), rows * cols);
+        StripedMut { ptr: m.as_mut_ptr(), rows, cols }
+    }
+
+    /// Columns `[c0, c1)` of row `row`.
+    ///
+    /// # Safety
+    /// No two live borrows may overlap: concurrent callers must hold
+    /// disjoint `(row, [c0, c1))` stripes of the matrix.
+    #[allow(clippy::mut_from_ref)] // disjointness is the caller's contract
+    pub unsafe fn stripe(&self, row: usize, c0: usize, c1: usize) -> &mut [f32] {
+        debug_assert!(row < self.rows && c0 <= c1 && c1 <= self.cols);
+        std::slice::from_raw_parts_mut(self.ptr.add(row * self.cols + c0), c1 - c0)
+    }
+
+    /// Contiguous full-width rows `[r0, r1)`.
+    ///
+    /// # Safety
+    /// No two live borrows may overlap: concurrent callers must hold
+    /// disjoint row ranges.
+    #[allow(clippy::mut_from_ref)] // disjointness is the caller's contract
+    pub unsafe fn rows(&self, r0: usize, r1: usize) -> &mut [f32] {
+        debug_assert!(r0 <= r1 && r1 <= self.rows);
+        std::slice::from_raw_parts_mut(self.ptr.add(r0 * self.cols), (r1 - r0) * self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_shard_runs_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for shards in [1usize, 2, 7, 16] {
+                let hits: Vec<AtomicUsize> = (0..shards).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(shards, &|i| {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::SeqCst), 1, "threads={threads} shard {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = ThreadPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(5, &|i| {
+                total.fetch_add(i + 1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 50 * 15);
+    }
+
+    #[test]
+    fn run_ranges_covers_disjoint_aligned() {
+        for threads in [1usize, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            for (n, align) in [(97usize, 32usize), (33, 32), (13, 1), (5, 8), (64, 16)] {
+                let ranges = Mutex::new(Vec::new());
+                pool.run_ranges(n, align, &|_s, a, b| {
+                    ranges.lock().unwrap().push((a, b));
+                });
+                let mut rs = ranges.into_inner().unwrap();
+                rs.sort_unstable();
+                assert!(rs.len() <= pool.threads());
+                assert_eq!(rs.first().unwrap().0, 0, "n={n} align={align}");
+                assert_eq!(rs.last().unwrap().1, n, "n={n} align={align}");
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "contiguous, no gap/overlap: {rs:?}");
+                }
+                for &(a, b) in &rs {
+                    assert!(a % align == 0 && a < b, "aligned non-empty: {rs:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_writes_land_disjointly() {
+        let pool = ThreadPool::new(4);
+        let n = 1000usize;
+        let mut out = vec![0.0f32; n];
+        let view = StripedMut::new(&mut out, 1, n);
+        pool.run_ranges(n, 1, &|_s, a, b| {
+            let dst = unsafe { view.stripe(0, a, b) };
+            for (j, v) in dst.iter_mut().enumerate() {
+                *v = (a + j) as f32;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn shard_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("shard 3 exploded");
+                }
+            });
+        }));
+        assert!(r.is_err(), "the shard panic must reach the submitter");
+        // the job was drained, so the pool keeps working
+        let total = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            total.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_cores() {
+        let pool = ThreadPool::new(0);
+        assert!(pool.threads() >= 1);
+        let pool = ThreadPool::new(9999);
+        assert!(pool.threads() <= MAX_THREADS);
+    }
+}

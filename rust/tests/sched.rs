@@ -12,7 +12,11 @@
 //! * the batched `forward_step` path matches the per-sequence
 //!   `forward_token` path bit-for-bit on packed weights;
 //! * the paged-q8 backend serves the same workload shape end to end with
-//!   a strictly smaller KV arena.
+//!   a strictly smaller KV arena;
+//! * all of the above hold at every worker-thread count: the
+//!   lane-sharded gemm / KV-gather fan-out may never change one emitted
+//!   token (the threaded CI lane forces `OMNIQUANT_TEST_THREADS=0`, i.e.
+//!   one worker per core, so a single-core runner can't mask a race).
 
 use omniquant::config::QuantSetting;
 use omniquant::model::ModelParams;
@@ -30,6 +34,24 @@ fn engine(family: &str, setting: &str, seed: u64) -> Engine {
     let mut rng = Rng::new(seed);
     let params = ModelParams::init(&m, &mut rng);
     Engine::build(&params, QuantSetting::parse(setting).unwrap()).unwrap()
+}
+
+/// Worker-thread counts the determinism suite runs at: 1 (the serial
+/// reference) plus a threaded point — `OMNIQUANT_TEST_THREADS` when set
+/// (0 = available_parallelism; the CI threaded lane sets this), else 4.
+fn thread_counts() -> Vec<usize> {
+    let threaded = match std::env::var("OMNIQUANT_TEST_THREADS") {
+        Ok(v) => {
+            let n: usize = v.trim().parse().expect("OMNIQUANT_TEST_THREADS must be an integer");
+            if n == 0 {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).max(2)
+            } else {
+                n
+            }
+        }
+        Err(_) => 4,
+    };
+    vec![1, threaded]
 }
 
 #[test]
@@ -60,31 +82,44 @@ fn outputs_independent_of_batch_composition_and_kv_backend() {
         // crowded: 2 slots for 5 staggered requests forces queueing, slot
         // recycling and ragged co-scheduled batches. The paged backend
         // (4-token blocks, so every sequence spans several blocks) must
-        // emit bit-identical tokens to the slab reference.
-        for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32] {
-            let cfg =
-                SchedConfig { slots: 2, slot_tokens: 64, eos: None, kv, block_tokens: 4 };
-            let mut sch = Scheduler::new(&eng, cfg);
-            for r in reqs.iter().cloned() {
-                sch.submit(r).unwrap();
-            }
-            sch.run().unwrap();
-            for r in &reqs {
+        // emit bit-identical tokens to the slab reference — at every
+        // worker-thread count, since the sharded decode is bit-exact.
+        for threads in thread_counts() {
+            for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32] {
+                let cfg = SchedConfig {
+                    slots: 2,
+                    slot_tokens: 64,
+                    eos: None,
+                    kv,
+                    block_tokens: 4,
+                    threads,
+                };
+                let mut sch = Scheduler::new(&eng, cfg);
+                for r in reqs.iter().cloned() {
+                    sch.submit(r).unwrap();
+                }
+                sch.run().unwrap();
+                for r in &reqs {
+                    assert_eq!(
+                        sch.output(r.id).unwrap(),
+                        &expect[r.id][..],
+                        "{family} {kv:?} threads={threads} crowded req {}",
+                        r.id
+                    );
+                }
+                assert_eq!(sch.pool().free_slots(), 2, "all slots reclaimed after drain");
+                assert_eq!(sch.pool().leased_slots(), 0);
                 assert_eq!(
-                    sch.output(r.id).unwrap(),
-                    &expect[r.id][..],
-                    "{family} {kv:?} crowded req {}",
-                    r.id
+                    sch.pool().peak_leased(),
+                    2,
+                    "{family}: crowding reached full width"
+                );
+                assert_eq!(
+                    sch.pool().free_blocks(),
+                    sch.pool().n_blocks(),
+                    "{family} {kv:?}: every block reclaimed after drain"
                 );
             }
-            assert_eq!(sch.pool().free_slots(), 2, "all slots reclaimed after drain");
-            assert_eq!(sch.pool().leased_slots(), 0);
-            assert_eq!(sch.pool().peak_leased(), 2, "{family}: crowding reached full width");
-            assert_eq!(
-                sch.pool().free_blocks(),
-                sch.pool().n_blocks(),
-                "{family} {kv:?}: every block reclaimed after drain"
-            );
         }
 
         // solo: each request alone in the scheduler emits the same tokens
@@ -121,23 +156,26 @@ fn forward_step_matches_forward_token_bit_for_bit() {
                 want = eng.forward_token(t, &mut cache, &mut scratch);
             }
             // pooled batched path, width 1; 3-token blocks make the reads
-            // span block boundaries with a ragged tail
-            let mut pool = KvPool::new(kv, 1, eng.desc.n_layers, 8, eng.desc.d_model, 3);
-            let slot = pool.lease(tokens.len()).unwrap();
-            let mut bs = eng.new_batch_scratch(1, 8);
-            for &t in &tokens {
-                eng.forward_step(&[t], &[slot], &mut pool, &mut bs);
+            // span block boundaries with a ragged tail. The sharded gemm /
+            // KV gather must not move a single logit bit at any count.
+            for threads in thread_counts() {
+                let mut pool = KvPool::new(kv, 1, eng.desc.n_layers, 8, eng.desc.d_model, 3);
+                let slot = pool.lease(tokens.len()).unwrap();
+                let mut bs = eng.new_batch_scratch(1, 8, threads);
+                for &t in &tokens {
+                    eng.forward_step(&[t], &[slot], &mut pool, &mut bs);
+                }
+                let got = &bs.logits[..eng.desc.vocab];
+                assert_eq!(want.len(), got.len());
+                for (c, (a, b)) in want.iter().zip(got).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{family} {setting} {kv:?} threads={threads} logit {c}: {a} vs {b}"
+                    );
+                }
+                assert_eq!(pool.len(slot), tokens.len());
             }
-            let got = &bs.logits[..eng.desc.vocab];
-            assert_eq!(want.len(), got.len());
-            for (c, (a, b)) in want.iter().zip(got).enumerate() {
-                assert_eq!(
-                    a.to_bits(),
-                    b.to_bits(),
-                    "{family} {setting} {kv:?} logit {c}: {a} vs {b}"
-                );
-            }
-            assert_eq!(pool.len(slot), tokens.len());
         }
     }
 }
@@ -153,7 +191,14 @@ fn eos_retires_early() {
     for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32] {
         let mut sch = Scheduler::new(
             &eng,
-            SchedConfig { slots: 1, slot_tokens: 64, eos: Some(eos), kv, block_tokens: 4 },
+            SchedConfig {
+                slots: 1,
+                slot_tokens: 64,
+                eos: Some(eos),
+                kv,
+                block_tokens: 4,
+                ..Default::default()
+            },
         );
         sch.submit(Request {
             id: 0,
@@ -206,11 +251,14 @@ fn staggered_workload_queues_and_drains() {
         max_new_tokens: 6,
         temperature: 0.0,
     };
+    // run the churny end-to-end workload at the suite's threaded point:
+    // admission, retirement and back-pressure under a sharded decode
+    let threads = *thread_counts().last().unwrap();
     for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32] {
         let reqs = synthetic_workload(&spec, eng.desc.vocab, 3);
         let mut sch = Scheduler::new(
             &eng,
-            SchedConfig { slots: 3, slot_tokens: 16, eos: None, kv, block_tokens: 4 },
+            SchedConfig { slots: 3, slot_tokens: 16, eos: None, kv, block_tokens: 4, threads },
         );
         for r in reqs {
             sch.submit(r).unwrap();
@@ -241,7 +289,14 @@ fn paged_q8_serves_and_drains_with_smaller_arena() {
         max_new_tokens: 6,
         temperature: 0.0,
     };
-    let mk = |kv| SchedConfig { slots: 3, slot_tokens: 16, eos: None, kv, block_tokens: 4 };
+    let mk = |kv| SchedConfig {
+        slots: 3,
+        slot_tokens: 16,
+        eos: None,
+        kv,
+        block_tokens: 4,
+        threads: *thread_counts().last().unwrap(),
+    };
     let mut q8 = Scheduler::new(&eng, mk(KvStoreKind::PagedQ8));
     for r in synthetic_workload(&spec, eng.desc.vocab, 3) {
         q8.submit(r).unwrap();
@@ -276,6 +331,7 @@ fn block_exhaustion_backpressure_queues() {
         eos: None,
         kv: KvStoreKind::PagedF32,
         block_tokens: 8,
+        ..Default::default()
     };
     let mut sch = Scheduler::new(&eng, cfg);
     assert_eq!(sch.pool().n_blocks(), 15);
