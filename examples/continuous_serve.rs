@@ -63,7 +63,8 @@ fn main() -> Result<()> {
             eos: None,
             kv,
             block_tokens: 16,
-            threads: 0, // one worker per available core
+            threads: 0,       // one worker per available core
+            prefill_chunk: 8, // interleave prompts with decode, 8 tokens/tick
         };
         let mut scheduler = Scheduler::new(&engine, cfg);
         for r in requests {

@@ -56,6 +56,21 @@ impl QuantSetting {
     }
 }
 
+/// Parse a TOML integer into a `usize`, rejecting negatives with an error
+/// that names the offending key and value. `TomlValue::as_int` is `i64`;
+/// the old bare `as usize` cast silently turned `threads = -4` into
+/// 18446744073709551612.
+fn toml_usize(key: &str, v: &TomlValue) -> Result<usize> {
+    let x = v.as_int()?;
+    usize::try_from(x).map_err(|_| anyhow!("{key} = {x}: expected a non-negative integer"))
+}
+
+/// As [`toml_usize`], for `u64` fields (seeds).
+fn toml_u64(key: &str, v: &TomlValue) -> Result<u64> {
+    let x = v.as_int()?;
+    u64::try_from(x).map_err(|_| anyhow!("{key} = {x}: expected a non-negative integer"))
+}
+
 /// Calibration hyperparameters (paper section 4.1, scaled to this testbed).
 #[derive(Clone, Debug)]
 pub struct CalibConfig {
@@ -98,13 +113,13 @@ impl CalibConfig {
         let mut c = CalibConfig::default();
         for (k, val) in v {
             match k.as_str() {
-                "samples" => c.samples = val.as_int()? as usize,
-                "epochs" => c.epochs = val.as_int()? as usize,
-                "batch" => c.batch = val.as_int()? as usize,
+                "samples" => c.samples = toml_usize("calib.samples", val)?,
+                "epochs" => c.epochs = toml_usize("calib.epochs", val)?,
+                "batch" => c.batch = toml_usize("calib.batch", val)?,
                 "lr_lwc" => c.lr_lwc = val.as_float()? as f32,
                 "lr_let" => c.lr_let = val.as_float()? as f32,
                 "wd" => c.wd = val.as_float()? as f32,
-                "seed" => c.seed = val.as_int()? as u64,
+                "seed" => c.seed = toml_u64("calib.seed", val)?,
                 "use_lwc" => c.use_lwc = val.as_bool()?,
                 "use_let" => c.use_let = val.as_bool()?,
                 "use_let_shift" => c.use_let_shift = val.as_bool()?,
@@ -138,11 +153,11 @@ impl TrainConfig {
         let mut c = TrainConfig::default();
         for (k, val) in v {
             match k.as_str() {
-                "steps" => c.steps = val.as_int()? as usize,
+                "steps" => c.steps = toml_usize("train.steps", val)?,
                 "lr" => c.lr = val.as_float()? as f32,
-                "warmup" => c.warmup = val.as_int()? as usize,
-                "seed" => c.seed = val.as_int()? as u64,
-                "log_every" => c.log_every = val.as_int()? as usize,
+                "warmup" => c.warmup = toml_usize("train.warmup", val)?,
+                "seed" => c.seed = toml_u64("train.seed", val)?,
+                "log_every" => c.log_every = toml_usize("train.log_every", val)?,
                 other => return Err(anyhow!("unknown train key '{other}'")),
             }
         }
@@ -172,6 +187,12 @@ pub struct ServeConfig {
     /// Worker threads for the batched decode fan-out; 0 = one per
     /// available core. Sharding is bit-exact, so this only changes speed.
     pub threads: usize,
+    /// Max prompt tokens prefilled per scheduler tick, interleaved with
+    /// decode (0 = unchunked: the per-tick budget becomes the full slot
+    /// capacity, so any single prompt lands in one tick). Chunking is
+    /// bit-exact; the knob only bounds how long a prompt may stall
+    /// co-scheduled decodes.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeConfig {
@@ -187,6 +208,7 @@ impl Default for ServeConfig {
             kv: "slab".into(),
             block_tokens: 16,
             threads: 0,
+            prefill_chunk: 32,
         }
     }
 }
@@ -196,16 +218,17 @@ impl ServeConfig {
         let mut c = ServeConfig::default();
         for (k, val) in v {
             match k.as_str() {
-                "slots" => c.slots = val.as_int()? as usize,
-                "requests" => c.requests = val.as_int()? as usize,
+                "slots" => c.slots = toml_usize("serve.slots", val)?,
+                "requests" => c.requests = toml_usize("serve.requests", val)?,
                 "interarrival" => c.mean_interarrival_steps = val.as_float()?,
-                "prompt_len" => c.prompt_len = val.as_int()? as usize,
-                "max_new_tokens" => c.max_new_tokens = val.as_int()? as usize,
+                "prompt_len" => c.prompt_len = toml_usize("serve.prompt_len", val)?,
+                "max_new_tokens" => c.max_new_tokens = toml_usize("serve.max_new_tokens", val)?,
                 "temperature" => c.temperature = val.as_float()? as f32,
-                "seed" => c.seed = val.as_int()? as u64,
+                "seed" => c.seed = toml_u64("serve.seed", val)?,
                 "kv" => c.kv = val.as_str()?.to_string(),
-                "block_tokens" => c.block_tokens = val.as_int()? as usize,
-                "threads" => c.threads = val.as_int()? as usize,
+                "block_tokens" => c.block_tokens = toml_usize("serve.block_tokens", val)?,
+                "threads" => c.threads = toml_usize("serve.threads", val)?,
+                "prefill_chunk" => c.prefill_chunk = toml_usize("serve.prefill_chunk", val)?,
                 other => return Err(anyhow!("unknown serve key '{other}'")),
             }
         }
@@ -322,6 +345,7 @@ max_new_tokens = 32
 kv = "paged-q8"
 block_tokens = 32
 threads = 4
+prefill_chunk = 8
 "#,
         )
         .unwrap();
@@ -333,11 +357,13 @@ threads = 4
         assert_eq!(cfg.serve.kv, "paged-q8");
         assert_eq!(cfg.serve.block_tokens, 32);
         assert_eq!(cfg.serve.threads, 4);
+        assert_eq!(cfg.serve.prefill_chunk, 8);
         let d = ExperimentConfig::parse("model = \"m\"").unwrap();
         assert_eq!(d.serve.slots, ServeConfig::default().slots);
         assert_eq!(d.serve.kv, "slab");
         assert_eq!(d.serve.block_tokens, 16);
         assert_eq!(d.serve.threads, 0, "default: one worker per core");
+        assert_eq!(d.serve.prefill_chunk, 32);
     }
 
     #[test]
@@ -345,5 +371,29 @@ threads = 4
         assert!(ExperimentConfig::parse("bogus = 1").is_err());
         assert!(ExperimentConfig::parse("[calib]\nnope = 2").is_err());
         assert!(ExperimentConfig::parse("[serve]\nnope = 2").is_err());
+    }
+
+    #[test]
+    fn negative_ints_rejected_with_key_and_value() {
+        // regression: `as_int() as usize` silently wrapped negatives to
+        // huge values; now every usize/u64 key rejects them by name
+        for (key, value, text) in [
+            ("serve.threads", "-4", "[serve]\nthreads = -4"),
+            ("serve.block_tokens", "-16", "[serve]\nblock_tokens = -16"),
+            ("serve.prefill_chunk", "-1", "[serve]\nprefill_chunk = -1"),
+            ("serve.slots", "-2", "[serve]\nslots = -2"),
+            ("serve.seed", "-7", "[serve]\nseed = -7"),
+            ("calib.samples", "-32", "[calib]\nsamples = -32"),
+            ("train.steps", "-300", "[train]\nsteps = -300"),
+        ] {
+            let err = ExperimentConfig::parse(text).unwrap_err().to_string();
+            assert!(err.contains(key), "error for {key} must name the key: {err}");
+            assert!(err.contains(value), "error for {key} must show the value: {err}");
+            assert!(err.contains("non-negative"), "{err}");
+        }
+        // non-negative values still parse
+        let ok = ExperimentConfig::parse("[serve]\nthreads = 0\nprefill_chunk = 0").unwrap();
+        assert_eq!(ok.serve.threads, 0);
+        assert_eq!(ok.serve.prefill_chunk, 0);
     }
 }

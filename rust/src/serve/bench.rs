@@ -136,18 +136,24 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
     let mut q8_arena = 0usize;
     let mut slab_bpt = 0usize;
     let mut q8_bpt = 0usize;
-    // one median-of-reps continuous run for a (kv, threads) point
-    let run_continuous = |kind: KvStoreKind, threads: usize| -> Result<ServeSummary> {
+    // one median-of-reps continuous run for a (kv, threads, workload,
+    // prefill-chunk) point; prefill_chunk = 0 keeps whole-prompt-per-tick
+    let run_continuous = |kind: KvStoreKind,
+                          threads: usize,
+                          spec: &WorkloadSpec,
+                          chunk: usize|
+     -> Result<ServeSummary> {
         let mut cont_runs = Vec::with_capacity(reps);
         for _ in 0..reps {
-            let reqs = synthetic_workload(&spec, vocab, opts.seed);
+            let reqs = synthetic_workload(spec, vocab, opts.seed);
             let cfg = SchedConfig {
                 slots: b,
-                slot_tokens: p + n + 1,
+                slot_tokens: spec.prompt_len + spec.max_new_tokens + 1,
                 eos: None,
                 kv: kind,
                 block_tokens: BENCH_BLOCK_TOKENS,
                 threads,
+                prefill_chunk: chunk,
             };
             let mut sch = Scheduler::new(&engine, cfg);
             for r in reqs {
@@ -160,7 +166,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         Ok(cont_runs[cont_runs.len() / 2].clone())
     };
     for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
-        let summary = run_continuous(kind, 1)?;
+        let summary = run_continuous(kind, 1, &spec, 0)?;
         let tps = summary.decode_tok_per_s;
         match kind {
             KvStoreKind::SlabF32 => {
@@ -209,7 +215,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
     //    multiplier on the Table 3 decode regime.
     let mut thread_speedup_4 = 0.0;
     for threads in [2usize, 4] {
-        let summary = run_continuous(KvStoreKind::SlabF32, threads)?;
+        let summary = run_continuous(KvStoreKind::SlabF32, threads, &spec, 0)?;
         let tps = summary.decode_tok_per_s;
         let rel = tps / slab_tps.max(1e-9);
         if threads == 4 {
@@ -220,6 +226,54 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         ));
         modes.insert(format!("continuous_t{threads}"), summary.to_json());
     }
+
+    // 5. chunked prefill under concurrent long-prompt arrivals — the
+    //    head-of-line experiment. Prompts 4x the base length arrive fast,
+    //    so prefill and decode constantly contend: prefill_chunk=0 is the
+    //    unchunked baseline (a slot-capacity budget: each prompt lands in
+    //    one giant stacked chunk that stalls every co-scheduled decoder
+    //    for that tick), the chunked points interleave at most C prompt
+    //    tokens with each decode step. step-p90 is the stall metric;
+    //    TTFT-p90 tracks first-token wait.
+    let long_p = 4 * p;
+    let long_spec = WorkloadSpec {
+        requests: 2 * b,
+        mean_interarrival_steps: 1.0,
+        prompt_len: long_p,
+        max_new_tokens: n,
+        temperature: 0.0,
+    };
+    let mut whole_step_p90 = 0.0f64;
+    let mut whole_ttft_p90 = 0.0f64;
+    let mut best_chunk_step_p90 = f64::INFINITY;
+    let mut best_chunk_ttft_p90 = f64::INFINITY;
+    for chunk in [0usize, 4, 16] {
+        let summary = run_continuous(KvStoreKind::SlabF32, 1, &long_spec, chunk)?;
+        if chunk == 0 {
+            whole_step_p90 = summary.step_p90_ms;
+            whole_ttft_p90 = summary.ttft_p90_ms;
+        } else {
+            best_chunk_step_p90 = best_chunk_step_p90.min(summary.step_p90_ms);
+            best_chunk_ttft_p90 = best_chunk_ttft_p90.min(summary.ttft_p90_ms);
+        }
+        let label = if chunk == 0 { "whole".to_string() } else { format!("c{chunk}") };
+        lines.push(format!(
+            "prefill {label:<6} prompt {long_p:<4}{:>9.1} tok/s  \
+             (step p90 {:.2} ms, ttft p90 {:.1} ms)",
+            summary.decode_tok_per_s, summary.step_p90_ms, summary.ttft_p90_ms,
+        ));
+        let key = if chunk == 0 {
+            "prefill_whole".to_string()
+        } else {
+            format!("prefill_chunk_{chunk}")
+        };
+        modes.insert(key, summary.to_json());
+    }
+    let step_p90_improvement = whole_step_p90 / best_chunk_step_p90.max(1e-9);
+    lines.push(format!(
+        "prefill chunking: step p90 {whole_step_p90:.2} -> {best_chunk_step_p90:.2} ms \
+         ({step_p90_improvement:.2}x), ttft p90 {whole_ttft_p90:.1} -> {best_chunk_ttft_p90:.1} ms"
+    ));
 
     let num = |v: f64| Json::Num(v);
     let mut seq_o = BTreeMap::new();
@@ -252,6 +306,12 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         ("modes".to_string(), Json::Obj(modes)),
         ("speedup_continuous_vs_lockstep".to_string(), num(speedup)),
         ("speedup_threads_4_vs_1".to_string(), num(thread_speedup_4)),
+        ("prefill_sweep_prompt_len".to_string(), num(long_p as f64)),
+        ("step_p90_improvement_prefill_chunk_vs_whole".to_string(), num(step_p90_improvement)),
+        (
+            "ttft_p90_ms_prefill_whole_vs_best_chunk".to_string(),
+            Json::Arr(vec![num(whole_ttft_p90), num(best_chunk_ttft_p90)]),
+        ),
         (
             "kv_arena_ratio_q8_vs_slab".to_string(),
             num(slab_arena as f64 / q8_arena.max(1) as f64),

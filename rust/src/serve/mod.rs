@@ -8,12 +8,16 @@
 //! greedy or temperature sampling, lockstep-batched decoding and a KV
 //! cache; weight/running-memory accounting matches Table 3's WM/RM columns.
 //!
-//! Beyond the per-sequence paths, `forward_step` decodes a whole batch of
-//! co-scheduled sequences against the pooled KV cache (`sched::KvPool`),
-//! stacking activations so every packed weight matrix is streamed once per
-//! step via the batched `gemm` kernels — the substrate of the
-//! continuous-batching scheduler in [`sched`] and the serve benchmark in
-//! [`bench`]. The pool is backend-agnostic (`sched::KvStoreKind`): slab
+//! Beyond the per-sequence paths, `forward_chunked` drives a whole batch
+//! of co-scheduled sequences against the pooled KV cache (`sched::KvPool`)
+//! — each contributing a *run* of consecutive tokens: one-token runs for
+//! decoding sequences, multi-token runs for prompts being prefilled
+//! (intra-chunk causal attention). All rows are stacked so every packed
+//! weight matrix is streamed once per tick via the batched `gemm`
+//! kernels, whatever mix of prefill and decode shares the tick — the
+//! substrate of the continuous-batching scheduler in [`sched`] and the
+//! serve benchmark in [`bench`]. `forward_step` is the pure-decode
+//! wrapper (one-token runs). The pool is backend-agnostic (`sched::KvStoreKind`): slab
 //! f32 slots, vLLM-style paged blocks, or paged 8-bit group-quantized
 //! blocks; attention reads go through `KvPool::layer_kv`, which borrows
 //! the slab arena zero-copy and gathers/dequantizes paged blocks into
@@ -164,6 +168,21 @@ impl KvCache {
     pub fn bytes(&self) -> usize {
         self.k.iter().chain(self.v.iter()).map(|c| c.capacity() * 4).sum()
     }
+}
+
+/// One sequence's slice of a chunked forward pass
+/// ([`Engine::forward_chunked`]): a run of consecutive tokens starting at
+/// the sequence's current KV length. Decoding sequences contribute
+/// one-token runs; prompts being prefilled contribute up to
+/// `prefill_chunk` tokens per tick.
+pub struct SeqChunk<'a> {
+    pub slot: sched::SlotId,
+    pub tokens: &'a [i32],
+    /// Compute logits for the run's last row (false for a prompt chunk
+    /// that stops short of the prompt end — nothing to sample yet, so the
+    /// vocab-wide head gemm is skipped for it). Sampling runs are
+    /// assigned `scratch.logits` rows in order of appearance.
+    pub sample: bool,
 }
 
 pub struct Engine {
@@ -450,11 +469,9 @@ impl Engine {
     /// at each sequence's current KV length in its pooled slot, append this
     /// step's K/V, and leave logits in `scratch.logits` (b, vocab).
     ///
-    /// Activations are stacked into (b, d) matrices so every weight matrix
-    /// — packed or FP — is streamed **once per step for the whole batch**
-    /// via the batched `gemm` path (the memory-bandwidth win of Table 3's
-    /// regime). Per-row arithmetic is bit-identical to `forward_token`, so
-    /// a sequence's outputs never depend on its co-scheduled batch.
+    /// Thin wrapper over [`Engine::forward_chunked`] with a one-token run
+    /// per sequence — the pure-decode tick. Kept because most callers
+    /// (and the parity tests) speak in flat `(tokens, slots)` batches.
     pub fn forward_step(
         &self,
         tokens: &[i32],
@@ -462,10 +479,58 @@ impl Engine {
         pool: &mut sched::KvPool,
         scratch: &mut BatchScratch,
     ) {
-        let b = tokens.len();
-        assert_eq!(slots.len(), b);
-        assert!(b > 0, "forward_step on an empty batch");
-        assert!(b <= scratch.cap, "batch {b} exceeds scratch capacity {}", scratch.cap);
+        assert_eq!(slots.len(), tokens.len());
+        let runs: Vec<SeqChunk> = tokens
+            .iter()
+            .zip(slots)
+            .map(|(t, &slot)| SeqChunk { slot, tokens: std::slice::from_ref(t), sample: true })
+            .collect();
+        self.forward_chunked(&runs, pool, scratch);
+    }
+
+    /// One chunked forward pass over co-scheduled sequences, each
+    /// contributing a *run* of consecutive tokens starting at its current
+    /// KV length — one-token runs for decoding sequences, multi-token runs
+    /// for prompts being prefilled. All runs' rows are stacked into one
+    /// `(width, d)` activation matrix, so every weight matrix — packed or
+    /// FP — is streamed **once for the whole tick** whatever mix of
+    /// prefill and decode shares it (the memory-bandwidth win of Table 3's
+    /// regime): a chunk of C prompt tokens costs one weight walk, not C.
+    ///
+    /// Attention is causal *within* a run by construction: row `r` of a
+    /// run at base length `L` attends over cached positions `0..=L+r`,
+    /// which includes the run's own earlier rows (their K/V are appended
+    /// to the pool before any attention read in the same layer) and never
+    /// a later one. Per-row arithmetic — norms, the row-independent gemm
+    /// lanes, RoPE, scores/softmax — is bit-identical to feeding the same
+    /// tokens one `forward_step` at a time, at any worker-thread count,
+    /// so chunking can never change one emitted token (parity-tested in
+    /// `tests/sched.rs`).
+    ///
+    /// Logits are computed only for the last row of each run with
+    /// [`SeqChunk::sample`] set (a prompt chunk that doesn't reach the
+    /// prompt end has no token to sample, so its vocab-wide head gemm and
+    /// final norm are skipped): the j-th sampling run's logits land in
+    /// `scratch.logits[j * vocab..]`, in run order.
+    pub fn forward_chunked(
+        &self,
+        runs: &[SeqChunk],
+        pool: &mut sched::KvPool,
+        scratch: &mut BatchScratch,
+    ) {
+        let w: usize = runs.iter().map(|r| r.tokens.len()).sum();
+        assert!(w > 0, "forward_chunked on an empty batch");
+        assert!(
+            runs.iter().all(|r| !r.tokens.is_empty()),
+            "forward_chunked: every run must carry at least one token"
+        );
+        assert!(w <= scratch.cap, "chunk width {w} exceeds scratch capacity {}", scratch.cap);
+        let ns = runs.iter().filter(|r| r.sample).count();
+        assert!(
+            ns <= scratch.sample_cap,
+            "{ns} sampling runs exceed logits capacity {}",
+            scratch.sample_cap
+        );
         let d = self.desc.d_model;
         let dff = self.desc.d_ff;
         let BatchScratch {
@@ -485,145 +550,197 @@ impl Engine {
             pool: tp,
             ..
         } = scratch;
-        for s in 0..b {
-            let x = &mut xs[s * d..(s + 1) * d];
-            x.copy_from_slice(self.embed.row(tokens[s] as usize));
-            if let Some(p) = &self.pos {
-                let pos = pool.len(slots[s]);
-                for (xi, pv) in x.iter_mut().zip(p.row(pos.min(self.desc.seq_len - 1))) {
-                    *xi += pv;
+        // row layout: runs concatenated in order; run i owns rows
+        // [row0, row0 + n_i), row r sitting at sequence position L + r
+        let mut row0 = 0usize;
+        for run in runs {
+            let base = pool.len(run.slot);
+            for (r, &tok) in run.tokens.iter().enumerate() {
+                let x = &mut xs[(row0 + r) * d..(row0 + r + 1) * d];
+                x.copy_from_slice(self.embed.row(tok as usize));
+                if let Some(p) = &self.pos {
+                    let pos = base + r;
+                    for (xi, pv) in x.iter_mut().zip(p.row(pos.min(self.desc.seq_len - 1))) {
+                        *xi += pv;
+                    }
                 }
             }
+            row0 += run.tokens.len();
         }
         let llama = self.desc.family == "llama";
         let norm = if llama { rmsnorm } else { layernorm };
         for (li, blk) in self.blocks.iter().enumerate() {
             // --- attention ---
-            for s in 0..b {
+            for s in 0..w {
                 norm(&xs[s * d..(s + 1) * d], &blk.ln1_w, &blk.ln1_b, &mut x1[s * d..(s + 1) * d]);
             }
             for (name, dst) in [("wq", &mut *q), ("wk", &mut *k), ("wv", &mut *v)] {
-                let (_, w, bias) = blk.linear(name);
-                gemm_bias_rows(w, bias, &x1[..b * d], b, &mut dst[..b * d], &mut gemm[..], tp);
+                let (_, w_, bias) = blk.linear(name);
+                gemm_bias_rows(w_, bias, &x1[..w * d], w, &mut dst[..w * d], &mut gemm[..], tp);
             }
             if llama {
-                for s in 0..b {
-                    let pos = pool.len(slots[s]);
-                    self.rope_inplace(&mut q[s * d..(s + 1) * d], pos);
-                    self.rope_inplace(&mut k[s * d..(s + 1) * d], pos);
+                let mut row0 = 0usize;
+                for run in runs {
+                    let base = pool.len(run.slot);
+                    for r in 0..run.tokens.len() {
+                        let s = row0 + r;
+                        self.rope_inplace(&mut q[s * d..(s + 1) * d], base + r);
+                        self.rope_inplace(&mut k[s * d..(s + 1) * d], base + r);
+                    }
+                    row0 += run.tokens.len();
                 }
             }
-            for s in 0..b {
-                pool.append(slots[s], li, &k[s * d..(s + 1) * d], &v[s * d..(s + 1) * d]);
+            // append every run's chunk of K/V rows before any attention
+            // read: later rows of a run must see earlier rows' cache
+            let mut row0 = 0usize;
+            for run in runs {
+                let n = run.tokens.len();
+                let (kr, vr) = (&k[row0 * d..(row0 + n) * d], &v[row0 * d..(row0 + n) * d]);
+                pool.append_run(run.slot, li, n, kr, vr);
+                row0 += n;
             }
             // attention over each sequence's own pooled cache (ragged
             // lengths; tiny next to the weight streaming the gemms share).
             // `layer_kv` yields contiguous (t, d) views: the slab backend
             // borrows its arena directly, the paged backends walk the
             // sequence's block table and gather (Q8: dequantize) into the
-            // per-step kv_k/kv_v scratch
+            // per-step kv_k/kv_v scratch. One gather serves the whole run:
+            // row r just reads the first `L + r + 1` rows of it.
             let hd = self.desc.head_dim;
             let scale = 1.0 / (hd as f32).sqrt();
-            for s in 0..b {
-                let t = pool.len(slots[s]) + 1;
-                let (kc, vc) = pool.layer_kv(slots[s], li, t, &mut *kv_k, &mut *kv_v, tp);
-                let qrow = &q[s * d..(s + 1) * d];
-                let aorow = &mut ao[s * d..(s + 1) * d];
-                aorow.iter_mut().for_each(|a| *a = 0.0);
-                for h in 0..self.desc.n_heads {
-                    let base = h * hd;
-                    let sc = &mut scores[..t];
-                    for ti in 0..t {
-                        let krow = &kc[ti * d + base..ti * d + base + hd];
-                        let mut sdot = 0.0f32;
-                        for j in 0..hd {
-                            sdot += qrow[base + j] * krow[j];
+            let mut row0 = 0usize;
+            for run in runs {
+                let n = run.tokens.len();
+                let base = pool.len(run.slot);
+                let (kc, vc) = pool.layer_kv(run.slot, li, base + n, &mut *kv_k, &mut *kv_v, tp);
+                for r in 0..n {
+                    let t = base + r + 1; // intra-chunk causal mask
+                    let s = row0 + r;
+                    let qrow = &q[s * d..(s + 1) * d];
+                    let aorow = &mut ao[s * d..(s + 1) * d];
+                    aorow.iter_mut().for_each(|a| *a = 0.0);
+                    for h in 0..self.desc.n_heads {
+                        let base_h = h * hd;
+                        let sc = &mut scores[..t];
+                        for ti in 0..t {
+                            let krow = &kc[ti * d + base_h..ti * d + base_h + hd];
+                            let mut sdot = 0.0f32;
+                            for j in 0..hd {
+                                sdot += qrow[base_h + j] * krow[j];
+                            }
+                            sc[ti] = sdot * scale;
                         }
-                        sc[ti] = sdot * scale;
-                    }
-                    let mx = sc.iter().fold(f32::MIN, |m, &x| m.max(x));
-                    let mut denom = 0.0f32;
-                    for x in sc.iter_mut() {
-                        *x = (*x - mx).exp();
-                        denom += *x;
-                    }
-                    for ti in 0..t {
-                        let pattn = sc[ti] / denom;
-                        let vrow = &vc[ti * d + base..ti * d + base + hd];
-                        for j in 0..hd {
-                            aorow[base + j] += pattn * vrow[j];
+                        let mx = sc.iter().fold(f32::MIN, |m, &x| m.max(x));
+                        let mut denom = 0.0f32;
+                        for x in sc.iter_mut() {
+                            *x = (*x - mx).exp();
+                            denom += *x;
+                        }
+                        for ti in 0..t {
+                            let pattn = sc[ti] / denom;
+                            let vrow = &vc[ti * d + base_h..ti * d + base_h + hd];
+                            for j in 0..hd {
+                                aorow[base_h + j] += pattn * vrow[j];
+                            }
                         }
                     }
                 }
+                row0 += n;
             }
             {
-                let (_, w, bias) = blk.linear("wo");
-                w.gemm(&ao[..b * d], b, &mut x1[..b * d], &mut gemm[..], tp);
-                residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
+                let (_, w_, bias) = blk.linear("wo");
+                w_.gemm(&ao[..w * d], w, &mut x1[..w * d], &mut gemm[..], tp);
+                residual_add_rows(&mut xs[..w * d], &x1[..w * d], bias, w);
             }
             // --- ffn ---
-            for s in 0..b {
+            for s in 0..w {
                 norm(&xs[s * d..(s + 1) * d], &blk.ln2_w, &blk.ln2_b, &mut x1[s * d..(s + 1) * d]);
             }
             if llama {
                 for (name, dst) in [("wg", &mut *ff1), ("wu", &mut *ff2)] {
-                    let (_, w, bias) = blk.linear(name);
-                    let dst = &mut dst[..b * dff];
-                    gemm_bias_rows(w, bias, &x1[..b * d], b, dst, &mut gemm[..], tp);
+                    let (_, w_, bias) = blk.linear(name);
+                    let dst = &mut dst[..w * dff];
+                    gemm_bias_rows(w_, bias, &x1[..w * d], w, dst, &mut gemm[..], tp);
                 }
-                for i in 0..b * dff {
+                for i in 0..w * dff {
                     ff1[i] = silu(ff1[i]) * ff2[i];
                 }
-                let (_, w, bias) = blk.linear("wd");
-                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d], &mut gemm[..], tp);
-                residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
+                let (_, w_, bias) = blk.linear("wd");
+                w_.gemm(&ff1[..w * dff], w, &mut x1[..w * d], &mut gemm[..], tp);
+                residual_add_rows(&mut xs[..w * d], &x1[..w * d], bias, w);
             } else {
                 {
                     // fused bias + ReLU, as in `forward_token`
-                    let (_, w, bias) = blk.linear("w1");
-                    w.gemm(&x1[..b * d], b, &mut ff1[..b * dff], &mut gemm[..], tp);
-                    for s in 0..b {
+                    let (_, w_, bias) = blk.linear("w1");
+                    w_.gemm(&x1[..w * d], w, &mut ff1[..w * dff], &mut gemm[..], tp);
+                    for s in 0..w {
                         ff1[s * dff..(s + 1) * dff]
                             .iter_mut()
                             .zip(bias)
                             .for_each(|(y, bv)| *y = (*y + bv).max(0.0));
                     }
                 }
-                let (_, w, bias) = blk.linear("w2");
-                w.gemm(&ff1[..b * dff], b, &mut x1[..b * d], &mut gemm[..], tp);
-                residual_add_rows(&mut xs[..b * d], &x1[..b * d], bias, b);
+                let (_, w_, bias) = blk.linear("w2");
+                w_.gemm(&ff1[..w * dff], w, &mut x1[..w * d], &mut gemm[..], tp);
+                residual_add_rows(&mut xs[..w * d], &x1[..w * d], bias, w);
             }
         }
-        for s in 0..b {
-            pool.advance(slots[s]);
+        for run in runs {
+            pool.advance_by(run.slot, run.tokens.len());
         }
-        for s in 0..b {
-            norm(&xs[s * d..(s + 1) * d], &self.lnf_w, &self.lnf_b, &mut x1[s * d..(s + 1) * d]);
+        // final norm + vocab head only for the rows that will be sampled
+        // (compacted: sampling run j's logits land in row j)
+        let mut j = 0usize;
+        let mut row0 = 0usize;
+        for run in runs {
+            let n = run.tokens.len();
+            if run.sample {
+                let last = row0 + n - 1;
+                let dst = &mut x1[j * d..(j + 1) * d];
+                norm(&xs[last * d..(last + 1) * d], &self.lnf_w, &self.lnf_b, dst);
+                j += 1;
+            }
+            row0 += n;
         }
-        let vocab = self.desc.vocab;
-        self.head.gemm(&x1[..b * d], b, &mut logits[..b * vocab], &mut gemm[..], tp);
+        if j > 0 {
+            let vocab = self.desc.vocab;
+            self.head.gemm(&x1[..j * d], j, &mut logits[..j * vocab], &mut gemm[..], tp);
+        }
     }
 
-    /// Scratch for `forward_step` over at most `cap` co-scheduled
-    /// sequences attending over at most `max_t` cached positions. All
-    /// buffers — including one packed-gemm scratch per worker thread and
-    /// the paged-KV gather buffers — are sized up front, so the decode
-    /// loop never allocates. `threads` sizes the persistent worker pool
-    /// the gemm/KV-gather fan-out runs on (0 = one per available core);
-    /// the sharding is bit-exact, so the count only changes speed.
-    pub fn new_batch_scratch(&self, cap: usize, max_t: usize, threads: usize) -> BatchScratch {
+    /// Scratch for `forward_chunked` over at most `cap` stacked rows per
+    /// tick (decode runs + prefill-chunk rows), of which at most
+    /// `sample_cap` runs sample logits (one per co-resident sequence, so
+    /// the vocab-wide logits buffer is *not* paid for prefill rows that
+    /// never sample), attending over at most `max_t` cached positions.
+    /// All buffers — including one packed-gemm scratch per worker thread
+    /// and the paged-KV gather buffers — are sized up front, so the
+    /// decode loop never allocates. `threads` sizes the persistent worker
+    /// pool the gemm/KV-gather fan-out runs on (0 = one per available
+    /// core); the sharding is bit-exact, so the count only changes speed.
+    pub fn new_batch_scratch(
+        &self,
+        cap: usize,
+        sample_cap: usize,
+        max_t: usize,
+        threads: usize,
+    ) -> BatchScratch {
+        assert!(sample_cap <= cap, "sample_cap {sample_cap} exceeds row capacity {cap}");
         let d = self.desc.d_model;
         let pool = ThreadPool::new(threads);
-        let max_cout = d.max(self.desc.d_ff).max(self.desc.vocab);
         let gemm: Vec<GemmScratch> = (0..pool.threads())
             .map(|_| {
                 let mut g = GemmScratch::default();
-                g.reserve(cap, max_cout);
+                // full-width rows flow through the d/d_ff projections;
+                // only sample rows reach the vocab-wide head
+                g.reserve(cap, d.max(self.desc.d_ff));
+                g.reserve(sample_cap, self.desc.vocab);
                 g
             })
             .collect();
         BatchScratch {
             cap,
+            sample_cap,
             xs: vec![0.0; cap * d],
             x1: vec![0.0; cap * d],
             q: vec![0.0; cap * d],
@@ -633,7 +750,7 @@ impl Engine {
             ff1: vec![0.0; cap * self.desc.d_ff],
             ff2: vec![0.0; cap * self.desc.d_ff],
             scores: vec![0.0; max_t + 1],
-            logits: vec![0.0; cap * self.desc.vocab],
+            logits: vec![0.0; sample_cap * self.desc.vocab],
             kv_k: vec![0.0; (max_t + 1) * d],
             kv_v: vec![0.0; (max_t + 1) * d],
             gemm,
@@ -754,6 +871,8 @@ pub struct Scratch {
 /// co-scheduled sequences (row s of each buffer belongs to sequence s).
 pub struct BatchScratch {
     cap: usize,
+    /// Maximum sampling runs per call (rows the logits buffer can hold).
+    sample_cap: usize,
     xs: Vec<f32>,
     x1: Vec<f32>,
     q: Vec<f32>,

@@ -17,8 +17,11 @@ pub struct RequestMetrics {
     /// Steps spent in the admission queue after becoming visible.
     pub queue_wait_steps: usize,
     /// Wall time from arrival to the first emitted token (queue wait +
-    /// prefill + first sample).
+    /// chunked prefill + first sample).
     pub ttft_secs: f64,
+    /// Wall time from admission to the first emitted token. Prefill is
+    /// chunked and interleaved with co-scheduled decode ticks, so this is
+    /// the prefill *span*, not exclusive compute time.
     pub prefill_secs: f64,
     /// Tokens emitted for this request.
     pub tokens: usize,
@@ -28,12 +31,17 @@ pub struct RequestMetrics {
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     pub requests: Vec<RequestMetrics>,
-    /// Wall ms of each decode step (forward + sampling + retire checks).
+    /// Wall ms of each scheduler tick's forward + sampling (prefill
+    /// chunks and decode rows share one stacked forward).
     pub step_ms: Vec<f32>,
-    /// Live sequences in each decode step.
+    /// Sequences contributing rows to each tick (decode + prefilling).
     pub step_width: Vec<usize>,
     pub decode_tokens: usize,
+    /// Tick wall time attributed to decode rows (mixed prefill/decode
+    /// ticks are split proportionally by rows processed).
     pub decode_secs: f64,
+    /// Tick wall time attributed to prefill rows (same proportional
+    /// split).
     pub prefill_secs: f64,
     pub peak_running_bytes: usize,
     pub total_secs: f64,
@@ -50,6 +58,9 @@ pub struct ServeMetrics {
     pub peak_kv_blocks: usize,
     /// Worker threads the decode fan-out ran on (>= 1).
     pub threads: usize,
+    /// Effective per-tick prefill token budget (0 never reaches here:
+    /// the scheduler resolves it to the slot capacity).
+    pub prefill_chunk: usize,
 }
 
 impl ServeMetrics {
@@ -82,6 +93,7 @@ impl ServeMetrics {
             kv_block_tokens: self.kv_block_tokens,
             peak_kv_blocks: self.peak_kv_blocks,
             threads: self.threads,
+            prefill_chunk: self.prefill_chunk,
         }
     }
 }
@@ -116,6 +128,8 @@ pub struct ServeSummary {
     pub peak_kv_blocks: usize,
     /// Worker threads the decode fan-out ran on (>= 1).
     pub threads: usize,
+    /// Effective per-tick prefill token budget (see `ServeMetrics`).
+    pub prefill_chunk: usize,
 }
 
 impl ServeSummary {
@@ -144,6 +158,7 @@ impl ServeSummary {
         m.insert("kv_block_tokens".to_string(), Json::Num(self.kv_block_tokens as f64));
         m.insert("peak_kv_blocks".to_string(), Json::Num(self.peak_kv_blocks as f64));
         m.insert("threads".to_string(), Json::Num(self.threads as f64));
+        m.insert("prefill_chunk".to_string(), Json::Num(self.prefill_chunk as f64));
         Json::Obj(m)
     }
 }
@@ -172,12 +187,14 @@ impl std::fmt::Display for ServeSummary {
         )?;
         write!(
             f,
-            "kv {}: arena {}, {} B/token, {}-token blocks, peak {} blocks",
+            "kv {}: arena {}, {} B/token, {}-token blocks, peak {} blocks; \
+             prefill chunk {} tokens/tick",
             self.kv_store,
             fmt_bytes(self.kv_arena_bytes),
             self.kv_bytes_per_token,
             self.kv_block_tokens,
-            self.peak_kv_blocks
+            self.peak_kv_blocks,
+            self.prefill_chunk
         )
     }
 }
@@ -217,6 +234,7 @@ mod tests {
             kv_block_tokens: 16,
             peak_kv_blocks: 5,
             threads: 4,
+            prefill_chunk: 24,
         };
         let s = m.summary();
         assert_eq!(s.requests, 2);
@@ -233,9 +251,11 @@ mod tests {
         assert_eq!(j.get("kv_bytes_per_token").unwrap().as_usize().unwrap(), 72);
         assert_eq!(j.get("peak_kv_blocks").unwrap().as_usize().unwrap(), 5);
         assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("prefill_chunk").unwrap().as_usize().unwrap(), 24);
         let text = format!("{s}");
         assert!(text.contains("decode 8.0 tok/s"), "{text}");
         assert!(text.contains("kv paged-q8"), "{text}");
         assert!(text.contains("4 threads"), "{text}");
+        assert!(text.contains("prefill chunk 24"), "{text}");
     }
 }

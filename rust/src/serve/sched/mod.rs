@@ -11,7 +11,7 @@
 //! This module is the serving subsystem that fixes both, in the style of
 //! production engines (vLLM / mistral.rs). Request lifecycle:
 //!
-//! **admission → prefill → decode → retire**
+//! **admission → chunked prefill → decode → retire**
 //!
 //! * **admission** — requests sit in an arrival-ordered queue
 //!   ([`Scheduler::submit`]); each scheduler tick admits every visible
@@ -22,23 +22,31 @@
 //!   queued — back-pressure, never a panic — until retiring sequences
 //!   return blocks. The pool preallocates one arena whatever the backend,
 //!   so running memory stays a single constant slab (Table 3 'RM'), and
-//!   the `paged-q8` backend shrinks it ~3.6x (see [`pool`]).
-//! * **prefill** — the admitted prompt is driven through
-//!   [`Engine::forward_step`] token by token into the leased slot, and the
-//!   first token is sampled from the final prompt logits (this is the
-//!   time-to-first-token the metrics report).
-//! * **decode** — one batched step per tick over *all* live sequences: the
-//!   activations are stacked into a `(width, d)` matrix and every packed
-//!   weight matrix is streamed **once per step for the whole batch**
-//!   through `PackedMatrix::gemm` / `LinearStore::gemm`, instead of once
-//!   per sequence — and the independent output lanes of every gemm (plus
-//!   the paged-KV gathers) are sharded across a persistent worker pool
+//!   the `paged-q8` backend shrinks it ~3.6x (see [`pool`]). Admission
+//!   only leases the slot; no forward work happens at admit time.
+//! * **chunked prefill** — an admitted request carries a *prefill cursor*.
+//!   Each tick advances at most [`SchedConfig::prefill_chunk`] prompt
+//!   tokens (a shared per-tick budget, FCFS across prefilling requests;
+//!   0 = unchunked, i.e. a slot-capacity budget), stacked **into the same batched
+//!   forward as the decode rows** ([`Engine::forward_chunked`], causal
+//!   within the chunk): a chunk of C prompt tokens streams each weight
+//!   matrix once instead of C times, and decoding sequences keep emitting
+//!   every tick instead of stalling behind a long prompt — the
+//!   head-of-line fix. The first token is sampled only once the cursor
+//!   reaches the prompt end (that sample is the TTFT the metrics report).
+//! * **decode** — every sequence past its prompt contributes a one-token
+//!   run to the same tick batch: activations are stacked into a
+//!   `(width, d)` matrix and every packed weight matrix is streamed
+//!   **once per tick for the whole batch** through `PackedMatrix::gemm` /
+//!   `LinearStore::gemm`, instead of once per sequence — and the
+//!   independent output lanes of every gemm (plus the paged-KV gathers)
+//!   are sharded across a persistent worker pool
 //!   ([`SchedConfig::threads`], `util::ThreadPool`). Per-row, per-lane
 //!   arithmetic is bit-identical to the single-sequence `gemv` path at
-//!   any thread count, and each request samples from its own seeded RNG
-//!   stream — so a request's output never depends on what else shares
-//!   the batch, or on how many cores served it (tested in
-//!   `tests/sched.rs`).
+//!   any thread count and any `prefill_chunk`, and each request samples
+//!   from its own seeded RNG stream — so a request's output never
+//!   depends on what else shares the batch, how many cores served it, or
+//!   how its prompt was chunked (tested in `tests/sched.rs`).
 //! * **retire** — on EOS or `max_new_tokens` the slot is released back to
 //!   the pool, per-request metrics are recorded, and the next queued
 //!   request can be admitted on the following tick.
@@ -59,14 +67,18 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
-use super::{sample, BatchScratch, Engine};
+use super::{sample, BatchScratch, Engine, SeqChunk};
 use crate::util::Rng;
 
 /// One generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: usize,
+    /// Must be non-empty: [`Scheduler::submit`] rejects an empty prompt
+    /// (there would be no logits to sample a first token from).
     pub prompt: Vec<i32>,
+    /// Must be >= 1: [`Scheduler::submit`] rejects 0 — every admitted
+    /// request emits at least its first (TTFT) token.
     pub max_new_tokens: usize,
     /// 0.0 => greedy.
     pub temperature: f32,
@@ -98,6 +110,14 @@ pub struct SchedConfig {
     /// (0 = one per available core). Lane-sharding is bit-exact, so the
     /// count changes wall-clock only — never a single emitted token.
     pub threads: usize,
+    /// Maximum prompt tokens prefilled per tick, shared FCFS across all
+    /// prefilling requests and interleaved with the batched decode step.
+    /// 0 = unchunked: the budget becomes `slot_tokens`, so any single
+    /// prompt lands in one tick (simultaneously admitted prompts still
+    /// share the budget FCFS). Smaller chunks bound per-tick latency for
+    /// co-scheduled decoders; chunking is bit-exact, so the knob changes
+    /// step pacing only — never a single emitted token.
+    pub prefill_chunk: usize,
 }
 
 impl Default for SchedConfig {
@@ -109,6 +129,7 @@ impl Default for SchedConfig {
             kv: KvStoreKind::SlabF32,
             block_tokens: 16,
             threads: 1,
+            prefill_chunk: 32,
         }
     }
 }
@@ -124,9 +145,19 @@ struct Running {
     slot: SlotId,
     rng: Rng,
     out: Vec<i32>,
-    /// Next token to feed (the one sampled last step).
-    next: i32,
+    /// Prefill cursor: prompt tokens fed to the engine so far (== the
+    /// slot's KV length while `prefilled < prompt.len()`). The request is
+    /// in its chunked-prefill phase until the cursor reaches the prompt
+    /// end; only then is the first token sampled.
+    prefilled: usize,
+    /// Last sampled token, to feed on the next decode tick (None until
+    /// the prompt is fully prefilled and the first token sampled).
+    next: Option<i32>,
     admit_step: usize,
+    /// Wall-clock anchors: when the request became visible (TTFT) and
+    /// when it was admitted (prefill span).
+    visible_at: Instant,
+    admit_at: Instant,
     ttft_secs: f64,
     prefill_secs: f64,
 }
@@ -142,7 +173,12 @@ pub struct Scheduler<'e> {
     finished: Vec<(usize, Vec<i32>)>,
     pub metrics: ServeMetrics,
     tick: usize,
-    submitted_tokens: usize,
+    /// Effective per-tick prefill token budget (`cfg.prefill_chunk`
+    /// resolved: 0 => the whole slot capacity, and never more than it).
+    prefill_chunk: usize,
+    /// Total prompt + decode tokens submitted (the progress bound: every
+    /// tick with live sequences advances at least one of them).
+    submitted_work: usize,
     last_arrival: usize,
 }
 
@@ -157,7 +193,22 @@ impl<'e> Scheduler<'e> {
             engine.desc.d_model,
             cfg.block_tokens,
         );
-        let scratch = engine.new_batch_scratch(cfg.slots, cfg.slot_tokens, cfg.threads);
+        // a tick's forward is at most `slots` one-token decode runs plus
+        // `prefill_chunk` stacked prompt rows, so the scratch is sized for
+        // the widest mixed batch up front (the loop never allocates); at
+        // most one sample per co-resident sequence, so the vocab-wide
+        // logits rows stay bounded by `slots`
+        let prefill_chunk = if cfg.prefill_chunk == 0 {
+            cfg.slot_tokens
+        } else {
+            cfg.prefill_chunk.min(cfg.slot_tokens)
+        };
+        let scratch = engine.new_batch_scratch(
+            cfg.slots + prefill_chunk,
+            cfg.slots,
+            cfg.slot_tokens,
+            cfg.threads,
+        );
         let metrics = ServeMetrics {
             peak_running_bytes: engine.weight_bytes() + pool.bytes() + scratch.bytes(),
             kv_store: pool.kind().name().to_string(),
@@ -165,6 +216,7 @@ impl<'e> Scheduler<'e> {
             kv_bytes_per_token: pool.bytes_per_token(),
             kv_block_tokens: pool.block_tokens(),
             threads: scratch.threads(),
+            prefill_chunk,
             ..ServeMetrics::default()
         };
         Scheduler {
@@ -177,25 +229,42 @@ impl<'e> Scheduler<'e> {
             finished: Vec::new(),
             metrics,
             tick: 0,
-            submitted_tokens: 0,
+            prefill_chunk,
+            submitted_work: 0,
             last_arrival: 0,
         }
     }
 
     /// Queue a request. Requests may be submitted in any order; the queue
     /// is kept sorted by arrival step (FIFO within a step).
+    ///
+    /// Invalid requests are rejected here, with an error, instead of
+    /// poisoning the loop later:
+    /// * an **empty prompt** has no logits to sample a first token from
+    ///   (it would otherwise read whatever the scratch's logits buffer
+    ///   held from a *previous* forward — another request's output);
+    /// * **`max_new_tokens == 0`** is rejected rather than honored: the
+    ///   scheduler's contract is that every admitted request emits at
+    ///   least its first (TTFT) token, so a request that may emit nothing
+    ///   is a caller bug;
+    /// * a request whose **`prompt + max_new_tokens` exceeds the
+    ///   per-sequence KV capacity** (`slot_tokens`, the most any single
+    ///   sequence can reserve under every backend) could never satisfy
+    ///   [`KvPool::can_admit`] and would wedge the FCFS queue head
+    ///   forever — a silent livelock; the error names the capacity.
     pub fn submit(&mut self, req: Request) -> Result<()> {
         ensure!(!req.prompt.is_empty(), "request {}: empty prompt", req.id);
         ensure!(req.max_new_tokens > 0, "request {}: max_new_tokens == 0", req.id);
         ensure!(
             req.prompt.len() + req.max_new_tokens <= self.cfg.slot_tokens,
-            "request {}: prompt {} + max_new {} exceeds slot capacity {}",
+            "request {}: prompt {} + max_new {} exceeds per-sequence KV capacity {} \
+             (slot_tokens; the pool could never admit it)",
             req.id,
             req.prompt.len(),
             req.max_new_tokens,
             self.cfg.slot_tokens
         );
-        self.submitted_tokens += req.max_new_tokens;
+        self.submitted_work += req.prompt.len() + req.max_new_tokens;
         self.last_arrival = self.last_arrival.max(req.arrival_step);
         let pos = self
             .pending
@@ -224,10 +293,11 @@ impl<'e> Scheduler<'e> {
     }
 
     /// One scheduler tick: admit every visible request that fits, then one
-    /// batched decode step over all live sequences.
+    /// batched forward over all live sequences — decode rows and prefill
+    /// chunks stacked into the same weight walk.
     pub fn step(&mut self) {
         self.admit();
-        self.decode();
+        self.forward();
         self.tick += 1;
         self.metrics.steps = self.tick;
         self.metrics.peak_kv_blocks = self.pool.peak_blocks();
@@ -237,9 +307,10 @@ impl<'e> Scheduler<'e> {
     /// stalls.
     pub fn run(&mut self) -> Result<ServeSummary> {
         let t0 = Instant::now();
-        // every tick with live sequences emits >= 1 token, every idle tick
-        // moves the clock toward the next arrival, so this bound is slack
-        let max_ticks = self.last_arrival + self.submitted_tokens + self.pending.len() + 16;
+        // every tick with live sequences advances >= 1 prompt token or
+        // emits >= 1 token, every idle tick moves the clock toward the
+        // next arrival, so this bound is slack
+        let max_ticks = self.last_arrival + self.submitted_work + self.pending.len() + 16;
         while !self.done() {
             if self.tick > max_ticks {
                 bail!(
@@ -282,9 +353,10 @@ impl<'e> Scheduler<'e> {
         }
     }
 
-    /// Prefill an admitted request into a leased slot and sample its first
-    /// token (b=1 through the same batched path decode uses, so prefill
-    /// and decode arithmetic are identical).
+    /// Admit a request: lease its KV capacity and enter the chunked
+    /// prefill phase with the cursor at 0. No forward work happens here —
+    /// the prompt is advanced chunk by chunk inside the regular tick
+    /// batches, so co-scheduled decoders never stall behind it.
     fn start(&mut self, p: Pending) {
         let visible_at = p.visible.expect("admit only starts visible requests");
         let req = p.req;
@@ -292,58 +364,115 @@ impl<'e> Scheduler<'e> {
             .pool
             .lease(Self::need_tokens(&req))
             .expect("admit checked the pool can host this request");
-        let mut rng = Rng::new(req.seed);
-        let t0 = Instant::now();
-        for &tok in &req.prompt {
-            self.engine.forward_step(&[tok], &[slot], &mut self.pool, &mut self.scratch);
-        }
-        let prefill_secs = t0.elapsed().as_secs_f64();
-        self.metrics.prefill_secs += prefill_secs;
-        let vocab = self.engine.desc.vocab;
-        let first = sample(&self.scratch.logits[..vocab], req.temperature, &mut rng);
-        let run = Running {
+        self.running.push(Running {
             slot,
-            rng,
-            out: vec![first],
-            next: first,
+            rng: Rng::new(req.seed),
+            out: Vec::new(),
+            prefilled: 0,
+            next: None,
             admit_step: self.tick,
-            ttft_secs: visible_at.elapsed().as_secs_f64(),
-            prefill_secs,
+            visible_at,
+            admit_at: Instant::now(),
+            ttft_secs: 0.0,
+            prefill_secs: 0.0,
             req,
-        };
-        if self.is_finished(&run) {
-            self.retire(run);
-        } else {
-            self.running.push(run);
-        }
+        });
     }
 
-    fn decode(&mut self) {
+    /// One batched forward over all live sequences: every decoding
+    /// sequence contributes a one-token run, and prefilling sequences
+    /// share the per-tick `prefill_chunk` prompt-token budget (FCFS in
+    /// running order). All runs stack into a single
+    /// [`Engine::forward_chunked`] call, so each weight matrix streams
+    /// once per tick whatever the prefill/decode mix.
+    fn forward(&mut self) {
         if self.running.is_empty() {
             return;
         }
-        let tokens: Vec<i32> = self.running.iter().map(|r| r.next).collect();
-        let slots: Vec<SlotId> = self.running.iter().map(|r| r.slot).collect();
-        let width = self.running.len();
+        // plan: how many prompt tokens each sequence advances this tick
+        // (0 for decoding sequences and for prefillers past the budget)
+        let mut budget = self.prefill_chunk;
+        let takes: Vec<usize> = self
+            .running
+            .iter()
+            .map(|r| {
+                let rem = r.req.prompt.len() - r.prefilled;
+                let take = rem.min(budget);
+                budget -= take;
+                take
+            })
+            .collect();
+        let runs: Vec<SeqChunk> = self
+            .running
+            .iter()
+            .zip(&takes)
+            .filter_map(|(r, &take)| {
+                if r.prefilled < r.req.prompt.len() {
+                    // mid-prefill: advance `take` prompt tokens; sample
+                    // only when the chunk reaches the prompt end
+                    (take > 0).then(|| SeqChunk {
+                        slot: r.slot,
+                        tokens: &r.req.prompt[r.prefilled..r.prefilled + take],
+                        sample: r.prefilled + take == r.req.prompt.len(),
+                    })
+                } else {
+                    // decoding: feed the last sampled token
+                    Some(SeqChunk {
+                        slot: r.slot,
+                        tokens: std::slice::from_ref(
+                            r.next.as_ref().expect("decode phase implies a sampled token"),
+                        ),
+                        sample: true,
+                    })
+                }
+            })
+            .collect();
+        if runs.is_empty() {
+            return;
+        }
+        let width = runs.len();
+        let prefill_rows: usize = takes.iter().sum();
+        let decode_rows =
+            self.running.iter().filter(|r| r.prefilled >= r.req.prompt.len()).count();
         let t0 = Instant::now();
-        self.engine.forward_step(&tokens, &slots, &mut self.pool, &mut self.scratch);
+        self.engine.forward_chunked(&runs, &mut self.pool, &mut self.scratch);
+        drop(runs);
         let vocab = self.engine.desc.vocab;
+        // sampling-run j's logits sit in row j, in running order (runs
+        // preserve it); each request samples from its own RNG stream, so
+        // its output is independent of whatever else shares the batch
+        let mut j = 0usize;
         for (i, r) in self.running.iter_mut().enumerate() {
-            // each request samples from its own RNG stream, so its output
-            // is independent of whatever else shares the batch
+            if r.prefilled < r.req.prompt.len() {
+                r.prefilled += takes[i];
+                if r.prefilled < r.req.prompt.len() {
+                    continue; // still mid-prompt: nothing sampled this tick
+                }
+                // the chunk just consumed the final prompt token: its
+                // logits row samples the request's first output token
+                r.ttft_secs = r.visible_at.elapsed().as_secs_f64();
+                r.prefill_secs = r.admit_at.elapsed().as_secs_f64();
+            }
             let tok = sample(
-                &self.scratch.logits[i * vocab..(i + 1) * vocab],
+                &self.scratch.logits[j * vocab..(j + 1) * vocab],
                 r.req.temperature,
                 &mut r.rng,
             );
+            j += 1;
             r.out.push(tok);
-            r.next = tok;
+            r.next = Some(tok);
         }
+        // as before the chunked-prefill rework: a step is forward +
+        // sampling (retire bookkeeping excluded)
         let dt = t0.elapsed().as_secs_f64();
         self.metrics.step_ms.push((dt * 1e3) as f32);
         self.metrics.step_width.push(width);
-        self.metrics.decode_tokens += width;
-        self.metrics.decode_secs += dt;
+        self.metrics.decode_tokens += decode_rows;
+        // one mixed tick serves prefill and decode rows through the same
+        // weight walk; attribute its wall time proportionally by rows
+        let rows = (prefill_rows + decode_rows) as f64;
+        self.metrics.decode_secs += dt * decode_rows as f64 / rows;
+        self.metrics.prefill_secs += dt * prefill_rows as f64 / rows;
         let mut i = 0;
         while i < self.running.len() {
             if self.is_finished(&self.running[i]) {
@@ -356,8 +485,9 @@ impl<'e> Scheduler<'e> {
     }
 
     fn is_finished(&self, r: &Running) -> bool {
-        r.out.len() >= r.req.max_new_tokens
-            || self.cfg.eos.is_some_and(|e| r.out.last() == Some(&e))
+        !r.out.is_empty()
+            && (r.out.len() >= r.req.max_new_tokens
+                || self.cfg.eos.is_some_and(|e| r.out.last() == Some(&e)))
     }
 
     fn retire(&mut self, r: Running) {

@@ -344,48 +344,94 @@ impl KvPool {
         (blk * self.layers + layer) * self.block_tokens
     }
 
-    /// Arena offsets for the row of (slot `s`, `layer`, position `t`):
-    /// `(code/f32 base, q8 scale base)`.
-    #[inline]
-    fn offsets(&self, s: usize, layer: usize, t: usize) -> (usize, usize) {
-        let (blk, within) = match self.kind {
-            KvStoreKind::SlabF32 => (s, t),
-            _ => (self.tables[s][t / self.block_tokens] as usize, t % self.block_tokens),
-        };
-        let row = self.block_row(blk, layer) + within;
-        (row * self.d, row * 2 * self.ng)
-    }
-
     /// Write one position's K/V for one layer at the sequence's current
     /// length. Lengths advance once per decode step via `advance`, after
     /// all layers have appended (mirroring `KvCache`'s end-of-step `len`
     /// bump). The Q8 backend quantizes here, in one pass.
     pub(crate) fn append(&mut self, slot: SlotId, layer: usize, k: &[f32], v: &[f32]) {
+        self.append_run(slot, layer, 1, k, v);
+    }
+
+    /// Write `n` consecutive positions' K/V for one layer starting at the
+    /// sequence's current length — the chunked-prefill write path. `ks` and
+    /// `vs` are `(n, d)` row-major. Every row lands in exactly the arena
+    /// cells `n` single `append`s would fill (the paged walk just copies
+    /// whole block runs at a time; Q8 still quantizes row-wise), so the
+    /// two paths are bit-identical. Lengths advance once per chunk via
+    /// [`KvPool::advance_by`], after all layers have appended.
+    pub(crate) fn append_run(
+        &mut self,
+        slot: SlotId,
+        layer: usize,
+        n: usize,
+        ks: &[f32],
+        vs: &[f32],
+    ) {
         self.check(slot);
         let s = slot.0;
-        let t = self.lens[s];
-        assert!(t < self.caps[s], "KvPool slot {s} overflow at {t} tokens (cap {})", self.caps[s]);
+        let t0 = self.lens[s];
+        assert!(
+            t0 + n <= self.caps[s],
+            "KvPool slot {s} overflow: {t0} + {n} tokens (cap {})",
+            self.caps[s]
+        );
         let d = self.d;
-        let (base, sbase) = self.offsets(s, layer, t);
-        match &mut self.store {
-            Store::F32 { k: ka, v: va } => {
-                ka[base..base + d].copy_from_slice(k);
-                va[base..base + d].copy_from_slice(v);
+        assert_eq!(ks.len(), n * d);
+        assert_eq!(vs.len(), n * d);
+        let ng2 = 2 * self.ng;
+        let bt = self.block_tokens;
+        let mut r = 0usize;
+        while r < n {
+            let t = t0 + r;
+            let (blk, within) = match self.kind {
+                KvStoreKind::SlabF32 => (s, t),
+                _ => (self.tables[s][t / bt] as usize, t % bt),
+            };
+            let run = (bt - within).min(n - r);
+            let row0 = self.block_row(blk, layer) + within;
+            match &mut self.store {
+                Store::F32 { k, v } => {
+                    k[row0 * d..(row0 + run) * d].copy_from_slice(&ks[r * d..(r + run) * d]);
+                    v[row0 * d..(row0 + run) * d].copy_from_slice(&vs[r * d..(r + run) * d]);
+                }
+                Store::Q8 { qk, qv, sk, sv } => {
+                    for i in 0..run {
+                        let (c0, s0) = ((row0 + i) * d, (row0 + i) * ng2);
+                        quantize_row_q8(
+                            &ks[(r + i) * d..(r + i + 1) * d],
+                            KV_GROUP,
+                            &mut qk[c0..c0 + d],
+                            &mut sk[s0..s0 + ng2],
+                        );
+                        quantize_row_q8(
+                            &vs[(r + i) * d..(r + i + 1) * d],
+                            KV_GROUP,
+                            &mut qv[c0..c0 + d],
+                            &mut sv[s0..s0 + ng2],
+                        );
+                    }
+                }
             }
-            Store::Q8 { qk, qv, sk, sv } => {
-                let ng2 = 2 * self.ng;
-                quantize_row_q8(k, KV_GROUP, &mut qk[base..base + d], &mut sk[sbase..sbase + ng2]);
-                quantize_row_q8(v, KV_GROUP, &mut qv[base..base + d], &mut sv[sbase..sbase + ng2]);
-            }
+            r += run;
         }
     }
 
     pub(crate) fn advance(&mut self, slot: SlotId) {
+        self.advance_by(slot, 1);
+    }
+
+    /// Bump a sequence's cached length by `n` — the end-of-chunk length
+    /// advance matching [`KvPool::append_run`].
+    pub(crate) fn advance_by(&mut self, slot: SlotId, n: usize) {
         self.check(slot);
         let s = slot.0;
         let t = self.lens[s];
-        assert!(t < self.caps[s], "KvPool slot {s} advanced past capacity {}", self.caps[s]);
-        self.lens[s] = t + 1;
+        assert!(
+            t + n <= self.caps[s],
+            "KvPool slot {s} advanced past capacity {} ({t} + {n})",
+            self.caps[s]
+        );
+        self.lens[s] = t + n;
     }
 
     /// Contiguous `(t, d)` views of the first `t` cached K/V rows of one
@@ -622,6 +668,73 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn append_run_matches_single_appends_bit_for_bit() {
+        // the chunked-prefill write path must land every row in exactly
+        // the cells the token-by-token walk fills — across block
+        // boundaries, ragged chunk/block offsets, and all three backends
+        // (Q8 included: quantization is row-local either way)
+        let (layers, cap, d, bt) = (2usize, 11usize, 8usize, 3usize);
+        for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            let mut one = KvPool::new(kind, 1, layers, cap, d, bt);
+            let mut run = KvPool::new(kind, 1, layers, cap, d, bt);
+            let a = one.lease(cap).unwrap();
+            let b = run.lease(cap).unwrap();
+            let mut rng = Rng::new(23);
+            let rows: Vec<(Vec<f32>, Vec<f32>)> = (0..cap * layers)
+                .map(|_| {
+                    (
+                        (0..d).map(|_| rng.normal()).collect(),
+                        (0..d).map(|_| rng.normal()).collect(),
+                    )
+                })
+                .collect();
+            // reference: one append + advance per position
+            for t in 0..cap {
+                for l in 0..layers {
+                    let (kr, vr) = &rows[t * layers + l];
+                    one.append(a, l, kr, vr);
+                }
+                one.advance(a);
+            }
+            // chunked: ragged runs (3, 1, 4, 3) spanning block boundaries
+            let mut t = 0usize;
+            for n in [3usize, 1, 4, 3] {
+                for l in 0..layers {
+                    let mut ks = Vec::with_capacity(n * d);
+                    let mut vs = Vec::with_capacity(n * d);
+                    for i in 0..n {
+                        ks.extend_from_slice(&rows[(t + i) * layers + l].0);
+                        vs.extend_from_slice(&rows[(t + i) * layers + l].1);
+                    }
+                    run.append_run(b, l, n, &ks, &vs);
+                }
+                run.advance_by(b, n);
+                t += n;
+            }
+            assert_eq!(one.len(a), run.len(b));
+            for l in 0..layers {
+                let (mut k1, mut v1) = (Vec::new(), Vec::new());
+                let (mut k2, mut v2) = (Vec::new(), Vec::new());
+                let (ka, va) = one.layer_kv(a, l, cap, &mut k1, &mut v1, &ThreadPool::serial());
+                let (kb, vb) = run.layer_kv(b, l, cap, &mut k2, &mut v2, &ThreadPool::serial());
+                for (x, y) in ka.iter().zip(kb).chain(va.iter().zip(vb)) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{kind:?} layer {l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn append_run_overflow_panics() {
+        let mut p = KvPool::new(KvStoreKind::PagedF32, 1, 1, 4, 2, 2);
+        let s = p.lease(4).unwrap();
+        p.append_run(s, 0, 3, &[0.0; 6], &[0.0; 6]);
+        p.advance_by(s, 3);
+        p.append_run(s, 0, 2, &[0.0; 4], &[0.0; 4]);
     }
 
     #[test]

@@ -24,7 +24,7 @@ use omniquant::runtime::Manifest;
 use omniquant::serve::sched::{
     synthetic_workload, KvPool, KvStoreKind, Request, SchedConfig, Scheduler, WorkloadSpec,
 };
-use omniquant::serve::Engine;
+use omniquant::serve::{Engine, SeqChunk};
 use omniquant::util::Rng;
 
 const VOCAB: usize = 96;
@@ -83,42 +83,46 @@ fn outputs_independent_of_batch_composition_and_kv_backend() {
         // recycling and ragged co-scheduled batches. The paged backend
         // (4-token blocks, so every sequence spans several blocks) must
         // emit bit-identical tokens to the slab reference — at every
-        // worker-thread count, since the sharded decode is bit-exact.
+        // worker-thread count (the sharded decode is bit-exact) and at
+        // every prefill chunking (1 token/tick vs a whole prompt).
         for threads in thread_counts() {
             for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32] {
-                let cfg = SchedConfig {
-                    slots: 2,
-                    slot_tokens: 64,
-                    eos: None,
-                    kv,
-                    block_tokens: 4,
-                    threads,
-                };
-                let mut sch = Scheduler::new(&eng, cfg);
-                for r in reqs.iter().cloned() {
-                    sch.submit(r).unwrap();
-                }
-                sch.run().unwrap();
-                for r in &reqs {
+                for prefill_chunk in [1usize, 0] {
+                    let cfg = SchedConfig {
+                        slots: 2,
+                        slot_tokens: 64,
+                        eos: None,
+                        kv,
+                        block_tokens: 4,
+                        threads,
+                        prefill_chunk,
+                    };
+                    let mut sch = Scheduler::new(&eng, cfg);
+                    for r in reqs.iter().cloned() {
+                        sch.submit(r).unwrap();
+                    }
+                    sch.run().unwrap();
+                    for r in &reqs {
+                        assert_eq!(
+                            sch.output(r.id).unwrap(),
+                            &expect[r.id][..],
+                            "{family} {kv:?} threads={threads} chunk={prefill_chunk} crowded req {}",
+                            r.id
+                        );
+                    }
+                    assert_eq!(sch.pool().free_slots(), 2, "all slots reclaimed after drain");
+                    assert_eq!(sch.pool().leased_slots(), 0);
                     assert_eq!(
-                        sch.output(r.id).unwrap(),
-                        &expect[r.id][..],
-                        "{family} {kv:?} threads={threads} crowded req {}",
-                        r.id
+                        sch.pool().peak_leased(),
+                        2,
+                        "{family}: crowding reached full width"
+                    );
+                    assert_eq!(
+                        sch.pool().free_blocks(),
+                        sch.pool().n_blocks(),
+                        "{family} {kv:?}: every block reclaimed after drain"
                     );
                 }
-                assert_eq!(sch.pool().free_slots(), 2, "all slots reclaimed after drain");
-                assert_eq!(sch.pool().leased_slots(), 0);
-                assert_eq!(
-                    sch.pool().peak_leased(),
-                    2,
-                    "{family}: crowding reached full width"
-                );
-                assert_eq!(
-                    sch.pool().free_blocks(),
-                    sch.pool().n_blocks(),
-                    "{family} {kv:?}: every block reclaimed after drain"
-                );
             }
         }
 
@@ -161,7 +165,7 @@ fn forward_step_matches_forward_token_bit_for_bit() {
             for threads in thread_counts() {
                 let mut pool = KvPool::new(kv, 1, eng.desc.n_layers, 8, eng.desc.d_model, 3);
                 let slot = pool.lease(tokens.len()).unwrap();
-                let mut bs = eng.new_batch_scratch(1, 8, threads);
+                let mut bs = eng.new_batch_scratch(1, 1, 8, threads);
                 for &t in &tokens {
                     eng.forward_step(&[t], &[slot], &mut pool, &mut bs);
                 }
@@ -229,16 +233,214 @@ fn submit_rejects_invalid_requests() {
         seed: 1,
         arrival_step: 0,
     };
-    assert!(sch.submit(Request { prompt: vec![], ..base.clone() }).is_err(), "empty prompt");
-    assert!(
-        sch.submit(Request { max_new_tokens: 0, ..base.clone() }).is_err(),
-        "zero new tokens"
-    );
-    assert!(
-        sch.submit(Request { prompt: vec![1; 5], max_new_tokens: 4, ..base.clone() }).is_err(),
-        "prompt + new tokens exceeds slot capacity"
-    );
+    // empty prompt: there are no logits to sample a first token from — it
+    // must never reach the loop (where it would read another request's
+    // leftover logits)
+    let err = sch.submit(Request { prompt: vec![], ..base.clone() }).unwrap_err().to_string();
+    assert!(err.contains("empty prompt"), "{err}");
+    // max_new_tokens == 0 is rejected (the documented contract: every
+    // admitted request emits at least its first token)
+    let err = sch.submit(Request { max_new_tokens: 0, ..base.clone() }).unwrap_err().to_string();
+    assert!(err.contains("max_new_tokens"), "{err}");
+    // an oversize request could never satisfy KvPool::can_admit and would
+    // wedge the FCFS queue head forever; the error names the capacity
+    let err = sch
+        .submit(Request { prompt: vec![1; 5], max_new_tokens: 4, ..base.clone() })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("capacity 8"), "must name the capacity: {err}");
     assert!(sch.submit(base).is_ok());
+}
+
+#[test]
+fn oversize_request_errors_not_livelocks_on_paged_backend() {
+    // same guard exercised where the livelock would actually bite: a
+    // paged pool whose per-sequence capacity the request exceeds. Without
+    // the submit-time check this request would sit at the queue head
+    // forever (can_admit never true) and wedge everything behind it.
+    let eng = engine("llama", "w4a16g32", 1);
+    let mut sch = Scheduler::new(
+        &eng,
+        SchedConfig {
+            slots: 2,
+            slot_tokens: 12,
+            kv: KvStoreKind::PagedF32,
+            block_tokens: 4,
+            ..Default::default()
+        },
+    );
+    let err = sch
+        .submit(Request {
+            id: 0,
+            prompt: vec![1; 10],
+            max_new_tokens: 8,
+            temperature: 0.0,
+            seed: 1,
+            arrival_step: 0,
+        })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("capacity 12"), "{err}");
+    // a well-formed request behind it still completes — nothing is wedged
+    sch.submit(Request {
+        id: 1,
+        prompt: vec![1, 2, 3],
+        max_new_tokens: 4,
+        temperature: 0.0,
+        seed: 2,
+        arrival_step: 0,
+    })
+    .unwrap();
+    let summary = sch.run().unwrap();
+    assert_eq!(summary.requests, 1);
+    assert_eq!(sch.output(1).unwrap().len(), 4);
+}
+
+#[test]
+fn chunked_prefill_parity_across_backends_and_threads() {
+    // the tentpole invariant: chunking a prompt — 1 token/tick, 3/tick,
+    // or the whole prompt in one stacked chunk — may never change one
+    // emitted token, on any KV backend, at any worker-thread count. For
+    // the f32 backends the outputs must also equal the per-sequence
+    // engine reference; paged-q8 quantizes its cache, so its reference is
+    // its own token-by-token (chunk=1) walk.
+    let eng = engine("llama", "w4a16g32", 21);
+    let mut wl_rng = Rng::new(13);
+    let reqs: Vec<Request> = (0..4)
+        .map(|id| Request {
+            id,
+            // prompts long enough that chunk=3 leaves a ragged tail and
+            // whole-prompt spans several 4-token KV blocks
+            prompt: (0..7 + 2 * id).map(|_| wl_rng.below(VOCAB) as i32).collect(),
+            max_new_tokens: 4 + id,
+            temperature: if id % 2 == 0 { 0.0 } else { 0.7 },
+            seed: 500 + id as u64,
+            arrival_step: 2 * id,
+        })
+        .collect();
+    let fp_expect: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|r| {
+            let mut rng = Rng::new(r.seed);
+            eng.generate(&r.prompt, r.max_new_tokens, r.temperature, &mut rng).0
+        })
+        .collect();
+    for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+        let mut reference: Option<Vec<Vec<i32>>> = None;
+        for threads in thread_counts() {
+            for prefill_chunk in [1usize, 3, 0] {
+                let cfg = SchedConfig {
+                    slots: 2,
+                    slot_tokens: 32,
+                    eos: None,
+                    kv,
+                    block_tokens: 4,
+                    threads,
+                    prefill_chunk,
+                };
+                let mut sch = Scheduler::new(&eng, cfg);
+                for r in reqs.iter().cloned() {
+                    sch.submit(r).unwrap();
+                }
+                sch.run().unwrap();
+                let outs: Vec<Vec<i32>> =
+                    reqs.iter().map(|r| sch.output(r.id).unwrap().to_vec()).collect();
+                match &reference {
+                    None => reference = Some(outs),
+                    Some(want) => assert_eq!(
+                        &outs, want,
+                        "{kv:?} threads={threads} chunk={prefill_chunk}: \
+                         chunking changed an output"
+                    ),
+                }
+                assert_eq!(sch.pool().free_slots(), 2, "{kv:?}: slots reclaimed");
+                assert_eq!(sch.pool().free_blocks(), sch.pool().n_blocks());
+            }
+        }
+        if kv != KvStoreKind::PagedQ8 {
+            assert_eq!(
+                reference.as_ref().unwrap(),
+                &fp_expect,
+                "{kv:?}: scheduler outputs must match the per-sequence engine"
+            );
+        }
+    }
+}
+
+#[test]
+fn forward_chunked_matches_stepwise_bit_for_bit() {
+    // engine-level parity: driving a prompt through forward_chunked in
+    // ragged chunks produces bit-identical logits to the one-token
+    // forward_step walk — and a prefill chunk co-scheduled with a
+    // decoding sequence does not move one bit of the decoder's logits
+    for (family, setting) in [("llama", "w4a16g32"), ("opt", "w4a16")] {
+        let eng = engine(family, setting, 17);
+        let prompt = [5i32, 17, 3, 9, 12, 1, 8];
+        let max_t = 16;
+        let (layers, d) = (eng.desc.n_layers, eng.desc.d_model);
+        let mk_pool = || KvPool::new(KvStoreKind::SlabF32, 2, layers, max_t, d, 4);
+        // reference: token-by-token through the pooled batched path
+        let mut pool = mk_pool();
+        let mut bs = eng.new_batch_scratch(8, 8, max_t, 1);
+        let slot = pool.lease(prompt.len()).unwrap();
+        for &t in &prompt {
+            eng.forward_step(&[t], &[slot], &mut pool, &mut bs);
+        }
+        let want: Vec<f32> = bs.logits[..eng.desc.vocab].to_vec();
+        // chunked: (3, 4) with sample only on the final chunk
+        let mut pool2 = mk_pool();
+        let slot2 = pool2.lease(prompt.len()).unwrap();
+        let mut bs2 = eng.new_batch_scratch(8, 8, max_t, 1);
+        eng.forward_chunked(
+            &[SeqChunk { slot: slot2, tokens: &prompt[..3], sample: false }],
+            &mut pool2,
+            &mut bs2,
+        );
+        eng.forward_chunked(
+            &[SeqChunk { slot: slot2, tokens: &prompt[3..], sample: true }],
+            &mut pool2,
+            &mut bs2,
+        );
+        assert_eq!(pool2.len(slot2), prompt.len());
+        for (c, (a, b)) in want.iter().zip(&bs2.logits[..eng.desc.vocab]).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{family} {setting} chunked logit {c}");
+        }
+        // mixed tick: a decoding sequence (one-token run) sharing the
+        // batch with a fresh sequence's prefill chunk — its logits must
+        // equal the solo decode bit-for-bit
+        let mut pool3 = mk_pool();
+        let dec = pool3.lease(8).unwrap();
+        let mut bs3 = eng.new_batch_scratch(8, 8, max_t, 1);
+        for &t in &prompt[..4] {
+            eng.forward_step(&[t], &[dec], &mut pool3, &mut bs3);
+        }
+        let solo: Vec<f32> = bs3.logits[..eng.desc.vocab].to_vec();
+        // rewind: same 3 tokens fed, then the 4th decoded alongside a
+        // co-scheduled prefill chunk
+        let mut pool4 = mk_pool();
+        let dec4 = pool4.lease(8).unwrap();
+        let other = pool4.lease(8).unwrap();
+        let mut bs4 = eng.new_batch_scratch(8, 8, max_t, 1);
+        for &t in &prompt[..3] {
+            eng.forward_step(&[t], &[dec4], &mut pool4, &mut bs4);
+        }
+        eng.forward_chunked(
+            &[
+                SeqChunk { slot: dec4, tokens: &prompt[3..4], sample: true },
+                SeqChunk { slot: other, tokens: &[2, 4, 6, 8, 10], sample: false },
+            ],
+            &mut pool4,
+            &mut bs4,
+        );
+        for (c, (a, b)) in solo.iter().zip(&bs4.logits[..eng.desc.vocab]).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{family} {setting} mixed-tick logit {c}: co-scheduled prefill leaked"
+            );
+        }
+        assert_eq!(pool4.len(other), 5, "prefill chunk advanced the other sequence");
+    }
 }
 
 #[test]
@@ -258,7 +460,15 @@ fn staggered_workload_queues_and_drains() {
         let reqs = synthetic_workload(&spec, eng.desc.vocab, 3);
         let mut sch = Scheduler::new(
             &eng,
-            SchedConfig { slots: 3, slot_tokens: 16, eos: None, kv, block_tokens: 4, threads },
+            SchedConfig {
+                slots: 3,
+                slot_tokens: 16,
+                eos: None,
+                kv,
+                block_tokens: 4,
+                threads,
+                ..Default::default()
+            },
         );
         for r in reqs {
             sch.submit(r).unwrap();
@@ -296,6 +506,7 @@ fn paged_q8_serves_and_drains_with_smaller_arena() {
         kv,
         block_tokens: 4,
         threads: *thread_counts().last().unwrap(),
+        ..Default::default()
     };
     let mut q8 = Scheduler::new(&eng, mk(KvStoreKind::PagedQ8));
     for r in synthetic_workload(&spec, eng.desc.vocab, 3) {

@@ -4,9 +4,11 @@
 # Runs the sequential / lockstep / continuous serve suite on a synthetic
 # quantized model (no artifacts or PJRT needed) — the continuous mode is
 # swept over the three KV-store backends (slab / paged / paged-q8) at
-# equal token capacity — and writes the machine-readable BENCH_serve.json
-# at the repo root, plus results/serve-bench.md. Pass extra flags through
-# to `repro` (e.g. drop --quick for the bigger model).
+# equal token capacity, over 1/2/4 worker threads, and over prefill chunk
+# sizes under concurrent long-prompt arrivals (step-p90 / TTFT-p90 deltas
+# of chunked vs whole-prompt prefill) — and writes the machine-readable
+# BENCH_serve.json at the repo root, plus results/serve-bench.md. Pass
+# extra flags through to `repro` (e.g. drop --quick for the bigger model).
 #
 #   scripts/bench_snapshot.sh            # quick snapshot (default)
 #   scripts/bench_snapshot.sh --full     # full-size model
