@@ -18,7 +18,7 @@ use omniquant::runtime::Manifest;
 use omniquant::serve::sched::{
     synthetic_workload, KvStoreKind, SchedConfig, Scheduler, WorkloadSpec,
 };
-use omniquant::serve::Engine;
+use omniquant::serve::{AttnKind, Engine};
 use omniquant::util::{fmt_bytes, Rng};
 
 fn main() -> Result<()> {
@@ -65,6 +65,7 @@ fn main() -> Result<()> {
             block_tokens: 16,
             threads: 0,       // one worker per available core
             prefill_chunk: 8, // interleave prompts with decode, 8 tokens/tick
+            attn: AttnKind::Fused, // stream K/V straight off the store
         };
         let mut scheduler = Scheduler::new(&engine, cfg);
         for r in requests {

@@ -193,6 +193,11 @@ pub struct ServeConfig {
     /// bit-exact; the knob only bounds how long a prompt may stall
     /// co-scheduled decodes.
     pub prefill_chunk: usize,
+    /// Attention read path: "fused" (stream K/V straight off the store,
+    /// the default) | "gather" (the pre-fused materialize-then-attend
+    /// baseline, kept for benchmarking). Parsed by `serve::AttnKind`,
+    /// which this layer stays decoupled from; bit-exact either way.
+    pub attn: String,
 }
 
 impl Default for ServeConfig {
@@ -209,6 +214,7 @@ impl Default for ServeConfig {
             block_tokens: 16,
             threads: 0,
             prefill_chunk: 32,
+            attn: "fused".into(),
         }
     }
 }
@@ -229,6 +235,7 @@ impl ServeConfig {
                 "block_tokens" => c.block_tokens = toml_usize("serve.block_tokens", val)?,
                 "threads" => c.threads = toml_usize("serve.threads", val)?,
                 "prefill_chunk" => c.prefill_chunk = toml_usize("serve.prefill_chunk", val)?,
+                "attn" => c.attn = val.as_str()?.to_string(),
                 other => return Err(anyhow!("unknown serve key '{other}'")),
             }
         }
@@ -346,6 +353,7 @@ kv = "paged-q8"
 block_tokens = 32
 threads = 4
 prefill_chunk = 8
+attn = "gather"
 "#,
         )
         .unwrap();
@@ -358,12 +366,14 @@ prefill_chunk = 8
         assert_eq!(cfg.serve.block_tokens, 32);
         assert_eq!(cfg.serve.threads, 4);
         assert_eq!(cfg.serve.prefill_chunk, 8);
+        assert_eq!(cfg.serve.attn, "gather");
         let d = ExperimentConfig::parse("model = \"m\"").unwrap();
         assert_eq!(d.serve.slots, ServeConfig::default().slots);
         assert_eq!(d.serve.kv, "slab");
         assert_eq!(d.serve.block_tokens, 16);
         assert_eq!(d.serve.threads, 0, "default: one worker per core");
         assert_eq!(d.serve.prefill_chunk, 32);
+        assert_eq!(d.serve.attn, "fused", "default: streaming fused attention");
     }
 
     #[test]

@@ -199,6 +199,9 @@ fn serve_cfg_from_args(a: &Args) -> Result<ServeConfig> {
     c.block_tokens = a.usize_or("block-tokens", c.block_tokens)?;
     c.threads = a.usize_or("threads", c.threads)?;
     c.prefill_chunk = a.usize_or("prefill-chunk", c.prefill_chunk)?;
+    if let Some(v) = a.get("attn") {
+        c.attn = v.to_string();
+    }
     Ok(c)
 }
 
@@ -208,6 +211,7 @@ fn serve_cfg_from_args(a: &Args) -> Result<ServeConfig> {
 fn cmd_serve_continuous(a: &Args, engine: &serve::Engine) -> Result<()> {
     let cfg = serve_cfg_from_args(a)?;
     let kv = sched::KvStoreKind::parse(&cfg.kv)?;
+    let attn = serve::AttnKind::parse(&cfg.attn)?;
     let threads = if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() };
     let chunk = if cfg.prefill_chunk == 0 {
         "prefill unchunked".to_string()
@@ -216,7 +220,7 @@ fn cmd_serve_continuous(a: &Args, engine: &serve::Engine) -> Result<()> {
     };
     println!(
         "continuous serve: {} requests, mean gap {:.1} steps, {} slots, prompt {} + max {} \
-         tokens, kv {} ({}-token blocks), {} threads, {}",
+         tokens, kv {} ({}-token blocks), {} threads, {} attention, {}",
         cfg.requests,
         cfg.mean_interarrival_steps,
         cfg.slots,
@@ -225,6 +229,7 @@ fn cmd_serve_continuous(a: &Args, engine: &serve::Engine) -> Result<()> {
         kv.name(),
         cfg.block_tokens,
         threads,
+        attn.name(),
         chunk
     );
     let spec = sched::WorkloadSpec {
@@ -243,6 +248,7 @@ fn cmd_serve_continuous(a: &Args, engine: &serve::Engine) -> Result<()> {
         block_tokens: cfg.block_tokens,
         threads: cfg.threads,
         prefill_chunk: cfg.prefill_chunk,
+        attn,
     };
     let mut scheduler = sched::Scheduler::new(engine, scfg);
     for r in requests {
@@ -340,15 +346,18 @@ const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|repro|info> [--
     \u{20}          [--prompt-len P] [--generate] [--temp X] [--synthetic]\n\
     \u{20}          [--continuous --requests N --interarrival X --slots S --json F\n\
     \u{20}           --kv slab|paged|paged-q8 --block-tokens B --threads T\n\
-    \u{20}           --prefill-chunk C]\n\
+    \u{20}           --prefill-chunk C --attn fused|gather]\n\
     \u{20}          (--continuous: open-loop staggered arrivals through the\n\
     \u{20}           pooled-KV continuous-batching scheduler; --kv picks the KV\n\
     \u{20}           store: slab f32 slots, vLLM-style paged blocks, or paged\n\
     \u{20}           8-bit group-quantized blocks; --threads fans the batched\n\
-    \u{20}           GEMM/KV-gather decode across worker threads, 0 = one per\n\
+    \u{20}           GEMM + attention decode across worker threads, 0 = one per\n\
     \u{20}           core, bit-identical output at any count; --prefill-chunk\n\
     \u{20}           caps prompt tokens prefilled per tick, interleaved with\n\
     \u{20}           decode, 0 = unchunked, bit-identical at any chunk;\n\
+    \u{20}           --attn picks the attention read path: fused streams K/V\n\
+    \u{20}           straight off the store (default), gather is the\n\
+    \u{20}           materialize-then-attend baseline, bit-identical;\n\
     \u{20}           --synthetic: serve a fresh synthetic model, no\n\
     \u{20}           artifacts/PJRT needed)\n\
     repro     --exp <fig1|table1|table2|table3|table4|fig4|tableA1..A14|figA1..A3\n\

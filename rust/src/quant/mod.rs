@@ -260,6 +260,72 @@ pub fn dequantize_row_q8(codes: &[u8], group: usize, scales: &[f32], out: &mut [
     }
 }
 
+/// Dot product of `q` against lanes `[j0, j0 + q.len())` of one Q8-coded
+/// row (`codes` is the whole row, `scales` its `[h, z]` pairs as written
+/// by [`quantize_row_q8`]), dequantizing each code **in registers** — the
+/// streaming read path of the fused-KV attention kernel (`serve::attn`),
+/// which never materializes the f32 row.
+///
+/// Bit-for-bit contract: per element the f32 op order is exactly
+/// `dequantize_row_q8` followed by a dot — `(code as f32 - z)` rounds,
+/// `* h` rounds, `q[j] * that` rounds, the accumulate rounds — and lanes
+/// are visited in ascending order, so the result is identical to
+/// dequantizing the row into scratch and dotting the scratch. All lanes
+/// of one quant group share `(h, z)`, so the loop hoists them per
+/// group-aligned segment (no per-lane division or scale load); hoisting
+/// changes which *instructions* read the scales, never an f32 value or
+/// the op order, so bit-exactness is untouched.
+pub fn q8_dot_lanes(q: &[f32], codes: &[u8], scales: &[f32], group: usize, j0: usize) -> f32 {
+    let g = group_len(codes.len(), group);
+    debug_assert!(j0 + q.len() <= codes.len());
+    debug_assert_eq!(scales.len(), 2 * q8_row_groups(codes.len(), group));
+    let mut s = 0.0f32;
+    let mut j = 0usize;
+    while j < q.len() {
+        let lane = j0 + j;
+        let gi = lane / g;
+        let h = scales[2 * gi];
+        let z = scales[2 * gi + 1];
+        let end = q.len().min(j + (g - lane % g));
+        for (&qv, &c) in q[j..end].iter().zip(&codes[lane..j0 + end]) {
+            s += qv * ((c as f32 - z) * h);
+        }
+        j = end;
+    }
+    s
+}
+
+/// `out[j] += p * dequant(codes[j0 + j])` over `j in 0..out.len()` — the
+/// in-register twin of `q8_dot_lanes` for the attention weighted-sum
+/// (`ao += p * v`) loop. Same per-element op order as dequantizing into
+/// scratch first (and the same group-segment `(h, z)` hoisting), so the
+/// accumulated output is bit-identical.
+pub fn q8_axpy_lanes(
+    p: f32,
+    codes: &[u8],
+    scales: &[f32],
+    group: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    let g = group_len(codes.len(), group);
+    debug_assert!(j0 + out.len() <= codes.len());
+    debug_assert_eq!(scales.len(), 2 * q8_row_groups(codes.len(), group));
+    let n = out.len();
+    let mut j = 0usize;
+    while j < n {
+        let lane = j0 + j;
+        let gi = lane / g;
+        let h = scales[2 * gi];
+        let z = scales[2 * gi + 1];
+        let end = n.min(j + (g - lane % g));
+        for (o, &c) in out[j..end].iter_mut().zip(&codes[lane..j0 + end]) {
+            *o += p * ((c as f32 - z) * h);
+        }
+        j = end;
+    }
+}
+
 /// Weight memory in bytes for a packed layer at `bits` with group scales
 /// (f16-equivalent bookkeeping: scale+zp per group stored as 2x2 bytes).
 pub fn packed_bytes(cin: usize, cout: usize, bits: u8, group: usize) -> usize {
@@ -405,6 +471,54 @@ mod tests {
                     (a - b).abs() <= 1.5 * h + 1e-6,
                     "d={d} group={group} lane {i}: |{a} - {b}| > 1.5*{h}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn q8_lane_helpers_match_dequant_then_dot_bit_for_bit() {
+        // the fused-attention contract: in-register dequant fused into the
+        // q·k / p·v loops must be bit-identical to dequantizing the row
+        // into scratch and running the same loops over the scratch — for
+        // head-sized lane segments at any offset, including segments that
+        // straddle a quant-group boundary (hd 32 vs group 48 below)
+        let mut rng = Rng::new(19);
+        for (d, group, hd) in [(192usize, 64usize, 32usize), (192, 48, 32), (96, 64, 24)] {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal() * 2.0).collect();
+            let ng = q8_row_groups(d, group);
+            let mut codes = vec![0u8; d];
+            let mut scales = vec![0.0f32; 2 * ng];
+            quantize_row_q8(&row, group, &mut codes, &mut scales);
+            let mut deq = vec![0.0f32; d];
+            dequantize_row_q8(&codes, group, &scales, &mut deq);
+            let q: Vec<f32> = (0..hd).map(|_| rng.normal()).collect();
+            let p = rng.normal();
+            for j0 in (0..d).step_by(hd) {
+                // reference: dot / axpy over the materialized row, in the
+                // exact loop order the gather attention path uses
+                let mut want_dot = 0.0f32;
+                for j in 0..hd {
+                    want_dot += q[j] * deq[j0 + j];
+                }
+                let got_dot = q8_dot_lanes(&q, &codes, &scales, group, j0);
+                assert_eq!(
+                    want_dot.to_bits(),
+                    got_dot.to_bits(),
+                    "dot d={d} group={group} j0={j0}: {want_dot} vs {got_dot}"
+                );
+                let mut want_acc: Vec<f32> = (0..hd).map(|j| (j as f32) * 0.25).collect();
+                let mut got_acc = want_acc.clone();
+                for j in 0..hd {
+                    want_acc[j] += p * deq[j0 + j];
+                }
+                q8_axpy_lanes(p, &codes, &scales, group, j0, &mut got_acc);
+                for (j, (a, b)) in want_acc.iter().zip(&got_acc).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "axpy d={d} group={group} j0={j0} lane {j}: {a} vs {b}"
+                    );
+                }
             }
         }
     }

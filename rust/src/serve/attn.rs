@@ -1,0 +1,337 @@
+//! Streaming fused-KV attention for the batched serve path.
+//!
+//! Before this module, every tick's attention (PR 2→4) first
+//! **materialized** each sequence's whole cached K/V window: `KvPool::
+//! layer_kv` gathered (and, for `paged-q8`, dequantized) `t` rows into
+//! per-step f32 scratch — an O(t·d) write immediately re-read by the
+//! scores/softmax/weighted-sum loops, the 2x read amplification called
+//! out in ROADMAP — and those loops then ran **serially** on the
+//! submitting thread while the gemm worker pool idled. As contexts grow,
+//! that serial, copy-amplified loop dominates the tick: the gemms stream
+//! each weight matrix once per tick (PR 4) on all cores (PR 3), but the
+//! KV path did neither.
+//!
+//! [`attention_fused`] fixes both:
+//!
+//! * **Streaming reads** — K/V are read directly from the store through
+//!   [`KvPool::runs`], a block-run cursor that borrows contiguous arena
+//!   runs zero-copy. The f32 backends stream the arena rows straight into
+//!   the q·k and p·v loops (slab: one run, exactly the borrow `layer_kv`
+//!   returned; paged: one run per block). The Q8 backend streams raw
+//!   codes + per-row scales and dequantizes **in registers** inside the
+//!   loops (`quant::q8_dot_lanes` / `quant::q8_axpy_lanes`) — the f32
+//!   row never exists in memory, so a Q8 attention read moves ~4x fewer
+//!   bytes than the gather path's quantized-read-plus-f32-scratch walk.
+//! * **Thread-parallel fan-out** — the independent (run-row, head) items
+//!   are flattened (`item = row * n_heads + head`) and fanned across the
+//!   existing `util::ThreadPool` via `run_items`. Each item owns the
+//!   disjoint `(row, head·head_dim)` stripe of the output `ao`
+//!   (`StripedMut`), and each worker shard owns a private softmax scores
+//!   row, so shards never share mutable state.
+//!
+//! # Why this is bit-exact (the op-order contract)
+//!
+//! The fused path must produce **bit-for-bit** the outputs of the gather
+//! path on all three backends, at any thread count. That holds because
+//! no f32 operation is added, removed, or reordered:
+//!
+//! * f32 backends: the cursor yields the same arena bytes the gather
+//!   memcpy'd; the dot/softmax/weighted-sum loops are the unmodified
+//!   scalar loops, visiting cached positions in the same ascending order
+//!   (the cursor yields block runs in logical order).
+//! * Q8: `dequantize_row_q8` computes `(code as f32 − z) * h` per lane,
+//!   and the gather path then multiplied that scratch value into the dot
+//!   (`s += q[j] * krow[j]`) or the weighted sum (`ao[j] += p * vrow[j]`).
+//!   The in-register helpers fuse the same three-rounding sequence —
+//!   `(code − z)` rounds, `· h` rounds, `q·(…)` rounds, accumulate rounds
+//!   — per element, in the same lane order, so every intermediate f32 is
+//!   identical.
+//! * Parallelism: one (row, head) item runs start-to-finish on one
+//!   worker. The softmax reduction over cached positions and the p·v
+//!   accumulation over positions are per-item and never split, so the
+//!   partition decides only *ownership* of an item, never the order of
+//!   any reduction (the `util::threads` contract). No two items write
+//!   the same `ao` stripe.
+//!
+//! [`attention_gather`] preserves the pre-fused materialize-then-attend
+//! path verbatim — it is the measured baseline for the fused-vs-gather
+//! sweep in `serve::bench` and the reference arm of the parity suite in
+//! `tests/sched.rs` (`--attn gather` / [`AttnKind::Gather`] select it).
+//!
+//! [`KvPool::runs`]: super::sched::KvPool::runs
+
+use anyhow::{bail, Result};
+
+use super::sched::pool::{KvSlice, KV_GROUP};
+use super::sched::{KvPool, SlotId};
+use crate::quant::{q8_axpy_lanes, q8_dot_lanes};
+use crate::util::{StripedMut, ThreadPool};
+
+/// Attention read-path selector, threaded from `[serve] attn` / the
+/// `serve --continuous --attn` flag down to `BatchScratch`. Both paths
+/// are bit-for-bit identical (parity-tested); the knob trades only
+/// wall-clock and scratch memory, and exists so the bench can measure
+/// the fused path against the gather baseline it replaced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnKind {
+    /// Stream K/V straight out of the store: block-table-direct reads,
+    /// Q8 dequantized in registers, (row, head) items fanned across the
+    /// worker pool. The default.
+    Fused,
+    /// The pre-fused baseline: materialize each sequence's K/V window
+    /// into f32 scratch via `KvPool::layer_kv`, then attend serially.
+    Gather,
+}
+
+impl AttnKind {
+    pub fn parse(s: &str) -> Result<AttnKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fused" => Ok(AttnKind::Fused),
+            "gather" => Ok(AttnKind::Gather),
+            other => bail!("unknown attention path '{other}' (expected fused|gather)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttnKind::Fused => "fused",
+            AttnKind::Gather => "gather",
+        }
+    }
+}
+
+/// Per-stacked-row attention descriptor for the fused path: row `i` of
+/// the batch attends over the first `t` cached positions of `slot`
+/// (`t = base + r + 1` for run-row `r` at base KV length `base` — the
+/// intra-chunk causal mask). Rebuilt once per `forward_chunked` call
+/// (KV lengths only advance after the last layer, so it is stable
+/// across layers).
+#[derive(Clone, Copy)]
+pub(crate) struct RowMeta {
+    pub slot: SlotId,
+    pub t: usize,
+}
+
+/// One run's span of the stacked batch, as the gather baseline consumes
+/// it: rows `[row0, row0 + n)` belong to `slot`, whose KV length before
+/// this chunk is `base`.
+#[derive(Clone, Copy)]
+pub(crate) struct RunSpan {
+    pub slot: SlotId,
+    pub base: usize,
+    pub n: usize,
+    pub row0: usize,
+}
+
+/// Panic unless every row's attention window fits the preallocated score
+/// rows. `BatchScratch` sizes them once (from `max_t` at
+/// `new_batch_scratch`), but attention is indexed by the *live* `t` — an
+/// engine caller that outgrows its scratch must die with a named panic
+/// here, not via a silent slice bound three frames into a dot loop.
+fn check_score_capacity(max_t: usize, score_cap: usize) {
+    assert!(
+        max_t <= score_cap,
+        "attention over {max_t} cached positions exceeds the scores capacity {score_cap} \
+         (BatchScratch was sized for a smaller max_t at new_batch_scratch)"
+    );
+}
+
+/// Streaming fused-KV attention over one layer of the stacked batch:
+/// for every (row, head) item, scores/softmax/weighted-sum directly off
+/// the store (see the module docs), fanned across `tp`. `q` and `ao` are
+/// `(rows, d)` row-major; `scores` is `(tp.threads(), score_cap)`
+/// row-major, one private softmax row per worker shard.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_fused(
+    pool: &KvPool,
+    layer: usize,
+    rows: &[RowMeta],
+    n_heads: usize,
+    head_dim: usize,
+    q: &[f32],
+    ao: &mut [f32],
+    scores: &mut [f32],
+    score_cap: usize,
+    tp: &ThreadPool,
+) {
+    let w = rows.len();
+    if w == 0 {
+        return;
+    }
+    let d = q.len() / w;
+    debug_assert_eq!(q.len(), w * d);
+    debug_assert_eq!(ao.len(), w * d);
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    check_score_capacity(rows.iter().map(|r| r.t).max().unwrap_or(0), score_cap);
+    // lanes past n_heads * head_dim (none in practice: head_dim = d /
+    // n_heads everywhere) are untouched by the head items; zero them so
+    // the output matches the gather path's whole-row zeroing exactly
+    if n_heads * head_dim < d {
+        for s in 0..w {
+            ao[s * d + n_heads * head_dim..(s + 1) * d].iter_mut().for_each(|a| *a = 0.0);
+        }
+    }
+    let workers = scores.len() / score_cap;
+    debug_assert!(workers >= tp.threads());
+    let aoview = StripedMut::new(ao, w, d);
+    let sview = StripedMut::new(&mut scores[..workers * score_cap], workers, score_cap);
+    tp.run_items(w * n_heads, &|worker, item| {
+        let (row, h) = (item / n_heads, item % n_heads);
+        let RowMeta { slot, t } = rows[row];
+        let b = h * head_dim;
+        let qseg = &q[row * d + b..row * d + b + head_dim];
+        // SAFETY: concurrent shards carry distinct `worker` ids, so each
+        // holds the only live borrow of its scores row.
+        let srow = unsafe { sview.rows(worker, worker + 1) };
+        let sc = &mut srow[..t];
+        // pass 1: scores = (q . k) * scale, streamed run-wise off the store
+        for (r0, n, slice) in pool.runs(slot, layer, t) {
+            match slice {
+                KvSlice::F32 { k, .. } => {
+                    for i in 0..n {
+                        let krow = &k[i * d + b..i * d + b + head_dim];
+                        let mut sdot = 0.0f32;
+                        for j in 0..head_dim {
+                            sdot += qseg[j] * krow[j];
+                        }
+                        sc[r0 + i] = sdot * scale;
+                    }
+                }
+                KvSlice::Q8 { qk, sk, .. } => {
+                    let ng2 = sk.len() / n;
+                    for i in 0..n {
+                        let sdot = q8_dot_lanes(
+                            qseg,
+                            &qk[i * d..(i + 1) * d],
+                            &sk[i * ng2..(i + 1) * ng2],
+                            KV_GROUP,
+                            b,
+                        );
+                        sc[r0 + i] = sdot * scale;
+                    }
+                }
+            }
+        }
+        // softmax — the unmodified scalar sequence
+        let mx = sc.iter().fold(f32::MIN, |m, &x| m.max(x));
+        let mut denom = 0.0f32;
+        for x in sc.iter_mut() {
+            *x = (*x - mx).exp();
+            denom += *x;
+        }
+        // SAFETY: (row, head) stripes of `ao` are disjoint across items.
+        let aoseg = unsafe { aoview.stripe(row, b, b + head_dim) };
+        aoseg.iter_mut().for_each(|a| *a = 0.0);
+        // pass 2: ao += p . v, positions in the same ascending order
+        for (r0, n, slice) in pool.runs(slot, layer, t) {
+            match slice {
+                KvSlice::F32 { v, .. } => {
+                    for i in 0..n {
+                        let p = sc[r0 + i] / denom;
+                        let vrow = &v[i * d + b..i * d + b + head_dim];
+                        for j in 0..head_dim {
+                            aoseg[j] += p * vrow[j];
+                        }
+                    }
+                }
+                KvSlice::Q8 { qv, sv, .. } => {
+                    let ng2 = sv.len() / n;
+                    for i in 0..n {
+                        let p = sc[r0 + i] / denom;
+                        q8_axpy_lanes(
+                            p,
+                            &qv[i * d..(i + 1) * d],
+                            &sv[i * ng2..(i + 1) * ng2],
+                            KV_GROUP,
+                            b,
+                            aoseg,
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// The pre-fused baseline, preserved verbatim: per run, materialize the
+/// sequence's whole `(t, d)` K/V window into `kv_k`/`kv_v` f32 scratch
+/// through `KvPool::layer_kv` (the gather itself fans token rows across
+/// `tp`), then run the scores/softmax/weighted-sum loops serially on the
+/// submitting thread. Kept as the measured baseline of the fused-vs-
+/// gather bench sweep and the reference arm of the parity suite; the
+/// serving default is [`attention_fused`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_gather(
+    pool: &KvPool,
+    layer: usize,
+    spans: &[RunSpan],
+    n_heads: usize,
+    head_dim: usize,
+    q: &[f32],
+    ao: &mut [f32],
+    scores: &mut [f32],
+    score_cap: usize,
+    kv_k: &mut Vec<f32>,
+    kv_v: &mut Vec<f32>,
+    tp: &ThreadPool,
+) {
+    let w: usize = spans.iter().map(|r| r.n).sum();
+    if w == 0 {
+        return;
+    }
+    let d = q.len() / w;
+    debug_assert_eq!(ao.len(), w * d);
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    check_score_capacity(spans.iter().map(|r| r.base + r.n).max().unwrap_or(0), score_cap);
+    for run in spans {
+        // one gather serves the whole run: row r reads its first
+        // `base + r + 1` rows (slab borrows the arena zero-copy)
+        let (kc, vc) = pool.layer_kv(run.slot, layer, run.base + run.n, &mut *kv_k, &mut *kv_v, tp);
+        for r in 0..run.n {
+            let t = run.base + r + 1; // intra-chunk causal mask
+            let s = run.row0 + r;
+            let qrow = &q[s * d..(s + 1) * d];
+            let aorow = &mut ao[s * d..(s + 1) * d];
+            aorow.iter_mut().for_each(|a| *a = 0.0);
+            for h in 0..n_heads {
+                let base_h = h * head_dim;
+                let sc = &mut scores[..t];
+                for ti in 0..t {
+                    let krow = &kc[ti * d + base_h..ti * d + base_h + head_dim];
+                    let mut sdot = 0.0f32;
+                    for j in 0..head_dim {
+                        sdot += qrow[base_h + j] * krow[j];
+                    }
+                    sc[ti] = sdot * scale;
+                }
+                let mx = sc.iter().fold(f32::MIN, |m, &x| m.max(x));
+                let mut denom = 0.0f32;
+                for x in sc.iter_mut() {
+                    *x = (*x - mx).exp();
+                    denom += *x;
+                }
+                for ti in 0..t {
+                    let pattn = sc[ti] / denom;
+                    let vrow = &vc[ti * d + base_h..ti * d + base_h + head_dim];
+                    for j in 0..head_dim {
+                        aorow[base_h + j] += pattn * vrow[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attn_kind_parses_and_names() {
+        assert_eq!(AttnKind::parse("fused").unwrap(), AttnKind::Fused);
+        assert_eq!(AttnKind::parse("Gather").unwrap(), AttnKind::Gather);
+        assert!(AttnKind::parse("warp").is_err());
+        assert_eq!(AttnKind::Fused.name(), "fused");
+        assert_eq!(AttnKind::Gather.name(), "gather");
+    }
+}

@@ -3,13 +3,18 @@
 //! (no artifacts, no PJRT), with the continuous mode swept over the three
 //! KV-store backends (slab / paged / paged-q8) at equal token capacity so
 //! the tok/s and RM deltas of paging + KV quantization are tracked
-//! together. Emitted as human-readable lines and as the machine-readable
-//! `BENCH_serve.json` snapshot so the serving-perf trajectory is tracked
-//! PR over PR. Shared by `benches/bench_serve.rs`, `repro --exp
-//! serve-bench` and `scripts/bench_snapshot.sh`.
+//! together, plus a long-context attention sweep (cached lengths
+//! {256, 1024} x kv x threads) measuring the fused streaming read path
+//! against the gather baseline it replaced (`attn_sweep` /
+//! `step_p90_improvement_fused_vs_gather` / `attn_share`). Emitted as
+//! human-readable lines and as the machine-readable `BENCH_serve.json`
+//! snapshot so the serving-perf trajectory is tracked PR over PR. Shared
+//! by `benches/bench_serve.rs`, `repro --exp serve-bench` and
+//! `scripts/bench_snapshot.sh`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -17,12 +22,12 @@ use crate::config::QuantSetting;
 use crate::json::Json;
 use crate::model::ModelParams;
 use crate::runtime::Manifest;
-use crate::util::Rng;
+use crate::util::{stats, Rng};
 
 use super::sched::{
-    synthetic_workload, KvStoreKind, SchedConfig, Scheduler, ServeSummary, WorkloadSpec,
+    synthetic_workload, KvPool, KvStoreKind, SchedConfig, Scheduler, ServeSummary, WorkloadSpec,
 };
-use super::Engine;
+use super::{AttnKind, Engine};
 
 /// Tokens per KV block for the paged backends in the bench sweep (one
 /// const so the SchedConfig and the snapshot's `kv_block_tokens` entry
@@ -154,6 +159,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
                 block_tokens: BENCH_BLOCK_TOKENS,
                 threads,
                 prefill_chunk: chunk,
+                attn: AttnKind::Fused,
             };
             let mut sch = Scheduler::new(&engine, cfg);
             for r in reqs {
@@ -275,6 +281,124 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
          ({step_p90_improvement:.2}x), ttft p90 {whole_ttft_p90:.1} -> {best_chunk_ttft_p90:.1} ms"
     ));
 
+    // 6. long-context fused-KV attention sweep: decode-heavy ticks at
+    //    cached lengths {256, 1024} across kv backends x threads {1, 4},
+    //    fused streaming reads vs the gather baseline. The context is
+    //    warmed by appending random K/V rows straight through the pool's
+    //    write path (no forward work), so the timed loop isolates the
+    //    per-tick decode cost — exactly the regime where the per-step
+    //    O(t*d) gather materialization dominated. `attn_share` (from the
+    //    engine's phase timers) attributes the tick; the headline
+    //    `step_p90_improvement_fused_vs_gather` is gather/fused step-p90
+    //    on paged-q8 at t=1024, threads=4 (all serve features on).
+    let attn_ctxs: [usize; 2] = [256, 1024];
+    let attn_steps = if opts.quick { 12 } else { 24 };
+    let mut attn_map = BTreeMap::new();
+    let mut attn_improvement_headline = 0.0f64;
+    let mut attn_share_headline = 0.0f64;
+    // one (kind, threads, ctx, path) point: warm a cache to `ctx` rows
+    // through the pool's write path, then time `steps - 1` decode ticks.
+    // Returns (step p50 ms, step p90 ms, attn p90 ms, attn share).
+    fn attn_point(
+        engine: &Engine,
+        seed: u64,
+        steps: usize,
+        kind: KvStoreKind,
+        threads: usize,
+        ctx: usize,
+        attn: AttnKind,
+    ) -> (f64, f64, f64, f64) {
+        let (layers, d) = (engine.desc.n_layers, engine.desc.d_model);
+        let slot_len = ctx + steps + 1;
+        let mut pool = KvPool::new(kind, 1, layers, slot_len, d, BENCH_BLOCK_TOKENS);
+        let slot = pool.lease(slot_len).expect("fresh pool admits one sequence");
+        let mut scratch = engine.new_batch_scratch(1, 1, slot_len, threads);
+        if attn == AttnKind::Gather {
+            scratch = scratch.with_gather_attention();
+        }
+        // warm the cache to `ctx` positions (values don't matter for
+        // timing; Q8 quantizes on append exactly as in real serving)
+        let mut rng = Rng::new(seed ^ 0xA77);
+        let mut kr = vec![0.0f32; d];
+        let mut vr = vec![0.0f32; d];
+        for _ in 0..ctx {
+            for l in 0..layers {
+                kr.iter_mut().for_each(|x| *x = rng.normal());
+                vr.iter_mut().for_each(|x| *x = rng.normal());
+                pool.append(slot, l, &kr, &vr);
+            }
+            pool.advance(slot);
+        }
+        // one untimed warmup tick, then the measured decode ticks
+        engine.forward_step(&[1], &[slot], &mut pool, &mut scratch);
+        let mut step_ms = Vec::with_capacity(steps);
+        let mut attn_ms = Vec::with_capacity(steps);
+        let (mut step_sum, mut attn_sum) = (0.0f64, 0.0f64);
+        for i in 0..steps - 1 {
+            let tok = (2 + i % 50) as i32;
+            let t0 = Instant::now();
+            engine.forward_step(&[tok], &[slot], &mut pool, &mut scratch);
+            let dt = t0.elapsed().as_secs_f64();
+            step_ms.push((dt * 1e3) as f32);
+            attn_ms.push((scratch.attn_secs() * 1e3) as f32);
+            step_sum += dt;
+            attn_sum += scratch.attn_secs();
+        }
+        (
+            stats::median(&step_ms) as f64,
+            stats::percentile(&step_ms, 0.9) as f64,
+            stats::percentile(&attn_ms, 0.9) as f64,
+            if step_sum > 0.0 { attn_sum / step_sum } else { 0.0 },
+        )
+    }
+    let last_ctx = attn_ctxs[attn_ctxs.len() - 1];
+    for &ctx in &attn_ctxs {
+        for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            for threads in [1usize, 4] {
+                let (f_p50, f_p90, f_attn_p90, f_share) =
+                    attn_point(&engine, opts.seed, attn_steps, kind, threads, ctx, AttnKind::Fused);
+                let (g_p50, g_p90, g_attn_p90, g_share) = attn_point(
+                    &engine,
+                    opts.seed,
+                    attn_steps,
+                    kind,
+                    threads,
+                    ctx,
+                    AttnKind::Gather,
+                );
+                let improvement = g_p90 / f_p90.max(1e-9);
+                let mut o = BTreeMap::new();
+                o.insert("fused_step_p50_ms".to_string(), Json::Num(f_p50));
+                o.insert("fused_step_p90_ms".to_string(), Json::Num(f_p90));
+                o.insert("fused_attn_p90_ms".to_string(), Json::Num(f_attn_p90));
+                o.insert("attn_share".to_string(), Json::Num(f_share));
+                o.insert("gather_step_p50_ms".to_string(), Json::Num(g_p50));
+                o.insert("gather_step_p90_ms".to_string(), Json::Num(g_p90));
+                o.insert("gather_attn_p90_ms".to_string(), Json::Num(g_attn_p90));
+                o.insert("gather_attn_share".to_string(), Json::Num(g_share));
+                o.insert(
+                    "step_p90_improvement_fused_vs_gather".to_string(),
+                    Json::Num(improvement),
+                );
+                attn_map.insert(
+                    format!("{}_t{}_ctx{}", kind.name().replace('-', "_"), threads, ctx),
+                    Json::Obj(o),
+                );
+                if kind == KvStoreKind::PagedQ8 && threads == 4 && ctx == last_ctx {
+                    attn_improvement_headline = improvement;
+                    attn_share_headline = f_share;
+                }
+                lines.push(format!(
+                    "attn ctx{ctx:<5}{:<9} t{threads}: fused step p90 {f_p90:.3} ms vs gather \
+                     {g_p90:.3} ms ({improvement:.2}x), attn share {:.0}% -> {:.0}%",
+                    kind.name(),
+                    100.0 * g_share,
+                    100.0 * f_share,
+                ));
+            }
+        }
+    }
+
     let num = |v: f64| Json::Num(v);
     let mut seq_o = BTreeMap::new();
     seq_o.insert("tok_per_s".to_string(), num(sequential_tps));
@@ -308,6 +432,16 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         ("speedup_threads_4_vs_1".to_string(), num(thread_speedup_4)),
         ("prefill_sweep_prompt_len".to_string(), num(long_p as f64)),
         ("step_p90_improvement_prefill_chunk_vs_whole".to_string(), num(step_p90_improvement)),
+        ("attn_sweep".to_string(), Json::Obj(attn_map)),
+        (
+            "attn_sweep_ctx".to_string(),
+            Json::Arr(attn_ctxs.iter().map(|&c| num(c as f64)).collect()),
+        ),
+        // headline: paged-q8 at the longest context, threads=4 — the
+        // fused streaming read path vs the gather baseline it replaced,
+        // and the attention share of a fused tick at that point
+        ("step_p90_improvement_fused_vs_gather".to_string(), num(attn_improvement_headline)),
+        ("attn_share".to_string(), num(attn_share_headline)),
         (
             "ttft_p90_ms_prefill_whole_vs_best_chunk".to_string(),
             Json::Arr(vec![num(whole_ttft_p90), num(best_chunk_ttft_p90)]),

@@ -19,22 +19,33 @@
 //! serve benchmark in [`bench`]. `forward_step` is the pure-decode
 //! wrapper (one-token runs). The pool is backend-agnostic (`sched::KvStoreKind`): slab
 //! f32 slots, vLLM-style paged blocks, or paged 8-bit group-quantized
-//! blocks; attention reads go through `KvPool::layer_kv`, which borrows
-//! the slab arena zero-copy and gathers/dequantizes paged blocks into
-//! per-step scratch.
+//! blocks; attention streams K/V **directly out of the store** through
+//! the fused kernel in [`attn`] — block-table-direct arena reads, Q8
+//! dequantized in registers, no per-step K/V materialization (the
+//! pre-fused gather baseline is kept behind [`AttnKind::Gather`] for the
+//! bench A/B and the parity suite).
 //!
 //! The batched step fans its work — the independent `cout` lanes of every
-//! gemm (packed and FP, including the vocab-wide head) and the token rows
-//! of the paged-KV gathers — across a persistent worker pool owned by
-//! [`BatchScratch`] (`util::ThreadPool`, sized by
-//! `Engine::new_batch_scratch`'s `threads`, 0 = one per core). Sharding
-//! never splits a per-lane reduction, so outputs are bit-for-bit
-//! identical at any thread count; the knob trades nothing but wall-clock.
+//! gemm (packed and FP, including the vocab-wide head) and the
+//! independent (row, head) items of the fused attention kernel — across
+//! a persistent worker pool owned by [`BatchScratch`]
+//! (`util::ThreadPool`, sized by `Engine::new_batch_scratch`'s
+//! `threads`, 0 = one per core). Sharding never splits a per-lane or
+//! per-head reduction, so outputs are bit-for-bit identical at any
+//! thread count; the knob trades nothing but wall-clock. Each
+//! `forward_chunked` call also records where its wall time went
+//! ([`BatchScratch::gemm_secs`] / [`BatchScratch::attn_secs`]), feeding
+//! the per-tick phase metrics in `sched::ServeMetrics`.
 
+pub mod attn;
 pub mod bench;
 pub mod sched;
 
+use std::time::Instant;
+
 use anyhow::{bail, Result};
+
+pub use attn::AttnKind;
 
 use crate::config::QuantSetting;
 use crate::model::ModelParams;
@@ -533,6 +544,8 @@ impl Engine {
         );
         let d = self.desc.d_model;
         let dff = self.desc.d_ff;
+        let attn_kind = scratch.attn;
+        let score_cap = scratch.score_cap;
         let BatchScratch {
             xs,
             x1,
@@ -544,12 +557,40 @@ impl Engine {
             ff2,
             scores,
             logits,
-            kv_k,
-            kv_v,
+            gather_k,
+            gather_v,
+            row_meta,
+            run_spans,
             gemm,
             pool: tp,
+            gemm_secs,
+            attn_secs,
             ..
         } = scratch;
+        *gemm_secs = 0.0;
+        *attn_secs = 0.0;
+        // per-row / per-run attention metadata, rebuilt per call (stable
+        // across layers: KV lengths only advance after the last layer)
+        row_meta.clear();
+        run_spans.clear();
+        {
+            let mut r0 = 0usize;
+            for run in runs {
+                let base = pool.len(run.slot);
+                let n = run.tokens.len();
+                match attn_kind {
+                    AttnKind::Fused => {
+                        for r in 0..n {
+                            row_meta.push(attn::RowMeta { slot: run.slot, t: base + r + 1 });
+                        }
+                    }
+                    AttnKind::Gather => {
+                        run_spans.push(attn::RunSpan { slot: run.slot, base, n, row0: r0 });
+                    }
+                }
+                r0 += n;
+            }
+        }
         // row layout: runs concatenated in order; run i owns rows
         // [row0, row0 + n_i), row r sitting at sequence position L + r
         let mut row0 = 0usize;
@@ -574,10 +615,12 @@ impl Engine {
             for s in 0..w {
                 norm(&xs[s * d..(s + 1) * d], &blk.ln1_w, &blk.ln1_b, &mut x1[s * d..(s + 1) * d]);
             }
+            let tg = Instant::now();
             for (name, dst) in [("wq", &mut *q), ("wk", &mut *k), ("wv", &mut *v)] {
                 let (_, w_, bias) = blk.linear(name);
                 gemm_bias_rows(w_, bias, &x1[..w * d], w, &mut dst[..w * d], &mut gemm[..], tp);
             }
+            *gemm_secs += tg.elapsed().as_secs_f64();
             if llama {
                 let mut row0 = 0usize;
                 for run in runs {
@@ -592,6 +635,7 @@ impl Engine {
             }
             // append every run's chunk of K/V rows before any attention
             // read: later rows of a run must see earlier rows' cache
+            let ta = Instant::now();
             let mut row0 = 0usize;
             for run in runs {
                 let n = run.tokens.len();
@@ -600,56 +644,46 @@ impl Engine {
                 row0 += n;
             }
             // attention over each sequence's own pooled cache (ragged
-            // lengths; tiny next to the weight streaming the gemms share).
-            // `layer_kv` yields contiguous (t, d) views: the slab backend
-            // borrows its arena directly, the paged backends walk the
-            // sequence's block table and gather (Q8: dequantize) into the
-            // per-step kv_k/kv_v scratch. One gather serves the whole run:
-            // row r just reads the first `L + r + 1` rows of it.
-            let hd = self.desc.head_dim;
-            let scale = 1.0 / (hd as f32).sqrt();
-            let mut row0 = 0usize;
-            for run in runs {
-                let n = run.tokens.len();
-                let base = pool.len(run.slot);
-                let (kc, vc) = pool.layer_kv(run.slot, li, base + n, &mut *kv_k, &mut *kv_v, tp);
-                for r in 0..n {
-                    let t = base + r + 1; // intra-chunk causal mask
-                    let s = row0 + r;
-                    let qrow = &q[s * d..(s + 1) * d];
-                    let aorow = &mut ao[s * d..(s + 1) * d];
-                    aorow.iter_mut().for_each(|a| *a = 0.0);
-                    for h in 0..self.desc.n_heads {
-                        let base_h = h * hd;
-                        let sc = &mut scores[..t];
-                        for ti in 0..t {
-                            let krow = &kc[ti * d + base_h..ti * d + base_h + hd];
-                            let mut sdot = 0.0f32;
-                            for j in 0..hd {
-                                sdot += qrow[base_h + j] * krow[j];
-                            }
-                            sc[ti] = sdot * scale;
-                        }
-                        let mx = sc.iter().fold(f32::MIN, |m, &x| m.max(x));
-                        let mut denom = 0.0f32;
-                        for x in sc.iter_mut() {
-                            *x = (*x - mx).exp();
-                            denom += *x;
-                        }
-                        for ti in 0..t {
-                            let pattn = sc[ti] / denom;
-                            let vrow = &vc[ti * d + base_h..ti * d + base_h + hd];
-                            for j in 0..hd {
-                                aorow[base_h + j] += pattn * vrow[j];
-                            }
-                        }
-                    }
-                }
-                row0 += n;
+            // lengths, intra-chunk causal): the fused kernel streams K/V
+            // straight off the store — block-table-direct reads, Q8
+            // dequantized in registers — with the independent (row, head)
+            // items fanned across the worker pool; the gather baseline
+            // materializes each window through `layer_kv` first. Both are
+            // bit-identical (see `attn`'s op-order contract).
+            match attn_kind {
+                AttnKind::Fused => attn::attention_fused(
+                    pool,
+                    li,
+                    row_meta,
+                    self.desc.n_heads,
+                    self.desc.head_dim,
+                    &q[..w * d],
+                    &mut ao[..w * d],
+                    &mut scores[..],
+                    score_cap,
+                    tp,
+                ),
+                AttnKind::Gather => attn::attention_gather(
+                    pool,
+                    li,
+                    run_spans,
+                    self.desc.n_heads,
+                    self.desc.head_dim,
+                    &q[..w * d],
+                    &mut ao[..w * d],
+                    &mut scores[..],
+                    score_cap,
+                    gather_k,
+                    gather_v,
+                    tp,
+                ),
             }
+            *attn_secs += ta.elapsed().as_secs_f64();
             {
+                let tg = Instant::now();
                 let (_, w_, bias) = blk.linear("wo");
                 w_.gemm(&ao[..w * d], w, &mut x1[..w * d], &mut gemm[..], tp);
+                *gemm_secs += tg.elapsed().as_secs_f64();
                 residual_add_rows(&mut xs[..w * d], &x1[..w * d], bias, w);
             }
             // --- ffn ---
@@ -657,22 +691,28 @@ impl Engine {
                 norm(&xs[s * d..(s + 1) * d], &blk.ln2_w, &blk.ln2_b, &mut x1[s * d..(s + 1) * d]);
             }
             if llama {
+                let tg = Instant::now();
                 for (name, dst) in [("wg", &mut *ff1), ("wu", &mut *ff2)] {
                     let (_, w_, bias) = blk.linear(name);
                     let dst = &mut dst[..w * dff];
                     gemm_bias_rows(w_, bias, &x1[..w * d], w, dst, &mut gemm[..], tp);
                 }
+                *gemm_secs += tg.elapsed().as_secs_f64();
                 for i in 0..w * dff {
                     ff1[i] = silu(ff1[i]) * ff2[i];
                 }
+                let tg = Instant::now();
                 let (_, w_, bias) = blk.linear("wd");
                 w_.gemm(&ff1[..w * dff], w, &mut x1[..w * d], &mut gemm[..], tp);
+                *gemm_secs += tg.elapsed().as_secs_f64();
                 residual_add_rows(&mut xs[..w * d], &x1[..w * d], bias, w);
             } else {
                 {
                     // fused bias + ReLU, as in `forward_token`
+                    let tg = Instant::now();
                     let (_, w_, bias) = blk.linear("w1");
                     w_.gemm(&x1[..w * d], w, &mut ff1[..w * dff], &mut gemm[..], tp);
+                    *gemm_secs += tg.elapsed().as_secs_f64();
                     for s in 0..w {
                         ff1[s * dff..(s + 1) * dff]
                             .iter_mut()
@@ -680,8 +720,10 @@ impl Engine {
                             .for_each(|(y, bv)| *y = (*y + bv).max(0.0));
                     }
                 }
+                let tg = Instant::now();
                 let (_, w_, bias) = blk.linear("w2");
                 w_.gemm(&ff1[..w * dff], w, &mut x1[..w * d], &mut gemm[..], tp);
+                *gemm_secs += tg.elapsed().as_secs_f64();
                 residual_add_rows(&mut xs[..w * d], &x1[..w * d], bias, w);
             }
         }
@@ -703,8 +745,10 @@ impl Engine {
             row0 += n;
         }
         if j > 0 {
+            let tg = Instant::now();
             let vocab = self.desc.vocab;
             self.head.gemm(&x1[..j * d], j, &mut logits[..j * vocab], &mut gemm[..], tp);
+            *gemm_secs += tg.elapsed().as_secs_f64();
         }
     }
 
@@ -712,12 +756,17 @@ impl Engine {
     /// tick (decode runs + prefill-chunk rows), of which at most
     /// `sample_cap` runs sample logits (one per co-resident sequence, so
     /// the vocab-wide logits buffer is *not* paid for prefill rows that
-    /// never sample), attending over at most `max_t` cached positions.
-    /// All buffers — including one packed-gemm scratch per worker thread
-    /// and the paged-KV gather buffers — are sized up front, so the
-    /// decode loop never allocates. `threads` sizes the persistent worker
-    /// pool the gemm/KV-gather fan-out runs on (0 = one per available
-    /// core); the sharding is bit-exact, so the count only changes speed.
+    /// never sample), attending over at most `max_t` cached positions
+    /// (exceeding it later dies with a named capacity panic in the
+    /// attention kernel, never a silent out-of-bounds). All buffers —
+    /// including one packed-gemm scratch per worker thread and one
+    /// softmax scores row per worker for the fused-attention fan-out —
+    /// are sized up front, so the decode loop never allocates. `threads`
+    /// sizes the persistent worker pool the gemm/attention fan-out runs
+    /// on (0 = one per available core); the sharding is bit-exact, so
+    /// the count only changes speed. Attention defaults to the fused
+    /// streaming path ([`AttnKind::Fused`]); see
+    /// [`BatchScratch::with_gather_attention`] for the measured baseline.
     pub fn new_batch_scratch(
         &self,
         cap: usize,
@@ -738,9 +787,11 @@ impl Engine {
                 g
             })
             .collect();
+        let score_cap = max_t + 1;
         BatchScratch {
             cap,
             sample_cap,
+            score_cap,
             xs: vec![0.0; cap * d],
             x1: vec![0.0; cap * d],
             q: vec![0.0; cap * d],
@@ -749,12 +800,17 @@ impl Engine {
             ao: vec![0.0; cap * d],
             ff1: vec![0.0; cap * self.desc.d_ff],
             ff2: vec![0.0; cap * self.desc.d_ff],
-            scores: vec![0.0; max_t + 1],
+            scores: vec![0.0; pool.threads() * score_cap],
             logits: vec![0.0; sample_cap * self.desc.vocab],
-            kv_k: vec![0.0; (max_t + 1) * d],
-            kv_v: vec![0.0; (max_t + 1) * d],
+            attn: AttnKind::Fused,
+            gather_k: Vec::new(),
+            gather_v: Vec::new(),
+            row_meta: Vec::with_capacity(cap),
+            run_spans: Vec::with_capacity(cap),
             gemm,
             pool,
+            gemm_secs: 0.0,
+            attn_secs: 0.0,
         }
     }
 
@@ -873,6 +929,11 @@ pub struct BatchScratch {
     cap: usize,
     /// Maximum sampling runs per call (rows the logits buffer can hold).
     sample_cap: usize,
+    /// Cached positions one softmax scores row can hold (`max_t + 1` at
+    /// build time). The attention kernels assert the live `t` against it
+    /// with a named panic — the scratch is sized once, indexed by live
+    /// lengths, and must never silently rely on a resize.
+    score_cap: usize,
     xs: Vec<f32>,
     x1: Vec<f32>,
     q: Vec<f32>,
@@ -881,19 +942,37 @@ pub struct BatchScratch {
     ao: Vec<f32>,
     ff1: Vec<f32>,
     ff2: Vec<f32>,
+    /// Per-worker softmax scores rows, `(threads, score_cap)` row-major:
+    /// the fused attention fan-out hands each concurrent shard its own
+    /// row (the gather baseline uses row 0 serially).
     scores: Vec<f32>,
     /// (cap, vocab) logits left by the last `forward_step`.
     pub logits: Vec<f32>,
-    /// Per-step contiguous K/V gather/dequant targets for the paged KV
-    /// backends ((max_t, d) each; untouched by the slab backend).
-    kv_k: Vec<f32>,
-    kv_v: Vec<f32>,
+    /// Attention read path. Fused (default) streams K/V straight off the
+    /// store and never materializes a window, so the former per-step
+    /// `(max_t, d)` f32 gather buffers no longer exist on the serving
+    /// path; Gather keeps them (below) as the measured baseline.
+    attn: AttnKind,
+    /// Gather-mode K/V materialization targets — zero-capacity in fused
+    /// mode, sized `(max_t + 1, d)` by `with_gather_attention`.
+    gather_k: Vec<f32>,
+    gather_v: Vec<f32>,
+    /// Fused-path per-row attention descriptors, rebuilt per call.
+    row_meta: Vec<attn::RowMeta>,
+    /// Gather-path per-run spans, rebuilt per call.
+    run_spans: Vec<attn::RunSpan>,
     /// Unpack/accumulator scratch for the packed `gemm` kernels, one per
     /// worker thread (shard `i` of a fan-out owns `gemm[i]`).
     gemm: Vec<GemmScratch>,
-    /// Persistent worker pool the engine fans the batched gemms and
-    /// paged-KV gathers across (1 thread = the serial reference path).
+    /// Persistent worker pool the engine fans the batched gemms and the
+    /// attention (row, head) items across (1 thread = the serial
+    /// reference path).
     pool: ThreadPool,
+    /// Wall seconds the last `forward_chunked` spent in its gemm calls /
+    /// in the KV path (appends + attention) — the per-tick phase
+    /// attribution surfaced by `sched::ServeMetrics`.
+    gemm_secs: f64,
+    attn_secs: f64,
 }
 
 impl BatchScratch {
@@ -904,6 +983,36 @@ impl BatchScratch {
     /// Worker threads the decode fan-out runs on (>= 1).
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Switch this scratch to the pre-fused gather-then-attend baseline
+    /// ([`AttnKind::Gather`]): per run, the whole K/V window is
+    /// materialized into the (re-added) f32 gather buffers and attended
+    /// serially. Bit-identical to the fused default — kept so the bench
+    /// can measure the fused path against what it replaced, and as the
+    /// parity suite's reference arm.
+    pub fn with_gather_attention(mut self) -> BatchScratch {
+        self.attn = AttnKind::Gather;
+        let d = if self.cap > 0 { self.xs.len() / self.cap } else { 0 };
+        self.gather_k = vec![0.0; self.score_cap * d];
+        self.gather_v = vec![0.0; self.score_cap * d];
+        self
+    }
+
+    /// Attention read path this scratch drives (fused by default).
+    pub fn attn_kind(&self) -> AttnKind {
+        self.attn
+    }
+
+    /// Wall seconds the last `forward_chunked` spent inside gemm calls.
+    pub fn gemm_secs(&self) -> f64 {
+        self.gemm_secs
+    }
+
+    /// Wall seconds the last `forward_chunked` spent on the KV path
+    /// (K/V appends + attention).
+    pub fn attn_secs(&self) -> f64 {
+        self.attn_secs
     }
 
     /// Scratch bytes (counted into running memory alongside the KV pool).
@@ -918,8 +1027,8 @@ impl BatchScratch {
             + self.ff2.len()
             + self.scores.len()
             + self.logits.len()
-            + self.kv_k.len()
-            + self.kv_v.len())
+            + self.gather_k.len()
+            + self.gather_v.len())
             * 4
             + self.gemm.iter().map(|g| g.bytes()).sum::<usize>()
     }

@@ -34,6 +34,14 @@ pub struct ServeMetrics {
     /// Wall ms of each scheduler tick's forward + sampling (prefill
     /// chunks and decode rows share one stacked forward).
     pub step_ms: Vec<f32>,
+    /// Per-tick wall ms spent inside the gemm weight walks (packed + FP,
+    /// including the vocab head) — one entry per forwarded tick.
+    pub gemm_ms: Vec<f32>,
+    /// Per-tick wall ms spent on the KV path: K/V appends + the
+    /// attention kernel (fused streaming or gather baseline).
+    pub attn_ms: Vec<f32>,
+    /// Per-tick wall ms spent in the sampling loop.
+    pub sample_ms: Vec<f32>,
     /// Sequences contributing rows to each tick (decode + prefilling).
     pub step_width: Vec<usize>,
     pub decode_tokens: usize,
@@ -61,6 +69,8 @@ pub struct ServeMetrics {
     /// Effective per-tick prefill token budget (0 never reaches here:
     /// the scheduler resolves it to the slot capacity).
     pub prefill_chunk: usize,
+    /// Attention read path ("fused" | "gather").
+    pub attn_kind: String,
 }
 
 impl ServeMetrics {
@@ -69,6 +79,8 @@ impl ServeMetrics {
         let waits: Vec<f32> = self.requests.iter().map(|r| r.queue_wait_steps as f32).collect();
         let widths: Vec<f32> = self.step_width.iter().map(|&w| w as f32).collect();
         let tokens: usize = self.requests.iter().map(|r| r.tokens).sum();
+        let step_total: f64 = self.step_ms.iter().map(|&x| x as f64).sum();
+        let attn_total: f64 = self.attn_ms.iter().map(|&x| x as f64).sum();
         ServeSummary {
             requests: self.requests.len(),
             tokens,
@@ -80,6 +92,13 @@ impl ServeMetrics {
             step_p50_ms: stats::median(&self.step_ms) as f64,
             step_p90_ms: stats::percentile(&self.step_ms, 0.9) as f64,
             step_p99_ms: stats::percentile(&self.step_ms, 0.99) as f64,
+            gemm_p50_ms: stats::median(&self.gemm_ms) as f64,
+            gemm_p90_ms: stats::percentile(&self.gemm_ms, 0.9) as f64,
+            attn_p50_ms: stats::median(&self.attn_ms) as f64,
+            attn_p90_ms: stats::percentile(&self.attn_ms, 0.9) as f64,
+            sample_p50_ms: stats::median(&self.sample_ms) as f64,
+            sample_p90_ms: stats::percentile(&self.sample_ms, 0.9) as f64,
+            attn_share: if step_total > 0.0 { attn_total / step_total } else { 0.0 },
             mean_queue_wait_steps: stats::mean(&waits) as f64,
             mean_batch_width: stats::mean(&widths) as f64,
             prefill_secs: self.prefill_secs,
@@ -94,6 +113,7 @@ impl ServeMetrics {
             peak_kv_blocks: self.peak_kv_blocks,
             threads: self.threads,
             prefill_chunk: self.prefill_chunk,
+            attn_kind: self.attn_kind.clone(),
         }
     }
 }
@@ -114,6 +134,17 @@ pub struct ServeSummary {
     pub step_p50_ms: f64,
     pub step_p90_ms: f64,
     pub step_p99_ms: f64,
+    /// Per-tick wall ms inside the gemm weight walks (p50/p90).
+    pub gemm_p50_ms: f64,
+    pub gemm_p90_ms: f64,
+    /// Per-tick wall ms on the KV path — appends + attention (p50/p90).
+    pub attn_p50_ms: f64,
+    pub attn_p90_ms: f64,
+    /// Per-tick wall ms in the sampling loop (p50/p90).
+    pub sample_p50_ms: f64,
+    pub sample_p90_ms: f64,
+    /// Fraction of total step wall time spent on the KV path.
+    pub attn_share: f64,
     pub mean_queue_wait_steps: f64,
     pub mean_batch_width: f64,
     pub prefill_secs: f64,
@@ -130,6 +161,8 @@ pub struct ServeSummary {
     pub threads: usize,
     /// Effective per-tick prefill token budget (see `ServeMetrics`).
     pub prefill_chunk: usize,
+    /// Attention read path ("fused" | "gather").
+    pub attn_kind: String,
 }
 
 impl ServeSummary {
@@ -145,6 +178,13 @@ impl ServeSummary {
         m.insert("step_p50_ms".to_string(), Json::Num(self.step_p50_ms));
         m.insert("step_p90_ms".to_string(), Json::Num(self.step_p90_ms));
         m.insert("step_p99_ms".to_string(), Json::Num(self.step_p99_ms));
+        m.insert("gemm_p50_ms".to_string(), Json::Num(self.gemm_p50_ms));
+        m.insert("gemm_p90_ms".to_string(), Json::Num(self.gemm_p90_ms));
+        m.insert("attn_p50_ms".to_string(), Json::Num(self.attn_p50_ms));
+        m.insert("attn_p90_ms".to_string(), Json::Num(self.attn_p90_ms));
+        m.insert("sample_p50_ms".to_string(), Json::Num(self.sample_p50_ms));
+        m.insert("sample_p90_ms".to_string(), Json::Num(self.sample_p90_ms));
+        m.insert("attn_share".to_string(), Json::Num(self.attn_share));
         m.insert("mean_queue_wait_steps".to_string(), Json::Num(self.mean_queue_wait_steps));
         m.insert("mean_batch_width".to_string(), Json::Num(self.mean_batch_width));
         m.insert("prefill_secs".to_string(), Json::Num(self.prefill_secs));
@@ -159,6 +199,7 @@ impl ServeSummary {
         m.insert("peak_kv_blocks".to_string(), Json::Num(self.peak_kv_blocks as f64));
         m.insert("threads".to_string(), Json::Num(self.threads as f64));
         m.insert("prefill_chunk".to_string(), Json::Num(self.prefill_chunk as f64));
+        m.insert("attn_kind".to_string(), Json::Str(self.attn_kind.clone()));
         Json::Obj(m)
     }
 }
@@ -174,6 +215,19 @@ impl std::fmt::Display for ServeSummary {
             f,
             "ttft p50 {:.1} ms, p90 {:.1} ms; per-step p50 {:.2} / p90 {:.2} / p99 {:.2} ms",
             self.ttft_p50_ms, self.ttft_p90_ms, self.step_p50_ms, self.step_p90_ms, self.step_p99_ms
+        )?;
+        writeln!(
+            f,
+            "tick phases ({} attention): gemm p50 {:.2} / p90 {:.2} ms, attn p50 {:.2} / p90 \
+             {:.2} ms, sample p50 {:.2} / p90 {:.2} ms (attn share {:.0}%)",
+            self.attn_kind,
+            self.gemm_p50_ms,
+            self.gemm_p90_ms,
+            self.attn_p50_ms,
+            self.attn_p90_ms,
+            self.sample_p50_ms,
+            self.sample_p90_ms,
+            100.0 * self.attn_share
         )?;
         writeln!(
             f,
@@ -221,6 +275,9 @@ mod tests {
         let m = ServeMetrics {
             requests: vec![req(0, 0, 0, 10, 0.010), req(1, 2, 4, 6, 0.030)],
             step_ms: vec![1.0, 2.0, 3.0],
+            gemm_ms: vec![0.5, 1.0, 1.5],
+            attn_ms: vec![0.25, 0.5, 0.75],
+            sample_ms: vec![0.1, 0.1, 0.1],
             step_width: vec![1, 2, 2],
             decode_tokens: 16,
             decode_secs: 2.0,
@@ -235,6 +292,7 @@ mod tests {
             peak_kv_blocks: 5,
             threads: 4,
             prefill_chunk: 24,
+            attn_kind: "fused".into(),
         };
         let s = m.summary();
         assert_eq!(s.requests, 2);
@@ -244,6 +302,11 @@ mod tests {
         assert!((s.ttft_p50_ms - 20.0).abs() < 1e-3);
         assert!((s.mean_queue_wait_steps - 1.0).abs() < 1e-9);
         assert!((s.mean_batch_width - 5.0 / 3.0).abs() < 1e-6);
+        // phase percentiles + the attn share of total step time
+        assert!((s.gemm_p50_ms - 1.0).abs() < 1e-6);
+        assert!((s.attn_p50_ms - 0.5).abs() < 1e-6);
+        assert!((s.sample_p90_ms - 0.1).abs() < 1e-6);
+        assert!((s.attn_share - 0.25).abs() < 1e-6, "attn share {}", s.attn_share);
         let j = s.to_json();
         assert!((j.get("decode_tok_per_s").unwrap().as_f64().unwrap() - 8.0).abs() < 1e-9);
         assert_eq!(j.get("steps").unwrap().as_usize().unwrap(), 3);
@@ -252,10 +315,15 @@ mod tests {
         assert_eq!(j.get("peak_kv_blocks").unwrap().as_usize().unwrap(), 5);
         assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 4);
         assert_eq!(j.get("prefill_chunk").unwrap().as_usize().unwrap(), 24);
+        assert!((j.get("attn_p50_ms").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-6);
+        assert!((j.get("attn_share").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-6);
+        assert_eq!(j.get("attn_kind").unwrap().as_str().unwrap(), "fused");
         let text = format!("{s}");
         assert!(text.contains("decode 8.0 tok/s"), "{text}");
         assert!(text.contains("kv paged-q8"), "{text}");
         assert!(text.contains("4 threads"), "{text}");
         assert!(text.contains("prefill chunk 24"), "{text}");
+        assert!(text.contains("fused attention"), "{text}");
+        assert!(text.contains("attn share 25%"), "{text}");
     }
 }

@@ -38,15 +38,20 @@
 //!   run to the same tick batch: activations are stacked into a
 //!   `(width, d)` matrix and every packed weight matrix is streamed
 //!   **once per tick for the whole batch** through `PackedMatrix::gemm` /
-//!   `LinearStore::gemm`, instead of once per sequence — and the
-//!   independent output lanes of every gemm (plus the paged-KV gathers)
-//!   are sharded across a persistent worker pool
-//!   ([`SchedConfig::threads`], `util::ThreadPool`). Per-row, per-lane
-//!   arithmetic is bit-identical to the single-sequence `gemv` path at
-//!   any thread count and any `prefill_chunk`, and each request samples
-//!   from its own seeded RNG stream — so a request's output never
-//!   depends on what else shares the batch, how many cores served it, or
-//!   how its prompt was chunked (tested in `tests/sched.rs`).
+//!   `LinearStore::gemm`, instead of once per sequence — and both the
+//!   independent output lanes of every gemm and the independent
+//!   (row, head) items of the fused attention kernel (`serve::attn`:
+//!   K/V streamed block-table-direct off the store, Q8 dequantized in
+//!   registers, no per-step window materialization) are sharded across a
+//!   persistent worker pool ([`SchedConfig::threads`],
+//!   `util::ThreadPool`). Per-row, per-lane arithmetic is bit-identical
+//!   to the single-sequence `gemv` path at any thread count, any
+//!   `prefill_chunk` and either [`SchedConfig::attn`] read path, and
+//!   each request samples from its own seeded RNG stream — so a
+//!   request's output never depends on what else shares the batch, how
+//!   many cores served it, or how its prompt was chunked (tested in
+//!   `tests/sched.rs`). [`ServeMetrics`] records where each tick's wall
+//!   time went (`gemm_ms` / `attn_ms` / `sample_ms`).
 //! * **retire** — on EOS or `max_new_tokens` the slot is released back to
 //!   the pool, per-request metrics are recorded, and the next queued
 //!   request can be admitted on the following tick.
@@ -67,7 +72,7 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
-use super::{sample, BatchScratch, Engine, SeqChunk};
+use super::{sample, AttnKind, BatchScratch, Engine, SeqChunk};
 use crate::util::Rng;
 
 /// One generation request.
@@ -118,6 +123,12 @@ pub struct SchedConfig {
     /// co-scheduled decoders; chunking is bit-exact, so the knob changes
     /// step pacing only — never a single emitted token.
     pub prefill_chunk: usize,
+    /// Attention read path: `Fused` (default) streams K/V straight off
+    /// the store with the (row, head) items fanned across the worker
+    /// pool; `Gather` keeps the pre-fused materialize-then-attend
+    /// baseline for the bench A/B. Bit-identical either way — the knob
+    /// changes wall-clock only, never a single emitted token.
+    pub attn: AttnKind,
 }
 
 impl Default for SchedConfig {
@@ -130,6 +141,7 @@ impl Default for SchedConfig {
             block_tokens: 16,
             threads: 1,
             prefill_chunk: 32,
+            attn: AttnKind::Fused,
         }
     }
 }
@@ -209,6 +221,10 @@ impl<'e> Scheduler<'e> {
             cfg.slot_tokens,
             cfg.threads,
         );
+        let scratch = match cfg.attn {
+            AttnKind::Fused => scratch,
+            AttnKind::Gather => scratch.with_gather_attention(),
+        };
         let metrics = ServeMetrics {
             peak_running_bytes: engine.weight_bytes() + pool.bytes() + scratch.bytes(),
             kv_store: pool.kind().name().to_string(),
@@ -217,6 +233,7 @@ impl<'e> Scheduler<'e> {
             kv_block_tokens: pool.block_tokens(),
             threads: scratch.threads(),
             prefill_chunk,
+            attn_kind: scratch.attn_kind().name().to_string(),
             ..ServeMetrics::default()
         };
         Scheduler {
@@ -441,6 +458,7 @@ impl<'e> Scheduler<'e> {
         // sampling-run j's logits sit in row j, in running order (runs
         // preserve it); each request samples from its own RNG stream, so
         // its output is independent of whatever else shares the batch
+        let ts = Instant::now();
         let mut j = 0usize;
         for (i, r) in self.running.iter_mut().enumerate() {
             if r.prefilled < r.req.prompt.len() {
@@ -462,10 +480,17 @@ impl<'e> Scheduler<'e> {
             r.out.push(tok);
             r.next = Some(tok);
         }
+        let sample_secs = ts.elapsed().as_secs_f64();
         // as before the chunked-prefill rework: a step is forward +
         // sampling (retire bookkeeping excluded)
         let dt = t0.elapsed().as_secs_f64();
         self.metrics.step_ms.push((dt * 1e3) as f32);
+        // phase attribution: where this tick's wall time went — the gemm
+        // weight walks, the KV path (appends + attention), the sampling
+        // loop; the remainder (norms, RoPE, residuals) is untimed
+        self.metrics.gemm_ms.push((self.scratch.gemm_secs() * 1e3) as f32);
+        self.metrics.attn_ms.push((self.scratch.attn_secs() * 1e3) as f32);
+        self.metrics.sample_ms.push((sample_secs * 1e3) as f32);
         self.metrics.step_width.push(width);
         self.metrics.decode_tokens += decode_rows;
         // one mixed tick serves prefill and decode rows through the same

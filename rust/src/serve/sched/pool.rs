@@ -478,6 +478,36 @@ impl KvPool {
         (&kbuf[..t * d], &vbuf[..t * d])
     }
 
+    /// Iterate the first `t` cached rows of `(slot, layer)` as contiguous
+    /// **block runs borrowed straight out of the arena** — the zero-copy
+    /// streaming read API the fused attention kernel (`serve::attn`)
+    /// walks inside its dot-product loops, instead of materializing the
+    /// whole `(t, d)` window through [`KvPool::layer_kv`]. The f32
+    /// backends yield row slices of the arena itself (slab: one run
+    /// covering all `t` rows, since a slot is one implicit block); the Q8
+    /// backend yields raw codes plus per-row scales so the caller can
+    /// dequantize in registers (`quant::q8_dot_lanes` /
+    /// `quant::q8_axpy_lanes`).
+    ///
+    /// Same safety posture as every other accessor: the lease is asserted
+    /// here (a `SlotId` retained past `release` panics instead of
+    /// streaming another sequence's KV) and `t` is checked against the
+    /// slot's reserved capacity, so an over-read dies with a named panic
+    /// rather than slicing out of the sequence's block table. `&self`
+    /// only — concurrent cursors from the attention fan-out's worker
+    /// threads are sound because nothing here mutates.
+    pub(crate) fn runs(&self, slot: SlotId, layer: usize, t: usize) -> KvRunCursor<'_> {
+        self.check(slot);
+        debug_assert!(layer < self.layers);
+        assert!(
+            t <= self.caps[slot.0],
+            "KvPool: reading {t} rows of slot {} past its reserved capacity {}",
+            slot.0,
+            self.caps[slot.0]
+        );
+        KvRunCursor { pool: self, s: slot.0, layer, t, r: 0 }
+    }
+
     /// Gather (Q8: dequantize) cached rows `[r0, r1)` of `(slot s, layer)`
     /// into the destination row views — one shard of `layer_kv`'s
     /// fan-out. Walks the block table run-wise, so a block-aligned shard
@@ -529,6 +559,67 @@ impl KvPool {
             }
             r += run;
         }
+    }
+}
+
+/// One contiguous run of cached K/V rows inside a single block, borrowed
+/// from the arena by [`KvPool::runs`]. Row `i` of the run is cached
+/// position `r0 + i` (the cursor yields `r0` alongside). The f32 variants
+/// are `(len, d)` row-major slices of the arena itself; the Q8 variant is
+/// the raw codes (`(len, d)` u8) plus the per-row `[h, z]` scale pairs
+/// (`(len, 2 * ng)` f32) for in-register dequantization.
+pub(crate) enum KvSlice<'a> {
+    F32 { k: &'a [f32], v: &'a [f32] },
+    Q8 { qk: &'a [u8], qv: &'a [u8], sk: &'a [f32], sv: &'a [f32] },
+}
+
+/// Cursor over the block runs of one `(slot, layer)`'s first `t` cached
+/// rows, in ascending position order — see [`KvPool::runs`]. Yields
+/// `(r0, len, slice)` triples: rows `[r0, r0 + len)` live contiguously in
+/// `slice`. Iteration order is deterministic (logical block-table order),
+/// so a consumer that accumulates across rows in yield order reproduces
+/// the exact f32 accumulation order of a gathered contiguous read.
+pub(crate) struct KvRunCursor<'a> {
+    pool: &'a KvPool,
+    s: usize,
+    layer: usize,
+    t: usize,
+    r: usize,
+}
+
+impl<'a> Iterator for KvRunCursor<'a> {
+    type Item = (usize, usize, KvSlice<'a>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.r >= self.t {
+            return None;
+        }
+        let p = self.pool;
+        let (blk, within) = match p.kind {
+            KvStoreKind::SlabF32 => (self.s, self.r),
+            _ => (p.tables[self.s][self.r / p.block_tokens] as usize, self.r % p.block_tokens),
+        };
+        let len = (p.block_tokens - within).min(self.t - self.r);
+        let row0 = p.block_row(blk, self.layer) + within;
+        let d = p.d;
+        let slice = match &p.store {
+            Store::F32 { k, v } => KvSlice::F32 {
+                k: &k[row0 * d..(row0 + len) * d],
+                v: &v[row0 * d..(row0 + len) * d],
+            },
+            Store::Q8 { qk, qv, sk, sv } => {
+                let ng2 = 2 * p.ng;
+                KvSlice::Q8 {
+                    qk: &qk[row0 * d..(row0 + len) * d],
+                    qv: &qv[row0 * d..(row0 + len) * d],
+                    sk: &sk[row0 * ng2..(row0 + len) * ng2],
+                    sv: &sv[row0 * ng2..(row0 + len) * ng2],
+                }
+            }
+        };
+        let r0 = self.r;
+        self.r += len;
+        Some((r0, len, slice))
     }
 }
 
@@ -812,6 +903,89 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn run_cursor_matches_layer_kv_bit_for_bit() {
+        // the streaming read API must cover exactly the rows layer_kv
+        // gathers, in order, with identical f32 values — across all three
+        // backends, block boundaries, ragged tails and mid-block stops
+        use crate::quant::dequantize_row_q8;
+        for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            let (layers, cap, d, bt) = (2usize, 13usize, 8usize, 3usize);
+            let mut p = KvPool::new(kind, 1, layers, cap, d, bt);
+            let s = p.lease(cap).unwrap();
+            let mut rng = Rng::new(29);
+            for _ in 0..cap {
+                for l in 0..layers {
+                    let kr: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                    let vr: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                    p.append(s, l, &kr, &vr);
+                }
+                p.advance(s);
+            }
+            let ng2 = 2 * q8_row_groups(d, KV_GROUP);
+            for l in 0..layers {
+                for t in [1usize, bt, bt + 1, bt + 2, cap] {
+                    let (mut kb, mut vb) = (Vec::new(), Vec::new());
+                    let (want_k, want_v) =
+                        p.layer_kv(s, l, t, &mut kb, &mut vb, &ThreadPool::serial());
+                    // rebuild the window through the cursor
+                    let mut got_k = vec![f32::NAN; t * d];
+                    let mut got_v = vec![f32::NAN; t * d];
+                    let mut covered = 0usize;
+                    for (r0, len, slice) in p.runs(s, l, t) {
+                        assert_eq!(r0, covered, "{kind:?}: runs must be contiguous in order");
+                        covered += len;
+                        match slice {
+                            KvSlice::F32 { k, v } => {
+                                got_k[r0 * d..(r0 + len) * d].copy_from_slice(k);
+                                got_v[r0 * d..(r0 + len) * d].copy_from_slice(v);
+                            }
+                            KvSlice::Q8 { qk, qv, sk, sv } => {
+                                for i in 0..len {
+                                    dequantize_row_q8(
+                                        &qk[i * d..(i + 1) * d],
+                                        KV_GROUP,
+                                        &sk[i * ng2..(i + 1) * ng2],
+                                        &mut got_k[(r0 + i) * d..(r0 + i + 1) * d],
+                                    );
+                                    dequantize_row_q8(
+                                        &qv[i * d..(i + 1) * d],
+                                        KV_GROUP,
+                                        &sv[i * ng2..(i + 1) * ng2],
+                                        &mut got_v[(r0 + i) * d..(r0 + i + 1) * d],
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    assert_eq!(covered, t, "{kind:?}: cursor covers every row once");
+                    for (x, y) in want_k.iter().zip(&got_k).chain(want_v.iter().zip(&got_v)) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{kind:?} layer {l} t {t}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not leased")]
+    fn run_cursor_stale_handle_panics() {
+        let mut p = KvPool::new(KvStoreKind::PagedF32, 1, 1, 4, 2, 2);
+        let a = p.lease(4).unwrap();
+        p.release(a);
+        let _ = p.runs(a, 0, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "past its reserved capacity")]
+    fn run_cursor_over_capacity_read_panics() {
+        let mut p = KvPool::new(KvStoreKind::PagedF32, 2, 1, 8, 2, 2);
+        let a = p.lease(4).unwrap();
+        // reading past the 4-token reservation would walk past the block
+        // table — it must die with a named panic, not an index OOB
+        let _ = p.runs(a, 0, 5);
     }
 
     #[test]

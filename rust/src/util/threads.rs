@@ -1,12 +1,15 @@
 //! Persistent worker pool for the serve path's data-parallel kernels.
 //!
 //! The decode hot loop (`PackedMatrix::gemm`, the FP fallback in
-//! `LinearStore::gemm`, the paged/Q8 KV gathers in `KvPool::layer_kv`)
+//! `LinearStore::gemm`, the paged/Q8 KV gathers in `KvPool::layer_kv`,
+//! the (row, head) items of the fused attention kernel in `serve::attn`)
 //! is built entirely from **independent output lanes**: output lane `c`
-//! of a GEMM depends only on column `c` of the weight matrix, and row `t`
-//! of a KV gather depends only on cached row `t`. Sharding such a kernel
-//! means giving each worker a contiguous slice of the output and letting
-//! it run the *unmodified* scalar loop over that slice.
+//! of a GEMM depends only on column `c` of the weight matrix, row `t`
+//! of a KV gather depends only on cached row `t`, and one attention
+//! (row, head) item owns its head-sized stripe of the output. Sharding
+//! such a kernel means giving each worker a contiguous slice of the
+//! output and letting it run the *unmodified* scalar loop over that
+//! slice.
 //!
 //! # Why lane-sharding is exact
 //!
@@ -170,6 +173,23 @@ impl ThreadPool {
         if let Some(payload) = job.panic {
             resume_unwind(payload);
         }
+    }
+
+    /// Run `f(shard, item)` once per item in `0..items`, fanned across the
+    /// pool as at most `threads` contiguous item ranges — the flattened
+    /// work-list helper for 2-D fan-outs like the attention kernel's
+    /// (run-row, head) items (`serve::attn`), which encode `item =
+    /// row * n_heads + head`. `shard` ids are distinct among concurrently
+    /// running shards, so the callee can index per-worker scratch by it
+    /// (the same discipline as `PackedMatrix::gemm_mt`). Every item runs
+    /// start-to-finish on one worker, so per-item reductions are never
+    /// split — the exactness contract of the module docs applies as-is.
+    pub fn run_items(&self, items: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        self.run_ranges(items, 1, &|shard, i0, i1| {
+            for i in i0..i1 {
+                f(shard, i);
+            }
+        });
     }
 
     /// Partition `0..n` into at most `threads` contiguous ranges whose
@@ -350,6 +370,26 @@ mod tests {
                 for &(a, b) in &rs {
                     assert!(a % align == 0 && a < b, "aligned non-empty: {rs:?}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn run_items_visits_every_item_once_with_bounded_shard_ids() {
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for items in [1usize, 3, 17, 64] {
+                let hits: Vec<AtomicUsize> = (0..items).map(|_| AtomicUsize::new(0)).collect();
+                let max_shard = AtomicUsize::new(0);
+                pool.run_items(items, &|shard, i| {
+                    assert!(shard < pool.threads(), "shard id {shard} out of range");
+                    max_shard.fetch_max(shard, Ordering::SeqCst);
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::SeqCst), 1, "threads={threads} item {i}");
+                }
+                assert!(max_shard.load(Ordering::SeqCst) < pool.threads().min(items));
             }
         }
     }

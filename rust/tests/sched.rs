@@ -13,8 +13,12 @@
 //!   `forward_token` path bit-for-bit on packed weights;
 //! * the paged-q8 backend serves the same workload shape end to end with
 //!   a strictly smaller KV arena;
+//! * the fused streaming attention path (block-table-direct K/V reads,
+//!   Q8 dequantized in registers, (row, head) items fanned across the
+//!   worker pool) is bit-for-bit the gather-then-attend baseline it
+//!   replaced, at the logits and at the emitted-token level;
 //! * all of the above hold at every worker-thread count: the
-//!   lane-sharded gemm / KV-gather fan-out may never change one emitted
+//!   lane-sharded gemm / attention fan-out may never change one emitted
 //!   token (the threaded CI lane forces `OMNIQUANT_TEST_THREADS=0`, i.e.
 //!   one worker per core, so a single-core runner can't mask a race).
 
@@ -24,7 +28,7 @@ use omniquant::runtime::Manifest;
 use omniquant::serve::sched::{
     synthetic_workload, KvPool, KvStoreKind, Request, SchedConfig, Scheduler, WorkloadSpec,
 };
-use omniquant::serve::{Engine, SeqChunk};
+use omniquant::serve::{AttnKind, Engine, SeqChunk};
 use omniquant::util::Rng;
 
 const VOCAB: usize = 96;
@@ -96,6 +100,7 @@ fn outputs_independent_of_batch_composition_and_kv_backend() {
                         block_tokens: 4,
                         threads,
                         prefill_chunk,
+                        attn: AttnKind::Fused,
                     };
                     let mut sch = Scheduler::new(&eng, cfg);
                     for r in reqs.iter().cloned() {
@@ -298,12 +303,14 @@ fn oversize_request_errors_not_livelocks_on_paged_backend() {
 
 #[test]
 fn chunked_prefill_parity_across_backends_and_threads() {
-    // the tentpole invariant: chunking a prompt — 1 token/tick, 3/tick,
-    // or the whole prompt in one stacked chunk — may never change one
-    // emitted token, on any KV backend, at any worker-thread count. For
-    // the f32 backends the outputs must also equal the per-sequence
-    // engine reference; paged-q8 quantizes its cache, so its reference is
-    // its own token-by-token (chunk=1) walk.
+    // the standing invariant, now spanning the attention read path too:
+    // chunking a prompt — 1 token/tick, 3/tick, or the whole prompt in
+    // one stacked chunk — and the attention path — fused streaming reads
+    // vs the gather baseline — may never change one emitted token, on
+    // any KV backend, at any worker-thread count. For the f32 backends
+    // the outputs must also equal the per-sequence engine reference;
+    // paged-q8 quantizes its cache, so its reference is its own
+    // token-by-token (chunk=1) walk.
     let eng = engine("llama", "w4a16g32", 21);
     let mut wl_rng = Rng::new(13);
     let reqs: Vec<Request> = (0..4)
@@ -329,32 +336,35 @@ fn chunked_prefill_parity_across_backends_and_threads() {
         let mut reference: Option<Vec<Vec<i32>>> = None;
         for threads in thread_counts() {
             for prefill_chunk in [1usize, 3, 0] {
-                let cfg = SchedConfig {
-                    slots: 2,
-                    slot_tokens: 32,
-                    eos: None,
-                    kv,
-                    block_tokens: 4,
-                    threads,
-                    prefill_chunk,
-                };
-                let mut sch = Scheduler::new(&eng, cfg);
-                for r in reqs.iter().cloned() {
-                    sch.submit(r).unwrap();
+                for attn in [AttnKind::Fused, AttnKind::Gather] {
+                    let cfg = SchedConfig {
+                        slots: 2,
+                        slot_tokens: 32,
+                        eos: None,
+                        kv,
+                        block_tokens: 4,
+                        threads,
+                        prefill_chunk,
+                        attn,
+                    };
+                    let mut sch = Scheduler::new(&eng, cfg);
+                    for r in reqs.iter().cloned() {
+                        sch.submit(r).unwrap();
+                    }
+                    sch.run().unwrap();
+                    let outs: Vec<Vec<i32>> =
+                        reqs.iter().map(|r| sch.output(r.id).unwrap().to_vec()).collect();
+                    match &reference {
+                        None => reference = Some(outs),
+                        Some(want) => assert_eq!(
+                            &outs, want,
+                            "{kv:?} threads={threads} chunk={prefill_chunk} {attn:?}: \
+                             chunking or the attention path changed an output"
+                        ),
+                    }
+                    assert_eq!(sch.pool().free_slots(), 2, "{kv:?}: slots reclaimed");
+                    assert_eq!(sch.pool().free_blocks(), sch.pool().n_blocks());
                 }
-                sch.run().unwrap();
-                let outs: Vec<Vec<i32>> =
-                    reqs.iter().map(|r| sch.output(r.id).unwrap().to_vec()).collect();
-                match &reference {
-                    None => reference = Some(outs),
-                    Some(want) => assert_eq!(
-                        &outs, want,
-                        "{kv:?} threads={threads} chunk={prefill_chunk}: \
-                         chunking changed an output"
-                    ),
-                }
-                assert_eq!(sch.pool().free_slots(), 2, "{kv:?}: slots reclaimed");
-                assert_eq!(sch.pool().free_blocks(), sch.pool().n_blocks());
             }
         }
         if kv != KvStoreKind::PagedQ8 {
@@ -440,6 +450,110 @@ fn forward_chunked_matches_stepwise_bit_for_bit() {
             );
         }
         assert_eq!(pool4.len(other), 5, "prefill chunk advanced the other sequence");
+    }
+}
+
+#[test]
+fn fused_attention_matches_gather_bit_for_bit() {
+    // the PR-5 tentpole invariant at the logits level: streaming K/V
+    // straight off the store (block-table-direct reads, Q8 dequantized
+    // in registers, (row, head) items fanned across the worker pool)
+    // must be bit-identical to materializing the window through
+    // layer_kv and attending serially — on all three backends, at
+    // threads {1, threaded}, with ragged cached lengths crossing block
+    // boundaries (every t in 1..=10 with 4-token blocks covers
+    // t = block_tokens - 1, block_tokens, block_tokens + 1), and with a
+    // multi-token prompt chunk sharing the tick with a decode row.
+    for (family, setting) in [("llama", "w4a16g32"), ("opt", "w4a16")] {
+        let eng = engine(family, setting, 31);
+        let tokens: Vec<i32> = (0..10).map(|i| (3 + 7 * i) % VOCAB as i32).collect();
+        let (layers, d) = (eng.desc.n_layers, eng.desc.d_model);
+        let max_t = 16;
+        for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            for threads in thread_counts() {
+                // walk the same token stream through both attention paths,
+                // comparing logits bit-for-bit at every cached length
+                let mut fused_pool = KvPool::new(kv, 1, layers, max_t, d, 4);
+                let mut gather_pool = KvPool::new(kv, 1, layers, max_t, d, 4);
+                let fs = fused_pool.lease(tokens.len()).unwrap();
+                let gs = gather_pool.lease(tokens.len()).unwrap();
+                let mut fused = eng.new_batch_scratch(1, 1, max_t, threads);
+                assert_eq!(fused.attn_kind(), AttnKind::Fused, "fused is the default");
+                let mut gather =
+                    eng.new_batch_scratch(1, 1, max_t, threads).with_gather_attention();
+                assert_eq!(gather.attn_kind(), AttnKind::Gather);
+                for (step, &t) in tokens.iter().enumerate() {
+                    eng.forward_step(&[t], &[fs], &mut fused_pool, &mut fused);
+                    eng.forward_step(&[t], &[gs], &mut gather_pool, &mut gather);
+                    for (c, (a, b)) in fused.logits[..eng.desc.vocab]
+                        .iter()
+                        .zip(&gather.logits[..eng.desc.vocab])
+                        .enumerate()
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{family} {setting} {kv:?} threads={threads} t={} logit {c}: \
+                             {a} vs {b}",
+                            step + 1
+                        );
+                    }
+                }
+            }
+        }
+        // mixed tick: a decode row co-scheduled with a 5-token prompt
+        // chunk, both paths — the chunk rows' intra-chunk causal reads
+        // also stream block runs (rows 5..9 of the other sequence)
+        for kv in [KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            let run_mixed = |gather_mode: bool| -> Vec<f32> {
+                let mut pool = KvPool::new(kv, 2, layers, max_t, d, 4);
+                let dec = pool.lease(8).unwrap();
+                let other = pool.lease(8).unwrap();
+                let mut bs = eng.new_batch_scratch(8, 8, max_t, 2);
+                if gather_mode {
+                    bs = bs.with_gather_attention();
+                }
+                for &t in &tokens[..3] {
+                    eng.forward_step(&[t], &[dec], &mut pool, &mut bs);
+                }
+                eng.forward_chunked(
+                    &[
+                        SeqChunk { slot: dec, tokens: &tokens[3..4], sample: true },
+                        SeqChunk { slot: other, tokens: &[2, 4, 6, 8, 10], sample: false },
+                    ],
+                    &mut pool,
+                    &mut bs,
+                );
+                bs.logits[..eng.desc.vocab].to_vec()
+            };
+            let fused_logits = run_mixed(false);
+            let gather_logits = run_mixed(true);
+            for (c, (a, b)) in fused_logits.iter().zip(&gather_logits).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{family} {setting} {kv:?} mixed-tick logit {c}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "exceeds the scores capacity")]
+fn attention_past_scratch_max_t_panics_by_name() {
+    // regression: BatchScratch's scores rows are sized once (from max_t
+    // at new_batch_scratch) but attention indexes them by the live t —
+    // outgrowing the scratch must die with the named capacity panic, not
+    // a bare slice bound (or, worse, a silent reliance on a resize)
+    let eng = engine("llama", "w4a16g32", 5);
+    let mut pool = KvPool::new(KvStoreKind::SlabF32, 1, eng.desc.n_layers, 8, eng.desc.d_model, 0);
+    let slot = pool.lease(8).unwrap();
+    // scratch sized for at most 2 cached positions; the pool holds 8
+    let mut bs = eng.new_batch_scratch(1, 1, 2, 1);
+    for &t in &[1i32, 2, 3, 4] {
+        // steps 1..3 attend t = 1, 2, 3 <= score_cap; step 4 (t = 4) must panic
+        eng.forward_step(&[t], &[slot], &mut pool, &mut bs);
     }
 }
 

@@ -4,11 +4,16 @@
 # Runs the sequential / lockstep / continuous serve suite on a synthetic
 # quantized model (no artifacts or PJRT needed) — the continuous mode is
 # swept over the three KV-store backends (slab / paged / paged-q8) at
-# equal token capacity, over 1/2/4 worker threads, and over prefill chunk
+# equal token capacity, over 1/2/4 worker threads, over prefill chunk
 # sizes under concurrent long-prompt arrivals (step-p90 / TTFT-p90 deltas
-# of chunked vs whole-prompt prefill) — and writes the machine-readable
-# BENCH_serve.json at the repo root, plus results/serve-bench.md. Pass
-# extra flags through to `repro` (e.g. drop --quick for the bigger model).
+# of chunked vs whole-prompt prefill), and over a long-context attention
+# sweep at cached lengths {256, 1024} x kv x threads {1, 4} measuring the
+# fused streaming-KV attention path against the gather baseline
+# (attn_sweep / step_p90_improvement_fused_vs_gather / attn_share; every
+# continuous summary also records per-tick gemm/attn/sample phase
+# timings) — and writes the machine-readable BENCH_serve.json at the
+# repo root, plus results/serve-bench.md. Pass extra flags through to
+# `repro` (e.g. drop --quick for the bigger model).
 #
 #   scripts/bench_snapshot.sh            # quick snapshot (default)
 #   scripts/bench_snapshot.sh --full     # full-size model
