@@ -66,6 +66,7 @@ fn main() -> Result<()> {
             threads: 0,       // one worker per available core
             prefill_chunk: 8, // interleave prompts with decode, 8 tokens/tick
             attn: AttnKind::Fused, // stream K/V straight off the store
+            stats_interval: 0, // no heartbeat line (set N to print every N ticks)
         };
         let mut scheduler = Scheduler::new(&engine, cfg);
         for r in requests {

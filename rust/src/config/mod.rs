@@ -198,6 +198,12 @@ pub struct ServeConfig {
     /// baseline, kept for benchmarking). Parsed by `serve::AttnKind`,
     /// which this layer stays decoupled from; bit-exact either way.
     pub attn: String,
+    /// Chrome-trace output path (`util::trace`); "" = tracing off.
+    /// Observability only — enabling it never changes a sampled token.
+    pub trace: String,
+    /// Heartbeat period in scheduler ticks (stderr status line: live
+    /// QPS, p90 step, batch width, KV blocks in use). 0 = off.
+    pub stats_interval: usize,
 }
 
 impl Default for ServeConfig {
@@ -215,6 +221,8 @@ impl Default for ServeConfig {
             threads: 0,
             prefill_chunk: 32,
             attn: "fused".into(),
+            trace: String::new(),
+            stats_interval: 0,
         }
     }
 }
@@ -236,6 +244,10 @@ impl ServeConfig {
                 "threads" => c.threads = toml_usize("serve.threads", val)?,
                 "prefill_chunk" => c.prefill_chunk = toml_usize("serve.prefill_chunk", val)?,
                 "attn" => c.attn = val.as_str()?.to_string(),
+                "trace" => c.trace = val.as_str()?.to_string(),
+                "stats_interval" => {
+                    c.stats_interval = toml_usize("serve.stats_interval", val)?
+                }
                 other => return Err(anyhow!("unknown serve key '{other}'")),
             }
         }
@@ -354,6 +366,8 @@ block_tokens = 32
 threads = 4
 prefill_chunk = 8
 attn = "gather"
+trace = "/tmp/trace.json"
+stats_interval = 16
 "#,
         )
         .unwrap();
@@ -367,6 +381,8 @@ attn = "gather"
         assert_eq!(cfg.serve.threads, 4);
         assert_eq!(cfg.serve.prefill_chunk, 8);
         assert_eq!(cfg.serve.attn, "gather");
+        assert_eq!(cfg.serve.trace, "/tmp/trace.json");
+        assert_eq!(cfg.serve.stats_interval, 16);
         let d = ExperimentConfig::parse("model = \"m\"").unwrap();
         assert_eq!(d.serve.slots, ServeConfig::default().slots);
         assert_eq!(d.serve.kv, "slab");
@@ -374,6 +390,8 @@ attn = "gather"
         assert_eq!(d.serve.threads, 0, "default: one worker per core");
         assert_eq!(d.serve.prefill_chunk, 32);
         assert_eq!(d.serve.attn, "fused", "default: streaming fused attention");
+        assert_eq!(d.serve.trace, "", "default: tracing off");
+        assert_eq!(d.serve.stats_interval, 0, "default: heartbeat off");
     }
 
     #[test]
@@ -393,6 +411,7 @@ attn = "gather"
             ("serve.prefill_chunk", "-1", "[serve]\nprefill_chunk = -1"),
             ("serve.slots", "-2", "[serve]\nslots = -2"),
             ("serve.seed", "-7", "[serve]\nseed = -7"),
+            ("serve.stats_interval", "-8", "[serve]\nstats_interval = -8"),
             ("calib.samples", "-32", "[calib]\nsamples = -32"),
             ("train.steps", "-300", "[train]\nsteps = -300"),
         ] {

@@ -5,6 +5,7 @@
 //!   quantize  block-wise quantize a checkpoint with any method
 //!   eval      perplexity + zero-shot evaluation of a checkpoint
 //!   serve     packed-weight decoding benchmark / generation
+//!   trace-check  validate a Chrome-trace JSON written by `serve --trace`
 //!   repro     regenerate a paper table/figure (see DESIGN.md index)
 //!   info      dump manifest / artifact info
 //!
@@ -20,8 +21,9 @@ use omniquant::coordinator::{make_method, pretrain, repro};
 use omniquant::data::{Corpus, CorpusId};
 use omniquant::model::ModelParams;
 use omniquant::runtime::load_runtime;
+use omniquant::json::Json;
 use omniquant::serve::sched;
-use omniquant::util::{fmt_bytes, Rng};
+use omniquant::util::{fmt_bytes, trace, Rng};
 use omniquant::{calib, eval, serve};
 
 /// Tiny flag parser: positionals + `--key value` + `--flag`.
@@ -202,6 +204,10 @@ fn serve_cfg_from_args(a: &Args) -> Result<ServeConfig> {
     if let Some(v) = a.get("attn") {
         c.attn = v.to_string();
     }
+    if let Some(v) = a.get("trace") {
+        c.trace = v.to_string();
+    }
+    c.stats_interval = a.usize_or("stats-interval", c.stats_interval)?;
     Ok(c)
 }
 
@@ -249,17 +255,91 @@ fn cmd_serve_continuous(a: &Args, engine: &serve::Engine) -> Result<()> {
         threads: cfg.threads,
         prefill_chunk: cfg.prefill_chunk,
         attn,
+        stats_interval: cfg.stats_interval,
     };
+    let tracing = !cfg.trace.is_empty();
+    if tracing {
+        trace::reset();
+        trace::enable();
+    }
     let mut scheduler = sched::Scheduler::new(engine, scfg);
     for r in requests {
         scheduler.submit(r)?;
     }
     let summary = scheduler.run()?;
+    if tracing {
+        trace::disable();
+        trace::write(&cfg.trace)?;
+        let dropped = trace::global_dropped();
+        println!(
+            "wrote {} (chrome trace; open in Perfetto / chrome://tracing{})",
+            cfg.trace,
+            if dropped > 0 { format!(", {dropped} oldest events dropped") } else { String::new() }
+        );
+        trace::reset();
+    }
     println!("{summary}");
     if let Some(path) = a.get("json") {
         std::fs::write(path, format!("{}\n", summary.to_json()))?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Validate a Chrome-trace JSON file produced by `serve --continuous --trace F`:
+/// parse it with the repo's own JSON module, count spans per phase name, and
+/// check the structural invariants the exporter guarantees (complete "X"/"i"
+/// events only — never paired "B"/"E", so no span can be left unterminated).
+fn cmd_trace_check(a: &Args) -> Result<()> {
+    let path = a
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("usage: omniquant trace-check FILE"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    let events = j
+        .get("traceEvents")
+        .and_then(|v| v.as_arr().ok())
+        .ok_or_else(|| anyhow!("{path}: no traceEvents array"))?;
+    let mut by_phase: BTreeMap<String, usize> = BTreeMap::new();
+    let mut names: BTreeMap<String, usize> = BTreeMap::new();
+    let mut unterminated = 0usize;
+    for e in events {
+        let ph = e.get("ph").and_then(|v| v.as_str().ok()).unwrap_or("?").to_string();
+        // "B"/"E" events must pair to terminate; our exporter never emits
+        // them, so any occurrence is an unterminated-span bug.
+        if ph == "B" || ph == "E" {
+            unterminated += 1;
+        }
+        if ph == "X" && e.get("dur").and_then(|v| v.as_f64().ok()).is_none() {
+            unterminated += 1;
+        }
+        *by_phase.entry(ph).or_insert(0) += 1;
+        if let Some(name) = e.get("name").and_then(|v| v.as_str().ok()) {
+            *names.entry(name.to_string()).or_insert(0) += 1;
+        }
+    }
+    let ticks = names.get("tick").copied().unwrap_or(0);
+    let dropped = j
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(|v| v.as_f64().ok())
+        .unwrap_or(0.0);
+    println!("{path}: {} events, {} dropped", events.len(), dropped);
+    for (ph, n) in &by_phase {
+        println!("  ph {ph:<2} {n}");
+    }
+    for key in ["tick", "gemm", "attn", "sample", "shard"] {
+        println!("  name {key:<8} {}", names.get(key).copied().unwrap_or(0));
+    }
+    if ticks == 0 {
+        bail!("{path}: no 'tick' spans — was the trace recorded with --trace?");
+    }
+    if unterminated > 0 {
+        bail!("{path}: {unterminated} unterminated/incomplete span events");
+    }
+    println!("ok: {ticks} tick spans, 0 unterminated");
     Ok(())
 }
 
@@ -335,7 +415,8 @@ fn cmd_info(a: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|repro|info> [--model M] [--help]\n\
+const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|trace-check|repro|info> [--model M] \
+    [--help]\n\
     \n\
     train     --model M --steps N --lr X --out ckpt.oqc\n\
     quantize  --model M --ckpt F --setting w4a16 --method omniquant\n\
@@ -346,7 +427,8 @@ const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|repro|info> [--
     \u{20}          [--prompt-len P] [--generate] [--temp X] [--synthetic]\n\
     \u{20}          [--continuous --requests N --interarrival X --slots S --json F\n\
     \u{20}           --kv slab|paged|paged-q8 --block-tokens B --threads T\n\
-    \u{20}           --prefill-chunk C --attn fused|gather]\n\
+    \u{20}           --prefill-chunk C --attn fused|gather\n\
+    \u{20}           --trace F --stats-interval N]\n\
     \u{20}          (--continuous: open-loop staggered arrivals through the\n\
     \u{20}           pooled-KV continuous-batching scheduler; --kv picks the KV\n\
     \u{20}           store: slab f32 slots, vLLM-style paged blocks, or paged\n\
@@ -359,7 +441,12 @@ const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|repro|info> [--
     \u{20}           straight off the store (default), gather is the\n\
     \u{20}           materialize-then-attend baseline, bit-identical;\n\
     \u{20}           --synthetic: serve a fresh synthetic model, no\n\
-    \u{20}           artifacts/PJRT needed)\n\
+    \u{20}           artifacts/PJRT needed; --trace writes a Chrome Trace\n\
+    \u{20}           Event JSON of the run, openable in Perfetto, with no\n\
+    \u{20}           effect on sampled tokens; --stats-interval prints a\n\
+    \u{20}           live heartbeat line to stderr every N scheduler ticks)\n\
+    trace-check FILE  (validate a --trace output: parses, counts spans,\n\
+    \u{20}           fails on zero tick spans or unterminated spans)\n\
     repro     --exp <fig1|table1|table2|table3|table4|fig4|tableA1..A14|figA1..A3\n\
     \u{20}          |serve-bench|all> [--quick] (reduced sizes/samples)\n\
     info      --model M";
@@ -388,6 +475,7 @@ fn main() -> Result<()> {
         "quantize" => cmd_quantize(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "trace-check" => cmd_trace_check(&args),
         "repro" => repro::run(&args.get_or("exp", "all"), args.has("quick")),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => usage(0),

@@ -65,7 +65,7 @@ use anyhow::{bail, Result};
 use super::sched::pool::{KvSlice, KV_GROUP};
 use super::sched::{KvPool, SlotId};
 use crate::quant::{q8_axpy_lanes, q8_dot_lanes};
-use crate::util::{StripedMut, ThreadPool};
+use crate::util::{trace, StripedMut, ThreadPool};
 
 /// Attention read-path selector, threaded from `[serve] attn` / the
 /// `serve --continuous --attn` flag down to `BatchScratch`. Both paths
@@ -158,6 +158,8 @@ pub(crate) fn attention_fused(
     if w == 0 {
         return;
     }
+    // one kernel-level span per layer call, arg = (row, head) item count
+    let _t = trace::span_arg("attn_kernel", (w * n_heads) as u64);
     let d = q.len() / w;
     debug_assert_eq!(q.len(), w * d);
     debug_assert_eq!(ao.len(), w * d);
@@ -279,6 +281,8 @@ pub(crate) fn attention_gather(
     if w == 0 {
         return;
     }
+    // same kernel-level span as the fused path, for like-for-like traces
+    let _t = trace::span_arg("attn_kernel", (w * n_heads) as u64);
     let d = q.len() / w;
     debug_assert_eq!(ao.len(), w * d);
     let scale = 1.0 / (head_dim as f32).sqrt();

@@ -6,7 +6,10 @@
 //! together, plus a long-context attention sweep (cached lengths
 //! {256, 1024} x kv x threads) measuring the fused streaming read path
 //! against the gather baseline it replaced (`attn_sweep` /
-//! `step_p90_improvement_fused_vs_gather` / `attn_share`). Emitted as
+//! `step_p90_improvement_fused_vs_gather` / `attn_share`), and a trace
+//! overhead check (`trace_overhead_pct`: slab step-p90 with the span
+//! recorder enabled vs disabled — the < 5% observability budget).
+//! Emitted as
 //! human-readable lines and as the machine-readable `BENCH_serve.json`
 //! snapshot so the serving-perf trajectory is tracked PR over PR. Shared
 //! by `benches/bench_serve.rs`, `repro --exp serve-bench` and
@@ -22,7 +25,7 @@ use crate::config::QuantSetting;
 use crate::json::Json;
 use crate::model::ModelParams;
 use crate::runtime::Manifest;
-use crate::util::{stats, Rng};
+use crate::util::{stats, trace, Rng};
 
 use super::sched::{
     synthetic_workload, KvPool, KvStoreKind, SchedConfig, Scheduler, ServeSummary, WorkloadSpec,
@@ -137,6 +140,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
     let mut modes = BTreeMap::new();
     let mut speedup = 0.0;
     let mut slab_tps = 0.0;
+    let mut slab_step_p90 = 0.0f64;
     let mut slab_arena = 0usize;
     let mut q8_arena = 0usize;
     let mut slab_bpt = 0usize;
@@ -160,6 +164,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
                 threads,
                 prefill_chunk: chunk,
                 attn: AttnKind::Fused,
+                stats_interval: 0,
             };
             let mut sch = Scheduler::new(&engine, cfg);
             for r in reqs {
@@ -178,6 +183,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
             KvStoreKind::SlabF32 => {
                 speedup = tps / lockstep_tps.max(1e-9);
                 slab_tps = tps;
+                slab_step_p90 = summary.step_p90_ms;
                 slab_arena = summary.kv_arena_bytes;
                 slab_bpt = summary.kv_bytes_per_token;
             }
@@ -399,6 +405,22 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         }
     }
 
+    // 7. trace overhead: the slab continuous point rerun with the span
+    //    recorder globally enabled, compared on step p90. The recorder's
+    //    enabled cost budget is < 5% of step p90 (ISSUE 6 acceptance);
+    //    tokens are bit-identical either way, so only wall-clock moves.
+    trace::reset();
+    trace::enable();
+    let traced = run_continuous(KvStoreKind::SlabF32, 1, &spec, 0)?;
+    trace::disable();
+    trace::reset();
+    let step_p90_trace_on = traced.step_p90_ms;
+    let trace_overhead_pct = 100.0 * (step_p90_trace_on - slab_step_p90) / slab_step_p90.max(1e-9);
+    lines.push(format!(
+        "trace overhead: step p90 {slab_step_p90:.3} ms off -> {step_p90_trace_on:.3} ms on \
+         ({trace_overhead_pct:+.1}%)"
+    ));
+
     let num = |v: f64| Json::Num(v);
     let mut seq_o = BTreeMap::new();
     seq_o.insert("tok_per_s".to_string(), num(sequential_tps));
@@ -454,6 +476,9 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
             "kv_bytes_per_token_ratio_q8_vs_slab".to_string(),
             num(slab_bpt as f64 / q8_bpt.max(1) as f64),
         ),
+        ("step_p90_ms_trace_off".to_string(), num(slab_step_p90)),
+        ("step_p90_ms_trace_on".to_string(), num(step_p90_trace_on)),
+        ("trace_overhead_pct".to_string(), num(trace_overhead_pct)),
     ];
     Ok(ServeBenchReport { entries, lines, speedup_continuous_vs_lockstep: speedup })
 }

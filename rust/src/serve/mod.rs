@@ -35,7 +35,10 @@
 //! thread count; the knob trades nothing but wall-clock. Each
 //! `forward_chunked` call also records where its wall time went
 //! ([`BatchScratch::gemm_secs`] / [`BatchScratch::attn_secs`]), feeding
-//! the per-tick phase metrics in `sched::ServeMetrics`.
+//! the per-tick phase metrics in `sched::ServeMetrics` — and, when
+//! tracing is enabled (`util::trace`, `serve --trace`), the same clock
+//! reads double as per-layer `gemm` / `attn` Chrome-trace spans at zero
+//! extra timing cost.
 
 pub mod attn;
 pub mod bench;
@@ -52,7 +55,7 @@ use crate::model::ModelParams;
 use crate::quant::{GemmScratch, PackedMatrix};
 use crate::runtime::ModelDesc;
 use crate::tensor::Tensor;
-use crate::util::{Rng, StripedMut, ThreadPool};
+use crate::util::{trace, Rng, StripedMut, ThreadPool};
 
 /// A linear layer in the serving engine: packed low-bit or FP32.
 pub enum LinearStore {
@@ -620,7 +623,11 @@ impl Engine {
                 let (_, w_, bias) = blk.linear(name);
                 gemm_bias_rows(w_, bias, &x1[..w * d], w, &mut dst[..w * d], &mut gemm[..], tp);
             }
-            *gemm_secs += tg.elapsed().as_secs_f64();
+            // `trace::phase_secs` reuses the same elapsed() read the
+            // untraced accounting already made (and records a span when
+            // `--trace` is on): traced and untraced runs do identical
+            // timing arithmetic, preserving bit-exact parity
+            *gemm_secs += trace::phase_secs("gemm", tg, li as u64);
             if llama {
                 let mut row0 = 0usize;
                 for run in runs {
@@ -678,12 +685,12 @@ impl Engine {
                     tp,
                 ),
             }
-            *attn_secs += ta.elapsed().as_secs_f64();
+            *attn_secs += trace::phase_secs("attn", ta, li as u64);
             {
                 let tg = Instant::now();
                 let (_, w_, bias) = blk.linear("wo");
                 w_.gemm(&ao[..w * d], w, &mut x1[..w * d], &mut gemm[..], tp);
-                *gemm_secs += tg.elapsed().as_secs_f64();
+                *gemm_secs += trace::phase_secs("gemm", tg, li as u64);
                 residual_add_rows(&mut xs[..w * d], &x1[..w * d], bias, w);
             }
             // --- ffn ---
@@ -697,14 +704,14 @@ impl Engine {
                     let dst = &mut dst[..w * dff];
                     gemm_bias_rows(w_, bias, &x1[..w * d], w, dst, &mut gemm[..], tp);
                 }
-                *gemm_secs += tg.elapsed().as_secs_f64();
+                *gemm_secs += trace::phase_secs("gemm", tg, li as u64);
                 for i in 0..w * dff {
                     ff1[i] = silu(ff1[i]) * ff2[i];
                 }
                 let tg = Instant::now();
                 let (_, w_, bias) = blk.linear("wd");
                 w_.gemm(&ff1[..w * dff], w, &mut x1[..w * d], &mut gemm[..], tp);
-                *gemm_secs += tg.elapsed().as_secs_f64();
+                *gemm_secs += trace::phase_secs("gemm", tg, li as u64);
                 residual_add_rows(&mut xs[..w * d], &x1[..w * d], bias, w);
             } else {
                 {
@@ -712,7 +719,7 @@ impl Engine {
                     let tg = Instant::now();
                     let (_, w_, bias) = blk.linear("w1");
                     w_.gemm(&x1[..w * d], w, &mut ff1[..w * dff], &mut gemm[..], tp);
-                    *gemm_secs += tg.elapsed().as_secs_f64();
+                    *gemm_secs += trace::phase_secs("gemm", tg, li as u64);
                     for s in 0..w {
                         ff1[s * dff..(s + 1) * dff]
                             .iter_mut()
@@ -723,7 +730,7 @@ impl Engine {
                 let tg = Instant::now();
                 let (_, w_, bias) = blk.linear("w2");
                 w_.gemm(&ff1[..w * dff], w, &mut x1[..w * d], &mut gemm[..], tp);
-                *gemm_secs += tg.elapsed().as_secs_f64();
+                *gemm_secs += trace::phase_secs("gemm", tg, li as u64);
                 residual_add_rows(&mut xs[..w * d], &x1[..w * d], bias, w);
             }
         }
@@ -748,7 +755,7 @@ impl Engine {
             let tg = Instant::now();
             let vocab = self.desc.vocab;
             self.head.gemm(&x1[..j * d], j, &mut logits[..j * vocab], &mut gemm[..], tp);
-            *gemm_secs += tg.elapsed().as_secs_f64();
+            *gemm_secs += trace::phase_secs("gemm_head", tg, j as u64);
         }
     }
 

@@ -1,10 +1,17 @@
 //! Serving metrics: queue wait, time-to-first-token, per-step latency
 //! percentiles, decode throughput and peak running memory (the RM column
 //! of Table 3, extended to a pooled multi-tenant cache).
+//!
+//! Per-tick latencies accumulate into streaming log-bucket
+//! [`Histogram`]s (O(1) memory however long the server runs, live
+//! percentile queries within `stats::HIST_REL_ERR`); per-request
+//! lifecycle records keep exact wall-clock milestones
+//! (arrival → admit → chunked prefill → first token → retire).
 
 use std::collections::BTreeMap;
 
 use crate::json::Json;
+use crate::util::stats::Histogram;
 use crate::util::{fmt_bytes, stats};
 
 /// Per-request lifecycle record, written at retire time.
@@ -16,6 +23,10 @@ pub struct RequestMetrics {
     pub finish_step: usize,
     /// Steps spent in the admission queue after becoming visible.
     pub queue_wait_steps: usize,
+    /// Wall ms spent in the admission queue (arrival → admit). Step
+    /// counts are meaningless once tick cost varies with batch
+    /// composition; this is the real wait.
+    pub queue_wait_ms: f64,
     /// Wall time from arrival to the first emitted token (queue wait +
     /// chunked prefill + first sample).
     pub ttft_secs: f64,
@@ -23,27 +34,32 @@ pub struct RequestMetrics {
     /// chunked and interleaved with co-scheduled decode ticks, so this is
     /// the prefill *span*, not exclusive compute time.
     pub prefill_secs: f64,
+    /// Ticks the prompt's prefill was spread across.
+    pub prefill_chunks: usize,
+    /// Wall ms from arrival to retirement (the full lifecycle).
+    pub e2e_ms: f64,
     /// Tokens emitted for this request.
     pub tokens: usize,
 }
 
-/// Raw counters accumulated by the scheduler.
+/// Raw counters accumulated by the scheduler. Per-tick phase timings
+/// live in bounded streaming histograms, never unbounded vectors.
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     pub requests: Vec<RequestMetrics>,
     /// Wall ms of each scheduler tick's forward + sampling (prefill
     /// chunks and decode rows share one stacked forward).
-    pub step_ms: Vec<f32>,
+    pub step_ms: Histogram,
     /// Per-tick wall ms spent inside the gemm weight walks (packed + FP,
-    /// including the vocab head) — one entry per forwarded tick.
-    pub gemm_ms: Vec<f32>,
+    /// including the vocab head).
+    pub gemm_ms: Histogram,
     /// Per-tick wall ms spent on the KV path: K/V appends + the
     /// attention kernel (fused streaming or gather baseline).
-    pub attn_ms: Vec<f32>,
+    pub attn_ms: Histogram,
     /// Per-tick wall ms spent in the sampling loop.
-    pub sample_ms: Vec<f32>,
+    pub sample_ms: Histogram,
     /// Sequences contributing rows to each tick (decode + prefilling).
-    pub step_width: Vec<usize>,
+    pub step_width: Histogram,
     pub decode_tokens: usize,
     /// Tick wall time attributed to decode rows (mixed prefill/decode
     /// ticks are split proportionally by rows processed).
@@ -77,30 +93,45 @@ impl ServeMetrics {
     pub fn summary(&self) -> ServeSummary {
         let ttft: Vec<f32> = self.requests.iter().map(|r| (r.ttft_secs * 1e3) as f32).collect();
         let waits: Vec<f32> = self.requests.iter().map(|r| r.queue_wait_steps as f32).collect();
-        let widths: Vec<f32> = self.step_width.iter().map(|&w| w as f32).collect();
+        let wait_ms: Vec<f32> = self.requests.iter().map(|r| r.queue_wait_ms as f32).collect();
+        let e2e: Vec<f32> = self.requests.iter().map(|r| r.e2e_ms as f32).collect();
         let tokens: usize = self.requests.iter().map(|r| r.tokens).sum();
-        let step_total: f64 = self.step_ms.iter().map(|&x| x as f64).sum();
-        let attn_total: f64 = self.attn_ms.iter().map(|&x| x as f64).sum();
+        let step_total = self.step_ms.sum();
+        let attn_total = self.attn_ms.sum();
         ServeSummary {
             requests: self.requests.len(),
             tokens,
             decode_tokens: self.decode_tokens,
-            decode_tok_per_s: self.decode_tokens as f64 / self.decode_secs.max(1e-9),
-            total_tok_per_s: tokens as f64 / self.total_secs.max(1e-9),
+            // no decode happened -> 0.0, never an absurd near-infinite
+            // rate from the epsilon-guarded division
+            decode_tok_per_s: if self.decode_tokens == 0 {
+                0.0
+            } else {
+                self.decode_tokens as f64 / self.decode_secs.max(1e-9)
+            },
+            total_tok_per_s: if tokens == 0 {
+                0.0
+            } else {
+                tokens as f64 / self.total_secs.max(1e-9)
+            },
             ttft_p50_ms: stats::median(&ttft) as f64,
             ttft_p90_ms: stats::percentile(&ttft, 0.9) as f64,
-            step_p50_ms: stats::median(&self.step_ms) as f64,
-            step_p90_ms: stats::percentile(&self.step_ms, 0.9) as f64,
-            step_p99_ms: stats::percentile(&self.step_ms, 0.99) as f64,
-            gemm_p50_ms: stats::median(&self.gemm_ms) as f64,
-            gemm_p90_ms: stats::percentile(&self.gemm_ms, 0.9) as f64,
-            attn_p50_ms: stats::median(&self.attn_ms) as f64,
-            attn_p90_ms: stats::percentile(&self.attn_ms, 0.9) as f64,
-            sample_p50_ms: stats::median(&self.sample_ms) as f64,
-            sample_p90_ms: stats::percentile(&self.sample_ms, 0.9) as f64,
+            queue_wait_p50_ms: stats::median(&wait_ms) as f64,
+            queue_wait_p90_ms: stats::percentile(&wait_ms, 0.9) as f64,
+            e2e_p50_ms: stats::median(&e2e) as f64,
+            e2e_p90_ms: stats::percentile(&e2e, 0.9) as f64,
+            step_p50_ms: self.step_ms.percentile(0.5),
+            step_p90_ms: self.step_ms.percentile(0.9),
+            step_p99_ms: self.step_ms.percentile(0.99),
+            gemm_p50_ms: self.gemm_ms.percentile(0.5),
+            gemm_p90_ms: self.gemm_ms.percentile(0.9),
+            attn_p50_ms: self.attn_ms.percentile(0.5),
+            attn_p90_ms: self.attn_ms.percentile(0.9),
+            sample_p50_ms: self.sample_ms.percentile(0.5),
+            sample_p90_ms: self.sample_ms.percentile(0.9),
             attn_share: if step_total > 0.0 { attn_total / step_total } else { 0.0 },
             mean_queue_wait_steps: stats::mean(&waits) as f64,
-            mean_batch_width: stats::mean(&widths) as f64,
+            mean_batch_width: self.step_width.mean(),
             prefill_secs: self.prefill_secs,
             decode_secs: self.decode_secs,
             total_secs: self.total_secs,
@@ -125,12 +156,19 @@ pub struct ServeSummary {
     pub requests: usize,
     pub tokens: usize,
     pub decode_tokens: usize,
-    /// Tokens/s over the decode phase only (the Table 3 measurement).
+    /// Tokens/s over the decode phase only (the Table 3 measurement);
+    /// 0.0 when no decode tokens were attributed.
     pub decode_tok_per_s: f64,
     /// Tokens/s over the whole run (queue + prefill + decode).
     pub total_tok_per_s: f64,
     pub ttft_p50_ms: f64,
     pub ttft_p90_ms: f64,
+    /// Wall-clock admission-queue wait (arrival → admit), p50/p90.
+    pub queue_wait_p50_ms: f64,
+    pub queue_wait_p90_ms: f64,
+    /// Wall-clock full lifecycle (arrival → retire), p50/p90.
+    pub e2e_p50_ms: f64,
+    pub e2e_p90_ms: f64,
     pub step_p50_ms: f64,
     pub step_p90_ms: f64,
     pub step_p99_ms: f64,
@@ -175,6 +213,10 @@ impl ServeSummary {
         m.insert("total_tok_per_s".to_string(), Json::Num(self.total_tok_per_s));
         m.insert("ttft_p50_ms".to_string(), Json::Num(self.ttft_p50_ms));
         m.insert("ttft_p90_ms".to_string(), Json::Num(self.ttft_p90_ms));
+        m.insert("queue_wait_p50_ms".to_string(), Json::Num(self.queue_wait_p50_ms));
+        m.insert("queue_wait_p90_ms".to_string(), Json::Num(self.queue_wait_p90_ms));
+        m.insert("e2e_p50_ms".to_string(), Json::Num(self.e2e_p50_ms));
+        m.insert("e2e_p90_ms".to_string(), Json::Num(self.e2e_p90_ms));
         m.insert("step_p50_ms".to_string(), Json::Num(self.step_p50_ms));
         m.insert("step_p90_ms".to_string(), Json::Num(self.step_p90_ms));
         m.insert("step_p99_ms".to_string(), Json::Num(self.step_p99_ms));
@@ -231,9 +273,13 @@ impl std::fmt::Display for ServeSummary {
         )?;
         writeln!(
             f,
-            "queue wait mean {:.1} steps; batch width mean {:.1} over {} steps / {} threads; \
-             peak RM {}",
+            "queue wait p50 {:.1} / p90 {:.1} ms (mean {:.1} steps); e2e p50 {:.1} / p90 {:.1} \
+             ms; batch width mean {:.1} over {} steps / {} threads; peak RM {}",
+            self.queue_wait_p50_ms,
+            self.queue_wait_p90_ms,
             self.mean_queue_wait_steps,
+            self.e2e_p50_ms,
+            self.e2e_p90_ms,
             self.mean_batch_width,
             self.steps,
             self.threads,
@@ -256,6 +302,7 @@ impl std::fmt::Display for ServeSummary {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::stats::HIST_REL_ERR;
 
     fn req(id: usize, arrival: usize, admit: usize, tokens: usize, ttft: f64) -> RequestMetrics {
         RequestMetrics {
@@ -264,21 +311,36 @@ mod tests {
             admit_step: admit,
             finish_step: admit + tokens,
             queue_wait_steps: admit - arrival,
+            queue_wait_ms: (admit - arrival) as f64 * 2.0,
             ttft_secs: ttft,
             prefill_secs: 0.001,
+            prefill_chunks: 1,
+            e2e_ms: ttft * 1e3 + tokens as f64,
             tokens,
         }
+    }
+
+    fn hist(xs: &[f64]) -> Histogram {
+        let mut h = Histogram::new();
+        for &x in xs {
+            h.record(x);
+        }
+        h
+    }
+
+    fn widths(ws: &[usize]) -> Histogram {
+        hist(&ws.iter().map(|&w| w as f64).collect::<Vec<_>>())
     }
 
     #[test]
     fn summary_aggregates() {
         let m = ServeMetrics {
             requests: vec![req(0, 0, 0, 10, 0.010), req(1, 2, 4, 6, 0.030)],
-            step_ms: vec![1.0, 2.0, 3.0],
-            gemm_ms: vec![0.5, 1.0, 1.5],
-            attn_ms: vec![0.25, 0.5, 0.75],
-            sample_ms: vec![0.1, 0.1, 0.1],
-            step_width: vec![1, 2, 2],
+            step_ms: hist(&[1.0, 2.0, 3.0]),
+            gemm_ms: hist(&[0.5, 1.0, 1.5]),
+            attn_ms: hist(&[0.25, 0.5, 0.75]),
+            sample_ms: hist(&[0.1, 0.1, 0.1]),
+            step_width: widths(&[1, 2, 2]),
             decode_tokens: 16,
             decode_secs: 2.0,
             prefill_secs: 0.002,
@@ -301,11 +363,18 @@ mod tests {
         assert!((s.total_tok_per_s - 4.0).abs() < 1e-9);
         assert!((s.ttft_p50_ms - 20.0).abs() < 1e-3);
         assert!((s.mean_queue_wait_steps - 1.0).abs() < 1e-9);
-        assert!((s.mean_batch_width - 5.0 / 3.0).abs() < 1e-6);
-        // phase percentiles + the attn share of total step time
-        assert!((s.gemm_p50_ms - 1.0).abs() < 1e-6);
-        assert!((s.attn_p50_ms - 0.5).abs() < 1e-6);
-        assert!((s.sample_p90_ms - 0.1).abs() < 1e-6);
+        assert!((s.mean_batch_width - 5.0 / 3.0).abs() < 1e-6, "histogram means are exact");
+        // queue-wait wall percentiles from the lifecycle records: waits
+        // are 0 ms and 4 ms -> linear-interp p50 = 2 ms, p90 = 3.6 ms
+        assert!((s.queue_wait_p50_ms - 2.0).abs() < 1e-6);
+        assert!((s.queue_wait_p90_ms - 3.6).abs() < 1e-6);
+        assert!(s.e2e_p50_ms > 0.0);
+        // phase percentiles now come from the streaming histograms:
+        // exact only within the documented bucket-resolution bound
+        assert!((s.gemm_p50_ms - 1.0).abs() < HIST_REL_ERR * 1.0);
+        assert!((s.attn_p50_ms - 0.5).abs() < HIST_REL_ERR * 0.5);
+        assert!((s.sample_p90_ms - 0.1).abs() < HIST_REL_ERR * 0.1);
+        // ... but the share is a ratio of *exact* sums
         assert!((s.attn_share - 0.25).abs() < 1e-6, "attn share {}", s.attn_share);
         let j = s.to_json();
         assert!((j.get("decode_tok_per_s").unwrap().as_f64().unwrap() - 8.0).abs() < 1e-9);
@@ -315,8 +384,11 @@ mod tests {
         assert_eq!(j.get("peak_kv_blocks").unwrap().as_usize().unwrap(), 5);
         assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 4);
         assert_eq!(j.get("prefill_chunk").unwrap().as_usize().unwrap(), 24);
-        assert!((j.get("attn_p50_ms").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-6);
+        assert!(
+            (j.get("attn_p50_ms").unwrap().as_f64().unwrap() - 0.5).abs() < HIST_REL_ERR * 0.5
+        );
         assert!((j.get("attn_share").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-6);
+        assert!((j.get("queue_wait_p90_ms").unwrap().as_f64().unwrap() - 3.6).abs() < 1e-6);
         assert_eq!(j.get("attn_kind").unwrap().as_str().unwrap(), "fused");
         let text = format!("{s}");
         assert!(text.contains("decode 8.0 tok/s"), "{text}");
@@ -325,5 +397,23 @@ mod tests {
         assert!(text.contains("prefill chunk 24"), "{text}");
         assert!(text.contains("fused attention"), "{text}");
         assert!(text.contains("attn share 25%"), "{text}");
+        assert!(text.contains("queue wait p50 2.0 / p90 3.6 ms"), "{text}");
+    }
+
+    #[test]
+    fn zero_decode_reports_zero_not_absurd_rates() {
+        // regression: an all-prefill (or empty) run used to report
+        // decode_tokens / 1e-9 tok/s; it must report 0.0, and the JSON
+        // must stay null-free for downstream tooling
+        let m = ServeMetrics { total_secs: 1.0, ..ServeMetrics::default() };
+        let s = m.summary();
+        assert_eq!(s.decode_tok_per_s, 0.0, "no decode -> 0.0, not 1e9x nonsense");
+        assert_eq!(s.total_tok_per_s, 0.0);
+        let j = s.to_json();
+        assert_eq!(j.get("decode_tok_per_s").unwrap().as_f64().unwrap(), 0.0);
+        assert!(!j.to_string().contains("null"), "summary JSON must be null-free: {j}");
+        // Display stays finite and renderable
+        let text = format!("{s}");
+        assert!(text.contains("decode 0.0 tok/s"), "{text}");
     }
 }

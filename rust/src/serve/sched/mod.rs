@@ -56,8 +56,17 @@
 //!   the pool, per-request metrics are recorded, and the next queued
 //!   request can be admitted on the following tick.
 //!
-//! [`ServeMetrics`] collects queue wait, TTFT, per-step latency
-//! percentiles, decode tokens/s and peak running bytes;
+//! [`ServeMetrics`] collects queue wait (steps *and* wall-clock ms),
+//! TTFT, per-step latency percentiles (streaming log-bucket histograms —
+//! O(1) memory, live queries), decode tokens/s and peak running bytes,
+//! plus a per-request lifecycle record (arrival → admit → chunked
+//! prefill → first token → retire). With tracing on (`serve --trace`,
+//! see `util::trace`) the same milestones become Chrome-trace events:
+//! one span per tick plus its gemm/attn/sample phases, and `admit`,
+//! `prefill_chunk`, `first_token`, `retire` and `backpressure` instants
+//! carrying the request id. [`SchedConfig::stats_interval`] adds a
+//! periodic stderr heartbeat (live QPS, p90 step latency from the
+//! histograms, batch width, KV blocks in use).
 //! [`synthetic_workload`] generates the open-loop Poisson-ish arrival
 //! workloads used by `serve --continuous` and `serve::bench`.
 
@@ -73,7 +82,7 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Result};
 
 use super::{sample, AttnKind, BatchScratch, Engine, SeqChunk};
-use crate::util::Rng;
+use crate::util::{trace, Rng};
 
 /// One generation request.
 #[derive(Clone, Debug)]
@@ -129,6 +138,11 @@ pub struct SchedConfig {
     /// baseline for the bench A/B. Bit-identical either way — the knob
     /// changes wall-clock only, never a single emitted token.
     pub attn: AttnKind,
+    /// Every N ticks, print a one-line stderr heartbeat (live QPS, p90
+    /// step latency from the streaming histograms, mean batch width, KV
+    /// blocks in use). 0 = off. Observability only — never changes a
+    /// token.
+    pub stats_interval: usize,
 }
 
 impl Default for SchedConfig {
@@ -142,6 +156,7 @@ impl Default for SchedConfig {
             threads: 1,
             prefill_chunk: 32,
             attn: AttnKind::Fused,
+            stats_interval: 0,
         }
     }
 }
@@ -172,6 +187,10 @@ struct Running {
     admit_at: Instant,
     ttft_secs: f64,
     prefill_secs: f64,
+    /// Wall ms spent queued (visible → admitted), fixed at admit time.
+    queue_wait_ms: f64,
+    /// Ticks that advanced this request's prefill cursor.
+    prefill_chunks: usize,
 }
 
 /// Continuous-batching scheduler over a borrowed engine.
@@ -192,6 +211,8 @@ pub struct Scheduler<'e> {
     /// tick with live sequences advances at least one of them).
     submitted_work: usize,
     last_arrival: usize,
+    /// Wall-clock anchor of the first tick (heartbeat QPS denominator).
+    started: Option<Instant>,
 }
 
 impl<'e> Scheduler<'e> {
@@ -249,6 +270,7 @@ impl<'e> Scheduler<'e> {
             prefill_chunk,
             submitted_work: 0,
             last_arrival: 0,
+            started: None,
         }
     }
 
@@ -313,11 +335,39 @@ impl<'e> Scheduler<'e> {
     /// batched forward over all live sequences — decode rows and prefill
     /// chunks stacked into the same weight walk.
     pub fn step(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
         self.admit();
         self.forward();
         self.tick += 1;
         self.metrics.steps = self.tick;
         self.metrics.peak_kv_blocks = self.pool.peak_blocks();
+        if self.cfg.stats_interval > 0 && self.tick % self.cfg.stats_interval == 0 {
+            self.heartbeat();
+        }
+    }
+
+    /// One stderr status line, every `stats_interval` ticks. Percentiles
+    /// come straight from the live streaming histograms — the same ones
+    /// the end-of-run summary reads, so the two agree within the
+    /// documented bucket resolution (`stats::HIST_REL_ERR`). Written to
+    /// stderr so `--json` stdout pipelines stay clean.
+    fn heartbeat(&self) {
+        let elapsed = self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0).max(1e-9);
+        eprintln!(
+            "[serve tick {:>5}] qps {:.1}, step p50 {:.2} / p90 {:.2} ms, width {:.1}, \
+             kv blocks {}/{}, running {}, queued {}",
+            self.tick,
+            self.metrics.requests.len() as f64 / elapsed,
+            self.metrics.step_ms.percentile(0.5),
+            self.metrics.step_ms.percentile(0.9),
+            self.metrics.step_width.mean(),
+            self.pool.blocks_in_use(),
+            self.pool.n_blocks(),
+            self.running.len(),
+            self.pending.len(),
+        );
     }
 
     /// Drive to completion; errors out (rather than spinning) if progress
@@ -368,6 +418,15 @@ impl<'e> Scheduler<'e> {
             let p = self.pending.pop_front().unwrap();
             self.start(p);
         }
+        // back-pressure is a lifecycle event too: mark every tick the
+        // queue head sits blocked on KV capacity
+        if trace::enabled() {
+            if let Some(p) = self.pending.front() {
+                if p.visible.is_some() && !self.pool.can_admit(Self::need_tokens(&p.req)) {
+                    trace::instant("backpressure", p.req.id as u64);
+                }
+            }
+        }
     }
 
     /// Admit a request: lease its KV capacity and enter the chunked
@@ -381,6 +440,8 @@ impl<'e> Scheduler<'e> {
             .pool
             .lease(Self::need_tokens(&req))
             .expect("admit checked the pool can host this request");
+        let admit_at = Instant::now();
+        trace::instant("admit", req.id as u64);
         self.running.push(Running {
             slot,
             rng: Rng::new(req.seed),
@@ -389,9 +450,11 @@ impl<'e> Scheduler<'e> {
             next: None,
             admit_step: self.tick,
             visible_at,
-            admit_at: Instant::now(),
+            admit_at,
             ttft_secs: 0.0,
             prefill_secs: 0.0,
+            queue_wait_ms: admit_at.saturating_duration_since(visible_at).as_secs_f64() * 1e3,
+            prefill_chunks: 0,
             req,
         });
     }
@@ -462,7 +525,11 @@ impl<'e> Scheduler<'e> {
         let mut j = 0usize;
         for (i, r) in self.running.iter_mut().enumerate() {
             if r.prefilled < r.req.prompt.len() {
-                r.prefilled += takes[i];
+                if takes[i] > 0 {
+                    r.prefilled += takes[i];
+                    r.prefill_chunks += 1;
+                    trace::instant("prefill_chunk", r.req.id as u64);
+                }
                 if r.prefilled < r.req.prompt.len() {
                     continue; // still mid-prompt: nothing sampled this tick
                 }
@@ -470,6 +537,7 @@ impl<'e> Scheduler<'e> {
                 // logits row samples the request's first output token
                 r.ttft_secs = r.visible_at.elapsed().as_secs_f64();
                 r.prefill_secs = r.admit_at.elapsed().as_secs_f64();
+                trace::instant("first_token", r.req.id as u64);
             }
             let tok = sample(
                 &self.scratch.logits[j * vocab..(j + 1) * vocab],
@@ -480,18 +548,20 @@ impl<'e> Scheduler<'e> {
             r.out.push(tok);
             r.next = Some(tok);
         }
-        let sample_secs = ts.elapsed().as_secs_f64();
+        let sample_secs = trace::phase_secs("sample", ts, j as u64);
         // as before the chunked-prefill rework: a step is forward +
-        // sampling (retire bookkeeping excluded)
-        let dt = t0.elapsed().as_secs_f64();
-        self.metrics.step_ms.push((dt * 1e3) as f32);
+        // sampling (retire bookkeeping excluded). `phase_secs` reuses the
+        // one clock read the untimed path already made, and also records
+        // the tick span when tracing is on.
+        let dt = trace::phase_secs("tick", t0, width as u64);
+        self.metrics.step_ms.record(dt * 1e3);
         // phase attribution: where this tick's wall time went — the gemm
         // weight walks, the KV path (appends + attention), the sampling
         // loop; the remainder (norms, RoPE, residuals) is untimed
-        self.metrics.gemm_ms.push((self.scratch.gemm_secs() * 1e3) as f32);
-        self.metrics.attn_ms.push((self.scratch.attn_secs() * 1e3) as f32);
-        self.metrics.sample_ms.push((sample_secs * 1e3) as f32);
-        self.metrics.step_width.push(width);
+        self.metrics.gemm_ms.record(self.scratch.gemm_secs() * 1e3);
+        self.metrics.attn_ms.record(self.scratch.attn_secs() * 1e3);
+        self.metrics.sample_ms.record(sample_secs * 1e3);
+        self.metrics.step_width.record(width as f64);
         self.metrics.decode_tokens += decode_rows;
         // one mixed tick serves prefill and decode rows through the same
         // weight walk; attribute its wall time proportionally by rows
@@ -517,14 +587,18 @@ impl<'e> Scheduler<'e> {
 
     fn retire(&mut self, r: Running) {
         self.pool.release(r.slot);
+        trace::instant("retire", r.req.id as u64);
         self.metrics.requests.push(RequestMetrics {
             id: r.req.id,
             arrival_step: r.req.arrival_step,
             admit_step: r.admit_step,
             finish_step: self.tick,
             queue_wait_steps: r.admit_step - r.req.arrival_step,
+            queue_wait_ms: r.queue_wait_ms,
             ttft_secs: r.ttft_secs,
             prefill_secs: r.prefill_secs,
+            prefill_chunks: r.prefill_chunks,
+            e2e_ms: r.visible_at.elapsed().as_secs_f64() * 1e3,
             tokens: r.out.len(),
         });
         self.finished.push((r.req.id, r.out));

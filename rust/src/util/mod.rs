@@ -1,9 +1,11 @@
-//! Substrate utilities: RNG, statistics, timing, and the persistent
-//! worker pool behind the serve path's sharded kernels.
+//! Substrate utilities: RNG, statistics, timing, the persistent
+//! worker pool behind the serve path's sharded kernels, and the
+//! span-tracing recorder behind `serve --trace`.
 
 pub mod rng;
 pub mod stats;
 pub mod threads;
+pub mod trace;
 
 pub use rng::Rng;
 pub use threads::{StripedMut, ThreadPool};

@@ -55,6 +55,142 @@ pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
     counts
 }
 
+/// Buckets per octave (power of two) in the streaming [`Histogram`].
+const BUCKETS_PER_OCTAVE: usize = 16;
+/// Lower edge of the first log bucket. For millisecond samples this is
+/// 100 ns — anything at or below lands in the underflow bucket.
+const HIST_LO: f64 = 1e-4;
+/// Octaves covered above `HIST_LO` (2^34 * 1e-4 ms ≈ 28 minutes — far
+/// past any sane tick time; larger samples clamp into the top bucket).
+const HIST_OCTAVES: usize = 34;
+/// 1 underflow bucket + the log-spaced buckets.
+const HIST_BUCKETS: usize = 1 + BUCKETS_PER_OCTAVE * HIST_OCTAVES;
+
+/// Documented percentile resolution of [`Histogram`]: a reported
+/// quantile is within this *relative* error of the exact nearest-rank
+/// value, because a bucket's geometric midpoint is at most
+/// `2^(1/32) - 1 ≈ 2.19%` away from anything inside the bucket.
+/// Single-sample and constant streams are exact (the estimate is
+/// clamped to the observed `[min, max]`). The underflow bucket (at or
+/// below `1e-4`) has *absolute* resolution `1e-4` instead.
+pub const HIST_REL_ERR: f64 = 0.022;
+
+/// Fixed-size streaming histogram with log-spaced buckets: O(1) memory
+/// however long the run, exact `count`/`sum`/`min`/`max`, and live
+/// percentile queries within [`HIST_REL_ERR`]. Replaces the unbounded
+/// per-tick `Vec<f32>`s `ServeMetrics` used to accumulate.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Box<[u64]>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0u64; HIST_BUCKETS].into_boxed_slice(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(x: f64) -> usize {
+        if x <= HIST_LO {
+            return 0;
+        }
+        let i = ((x / HIST_LO).log2() * BUCKETS_PER_OCTAVE as f64).floor() as isize + 1;
+        (i.max(1) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of a bucket (the percentile estimate before
+    /// the `[min, max]` clamp).
+    fn midpoint(b: usize) -> f64 {
+        if b == 0 {
+            return HIST_LO / 2.0;
+        }
+        HIST_LO * 2f64.powf((b as f64 - 0.5) / BUCKETS_PER_OCTAVE as f64)
+    }
+
+    /// Record one sample. Non-finite samples are dropped (same policy
+    /// as [`percentile`]); zero/negative land in the underflow bucket.
+    pub fn record(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.counts[Self::bucket(x)] += 1;
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of recorded samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank percentile estimate, `p` in [0, 1]; 0.0 when
+    /// empty. Within [`HIST_REL_ERR`] of the exact nearest-rank value.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::midpoint(b).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
 /// Render a histogram as a unicode bar string (for Fig. A1-style output).
 pub fn sparkline(counts: &[usize]) -> String {
     const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
@@ -108,6 +244,87 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std(&[]), 0.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    /// Exact nearest-rank percentile, the reference the histogram's
+    /// documented bound is stated against.
+    fn nearest_rank(xs: &[f64], p: f64) -> f64 {
+        let mut v = xs.to_vec();
+        v.sort_by(f64::total_cmp);
+        let rank = ((p * v.len() as f64).ceil() as usize).max(1);
+        v[rank - 1]
+    }
+
+    fn assert_hist_parity(xs: &[f64], label: &str) {
+        let mut h = Histogram::new();
+        for &x in xs {
+            h.record(x);
+        }
+        assert_eq!(h.count(), xs.len() as u64, "{label}: exact count");
+        let exact_sum: f64 = xs.iter().sum();
+        assert!((h.sum() - exact_sum).abs() <= 1e-9 * exact_sum.abs().max(1.0), "{label}: sum");
+        for p in [0.5, 0.9, 0.99] {
+            let want = nearest_rank(xs, p);
+            let got = h.percentile(p);
+            let tol = HIST_REL_ERR * want.abs() + 1e-12;
+            assert!(
+                (got - want).abs() <= tol,
+                "{label} p{}: histogram {got} vs exact {want} (tol {tol})",
+                (p * 100.0) as u32
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_matches_exact_percentiles_within_bound() {
+        // single sample and constant streams must be *exact* (clamp)
+        assert_hist_parity(&[3.7], "single");
+        assert_hist_parity(&[0.25; 100], "constant");
+        // uniform ramp over two decades
+        let ramp: Vec<f64> = (1..=500).map(|i| i as f64 * 0.02).collect();
+        assert_hist_parity(&ramp, "ramp");
+        // adversarial bimodal: tight cluster + far outliers straddling
+        // many octaves (a linear-interp reference would land between
+        // the modes; nearest-rank picks a mode, as the histogram does)
+        let mut bimodal = vec![0.9; 95];
+        bimodal.extend([150.0; 5]);
+        assert_hist_parity(&bimodal, "bimodal");
+        // heavy tail: powers spanning the whole bucket range
+        let tail: Vec<f64> = (0..200).map(|i| 1.07f64.powi(i % 97)).collect();
+        assert_hist_parity(&tail, "heavy-tail");
+        // pseudo-exponential via a multiplicative walk
+        let mut x = 0.013;
+        let exp: Vec<f64> = (0..777)
+            .map(|i| {
+                x = (x * 1.371).rem_euclid(40.0) + 1e-3;
+                x + (i % 7) as f64 * 0.01
+            })
+            .collect();
+        assert_hist_parity(&exp, "pseudo-exponential");
+    }
+
+    #[test]
+    fn histogram_edges() {
+        let mut h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0.0, "empty histogram reports 0");
+        assert_eq!(h.mean(), 0.0);
+        // non-finite samples are dropped, not recorded
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert!(h.is_empty());
+        // zero and sub-resolution samples land in the underflow bucket:
+        // the estimate is within the bucket's absolute width HIST_LO
+        h.record(0.0);
+        h.record(5e-5);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(0.5) <= 1e-4, "underflow estimate within HIST_LO");
+        assert_eq!(h.min(), 0.0);
+        // a sample beyond the top bucket still clamps to the exact max
+        let mut big = Histogram::new();
+        big.record(1e9);
+        assert_eq!(big.percentile(0.99), 1e9);
+        assert_eq!(big.max(), 1e9);
+        assert_eq!(big.min(), 1e9);
     }
 
     #[test]

@@ -40,10 +40,18 @@
 //! multiples of `align` — the packed GEMM uses `align = 32` lanes so
 //! every shard begins exactly on a `u32` word boundary for *any* bit
 //! width (32 lanes x `bits` bits is a whole number of words).
+//!
+//! With tracing enabled (`util::trace`, `serve --trace`) every shard
+//! execution is wrapped in a `shard` span recorded on its executing
+//! thread's own ring, so the trace viewer shows each tick fanning out
+//! across the `omniq-worker-*` lanes. Disabled, the guard is two atomic
+//! loads; it never touches the task's data either way.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+use crate::util::trace;
 
 /// A shard task: called once per shard index in `0..shards`.
 type Task = dyn Fn(usize) + Sync;
@@ -140,6 +148,10 @@ impl ThreadPool {
         }
         if self.workers.is_empty() || shards == 1 {
             for i in 0..shards {
+                // `--trace`: shard spans land on the submitter's lane
+                // here (inline path); the guard is free when tracing is
+                // off and never touches the task's data
+                let _s = trace::span_arg("shard", i as u64);
                 task(i);
             }
             return;
@@ -155,7 +167,10 @@ impl ThreadPool {
                 let i = job.next;
                 job.next += 1;
                 drop(st);
-                let result = catch_unwind(AssertUnwindSafe(|| task(i)));
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    let _s = trace::span_arg("shard", i as u64);
+                    task(i);
+                }));
                 st = self.shared.state.lock().unwrap();
                 let job = st.job.as_mut().expect("job lives until run() takes it");
                 job.done += 1;
@@ -255,7 +270,12 @@ fn worker(shared: Arc<Shared>) {
                 // SAFETY: `run` keeps the task alive until `done == total`,
                 // and this shard reports done only after the call returns.
                 let task: &Task = unsafe { &*task };
-                let result = catch_unwind(AssertUnwindSafe(|| task(i)));
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    // each worker thread gets its own trace lane (rings
+                    // are per-thread; workers are named omniq-worker-N)
+                    let _s = trace::span_arg("shard", i as u64);
+                    task(i);
+                }));
                 st = shared.state.lock().unwrap();
                 if let Some(j) = st.job.as_mut() {
                     j.done += 1;

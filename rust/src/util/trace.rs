@@ -1,0 +1,488 @@
+//! Always-on serve observability: a dependency-free span/event recorder
+//! with per-thread ring buffers and Chrome Trace Event Format export.
+//!
+//! # Design
+//!
+//! Each participating thread owns one [`ThreadRing`]: a fixed-capacity
+//! ring of [`Event`] slots plus a monotone head counter. The owning
+//! thread is the only writer — a push writes the slot at `head % cap`
+//! and then publishes `head + 1` with a `Release` store, so recording
+//! never takes a lock and never allocates. When the ring wraps, the
+//! oldest events are overwritten (drop-oldest); the exact number of
+//! dropped events is `head.saturating_sub(cap)`, recovered for free
+//! from the monotone head, so loss is always *reported*, never silent.
+//!
+//! A [`Sink`] holds the registry of rings (one `Mutex` touched only at
+//! thread registration and at collection time, never on the hot path)
+//! plus the shared epoch all timestamps are relative to. The process
+//! has one global sink behind a `OnceLock`; each thread lazily
+//! registers a [`Handle`] through a `thread_local` on its first
+//! recorded event, labelled with the thread's name (workers spawned by
+//! `util::ThreadPool` are named `omniq-worker-{i}`, so every worker
+//! gets its own lane in the viewer).
+//!
+//! # Why the disabled path is parity-safe
+//!
+//! Tracing never touches model math, sampling, or RNG state — it only
+//! *observes* wall-clock time, so enabling it cannot change a logit or
+//! a sampled token. Disabled (the default, and what the determinism
+//! suites run under) the cost is two relaxed atomic loads per probe
+//! and zero allocation: the global sink is not even constructed until
+//! the first [`enable`]. Timing sites that already measured a phase
+//! route through [`phase_secs`], which reuses the *same* clock reads
+//! the untraced code performed — enabled and disabled runs execute
+//! identical arithmetic on the serve path.
+//!
+//! # Event kinds
+//!
+//! Only Chrome "X" (complete: `ts` + `dur`) and "i" (instant) events
+//! are emitted — never paired B/E events, so drop-oldest can never
+//! orphan a span half: "0 unterminated spans" holds structurally.
+//!
+//! # Viewing a trace
+//!
+//! `omniquant serve --model m --continuous --trace trace.json`, then
+//! open <https://ui.perfetto.dev> (or `chrome://tracing`) and load the
+//! file. Scheduler ticks and their gemm/attn/sample phases appear on
+//! the main-thread lane, per-shard spans on the `omniq-worker-*`
+//! lanes, and request lifecycle instants (admit, prefill-chunk,
+//! first-token, retire, backpressure) as markers. `omniquant
+//! trace-check trace.json` validates a file offline.
+
+use std::cell::UnsafeCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::json::Json;
+
+/// Sentinel for "no argument" on an event (not serialized).
+pub const NO_ARG: u64 = u64::MAX;
+
+/// Events each thread ring can hold before drop-oldest kicks in.
+pub const DEFAULT_CAPACITY: usize = 1 << 15;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EventKind {
+    /// Chrome "X" complete event: `ts` + `dur`.
+    Span,
+    /// Chrome "i" instant event.
+    Instant,
+}
+
+/// One recorded event. `name` is `&'static str` so recording never
+/// allocates; numeric context (layer index, shard id, request id)
+/// travels in `arg`.
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    name: &'static str,
+    kind: EventKind,
+    ts_ns: u64,
+    dur_ns: u64,
+    arg: u64,
+}
+
+const EMPTY: Event =
+    Event { name: "", kind: EventKind::Instant, ts_ns: 0, dur_ns: 0, arg: NO_ARG };
+
+/// Single-writer bounded ring of events. The owning thread pushes; any
+/// thread may snapshot *while the writer is quiescent* (the collection
+/// contract: traces are written after `Scheduler::run` returns and the
+/// worker pool has gone idle).
+pub struct ThreadRing {
+    label: String,
+    tid: u64,
+    cap: usize,
+    /// Monotone event count; the write slot is `head % cap`.
+    head: AtomicUsize,
+    slots: Box<[UnsafeCell<Event>]>,
+}
+
+// Safety: `slots` is written only by the owning thread (single-writer
+// contract) and read by collectors only under the quiescence contract
+// above; `head`'s Release/Acquire pair orders slot writes before the
+// reader observes them.
+unsafe impl Sync for ThreadRing {}
+unsafe impl Send for ThreadRing {}
+
+impl ThreadRing {
+    fn new(label: String, tid: u64, cap: usize) -> Self {
+        let slots: Box<[UnsafeCell<Event>]> = (0..cap).map(|_| UnsafeCell::new(EMPTY)).collect();
+        ThreadRing { label, tid, cap, head: AtomicUsize::new(0), slots }
+    }
+
+    /// Owning thread only.
+    fn push(&self, ev: Event) {
+        let h = self.head.load(Ordering::Relaxed);
+        // Safety: single writer (the owning thread); readers honor the
+        // quiescence contract.
+        unsafe { *self.slots[h % self.cap].get() = ev };
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Events overwritten so far (exact, from the monotone head).
+    pub fn dropped(&self) -> usize {
+        self.head.load(Ordering::Acquire).saturating_sub(self.cap)
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.head.load(Ordering::Acquire).min(self.cap)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy out the retained events, oldest first. Caller must ensure
+    /// the owning thread is quiescent.
+    fn snapshot(&self) -> Vec<Event> {
+        let h = self.head.load(Ordering::Acquire);
+        let n = h.min(self.cap);
+        (h - n..h).map(|i| unsafe { *self.slots[i % self.cap].get() }).collect()
+    }
+}
+
+/// A thread's write handle into its ring. Methods record
+/// unconditionally — the enabled check lives in the module-level free
+/// functions so the hot path pays it exactly once.
+pub struct Handle {
+    ring: Arc<ThreadRing>,
+    epoch: Instant,
+}
+
+impl Handle {
+    fn ts_ns(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Record an instant event ("i").
+    pub fn instant(&self, name: &'static str, arg: u64) {
+        let ts_ns = self.ts_ns(Instant::now());
+        self.ring.push(Event { name, kind: EventKind::Instant, ts_ns, dur_ns: 0, arg });
+    }
+
+    /// Record a complete span ("X") that started at `start` and lasted
+    /// `dur`.
+    pub fn span_at(&self, name: &'static str, start: Instant, dur: Duration, arg: u64) {
+        let ts_ns = self.ts_ns(start);
+        self.ring.push(Event {
+            name,
+            kind: EventKind::Span,
+            ts_ns,
+            dur_ns: dur.as_nanos() as u64,
+            arg,
+        });
+    }
+}
+
+/// A trace collector: the ring registry plus the shared time epoch.
+/// Unit tests construct their own `Sink`; the serve path uses the
+/// process-global one behind [`enable`] / [`write`].
+pub struct Sink {
+    epoch: Instant,
+    capacity: usize,
+    enabled: AtomicBool,
+    next_tid: AtomicUsize,
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+}
+
+impl Sink {
+    pub fn new(capacity: usize) -> Self {
+        Sink {
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            enabled: AtomicBool::new(false),
+            next_tid: AtomicUsize::new(1),
+            rings: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Register a new per-thread ring and return its write handle.
+    pub fn register(&self, label: &str) -> Handle {
+        let tid = self.next_tid.fetch_add(1, Ordering::Relaxed) as u64;
+        let ring = Arc::new(ThreadRing::new(label.to_string(), tid, self.capacity));
+        self.rings.lock().unwrap().push(ring.clone());
+        Handle { ring, epoch: self.epoch }
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Total events dropped across all rings (exact).
+    pub fn dropped(&self) -> usize {
+        self.rings.lock().unwrap().iter().map(|r| r.dropped()).sum()
+    }
+
+    /// Total events currently retained across all rings.
+    pub fn retained(&self) -> usize {
+        self.rings.lock().unwrap().iter().map(|r| r.len()).sum()
+    }
+
+    /// Rewind every ring to empty (writers must be quiescent). Rings
+    /// stay registered — live `Handle`s keep working.
+    pub fn reset(&self) {
+        for r in self.rings.lock().unwrap().iter() {
+            r.head.store(0, Ordering::Release);
+        }
+    }
+
+    /// Render all retained events as a Chrome Trace Event Format
+    /// document (the `{"traceEvents": [...]}` object form).
+    pub fn to_chrome_json(&self) -> Json {
+        let rings = self.rings.lock().unwrap();
+        let mut events: Vec<Json> = Vec::new();
+        let mut dropped = 0usize;
+        for ring in rings.iter() {
+            let mut meta = BTreeMap::new();
+            meta.insert("name".to_string(), Json::Str("thread_name".to_string()));
+            meta.insert("ph".to_string(), Json::Str("M".to_string()));
+            meta.insert("pid".to_string(), Json::Num(1.0));
+            meta.insert("tid".to_string(), Json::Num(ring.tid as f64));
+            let mut args = BTreeMap::new();
+            args.insert("name".to_string(), Json::Str(ring.label.clone()));
+            meta.insert("args".to_string(), Json::Obj(args));
+            events.push(Json::Obj(meta));
+            dropped += ring.dropped();
+            for ev in ring.snapshot() {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(ev.name.to_string()));
+                m.insert("pid".to_string(), Json::Num(1.0));
+                m.insert("tid".to_string(), Json::Num(ring.tid as f64));
+                m.insert("ts".to_string(), Json::Num(ev.ts_ns as f64 / 1e3));
+                match ev.kind {
+                    EventKind::Span => {
+                        m.insert("ph".to_string(), Json::Str("X".to_string()));
+                        m.insert("dur".to_string(), Json::Num(ev.dur_ns as f64 / 1e3));
+                    }
+                    EventKind::Instant => {
+                        m.insert("ph".to_string(), Json::Str("i".to_string()));
+                        m.insert("s".to_string(), Json::Str("t".to_string()));
+                    }
+                }
+                if ev.arg != NO_ARG {
+                    let mut args = BTreeMap::new();
+                    args.insert("v".to_string(), Json::Num(ev.arg as f64));
+                    m.insert("args".to_string(), Json::Obj(args));
+                }
+                events.push(Json::Obj(m));
+            }
+        }
+        let mut other = BTreeMap::new();
+        other.insert("dropped_events".to_string(), Json::Num(dropped as f64));
+        let mut doc = BTreeMap::new();
+        doc.insert("traceEvents".to_string(), Json::Arr(events));
+        doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        doc.insert("otherData".to_string(), Json::Obj(other));
+        Json::Obj(doc)
+    }
+}
+
+static GLOBAL: OnceLock<Sink> = OnceLock::new();
+
+thread_local! {
+    static HANDLE: std::cell::OnceCell<Handle> = std::cell::OnceCell::new();
+}
+
+fn global() -> &'static Sink {
+    GLOBAL.get_or_init(|| Sink::new(DEFAULT_CAPACITY))
+}
+
+fn with_handle(f: impl FnOnce(&Handle)) {
+    HANDLE.with(|cell| {
+        let h = cell.get_or_init(|| {
+            let label = std::thread::current()
+                .name()
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| "thread".to_string());
+            global().register(&label)
+        });
+        f(h);
+    });
+}
+
+/// Is global tracing on? Two atomic-ish loads; `false` without
+/// allocating anything when tracing was never enabled.
+#[inline]
+pub fn enabled() -> bool {
+    match GLOBAL.get() {
+        Some(s) => s.enabled(),
+        None => false,
+    }
+}
+
+/// Turn global recording on (constructs the sink on first use).
+pub fn enable() {
+    global().set_enabled(true);
+}
+
+/// Turn global recording off. Already-recorded events are retained
+/// until [`reset`].
+pub fn disable() {
+    if let Some(s) = GLOBAL.get() {
+        s.set_enabled(false);
+    }
+}
+
+/// Rewind every global ring (writers must be quiescent).
+pub fn reset() {
+    if let Some(s) = GLOBAL.get() {
+        s.reset();
+    }
+}
+
+/// Record an instant event on the calling thread's lane.
+#[inline]
+pub fn instant(name: &'static str, arg: u64) {
+    if enabled() {
+        with_handle(|h| h.instant(name, arg));
+    }
+}
+
+/// Measure a phase the serve path already times: returns
+/// `start.elapsed()` in seconds and, when tracing is on, also records
+/// the span. The single `elapsed()` read serves both purposes, so the
+/// traced and untraced paths perform identical timing arithmetic.
+#[inline]
+pub fn phase_secs(name: &'static str, start: Instant, arg: u64) -> f64 {
+    let dur = start.elapsed();
+    if enabled() {
+        with_handle(|h| h.span_at(name, start, dur, arg));
+    }
+    dur.as_secs_f64()
+}
+
+/// RAII span guard: records a complete ("X") event on drop. When
+/// tracing is off the guard holds no timestamp and drop is free.
+#[must_use = "the span ends when this guard drops"]
+pub struct Span {
+    name: &'static str,
+    arg: u64,
+    start: Option<Instant>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let dur = start.elapsed();
+            with_handle(|h| h.span_at(self.name, start, dur, self.arg));
+        }
+    }
+}
+
+/// Open a span on the calling thread's lane.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    span_arg(name, NO_ARG)
+}
+
+/// Open a span carrying a numeric argument (shard id, layer index).
+#[inline]
+pub fn span_arg(name: &'static str, arg: u64) -> Span {
+    Span { name, arg, start: if enabled() { Some(Instant::now()) } else { None } }
+}
+
+/// Render the global sink as Chrome Trace JSON.
+pub fn global_to_json() -> Json {
+    global().to_chrome_json()
+}
+
+/// Total events dropped (oldest-first) across all global rings.
+pub fn global_dropped() -> usize {
+    match GLOBAL.get() {
+        Some(s) => s.dropped(),
+        None => 0,
+    }
+}
+
+/// Write the global trace to `path` as Chrome Trace JSON.
+pub fn write(path: &str) -> anyhow::Result<()> {
+    let doc = global_to_json();
+    std::fs::write(path, format!("{doc}\n"))
+        .map_err(|e| anyhow::anyhow!("writing trace {path}: {e}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drop_oldest_is_exact() {
+        let sink = Sink::new(8);
+        let h = sink.register("t");
+        for i in 0..20u64 {
+            h.instant("e", i);
+        }
+        assert_eq!(sink.dropped(), 12, "drop counter is exactly head - cap");
+        assert_eq!(sink.retained(), 8);
+        // the retained window is the *newest* 8 events
+        let evs = h.ring.snapshot();
+        let args: Vec<u64> = evs.iter().map(|e| e.arg).collect();
+        assert_eq!(args, (12..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let sink = Sink::new(64);
+        let h = sink.register("main");
+        let t0 = Instant::now();
+        h.instant("admit", 3);
+        h.span_at("tick", t0, Duration::from_micros(250), NO_ARG);
+        let doc = sink.to_chrome_json();
+        // round-trips through the repo's own parser
+        let doc = Json::parse(&doc.to_string()).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // thread_name metadata + 2 events
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].get("ph").unwrap().as_str().unwrap(), "M");
+        assert_eq!(
+            evs[0].get("args").unwrap().get("name").unwrap().as_str().unwrap(),
+            "main"
+        );
+        assert_eq!(evs[1].get("ph").unwrap().as_str().unwrap(), "i");
+        assert_eq!(evs[1].get("args").unwrap().get("v").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(evs[2].get("ph").unwrap().as_str().unwrap(), "X");
+        assert!((evs[2].get("dur").unwrap().as_f64().unwrap() - 250.0).abs() < 1e-6);
+        // NO_ARG spans carry no args object
+        assert!(evs[2].get("args").is_none());
+        assert_eq!(
+            doc.get("otherData").unwrap().get("dropped_events").unwrap().as_usize().unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn reset_rewinds_rings() {
+        let sink = Sink::new(4);
+        let h = sink.register("t");
+        for i in 0..10 {
+            h.instant("e", i);
+        }
+        assert!(sink.dropped() > 0);
+        sink.reset();
+        assert_eq!(sink.retained(), 0);
+        assert_eq!(sink.dropped(), 0);
+        h.instant("e", 99);
+        assert_eq!(sink.retained(), 1);
+    }
+
+    #[test]
+    fn disabled_global_probes_are_inert() {
+        // must not enable tracing here: tests share the process-global
+        // sink, and enabling it would leak events across tests
+        if !enabled() {
+            instant("noop", 1);
+            let _g = span("noop");
+            let t = Instant::now();
+            let secs = phase_secs("noop", t, NO_ARG);
+            assert!(secs >= 0.0);
+        }
+    }
+}

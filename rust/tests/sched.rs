@@ -101,6 +101,7 @@ fn outputs_independent_of_batch_composition_and_kv_backend() {
                         threads,
                         prefill_chunk,
                         attn: AttnKind::Fused,
+                        stats_interval: 0,
                     };
                     let mut sch = Scheduler::new(&eng, cfg);
                     for r in reqs.iter().cloned() {
@@ -346,6 +347,7 @@ fn chunked_prefill_parity_across_backends_and_threads() {
                         threads,
                         prefill_chunk,
                         attn,
+                        stats_interval: 0,
                     };
                     let mut sch = Scheduler::new(&eng, cfg);
                     for r in reqs.iter().cloned() {
@@ -687,4 +689,146 @@ fn block_exhaustion_backpressure_queues() {
     );
     assert_eq!(sch.pool().free_blocks(), 15, "drain returns every block");
     assert_eq!(sch.pool().free_slots(), 4);
+}
+
+#[test]
+fn trace_ring_threaded_accounting_is_exact() {
+    use omniquant::util::trace::Sink;
+    // below per-ring capacity: concurrent writers on their own lanes lose
+    // nothing (an instance sink, so parallel tests can't pollute counts)
+    let sink = Sink::new(64);
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let sink = &sink;
+            s.spawn(move || {
+                let h = sink.register(&format!("lane-{t}"));
+                for i in 0..40u64 {
+                    h.instant("e", t * 1000 + i);
+                }
+            });
+        }
+    });
+    assert_eq!(sink.dropped(), 0, "below capacity nothing drops");
+    assert_eq!(sink.retained(), 4 * 40);
+
+    // above capacity: drop-oldest with an exact counter, newest retained
+    let sink = Sink::new(32);
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let sink = &sink;
+            s.spawn(move || {
+                let h = sink.register(&format!("lane-{t}"));
+                for i in 0..100u64 {
+                    h.instant("e", i);
+                }
+            });
+        }
+    });
+    assert_eq!(sink.dropped(), 4 * (100 - 32), "per-ring drop counters are exact");
+    assert_eq!(sink.retained(), 4 * 32);
+    let doc = sink.to_chrome_json();
+    let dropped = doc.get("otherData").unwrap().get("dropped_events").unwrap().as_f64().unwrap();
+    assert_eq!(dropped as usize, 4 * (100 - 32), "export reports the exact drop count");
+}
+
+#[test]
+fn tracing_enabled_changes_no_tokens_and_exports_nested_spans() {
+    use omniquant::json::Json;
+    use omniquant::util::trace;
+
+    let eng = engine("llama", "w4a16g32", 6);
+    let spec = WorkloadSpec {
+        requests: 6,
+        mean_interarrival_steps: 0.5,
+        prompt_len: 4,
+        max_new_tokens: 5,
+        temperature: 0.3,
+    };
+    let threads = *thread_counts().last().unwrap();
+    let run = |eng: &Engine| -> Vec<Vec<i32>> {
+        let reqs = synthetic_workload(&spec, eng.desc.vocab, 9);
+        let ids: Vec<usize> = reqs.iter().map(|r| r.id).collect();
+        let mut sch = Scheduler::new(
+            eng,
+            SchedConfig {
+                slots: 2,
+                slot_tokens: 16,
+                eos: None,
+                kv: KvStoreKind::PagedF32,
+                block_tokens: 4,
+                threads,
+                ..Default::default()
+            },
+        );
+        for r in reqs {
+            sch.submit(r).unwrap();
+        }
+        sch.run().unwrap();
+        ids.iter().map(|&id| sch.output(id).unwrap().to_vec()).collect()
+    };
+
+    // the parity pin: flipping the recorder on may change wall-clock
+    // only, never one sampled token
+    let baseline = run(&eng);
+    trace::enable();
+    let traced = run(&eng);
+    trace::disable();
+    assert_eq!(baseline, traced, "span recorder must not change any sampled token");
+
+    // the export round-trips through the repo's own JSON parser
+    let doc = trace::global_to_json();
+    let parsed = Json::parse(&doc.to_string()).expect("chrome trace must be valid JSON");
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let field = |e: &Json, k: &str| e.get(k).and_then(|v| v.as_str().ok().map(String::from));
+    let numf = |e: &Json, k: &str| e.get(k).and_then(|v| v.as_f64().ok());
+
+    // every lifecycle phase shows up, spans are complete ("X"/"i" only —
+    // the exporter can't leave a span unterminated by construction)
+    let mut names = std::collections::BTreeMap::new();
+    for e in events {
+        let ph = field(e, "ph").unwrap();
+        assert!(
+            ph == "X" || ph == "i" || ph == "M",
+            "only complete/instant/metadata events, got ph={ph}"
+        );
+        if ph == "X" {
+            assert!(numf(e, "dur").is_some(), "X events carry a duration");
+        }
+        *names.entry(field(e, "name").unwrap()).or_insert(0usize) += 1;
+    }
+    for key in ["tick", "gemm", "attn", "sample", "shard", "admit", "first_token", "retire"] {
+        assert!(names.get(key).copied().unwrap_or(0) > 0, "no '{key}' events in trace");
+    }
+
+    // spans nest: on any lane that ran scheduler ticks, every sample span
+    // sits inside one of that lane's tick spans (sample is only recorded
+    // from inside the tick) — timestamps, not emission order, prove it
+    let span_of = |e: &Json| -> (f64, f64) {
+        let ts = numf(e, "ts").unwrap();
+        (ts, ts + numf(e, "dur").unwrap())
+    };
+    let tid_of = |e: &Json| numf(e, "tid").unwrap() as u64;
+    let mut ticks_by_tid: std::collections::BTreeMap<u64, Vec<(f64, f64)>> = Default::default();
+    for e in events {
+        if field(e, "ph").as_deref() == Some("X") && field(e, "name").as_deref() == Some("tick") {
+            ticks_by_tid.entry(tid_of(e)).or_default().push(span_of(e));
+        }
+    }
+    let mut checked = 0usize;
+    for e in events {
+        let is_sample = field(e, "ph").as_deref() == Some("X")
+            && field(e, "name").as_deref() == Some("sample");
+        if !is_sample {
+            continue;
+        }
+        let Some(ticks) = ticks_by_tid.get(&tid_of(e)) else { continue };
+        let (s0, s1) = span_of(e);
+        assert!(
+            ticks.iter().any(|&(t0, t1)| t0 <= s0 + 0.01 && s1 <= t1 + 0.01),
+            "sample span [{s0}, {s1}] outside every tick span on its lane"
+        );
+        checked += 1;
+    }
+    assert!(checked > 0, "nesting check must have covered at least one sample span");
+    trace::reset();
 }

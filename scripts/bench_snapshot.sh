@@ -11,7 +11,10 @@
 # fused streaming-KV attention path against the gather baseline
 # (attn_sweep / step_p90_improvement_fused_vs_gather / attn_share; every
 # continuous summary also records per-tick gemm/attn/sample phase
-# timings) — and writes the machine-readable BENCH_serve.json at the
+# timings), plus a trace-overhead check rerunning the slab continuous
+# point with the span recorder enabled (step_p90_ms_trace_off /
+# step_p90_ms_trace_on / trace_overhead_pct — the < 5% observability
+# budget) — and writes the machine-readable BENCH_serve.json at the
 # repo root, plus results/serve-bench.md. Pass extra flags through to
 # `repro` (e.g. drop --quick for the bigger model).
 #
