@@ -193,10 +193,12 @@ pub struct ServeConfig {
     /// bit-exact; the knob only bounds how long a prompt may stall
     /// co-scheduled decodes.
     pub prefill_chunk: usize,
-    /// Attention read path: "fused" (stream K/V straight off the store,
-    /// the default) | "gather" (the pre-fused materialize-then-attend
-    /// baseline, kept for benchmarking). Parsed by `serve::AttnKind`,
-    /// which this layer stays decoupled from; bit-exact either way.
+    /// Attention read path: "flash" (single-pass online softmax over
+    /// head-major KV blocks, epsilon-bounded against the reference) |
+    /// "fused" (two-pass streaming fused-KV, the default, bit-exact) |
+    /// "gather" (the materialize-then-attend baseline, bit-exact).
+    /// Parsed by `serve::AttnKind`, which this layer stays decoupled
+    /// from.
     pub attn: String,
     /// Chrome-trace output path (`util::trace`); "" = tracing off.
     /// Observability only — enabling it never changes a sampled token.
@@ -365,7 +367,7 @@ kv = "paged-q8"
 block_tokens = 32
 threads = 4
 prefill_chunk = 8
-attn = "gather"
+attn = "flash"
 trace = "/tmp/trace.json"
 stats_interval = 16
 "#,
@@ -380,7 +382,7 @@ stats_interval = 16
         assert_eq!(cfg.serve.block_tokens, 32);
         assert_eq!(cfg.serve.threads, 4);
         assert_eq!(cfg.serve.prefill_chunk, 8);
-        assert_eq!(cfg.serve.attn, "gather");
+        assert_eq!(cfg.serve.attn, "flash");
         assert_eq!(cfg.serve.trace, "/tmp/trace.json");
         assert_eq!(cfg.serve.stats_interval, 16);
         let d = ExperimentConfig::parse("model = \"m\"").unwrap();

@@ -55,6 +55,72 @@ pub fn vecmat(x: &[f32], b: &Tensor) -> Vec<f32> {
     y
 }
 
+/// Width of the explicit lane kernels below. Eight f32 accumulators is wide
+/// enough for the compiler to emit one AVX2 / NEON-pair vector op per chunk
+/// without spilling on the register-poor targets we care about.
+const LANES: usize = 8;
+
+/// dot(a, b) with a fixed-width accumulator array and a scalar tail.
+///
+/// The `LANES` partial sums are reduced at the end, so the summation order
+/// differs from a serial fold — callers on an epsilon contract only
+/// (the flash attention path); bit-exact paths must keep their serial dots.
+pub fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = [0.0f32; LANES];
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let i = c * LANES;
+        for l in 0..LANES {
+            acc[l] += a[i + l] * b[i + l];
+        }
+    }
+    let mut s = 0.0f32;
+    for l in 0..LANES {
+        s += acc[l];
+    }
+    for i in chunks * LANES..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// out += p * x, element-wise over `LANES`-wide chunks plus a scalar tail.
+///
+/// Element-wise, so each `out[j]` sees exactly the same operation sequence a
+/// serial loop would — bit-identical to the naive form (unlike `dot_lanes`).
+pub fn axpy_lanes(p: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let i = c * LANES;
+        for l in 0..LANES {
+            out[i + l] += p * x[i + l];
+        }
+    }
+    for i in chunks * LANES..n {
+        out[i] += p * x[i];
+    }
+}
+
+/// out *= c, element-wise (used by online softmax to rescale the running
+/// accumulator when a new max arrives). Bit-identical to a naive loop.
+pub fn scale_lanes(c: f32, out: &mut [f32]) {
+    let n = out.len();
+    let chunks = n / LANES;
+    for ch in 0..chunks {
+        let i = ch * LANES;
+        for l in 0..LANES {
+            out[i + l] *= c;
+        }
+    }
+    for i in chunks * LANES..n {
+        out[i] *= c;
+    }
+}
+
 /// H += X^T X for a batch of rows X(t,k) (Hessian accumulation for GPTQ).
 pub fn accumulate_gram(h: &mut Tensor, x: &Tensor) {
     let (t, k) = (x.shape()[0], x.shape()[1]);
@@ -219,6 +285,43 @@ mod tests {
         let fast = vecmat(&x, &b);
         for (u, v) in full.data().iter().zip(&fast) {
             assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dot_lanes_matches_serial() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 7, 8, 9, 16, 37, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let serial: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let lanes = dot_lanes(&a, &b);
+            assert!(
+                (serial - lanes).abs() <= 1e-5 * (1.0 + serial.abs()),
+                "n={n}: {serial} vs {lanes}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_and_scale_lanes_bit_identical_to_serial() {
+        let mut rng = Rng::new(12);
+        for n in [0usize, 1, 7, 8, 9, 16, 37, 100] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut b = a.clone();
+            let p = rng.normal();
+            axpy_lanes(p, &x, &mut a);
+            for (bi, xi) in b.iter_mut().zip(&x) {
+                *bi += p * xi;
+            }
+            assert_eq!(a, b, "axpy n={n}");
+            let c = rng.normal();
+            scale_lanes(c, &mut a);
+            for bi in b.iter_mut() {
+                *bi *= c;
+            }
+            assert_eq!(a, b, "scale n={n}");
         }
     }
 

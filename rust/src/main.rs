@@ -427,7 +427,7 @@ const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|trace-check|rep
     \u{20}          [--prompt-len P] [--generate] [--temp X] [--synthetic]\n\
     \u{20}          [--continuous --requests N --interarrival X --slots S --json F\n\
     \u{20}           --kv slab|paged|paged-q8 --block-tokens B --threads T\n\
-    \u{20}           --prefill-chunk C --attn fused|gather\n\
+    \u{20}           --prefill-chunk C --attn flash|fused|gather\n\
     \u{20}           --trace F --stats-interval N]\n\
     \u{20}          (--continuous: open-loop staggered arrivals through the\n\
     \u{20}           pooled-KV continuous-batching scheduler; --kv picks the KV\n\
@@ -437,9 +437,11 @@ const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|trace-check|rep
     \u{20}           core, bit-identical output at any count; --prefill-chunk\n\
     \u{20}           caps prompt tokens prefilled per tick, interleaved with\n\
     \u{20}           decode, 0 = unchunked, bit-identical at any chunk;\n\
-    \u{20}           --attn picks the attention read path: fused streams K/V\n\
-    \u{20}           straight off the store (default), gather is the\n\
-    \u{20}           materialize-then-attend baseline, bit-identical;\n\
+    \u{20}           --attn picks the attention read path: flash streams K/V\n\
+    \u{20}           once per head with an online softmax over head-major\n\
+    \u{20}           blocks (epsilon-bounded vs the reference), fused streams\n\
+    \u{20}           twice (default), gather materializes then attends;\n\
+    \u{20}           fused and gather are bit-identical to each other;\n\
     \u{20}           --synthetic: serve a fresh synthetic model, no\n\
     \u{20}           artifacts/PJRT needed; --trace writes a Chrome Trace\n\
     \u{20}           Event JSON of the run, openable in Perfetto, with no\n\

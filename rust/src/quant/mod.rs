@@ -326,6 +326,107 @@ pub fn q8_axpy_lanes(
     }
 }
 
+/// Width of the explicit Q8 lane kernels below (matches `linalg::LANES`).
+const Q8_LANES: usize = 8;
+
+/// Dot of `q` against a **contiguous segment** of Q8 codes covering logical
+/// lanes `[j0, j0 + q.len())` of a `d`-lane row. Unlike [`q8_dot_lanes`],
+/// `codes` here is just the segment itself (`codes.len() == q.len()`) rather
+/// than the whole row — the shape the head-major KV layout hands the flash
+/// attention kernel, where one head's lanes for one token sit contiguously.
+/// `scales` is still the full row's `[h, z]` pairs (token-indexed, shared by
+/// every head of that token), and `d` names the logical row width so group
+/// boundaries land where `quantize_row_q8` put them.
+///
+/// Accumulates into a fixed `Q8_LANES`-wide array the compiler can keep in
+/// vector registers, reduced at the end — so the summation order differs
+/// from the serial [`q8_dot_lanes`] fold. Flash-only: callers on the
+/// bit-exact contract must use `q8_dot_lanes`.
+pub fn q8_dot_lanes_seg(
+    q: &[f32],
+    codes: &[u8],
+    scales: &[f32],
+    group: usize,
+    d: usize,
+    j0: usize,
+) -> f32 {
+    let g = group_len(d, group);
+    debug_assert_eq!(codes.len(), q.len());
+    debug_assert!(j0 + q.len() <= d);
+    debug_assert_eq!(scales.len(), 2 * q8_row_groups(d, group));
+    const W: usize = Q8_LANES;
+    let mut acc = [0.0f32; W];
+    let mut s = 0.0f32;
+    let mut j = 0usize;
+    while j < q.len() {
+        let lane = j0 + j;
+        let gi = lane / g;
+        let h = scales[2 * gi];
+        let z = scales[2 * gi + 1];
+        let end = q.len().min(j + (g - lane % g));
+        let mut i = j;
+        while i + W <= end {
+            for l in 0..W {
+                acc[l] += q[i + l] * ((codes[i + l] as f32 - z) * h);
+            }
+            i += W;
+        }
+        while i < end {
+            s += q[i] * ((codes[i] as f32 - z) * h);
+            i += 1;
+        }
+        j = end;
+    }
+    for a in acc {
+        s += a;
+    }
+    s
+}
+
+/// `out[j] += p * dequant(codes[j])` over a contiguous code segment covering
+/// logical lanes `[j0, j0 + out.len())` of a `d`-lane row — the segment twin
+/// of [`q8_axpy_lanes`], taking the codes slice directly like
+/// [`q8_dot_lanes_seg`]. Element-wise (each `out[j]` sees the same op
+/// sequence as the serial form), so the result is bit-identical to
+/// `q8_axpy_lanes` on the whole row; the `Q8_LANES`-wide chunking only
+/// shapes the loop for vectorization.
+pub fn q8_axpy_lanes_seg(
+    p: f32,
+    codes: &[u8],
+    scales: &[f32],
+    group: usize,
+    d: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    let g = group_len(d, group);
+    debug_assert_eq!(codes.len(), out.len());
+    debug_assert!(j0 + out.len() <= d);
+    debug_assert_eq!(scales.len(), 2 * q8_row_groups(d, group));
+    const W: usize = Q8_LANES;
+    let n = out.len();
+    let mut j = 0usize;
+    while j < n {
+        let lane = j0 + j;
+        let gi = lane / g;
+        let h = scales[2 * gi];
+        let z = scales[2 * gi + 1];
+        let end = n.min(j + (g - lane % g));
+        let mut i = j;
+        while i + W <= end {
+            for l in 0..W {
+                out[i + l] += p * ((codes[i + l] as f32 - z) * h);
+            }
+            i += W;
+        }
+        while i < end {
+            out[i] += p * ((codes[i] as f32 - z) * h);
+            i += 1;
+        }
+        j = end;
+    }
+}
+
 /// Weight memory in bytes for a packed layer at `bits` with group scales
 /// (f16-equivalent bookkeeping: scale+zp per group stored as 2x2 bytes).
 pub fn packed_bytes(cin: usize, cout: usize, bits: u8, group: usize) -> usize {
@@ -512,6 +613,45 @@ mod tests {
                     want_acc[j] += p * deq[j0 + j];
                 }
                 q8_axpy_lanes(p, &codes, &scales, group, j0, &mut got_acc);
+                for (j, (a, b)) in want_acc.iter().zip(&got_acc).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "axpy d={d} group={group} j0={j0} lane {j}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q8_seg_kernels_match_whole_row_forms() {
+        // the flash-attention contract: the segment kernels take the codes
+        // slice for one (token, head) directly. The axpy twin must be
+        // bit-identical to q8_axpy_lanes; the dot twin uses a lane-wide
+        // accumulator so it only has to agree within a tight epsilon.
+        let mut rng = Rng::new(23);
+        let cases = [(192usize, 64usize, 32usize), (192, 48, 32), (96, 64, 24), (64, 0, 16)];
+        for (d, group, hd) in cases {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal() * 2.0).collect();
+            let ng = q8_row_groups(d, group);
+            let mut codes = vec![0u8; d];
+            let mut scales = vec![0.0f32; 2 * ng];
+            quantize_row_q8(&row, group, &mut codes, &mut scales);
+            let q: Vec<f32> = (0..hd).map(|_| rng.normal()).collect();
+            let p = rng.normal();
+            for j0 in (0..d).step_by(hd) {
+                let seg = &codes[j0..j0 + hd];
+                let want_dot = q8_dot_lanes(&q, &codes, &scales, group, j0);
+                let got_dot = q8_dot_lanes_seg(&q, seg, &scales, group, d, j0);
+                assert!(
+                    (want_dot - got_dot).abs() <= 1e-5 * (1.0 + want_dot.abs()),
+                    "dot d={d} group={group} j0={j0}: {want_dot} vs {got_dot}"
+                );
+                let mut want_acc: Vec<f32> = (0..hd).map(|j| (j as f32) * 0.125).collect();
+                let mut got_acc = want_acc.clone();
+                q8_axpy_lanes(p, &codes, &scales, group, j0, &mut want_acc);
+                q8_axpy_lanes_seg(p, seg, &scales, group, d, j0, &mut got_acc);
                 for (j, (a, b)) in want_acc.iter().zip(&got_acc).enumerate() {
                     assert_eq!(
                         a.to_bits(),

@@ -1,99 +1,127 @@
-//! Streaming fused-KV attention for the batched serve path.
+//! Attention kernels for the batched serve path: flash-style single-pass
+//! (the serving default), streaming fused-KV, and the materialize-then-
+//! attend gather baseline.
 //!
-//! Before this module, every tick's attention (PR 2→4) first
-//! **materialized** each sequence's whole cached K/V window: `KvPool::
-//! layer_kv` gathered (and, for `paged-q8`, dequantized) `t` rows into
-//! per-step f32 scratch — an O(t·d) write immediately re-read by the
-//! scores/softmax/weighted-sum loops, the 2x read amplification called
-//! out in ROADMAP — and those loops then ran **serially** on the
-//! submitting thread while the gemm worker pool idled. As contexts grow,
-//! that serial, copy-amplified loop dominates the tick: the gemms stream
-//! each weight matrix once per tick (PR 4) on all cores (PR 3), but the
-//! KV path did neither.
+//! # The three arms
 //!
-//! [`attention_fused`] fixes both:
+//! * [`attention_flash`] — **single-pass online softmax**. Each (row,
+//!   head) item streams its K/V window exactly **once** per decode step:
+//!   the softmax max and denominator are carried as running state
+//!   (`m`, `l`) and the output stripe itself is the f32 accumulator,
+//!   rescaled by `exp(m_old − m_new)` whenever a new max arrives. Halves
+//!   KV read amplification versus the two-pass fused kernel at every
+//!   context length. Reads go through [`KvPool::head_runs`], a per-head
+//!   block-run cursor: on a head-major pool (`KvLayout::HeadMajor`, the
+//!   layout the scheduler picks for flash) one item walks one contiguous
+//!   `head_dim`-wide run per block; on token-major pools the cursor
+//!   degrades to `d`-strided reads, so flash works on any pool. The
+//!   innermost q·k dot and p·v axpy run through explicit fixed-width
+//!   lane kernels (`linalg::dot_lanes` / `linalg::axpy_lanes`; Q8:
+//!   `quant::q8_dot_lanes_seg` / `quant::q8_axpy_lanes_seg`, which
+//!   dequantize in registers).
+//! * [`attention_fused`] — the PR 5 two-pass kernel: pass 1 computes all
+//!   scores (streamed run-wise off the store via [`KvPool::runs`]), then
+//!   an exact softmax, then pass 2 streams V for the weighted sum. Reads
+//!   K/V **twice** per item, but its f32 op order is exactly the gather
+//!   path's — the bit-exact streaming arm.
+//! * [`attention_gather`] — the pre-fused baseline, preserved verbatim:
+//!   materialize each sequence's whole `(t, d)` K/V window into f32
+//!   scratch via `KvPool::layer_kv`, then attend serially.
 //!
-//! * **Streaming reads** — K/V are read directly from the store through
-//!   [`KvPool::runs`], a block-run cursor that borrows contiguous arena
-//!   runs zero-copy. The f32 backends stream the arena rows straight into
-//!   the q·k and p·v loops (slab: one run, exactly the borrow `layer_kv`
-//!   returned; paged: one run per block). The Q8 backend streams raw
-//!   codes + per-row scales and dequantizes **in registers** inside the
-//!   loops (`quant::q8_dot_lanes` / `quant::q8_axpy_lanes`) — the f32
-//!   row never exists in memory, so a Q8 attention read moves ~4x fewer
-//!   bytes than the gather path's quantized-read-plus-f32-scratch walk.
-//! * **Thread-parallel fan-out** — the independent (run-row, head) items
-//!   are flattened (`item = row * n_heads + head`) and fanned across the
-//!   existing `util::ThreadPool` via `run_items`. Each item owns the
-//!   disjoint `(row, head·head_dim)` stripe of the output `ao`
-//!   (`StripedMut`), and each worker shard owns a private softmax scores
-//!   row, so shards never share mutable state.
+//! # The epsilon contract (flash) vs the bit-exact contract (fused/gather)
 //!
-//! # Why this is bit-exact (the op-order contract)
+//! Fused and gather are **bit-for-bit identical** on all three KV
+//! backends at any thread count — no f32 operation is added, removed or
+//! reordered between them (per-element in-register Q8 dequant reproduces
+//! `dequantize_row_q8`'s rounding sequence exactly, and each item's
+//! reductions run serially on one worker). The determinism suite in
+//! `tests/sched.rs` holds them to that.
 //!
-//! The fused path must produce **bit-for-bit** the outputs of the gather
-//! path on all three backends, at any thread count. That holds because
-//! no f32 operation is added, removed, or reordered:
+//! Flash **cannot** join that loop: online softmax is algebraically equal
+//! to exact softmax (`exp(s_i − m) / Σ exp(s_j − m)` with the same final
+//! `m`), but f32 addition is not associative and the single pass
+//! necessarily changes summation order — the denominator `l` and the
+//! accumulator pick up rounded `exp(m_old − m_new)` rescale factors as
+//! the running max evolves, and the lane-kernel dot reduces eight partial
+//! sums instead of one serial chain. So flash carries an **epsilon
+//! contract** instead: its logits match the gather reference within
+//! [`ATTN_FLASH_REL_ERR`] (relative, per element), verified across
+//! backends, thread counts and block boundaries by the parity suite.
+//! Gather is the reference arm; fused is the bit-exact streaming arm;
+//! flash is the fast arm. Within one binary flash is still deterministic:
+//! thread count never splits an item's reduction, so repeated runs give
+//! identical bits — only cross-arm comparison is epsilon-bounded.
 //!
-//! * f32 backends: the cursor yields the same arena bytes the gather
-//!   memcpy'd; the dot/softmax/weighted-sum loops are the unmodified
-//!   scalar loops, visiting cached positions in the same ascending order
-//!   (the cursor yields block runs in logical order).
-//! * Q8: `dequantize_row_q8` computes `(code as f32 − z) * h` per lane,
-//!   and the gather path then multiplied that scratch value into the dot
-//!   (`s += q[j] * krow[j]`) or the weighted sum (`ao[j] += p * vrow[j]`).
-//!   The in-register helpers fuse the same three-rounding sequence —
-//!   `(code − z)` rounds, `· h` rounds, `q·(…)` rounds, accumulate rounds
-//!   — per element, in the same lane order, so every intermediate f32 is
-//!   identical.
-//! * Parallelism: one (row, head) item runs start-to-finish on one
-//!   worker. The softmax reduction over cached positions and the p·v
-//!   accumulation over positions are per-item and never split, so the
-//!   partition decides only *ownership* of an item, never the order of
-//!   any reduction (the `util::threads` contract). No two items write
-//!   the same `ao` stripe.
+//! # Parallel fan-out (flash and fused)
 //!
-//! [`attention_gather`] preserves the pre-fused materialize-then-attend
-//! path verbatim — it is the measured baseline for the fused-vs-gather
-//! sweep in `serve::bench` and the reference arm of the parity suite in
-//! `tests/sched.rs` (`--attn gather` / [`AttnKind::Gather`] select it).
+//! The independent (row, head) items are flattened
+//! (`item = row * n_heads + head`) and fanned across the `util::
+//! ThreadPool` via `run_items`. Each item owns the disjoint
+//! `(row, head·head_dim)` stripe of the output `ao` (`StripedMut`); the
+//! fused path additionally gives each worker shard a private softmax
+//! scores row, while flash needs no scores scratch at all (its running
+//! state is three scalars plus the output stripe).
 //!
 //! [`KvPool::runs`]: super::sched::KvPool::runs
+//! [`KvPool::head_runs`]: super::sched::KvPool::head_runs
 
 use anyhow::{bail, Result};
 
-use super::sched::pool::{KvSlice, KV_GROUP};
+use super::sched::pool::{KvHeadSlice, KvSlice, KV_GROUP};
 use super::sched::{KvPool, SlotId};
-use crate::quant::{q8_axpy_lanes, q8_dot_lanes};
+use crate::linalg::{axpy_lanes, dot_lanes, scale_lanes};
+use crate::quant::{q8_axpy_lanes, q8_axpy_lanes_seg, q8_dot_lanes, q8_dot_lanes_seg};
 use crate::util::{trace, StripedMut, ThreadPool};
 
+/// Relative per-element error bound between flash logits and the gather
+/// reference: `|flash − gather| <= ATTN_FLASH_REL_ERR * (1 + |gather|)`.
+///
+/// Observed drift at the test/bench model sizes is ~1e-5 (a handful of
+/// ulps through the rescale chain and the lane-wide dot reduction); 1e-3
+/// documents an order-of-magnitude headroom while staying far below any
+/// real defect, which shows up as O(1) disagreement. Q8 quantization
+/// error does **not** count against this bound — both arms read the same
+/// codes, so it cancels.
+pub const ATTN_FLASH_REL_ERR: f32 = 1e-3;
+
 /// Attention read-path selector, threaded from `[serve] attn` / the
-/// `serve --continuous --attn` flag down to `BatchScratch`. Both paths
-/// are bit-for-bit identical (parity-tested); the knob trades only
-/// wall-clock and scratch memory, and exists so the bench can measure
-/// the fused path against the gather baseline it replaced.
+/// `serve --continuous --attn` flag down to `BatchScratch`. Fused and
+/// gather are bit-for-bit identical (parity-tested) reference arms;
+/// flash is the single-pass fast arm, held to [`ATTN_FLASH_REL_ERR`]
+/// against gather (see the module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AttnKind {
+    /// Single-pass online-softmax kernel: one streamed K/V walk per
+    /// (row, head) item, no scores scratch, lane kernels in the inner
+    /// loops. Epsilon-bounded against gather, not bit-exact.
+    Flash,
     /// Stream K/V straight out of the store: block-table-direct reads,
     /// Q8 dequantized in registers, (row, head) items fanned across the
-    /// worker pool. The default.
+    /// worker pool. Two passes (scores, then weighted sum); bit-exact
+    /// with gather. The default.
     Fused,
     /// The pre-fused baseline: materialize each sequence's K/V window
     /// into f32 scratch via `KvPool::layer_kv`, then attend serially.
+    /// The bit-exact reference arm.
     Gather,
 }
 
 impl AttnKind {
     pub fn parse(s: &str) -> Result<AttnKind> {
         match s.to_ascii_lowercase().as_str() {
+            "flash" => Ok(AttnKind::Flash),
             "fused" => Ok(AttnKind::Fused),
             "gather" => Ok(AttnKind::Gather),
-            other => bail!("unknown attention path '{other}' (expected fused|gather)"),
+            other => bail!(
+                "unknown attention path '{other}': expected flash|fused|gather \
+                 (--attn flag / serve.attn in TOML)"
+            ),
         }
     }
 
     pub fn name(&self) -> &'static str {
         match self {
+            AttnKind::Flash => "flash",
             AttnKind::Fused => "fused",
             AttnKind::Gather => "gather",
         }
@@ -134,6 +162,114 @@ fn check_score_capacity(max_t: usize, score_cap: usize) {
         "attention over {max_t} cached positions exceeds the scores capacity {score_cap} \
          (BatchScratch was sized for a smaller max_t at new_batch_scratch)"
     );
+}
+
+/// Flash-style single-pass attention over one layer of the stacked
+/// batch: for every (row, head) item, one streamed walk of the item's
+/// K/V window with online softmax (see the module docs). `q` and `ao`
+/// are `(rows, d)` row-major; there is **no** scores scratch — the
+/// output stripe is the accumulator and the softmax state is two
+/// scalars.
+///
+/// Per cached position with score `s` (already scaled), running max `m`
+/// (init `f32::MIN`, matching the reference arms' max fold) and running
+/// denominator `l` (init 0):
+///
+/// * `s <= m`: `p = exp(s − m)`, `l += p`, `ao += p · v` — the common
+///   case once the max has settled.
+/// * `s > m`: rescale history by `c = exp(m − s)`: `ao *= c`,
+///   `l = l·c + 1`, `ao += v`, `m = s`. At the first position `c`
+///   underflows to zero against the empty accumulator, so initialization
+///   falls out of the same branch.
+///
+/// Finalize with `ao *= 1/l`. Identical math to
+/// `softmax(q·K^T · scale) · V` with the final `m` subtracted — only the
+/// f32 rounding points differ, which is the epsilon contract
+/// ([`ATTN_FLASH_REL_ERR`]).
+pub(crate) fn attention_flash(
+    pool: &KvPool,
+    layer: usize,
+    rows: &[RowMeta],
+    n_heads: usize,
+    head_dim: usize,
+    q: &[f32],
+    ao: &mut [f32],
+    tp: &ThreadPool,
+) {
+    let w = rows.len();
+    if w == 0 {
+        return;
+    }
+    // same kernel-level span as the other arms, for like-for-like traces
+    let _t = trace::span_arg("attn_kernel", (w * n_heads) as u64);
+    let d = q.len() / w;
+    debug_assert_eq!(q.len(), w * d);
+    debug_assert_eq!(ao.len(), w * d);
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    // lanes past n_heads * head_dim (none in practice) are untouched by
+    // the head items; zero them to match the reference arms
+    if n_heads * head_dim < d {
+        for s in 0..w {
+            ao[s * d + n_heads * head_dim..(s + 1) * d].iter_mut().for_each(|a| *a = 0.0);
+        }
+    }
+    let aoview = StripedMut::new(ao, w, d);
+    tp.run_items(w * n_heads, &|_worker, item| {
+        let (row, h) = (item / n_heads, item % n_heads);
+        let RowMeta { slot, t } = rows[row];
+        let b = h * head_dim;
+        let qseg = &q[row * d + b..row * d + b + head_dim];
+        // SAFETY: (row, head) stripes of `ao` are disjoint across items.
+        let aoseg = unsafe { aoview.stripe(row, b, b + head_dim) };
+        aoseg.iter_mut().for_each(|a| *a = 0.0);
+        let mut m = f32::MIN;
+        let mut l = 0.0f32;
+        // the single pass: K and V of each position read exactly once
+        for (_r0, n, slice) in pool.head_runs(slot, layer, t, h, head_dim) {
+            match slice {
+                KvHeadSlice::F32 { k, v, stride } => {
+                    for i in 0..n {
+                        let kseg = &k[i * stride..i * stride + head_dim];
+                        let s = dot_lanes(qseg, kseg) * scale;
+                        let vseg = &v[i * stride..i * stride + head_dim];
+                        if s <= m {
+                            let p = (s - m).exp();
+                            l += p;
+                            axpy_lanes(p, vseg, aoseg);
+                        } else {
+                            let c = (m - s).exp();
+                            scale_lanes(c, aoseg);
+                            l = l * c + 1.0;
+                            axpy_lanes(1.0, vseg, aoseg);
+                            m = s;
+                        }
+                    }
+                }
+                KvHeadSlice::Q8 { qk, qv, sk, sv, stride } => {
+                    let ng2 = sk.len() / n;
+                    for i in 0..n {
+                        let kseg = &qk[i * stride..i * stride + head_dim];
+                        let ksc = &sk[i * ng2..(i + 1) * ng2];
+                        let s = q8_dot_lanes_seg(qseg, kseg, ksc, KV_GROUP, d, b) * scale;
+                        let vseg = &qv[i * stride..i * stride + head_dim];
+                        let vsc = &sv[i * ng2..(i + 1) * ng2];
+                        if s <= m {
+                            let p = (s - m).exp();
+                            l += p;
+                            q8_axpy_lanes_seg(p, vseg, vsc, KV_GROUP, d, b, aoseg);
+                        } else {
+                            let c = (m - s).exp();
+                            scale_lanes(c, aoseg);
+                            l = l * c + 1.0;
+                            q8_axpy_lanes_seg(1.0, vseg, vsc, KV_GROUP, d, b, aoseg);
+                            m = s;
+                        }
+                    }
+                }
+            }
+        }
+        scale_lanes(1.0 / l, aoseg);
+    });
 }
 
 /// Streaming fused-KV attention over one layer of the stacked batch:
@@ -332,10 +468,19 @@ mod tests {
 
     #[test]
     fn attn_kind_parses_and_names() {
+        assert_eq!(AttnKind::parse("flash").unwrap(), AttnKind::Flash);
         assert_eq!(AttnKind::parse("fused").unwrap(), AttnKind::Fused);
         assert_eq!(AttnKind::parse("Gather").unwrap(), AttnKind::Gather);
         assert!(AttnKind::parse("warp").is_err());
+        assert_eq!(AttnKind::Flash.name(), "flash");
         assert_eq!(AttnKind::Fused.name(), "fused");
         assert_eq!(AttnKind::Gather.name(), "gather");
+    }
+
+    #[test]
+    fn attn_kind_parse_error_names_flag_and_key() {
+        let err = AttnKind::parse("warp").unwrap_err().to_string();
+        assert!(err.contains("flash|fused|gather"), "{err}");
+        assert!(err.contains("--attn") && err.contains("serve.attn"), "{err}");
     }
 }

@@ -4,9 +4,11 @@
 //! KV-store backends (slab / paged / paged-q8) at equal token capacity so
 //! the tok/s and RM deltas of paging + KV quantization are tracked
 //! together, plus a long-context attention sweep (cached lengths
-//! {256, 1024} x kv x threads) measuring the fused streaming read path
-//! against the gather baseline it replaced (`attn_sweep` /
-//! `step_p90_improvement_fused_vs_gather` / `attn_share`), and a trace
+//! {256, 1024, 4096} x kv x threads, one warmed cache per point shared
+//! across kernels via `KvPool::rewind`) measuring the flash single-pass
+//! online-softmax path against the two-pass fused stream and the gather
+//! baseline (`attn_sweep` / `step_p90_improvement_flash_vs_fused` /
+//! `attn_share`), and a trace
 //! overhead check (`trace_overhead_pct`: slab step-p90 with the span
 //! recorder enabled vs disabled — the < 5% observability budget).
 //! Emitted as
@@ -287,24 +289,37 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
          ({step_p90_improvement:.2}x), ttft p90 {whole_ttft_p90:.1} -> {best_chunk_ttft_p90:.1} ms"
     ));
 
-    // 6. long-context fused-KV attention sweep: decode-heavy ticks at
-    //    cached lengths {256, 1024} across kv backends x threads {1, 4},
-    //    fused streaming reads vs the gather baseline. The context is
-    //    warmed by appending random K/V rows straight through the pool's
-    //    write path (no forward work), so the timed loop isolates the
-    //    per-tick decode cost — exactly the regime where the per-step
-    //    O(t*d) gather materialization dominated. `attn_share` (from the
-    //    engine's phase timers) attributes the tick; the headline
-    //    `step_p90_improvement_fused_vs_gather` is gather/fused step-p90
-    //    on paged-q8 at t=1024, threads=4 (all serve features on).
-    let attn_ctxs: [usize; 2] = [256, 1024];
+    // 6. long-context attention sweep: decode-heavy ticks at cached
+    //    lengths {256, 1024, 4096} across kv backends x threads {1, 4},
+    //    comparing the three read paths — flash (single-pass online
+    //    softmax), fused (two-pass stream) and the gather baseline — on
+    //    ONE warmed cache per (ctx, kv, threads) point: the context is
+    //    warmed once by appending random K/V rows straight through the
+    //    pool's write path (no forward work), and `KvPool::rewind` drops
+    //    the rows each variant's decode appended so every kernel reads
+    //    the same warmed bytes without paying the warm-up again. The
+    //    timed loop isolates per-tick decode cost — the regime where the
+    //    second K/V pass grows with t. Flash is timed on the token-major
+    //    layout here, isolating the algorithmic win (one K/V stream, no
+    //    score buffer); the head-major layout the scheduler picks for
+    //    flash is exercised by the parity suite and the serve smoke.
+    //    `attn_share` (engine phase timers) attributes the tick; the
+    //    headline `step_p90_improvement_flash_vs_fused` is fused/flash
+    //    step-p90 on paged-q8 at the longest context, threads=4 (all
+    //    serve features on).
+    let attn_ctxs: [usize; 3] = [256, 1024, 4096];
     let attn_steps = if opts.quick { 12 } else { 24 };
     let mut attn_map = BTreeMap::new();
-    let mut attn_improvement_headline = 0.0f64;
+    let mut flash_vs_fused_headline = 0.0f64;
+    let mut flash_vs_gather_headline = 0.0f64;
+    let mut fused_vs_gather_headline = 0.0f64;
     let mut attn_share_headline = 0.0f64;
-    // one (kind, threads, ctx, path) point: warm a cache to `ctx` rows
-    // through the pool's write path, then time `steps - 1` decode ticks.
-    // Returns (step p50 ms, step p90 ms, attn p90 ms, attn share).
+    let mut attn_share_flash_headline = 0.0f64;
+    const ATTN_VARIANTS: [AttnKind; 3] = [AttnKind::Flash, AttnKind::Fused, AttnKind::Gather];
+    // one (kind, threads, ctx) point: warm a cache to `ctx` rows through
+    // the pool's write path once, then per variant rewind to `ctx` and
+    // time `steps - 1` decode ticks. Returns (step p50 ms, step p90 ms,
+    // attn p90 ms, attn share) per variant, in ATTN_VARIANTS order.
     fn attn_point(
         engine: &Engine,
         seed: u64,
@@ -312,18 +327,13 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         kind: KvStoreKind,
         threads: usize,
         ctx: usize,
-        attn: AttnKind,
-    ) -> (f64, f64, f64, f64) {
+    ) -> [(f64, f64, f64, f64); 3] {
         let (layers, d) = (engine.desc.n_layers, engine.desc.d_model);
         let slot_len = ctx + steps + 1;
         let mut pool = KvPool::new(kind, 1, layers, slot_len, d, BENCH_BLOCK_TOKENS);
         let slot = pool.lease(slot_len).expect("fresh pool admits one sequence");
-        let mut scratch = engine.new_batch_scratch(1, 1, slot_len, threads);
-        if attn == AttnKind::Gather {
-            scratch = scratch.with_gather_attention();
-        }
-        // warm the cache to `ctx` positions (values don't matter for
-        // timing; Q8 quantizes on append exactly as in real serving)
+        // warm the cache to `ctx` positions once (values don't matter
+        // for timing; Q8 quantizes on append exactly as in real serving)
         let mut rng = Rng::new(seed ^ 0xA77);
         let mut kr = vec![0.0f32; d];
         let mut vr = vec![0.0f32; d];
@@ -335,45 +345,57 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
             }
             pool.advance(slot);
         }
-        // one untimed warmup tick, then the measured decode ticks
-        engine.forward_step(&[1], &[slot], &mut pool, &mut scratch);
-        let mut step_ms = Vec::with_capacity(steps);
-        let mut attn_ms = Vec::with_capacity(steps);
-        let (mut step_sum, mut attn_sum) = (0.0f64, 0.0f64);
-        for i in 0..steps - 1 {
-            let tok = (2 + i % 50) as i32;
-            let t0 = Instant::now();
-            engine.forward_step(&[tok], &[slot], &mut pool, &mut scratch);
-            let dt = t0.elapsed().as_secs_f64();
-            step_ms.push((dt * 1e3) as f32);
-            attn_ms.push((scratch.attn_secs() * 1e3) as f32);
-            step_sum += dt;
-            attn_sum += scratch.attn_secs();
+        let mut out = [(0.0f64, 0.0f64, 0.0f64, 0.0f64); 3];
+        for (vi, &attn) in ATTN_VARIANTS.iter().enumerate() {
+            // every variant reads the same warmed bytes: rewind drops
+            // the rows the previous variant's decode appended past `ctx`
+            pool.rewind(slot, ctx);
+            let mut scratch = engine.new_batch_scratch(1, 1, slot_len, threads);
+            scratch = match attn {
+                AttnKind::Flash => scratch.with_flash_attention(),
+                AttnKind::Fused => scratch,
+                AttnKind::Gather => scratch.with_gather_attention(),
+            };
+            // one untimed warmup tick, then the measured decode ticks
+            engine.forward_step(&[1], &[slot], &mut pool, &mut scratch);
+            let mut step_ms = Vec::with_capacity(steps);
+            let mut attn_ms = Vec::with_capacity(steps);
+            let (mut step_sum, mut attn_sum) = (0.0f64, 0.0f64);
+            for i in 0..steps - 1 {
+                let tok = (2 + i % 50) as i32;
+                let t0 = Instant::now();
+                engine.forward_step(&[tok], &[slot], &mut pool, &mut scratch);
+                let dt = t0.elapsed().as_secs_f64();
+                step_ms.push((dt * 1e3) as f32);
+                attn_ms.push((scratch.attn_secs() * 1e3) as f32);
+                step_sum += dt;
+                attn_sum += scratch.attn_secs();
+            }
+            out[vi] = (
+                stats::median(&step_ms) as f64,
+                stats::percentile(&step_ms, 0.9) as f64,
+                stats::percentile(&attn_ms, 0.9) as f64,
+                if step_sum > 0.0 { attn_sum / step_sum } else { 0.0 },
+            );
         }
-        (
-            stats::median(&step_ms) as f64,
-            stats::percentile(&step_ms, 0.9) as f64,
-            stats::percentile(&attn_ms, 0.9) as f64,
-            if step_sum > 0.0 { attn_sum / step_sum } else { 0.0 },
-        )
+        out
     }
     let last_ctx = attn_ctxs[attn_ctxs.len() - 1];
     for &ctx in &attn_ctxs {
         for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
             for threads in [1usize, 4] {
-                let (f_p50, f_p90, f_attn_p90, f_share) =
-                    attn_point(&engine, opts.seed, attn_steps, kind, threads, ctx, AttnKind::Fused);
-                let (g_p50, g_p90, g_attn_p90, g_share) = attn_point(
-                    &engine,
-                    opts.seed,
-                    attn_steps,
-                    kind,
-                    threads,
-                    ctx,
-                    AttnKind::Gather,
-                );
+                let [fl, fu, ga] = attn_point(&engine, opts.seed, attn_steps, kind, threads, ctx);
+                let (l_p50, l_p90, l_attn_p90, l_share) = fl;
+                let (f_p50, f_p90, f_attn_p90, f_share) = fu;
+                let (g_p50, g_p90, g_attn_p90, g_share) = ga;
+                let flash_vs_fused = f_p90 / l_p90.max(1e-9);
+                let flash_vs_gather = g_p90 / l_p90.max(1e-9);
                 let improvement = g_p90 / f_p90.max(1e-9);
                 let mut o = BTreeMap::new();
+                o.insert("flash_step_p50_ms".to_string(), Json::Num(l_p50));
+                o.insert("flash_step_p90_ms".to_string(), Json::Num(l_p90));
+                o.insert("flash_attn_p90_ms".to_string(), Json::Num(l_attn_p90));
+                o.insert("flash_attn_share".to_string(), Json::Num(l_share));
                 o.insert("fused_step_p50_ms".to_string(), Json::Num(f_p50));
                 o.insert("fused_step_p90_ms".to_string(), Json::Num(f_p90));
                 o.insert("fused_attn_p90_ms".to_string(), Json::Num(f_attn_p90));
@@ -383,6 +405,14 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
                 o.insert("gather_attn_p90_ms".to_string(), Json::Num(g_attn_p90));
                 o.insert("gather_attn_share".to_string(), Json::Num(g_share));
                 o.insert(
+                    "step_p90_improvement_flash_vs_fused".to_string(),
+                    Json::Num(flash_vs_fused),
+                );
+                o.insert(
+                    "step_p90_improvement_flash_vs_gather".to_string(),
+                    Json::Num(flash_vs_gather),
+                );
+                o.insert(
                     "step_p90_improvement_fused_vs_gather".to_string(),
                     Json::Num(improvement),
                 );
@@ -391,15 +421,18 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
                     Json::Obj(o),
                 );
                 if kind == KvStoreKind::PagedQ8 && threads == 4 && ctx == last_ctx {
-                    attn_improvement_headline = improvement;
+                    flash_vs_fused_headline = flash_vs_fused;
+                    flash_vs_gather_headline = flash_vs_gather;
+                    fused_vs_gather_headline = improvement;
                     attn_share_headline = f_share;
+                    attn_share_flash_headline = l_share;
                 }
                 lines.push(format!(
-                    "attn ctx{ctx:<5}{:<9} t{threads}: fused step p90 {f_p90:.3} ms vs gather \
-                     {g_p90:.3} ms ({improvement:.2}x), attn share {:.0}% -> {:.0}%",
+                    "attn ctx{ctx:<5}{:<9} t{threads}: flash step p90 {l_p90:.3} ms vs fused \
+                     {f_p90:.3} ms vs gather {g_p90:.3} ms ({flash_vs_fused:.2}x vs fused), \
+                     attn share {:.0}%",
                     kind.name(),
-                    100.0 * g_share,
-                    100.0 * f_share,
+                    100.0 * l_share,
                 ));
             }
         }
@@ -459,11 +492,15 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
             "attn_sweep_ctx".to_string(),
             Json::Arr(attn_ctxs.iter().map(|&c| num(c as f64)).collect()),
         ),
-        // headline: paged-q8 at the longest context, threads=4 — the
-        // fused streaming read path vs the gather baseline it replaced,
-        // and the attention share of a fused tick at that point
-        ("step_p90_improvement_fused_vs_gather".to_string(), num(attn_improvement_headline)),
+        // headlines: paged-q8 at the longest context, threads=4 — the
+        // flash single-pass path vs the two-pass fused stream it
+        // replaces (and both vs the gather baseline), plus the attention
+        // share of a fused tick (series key) and of a flash tick
+        ("step_p90_improvement_flash_vs_fused".to_string(), num(flash_vs_fused_headline)),
+        ("step_p90_improvement_flash_vs_gather".to_string(), num(flash_vs_gather_headline)),
+        ("step_p90_improvement_fused_vs_gather".to_string(), num(fused_vs_gather_headline)),
         ("attn_share".to_string(), num(attn_share_headline)),
+        ("attn_share_flash".to_string(), num(attn_share_flash_headline)),
         (
             "ttft_p90_ms_prefill_whole_vs_best_chunk".to_string(),
             Json::Arr(vec![num(whole_ttft_p90), num(best_chunk_ttft_p90)]),

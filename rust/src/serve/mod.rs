@@ -48,7 +48,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-pub use attn::AttnKind;
+pub use attn::{AttnKind, ATTN_FLASH_REL_ERR};
 
 use crate::config::QuantSetting;
 use crate::model::ModelParams;
@@ -582,7 +582,7 @@ impl Engine {
                 let base = pool.len(run.slot);
                 let n = run.tokens.len();
                 match attn_kind {
-                    AttnKind::Fused => {
+                    AttnKind::Flash | AttnKind::Fused => {
                         for r in 0..n {
                             row_meta.push(attn::RowMeta { slot: run.slot, t: base + r + 1 });
                         }
@@ -651,13 +651,23 @@ impl Engine {
                 row0 += n;
             }
             // attention over each sequence's own pooled cache (ragged
-            // lengths, intra-chunk causal): the fused kernel streams K/V
-            // straight off the store — block-table-direct reads, Q8
-            // dequantized in registers — with the independent (row, head)
-            // items fanned across the worker pool; the gather baseline
-            // materializes each window through `layer_kv` first. Both are
-            // bit-identical (see `attn`'s op-order contract).
+            // lengths, intra-chunk causal): flash streams K/V once per
+            // (row, head) item with online softmax (epsilon-bounded, see
+            // `attn`'s module docs); the fused kernel streams K/V twice
+            // (scores, then weighted sum) and the gather baseline
+            // materializes each window through `layer_kv` first — those
+            // two are bit-identical (the op-order contract).
             match attn_kind {
+                AttnKind::Flash => attn::attention_flash(
+                    pool,
+                    li,
+                    row_meta,
+                    self.desc.n_heads,
+                    self.desc.head_dim,
+                    &q[..w * d],
+                    &mut ao[..w * d],
+                    tp,
+                ),
                 AttnKind::Fused => attn::attention_fused(
                     pool,
                     li,
@@ -958,7 +968,9 @@ pub struct BatchScratch {
     /// Attention read path. Fused (default) streams K/V straight off the
     /// store and never materializes a window, so the former per-step
     /// `(max_t, d)` f32 gather buffers no longer exist on the serving
-    /// path; Gather keeps them (below) as the measured baseline.
+    /// path; Gather keeps them (below) as the measured baseline; Flash
+    /// streams single-pass with online softmax and needs neither the
+    /// gather buffers nor the scores rows.
     attn: AttnKind,
     /// Gather-mode K/V materialization targets — zero-capacity in fused
     /// mode, sized `(max_t + 1, d)` by `with_gather_attention`.
@@ -1003,6 +1015,17 @@ impl BatchScratch {
         let d = if self.cap > 0 { self.xs.len() / self.cap } else { 0 };
         self.gather_k = vec![0.0; self.score_cap * d];
         self.gather_v = vec![0.0; self.score_cap * d];
+        self
+    }
+
+    /// Switch this scratch to the flash single-pass kernel
+    /// ([`AttnKind::Flash`]): one streamed K/V walk per (row, head) item
+    /// with online softmax, no scores scratch, no gather buffers.
+    /// Epsilon-bounded against the reference arms ([`ATTN_FLASH_REL_ERR`])
+    /// rather than bit-exact. Works on any pool layout; the scheduler
+    /// pairs it with a head-major pool for contiguous per-head reads.
+    pub fn with_flash_attention(mut self) -> BatchScratch {
+        self.attn = AttnKind::Flash;
         self
     }
 

@@ -85,7 +85,7 @@ pub struct ServeMetrics {
     /// Effective per-tick prefill token budget (0 never reaches here:
     /// the scheduler resolves it to the slot capacity).
     pub prefill_chunk: usize,
-    /// Attention read path ("fused" | "gather").
+    /// Attention read path ("flash" | "fused" | "gather").
     pub attn_kind: String,
 }
 
@@ -199,7 +199,7 @@ pub struct ServeSummary {
     pub threads: usize,
     /// Effective per-tick prefill token budget (see `ServeMetrics`).
     pub prefill_chunk: usize,
-    /// Attention read path ("fused" | "gather").
+    /// Attention read path ("flash" | "fused" | "gather").
     pub attn_kind: String,
 }
 

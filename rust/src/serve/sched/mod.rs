@@ -74,7 +74,7 @@ pub mod metrics;
 pub mod pool;
 
 pub use metrics::{RequestMetrics, ServeMetrics, ServeSummary};
-pub use pool::{KvPool, KvStoreKind, SlotId};
+pub use pool::{KvLayout, KvPool, KvStoreKind, SlotId};
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -135,8 +135,12 @@ pub struct SchedConfig {
     /// Attention read path: `Fused` (default) streams K/V straight off
     /// the store with the (row, head) items fanned across the worker
     /// pool; `Gather` keeps the pre-fused materialize-then-attend
-    /// baseline for the bench A/B. Bit-identical either way — the knob
-    /// changes wall-clock only, never a single emitted token.
+    /// baseline for the bench A/B — those two are bit-identical. `Flash`
+    /// is the single-pass online-softmax kernel over a **head-major**
+    /// pool (the scheduler picks the layout from this knob); its logits
+    /// track the reference arms within `serve::ATTN_FLASH_REL_ERR`
+    /// rather than bit-exactly, but are themselves deterministic at any
+    /// thread count.
     pub attn: AttnKind,
     /// Every N ticks, print a one-line stderr heartbeat (live QPS, p90
     /// step latency from the streaming histograms, mean batch width, KV
@@ -218,13 +222,23 @@ pub struct Scheduler<'e> {
 impl<'e> Scheduler<'e> {
     pub fn new(engine: &'e Engine, cfg: SchedConfig) -> Scheduler<'e> {
         assert!(cfg.slots > 0 && cfg.slot_tokens > 0);
-        let pool = KvPool::new(
+        // flash streams per-head runs, so it gets the head-major layout
+        // (contiguous head segments per block); the two-pass arms walk
+        // whole token rows and keep token-major. Relocation never changes
+        // a stored value, so the layout choice is invisible to metrics.
+        let layout = match cfg.attn {
+            AttnKind::Flash => KvLayout::HeadMajor,
+            _ => KvLayout::TokenMajor,
+        };
+        let pool = KvPool::with_layout(
             cfg.kv,
             cfg.slots,
             engine.desc.n_layers,
             cfg.slot_tokens,
             engine.desc.d_model,
             cfg.block_tokens,
+            layout,
+            engine.desc.head_dim,
         );
         // a tick's forward is at most `slots` one-token decode runs plus
         // `prefill_chunk` stacked prompt rows, so the scratch is sized for
@@ -243,6 +257,7 @@ impl<'e> Scheduler<'e> {
             cfg.threads,
         );
         let scratch = match cfg.attn {
+            AttnKind::Flash => scratch.with_flash_attention(),
             AttnKind::Fused => scratch,
             AttnKind::Gather => scratch.with_gather_attention(),
         };

@@ -42,6 +42,26 @@
 //! scales are f32 `[layer][row][2 * ng]` = `[h, z]` per `KV_GROUP`-lane
 //! group of the row.
 //!
+//! Orthogonally to the backend, [`KvLayout`] picks the row arrangement
+//! *inside* a `(block, layer)` segment of `B * d` elements:
+//!
+//! ```text
+//!   token-major:  [tok 0: d lanes][tok 1: d lanes] ... [tok B-1]
+//!   head-major:   [head 0: B x head_dim][head 1: B x head_dim] ...
+//!
+//!   head-major element (head h, token w, lane j of the head):
+//!     segment_base + h * (B * head_dim) + w * head_dim + j
+//! ```
+//!
+//! Head-major serves the flash attention kernel: a (row, head) item reads
+//! one contiguous `head_dim`-stride run per block instead of `d`-strided
+//! lanes. The transformation is pure relocation — appends quantize /
+//! copy each logical `d`-lane row first and then scatter per head, so
+//! every stored f32 (and every Q8 code and scale) is bit-identical to its
+//! token-major twin, and Q8 scales stay token-indexed at
+//! `(segment_row + w) * 2 * ng` for both layouts. Block tables, leases
+//! and capacity accounting never see the layout.
+//!
 //! Capacity is reserved in full at lease time, so appends never allocate
 //! and block exhaustion can never strand a mid-flight sequence; the
 //! admission back-pressure lives in the scheduler, which keeps a request
@@ -52,7 +72,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::quant::{dequantize_row_q8, q8_row_groups, quantize_row_q8};
+use crate::quant::{dequantize_row_q8, group_len, q8_row_groups, quantize_row_q8};
 use crate::util::{StripedMut, ThreadPool};
 
 /// Quant group width (lanes of `d`) for the `paged-q8` backend's per-row
@@ -78,7 +98,10 @@ impl KvStoreKind {
             "slab" | "slab-f32" => Ok(KvStoreKind::SlabF32),
             "paged" | "paged-f32" => Ok(KvStoreKind::PagedF32),
             "paged-q8" | "q8" => Ok(KvStoreKind::PagedQ8),
-            other => bail!("unknown kv store '{other}' (expected slab|paged|paged-q8)"),
+            other => bail!(
+                "unknown kv store '{other}': expected slab|paged|paged-q8 \
+                 (--kv flag / serve.kv in TOML)"
+            ),
         }
     }
 
@@ -93,6 +116,23 @@ impl KvStoreKind {
     pub fn paged(&self) -> bool {
         !matches!(self, KvStoreKind::SlabF32)
     }
+}
+
+/// Row layout **within** a block (the block-table / lease machinery is
+/// layout-blind). See the module docs for the two arrangements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KvLayout {
+    /// `[token][d]` rows — the original layout. A token's whole `d`-lane
+    /// row is contiguous; one head's lanes are strided `d` apart across
+    /// tokens. Required by the fused kernel's whole-row streaming reads.
+    #[default]
+    TokenMajor,
+    /// `[head][token][head_dim]` — within one (block, layer) segment, each
+    /// head owns a contiguous `block_tokens * head_dim` stripe, so a
+    /// (row, head) attention item walks one contiguous run per block. Built
+    /// for the flash single-pass kernel; Q8 scales stay token-indexed
+    /// (only the codes relocate), so quantization is layout-invariant.
+    HeadMajor,
 }
 
 /// Handle to a leased sequence slot. Only the pool mints these (the field
@@ -131,6 +171,13 @@ pub struct KvPool {
     n_blocks: usize,
     /// Q8 scale groups per cached row.
     ng: usize,
+    /// Row arrangement within a (block, layer) segment.
+    layout: KvLayout,
+    /// Lanes per head stripe (head-major only; token-major stores `d`).
+    head_dim: usize,
+    /// Scratch row for the head-major Q8 append (quantize the logical row
+    /// here, then scatter codes per head).
+    qtmp: Vec<u8>,
     store: Store,
     lens: Vec<usize>,
     /// Reserved token capacity per leased sequence.
@@ -157,7 +204,31 @@ impl KvPool {
         d: usize,
         block_tokens: usize,
     ) -> KvPool {
+        Self::with_layout(kind, n_slots, layers, slot_len, d, block_tokens, KvLayout::TokenMajor, d)
+    }
+
+    /// [`KvPool::new`] with an explicit within-block row layout. For
+    /// [`KvLayout::HeadMajor`], `head_dim` is the per-head lane count and
+    /// must divide `d`; token-major ignores it (rows are whole `d`-lane
+    /// strips). Same capacity / lease semantics either way.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_layout(
+        kind: KvStoreKind,
+        n_slots: usize,
+        layers: usize,
+        slot_len: usize,
+        d: usize,
+        block_tokens: usize,
+        layout: KvLayout,
+        head_dim: usize,
+    ) -> KvPool {
         assert!(n_slots > 0 && layers > 0 && slot_len > 0 && d > 0);
+        if layout == KvLayout::HeadMajor {
+            assert!(
+                head_dim > 0 && d % head_dim == 0,
+                "head-major KV layout needs head_dim ({head_dim}) dividing d ({d})"
+            );
+        }
         let (block_tokens, n_blocks) = if kind.paged() {
             let bt = block_tokens.clamp(1, slot_len);
             (bt, (n_slots * slot_len).div_ceil(bt))
@@ -189,6 +260,9 @@ impl KvPool {
             block_tokens,
             n_blocks,
             ng,
+            layout,
+            head_dim: if layout == KvLayout::HeadMajor { head_dim } else { d },
+            qtmp: Vec::new(),
             store,
             lens: vec![0; n_slots],
             caps: vec![0; n_slots],
@@ -292,6 +366,27 @@ impl KvPool {
         self.kind
     }
 
+    /// Within-block row arrangement (see [`KvLayout`]).
+    pub fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    /// Truncate a leased sequence back to `len` cached positions. Blocks
+    /// were reserved in full at lease time, so nothing is freed — this
+    /// just rewinds the length so later appends overwrite positions
+    /// `len..`. Lets the bench sweep replay decode steps over one warmed
+    /// cache instead of rebuilding it per kernel variant.
+    pub(crate) fn rewind(&mut self, slot: SlotId, len: usize) {
+        self.check(slot);
+        let s = slot.0;
+        assert!(
+            len <= self.lens[s],
+            "KvPool: rewinding slot {s} forward ({len} > cached {})",
+            self.lens[s]
+        );
+        self.lens[s] = len;
+    }
+
     /// Tokens per allocation block (slab: the whole slot).
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
@@ -380,6 +475,14 @@ impl KvPool {
         assert_eq!(vs.len(), n * d);
         let ng2 = 2 * self.ng;
         let bt = self.block_tokens;
+        let (layout, hd) = (self.layout, self.head_dim);
+        // head-major Q8 quantizes the logical row into scratch first, so
+        // codes and scales stay bit-identical to the token-major layout
+        // and only the code bytes relocate
+        let mut qtmp = std::mem::take(&mut self.qtmp);
+        if layout == KvLayout::HeadMajor && qtmp.len() < d {
+            qtmp.resize(d, 0);
+        }
         let mut r = 0usize;
         while r < n {
             let t = t0 + r;
@@ -388,32 +491,76 @@ impl KvPool {
                 _ => (self.tables[s][t / bt] as usize, t % bt),
             };
             let run = (bt - within).min(n - r);
-            let row0 = self.block_row(blk, layer) + within;
+            let base = self.block_row(blk, layer);
+            let row0 = base + within;
             match &mut self.store {
-                Store::F32 { k, v } => {
-                    k[row0 * d..(row0 + run) * d].copy_from_slice(&ks[r * d..(r + run) * d]);
-                    v[row0 * d..(row0 + run) * d].copy_from_slice(&vs[r * d..(r + run) * d]);
-                }
+                Store::F32 { k, v } => match layout {
+                    KvLayout::TokenMajor => {
+                        k[row0 * d..(row0 + run) * d].copy_from_slice(&ks[r * d..(r + run) * d]);
+                        v[row0 * d..(row0 + run) * d].copy_from_slice(&vs[r * d..(r + run) * d]);
+                    }
+                    KvLayout::HeadMajor => {
+                        for i in 0..run {
+                            let (src, w) = ((r + i) * d, within + i);
+                            for h in 0..d / hd {
+                                let dst = base * d + h * (bt * hd) + w * hd;
+                                k[dst..dst + hd]
+                                    .copy_from_slice(&ks[src + h * hd..src + (h + 1) * hd]);
+                                v[dst..dst + hd]
+                                    .copy_from_slice(&vs[src + h * hd..src + (h + 1) * hd]);
+                            }
+                        }
+                    }
+                },
                 Store::Q8 { qk, qv, sk, sv } => {
                     for i in 0..run {
-                        let (c0, s0) = ((row0 + i) * d, (row0 + i) * ng2);
-                        quantize_row_q8(
-                            &ks[(r + i) * d..(r + i + 1) * d],
-                            KV_GROUP,
-                            &mut qk[c0..c0 + d],
-                            &mut sk[s0..s0 + ng2],
-                        );
-                        quantize_row_q8(
-                            &vs[(r + i) * d..(r + i + 1) * d],
-                            KV_GROUP,
-                            &mut qv[c0..c0 + d],
-                            &mut sv[s0..s0 + ng2],
-                        );
+                        let (src, s0) = ((r + i) * d, (row0 + i) * ng2);
+                        match layout {
+                            KvLayout::TokenMajor => {
+                                let c0 = (row0 + i) * d;
+                                quantize_row_q8(
+                                    &ks[src..src + d],
+                                    KV_GROUP,
+                                    &mut qk[c0..c0 + d],
+                                    &mut sk[s0..s0 + ng2],
+                                );
+                                quantize_row_q8(
+                                    &vs[src..src + d],
+                                    KV_GROUP,
+                                    &mut qv[c0..c0 + d],
+                                    &mut sv[s0..s0 + ng2],
+                                );
+                            }
+                            KvLayout::HeadMajor => {
+                                let w = within + i;
+                                quantize_row_q8(
+                                    &ks[src..src + d],
+                                    KV_GROUP,
+                                    &mut qtmp[..d],
+                                    &mut sk[s0..s0 + ng2],
+                                );
+                                for h in 0..d / hd {
+                                    let dst = base * d + h * (bt * hd) + w * hd;
+                                    qk[dst..dst + hd].copy_from_slice(&qtmp[h * hd..(h + 1) * hd]);
+                                }
+                                quantize_row_q8(
+                                    &vs[src..src + d],
+                                    KV_GROUP,
+                                    &mut qtmp[..d],
+                                    &mut sv[s0..s0 + ng2],
+                                );
+                                for h in 0..d / hd {
+                                    let dst = base * d + h * (bt * hd) + w * hd;
+                                    qv[dst..dst + hd].copy_from_slice(&qtmp[h * hd..(h + 1) * hd]);
+                                }
+                            }
+                        }
                     }
                 }
             }
             r += run;
         }
+        self.qtmp = qtmp;
     }
 
     pub(crate) fn advance(&mut self, slot: SlotId) {
@@ -455,8 +602,10 @@ impl KvPool {
         let s = slot.0;
         let d = self.d;
         debug_assert!(t <= self.caps[s]);
-        if self.kind == KvStoreKind::SlabF32 {
+        if self.kind == KvStoreKind::SlabF32 && self.layout == KvLayout::TokenMajor {
             // zero copy: the slot's layer run is contiguous in the arena
+            // (token-major only — head-major interleaves heads, so it
+            // gathers below like the paged backends)
             let Store::F32 { k, v } = &self.store else {
                 unreachable!("slab backend stores f32")
             };
@@ -500,6 +649,11 @@ impl KvPool {
         self.check(slot);
         debug_assert!(layer < self.layers);
         assert!(
+            self.layout == KvLayout::TokenMajor,
+            "KvPool::runs walks whole token rows and needs the token-major layout; \
+             head-major pools stream through head_runs"
+        );
+        assert!(
             t <= self.caps[slot.0],
             "KvPool: reading {t} rows of slot {} past its reserved capacity {}",
             slot.0,
@@ -508,10 +662,59 @@ impl KvPool {
         KvRunCursor { pool: self, s: slot.0, layer, t, r: 0 }
     }
 
+    /// Iterate one **head's** lanes of the first `t` cached rows of
+    /// `(slot, layer)` as per-block runs borrowed straight from the arena —
+    /// the streaming read API of the flash attention kernel, which works a
+    /// single (row, head) item at a time. Yields `(r0, len, slice)` like
+    /// [`KvPool::runs`]; each [`KvHeadSlice`] carries the element stride
+    /// between consecutive tokens' head segments (`head_dim` under the
+    /// head-major layout — fully contiguous — or `d` under token-major,
+    /// where the cursor degrades gracefully to strided reads). `head_dim`
+    /// is a parameter so token-major pools built without head info
+    /// ([`KvPool::new`]) can serve any head split; on head-major pools it
+    /// must match the layout's stripe width.
+    ///
+    /// Q8 slices pair the code runs with the **token-indexed** `[h, z]`
+    /// scale rows (`(len, 2 * ng)`, shared by all heads of a token), so
+    /// the caller dequantizes lane `head * head_dim + j` against group
+    /// `(head * head_dim + j) / group_len(d, KV_GROUP)` exactly as the
+    /// whole-row readers do.
+    pub(crate) fn head_runs(
+        &self,
+        slot: SlotId,
+        layer: usize,
+        t: usize,
+        head: usize,
+        head_dim: usize,
+    ) -> KvHeadRunCursor<'_> {
+        self.check(slot);
+        debug_assert!(layer < self.layers);
+        assert!(
+            head_dim > 0 && (head + 1) * head_dim <= self.d,
+            "KvPool: head {head} x head_dim {head_dim} out of the d={} row",
+            self.d
+        );
+        assert!(
+            self.layout == KvLayout::TokenMajor || head_dim == self.head_dim,
+            "KvPool: head_runs head_dim {head_dim} mismatches the head-major stripe {}",
+            self.head_dim
+        );
+        assert!(
+            t <= self.caps[slot.0],
+            "KvPool: reading {t} rows of slot {} past its reserved capacity {}",
+            slot.0,
+            self.caps[slot.0]
+        );
+        KvHeadRunCursor { pool: self, s: slot.0, layer, t, head, head_dim, r: 0 }
+    }
+
     /// Gather (Q8: dequantize) cached rows `[r0, r1)` of `(slot s, layer)`
     /// into the destination row views — one shard of `layer_kv`'s
     /// fan-out. Walks the block table run-wise, so a block-aligned shard
-    /// still does whole-block `copy_from_slice`s.
+    /// still does whole-block `copy_from_slice`s. Head-major segments are
+    /// un-interleaved back into `(t, d)` rows here; per element the f32
+    /// value (Q8: the dequant op order) is identical to the token-major
+    /// read, so a gathered window is bit-exact across layouts.
     fn gather_rows(
         &self,
         s: usize,
@@ -523,22 +726,41 @@ impl KvPool {
     ) {
         let bt = self.block_tokens;
         let d = self.d;
+        let hd = self.head_dim;
         let ng2 = 2 * self.ng;
+        let g = group_len(d, KV_GROUP);
         let mut r = r0;
         while r < r1 {
-            let blk = self.tables[s][r / bt] as usize;
+            let blk = match self.kind {
+                KvStoreKind::SlabF32 => s,
+                _ => self.tables[s][r / bt] as usize,
+            };
             let within = r % bt;
             let run = (bt - within).min(r1 - r);
-            let row0 = self.block_row(blk, layer) + within;
-            match &self.store {
-                Store::F32 { k, v } => {
+            let base = self.block_row(blk, layer);
+            let row0 = base + within;
+            match (&self.store, self.layout) {
+                (Store::F32 { k, v }, KvLayout::TokenMajor) => {
                     // SAFETY: shards own disjoint [r0, r1) row ranges
                     unsafe { kview.rows(r, r + run) }
                         .copy_from_slice(&k[row0 * d..(row0 + run) * d]);
                     unsafe { vview.rows(r, r + run) }
                         .copy_from_slice(&v[row0 * d..(row0 + run) * d]);
                 }
-                Store::Q8 { qk, qv, sk, sv } => {
+                (Store::F32 { k, v }, KvLayout::HeadMajor) => {
+                    for i in 0..run {
+                        let w = within + i;
+                        // SAFETY: as above — row r+i lies inside this shard
+                        let (ko, vo) =
+                            unsafe { (kview.rows(r + i, r + i + 1), vview.rows(r + i, r + i + 1)) };
+                        for h in 0..d / hd {
+                            let src = base * d + h * (bt * hd) + w * hd;
+                            ko[h * hd..(h + 1) * hd].copy_from_slice(&k[src..src + hd]);
+                            vo[h * hd..(h + 1) * hd].copy_from_slice(&v[src..src + hd]);
+                        }
+                    }
+                }
+                (Store::Q8 { qk, qv, sk, sv }, KvLayout::TokenMajor) => {
                     for i in 0..run {
                         let (c0, s0) = ((row0 + i) * d, (row0 + i) * ng2);
                         // SAFETY: as above — row r+i lies inside this shard
@@ -554,6 +776,28 @@ impl KvPool {
                             &sv[s0..s0 + ng2],
                             unsafe { vview.rows(r + i, r + i + 1) },
                         );
+                    }
+                }
+                (Store::Q8 { qk, qv, sk, sv }, KvLayout::HeadMajor) => {
+                    for i in 0..run {
+                        let (w, s0) = (within + i, (row0 + i) * ng2);
+                        // SAFETY: as above — row r+i lies inside this shard
+                        let (ko, vo) =
+                            unsafe { (kview.rows(r + i, r + i + 1), vview.rows(r + i, r + i + 1)) };
+                        // element-wise `(code - z) * h` against the logical
+                        // lane's group — the exact dequantize_row_q8 op
+                        // order, so values are bit-identical to token-major
+                        for h in 0..d / hd {
+                            let src = base * d + h * (bt * hd) + w * hd;
+                            for l in 0..hd {
+                                let j = h * hd + l;
+                                let gi = j / g;
+                                let (hh, zz) = (sk[s0 + 2 * gi], sk[s0 + 2 * gi + 1]);
+                                ko[j] = (qk[src + l] as f32 - zz) * hh;
+                                let (hh, zz) = (sv[s0 + 2 * gi], sv[s0 + 2 * gi + 1]);
+                                vo[j] = (qv[src + l] as f32 - zz) * hh;
+                            }
+                        }
                     }
                 }
             }
@@ -614,6 +858,73 @@ impl<'a> Iterator for KvRunCursor<'a> {
                     qv: &qv[row0 * d..(row0 + len) * d],
                     sk: &sk[row0 * ng2..(row0 + len) * ng2],
                     sv: &sv[row0 * ng2..(row0 + len) * ng2],
+                }
+            }
+        };
+        let r0 = self.r;
+        self.r += len;
+        Some((r0, len, slice))
+    }
+}
+
+/// One block run of a single head's K/V lanes, borrowed from the arena by
+/// [`KvPool::head_runs`]. Token `i` of the run (cached position `r0 + i`)
+/// has its `head_dim` lanes at `[i * stride, i * stride + head_dim)` of
+/// the k/v (or code) slices — `stride == head_dim` under the head-major
+/// layout (contiguous), `stride == d` under token-major. Q8 scale slices
+/// are token-indexed `(len, 2 * ng)` rows exactly as in [`KvSlice::Q8`].
+pub(crate) enum KvHeadSlice<'a> {
+    F32 { k: &'a [f32], v: &'a [f32], stride: usize },
+    Q8 { qk: &'a [u8], qv: &'a [u8], sk: &'a [f32], sv: &'a [f32], stride: usize },
+}
+
+/// Cursor behind [`KvPool::head_runs`] — the per-head twin of
+/// [`KvRunCursor`], yielding `(r0, len, KvHeadSlice)` in ascending
+/// position order.
+pub(crate) struct KvHeadRunCursor<'a> {
+    pool: &'a KvPool,
+    s: usize,
+    layer: usize,
+    t: usize,
+    head: usize,
+    head_dim: usize,
+    r: usize,
+}
+
+impl<'a> Iterator for KvHeadRunCursor<'a> {
+    type Item = (usize, usize, KvHeadSlice<'a>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.r >= self.t {
+            return None;
+        }
+        let p = self.pool;
+        let (blk, within) = match p.kind {
+            KvStoreKind::SlabF32 => (self.s, self.r),
+            _ => (p.tables[self.s][self.r / p.block_tokens] as usize, self.r % p.block_tokens),
+        };
+        let len = (p.block_tokens - within).min(self.t - self.r);
+        let (d, hd, bt) = (p.d, self.head_dim, p.block_tokens);
+        let base = p.block_row(blk, self.layer);
+        // offset of token `within`'s head segment, stride to the next
+        // token's, and the total span the run covers in the arena
+        let (off, stride, span) = match p.layout {
+            KvLayout::TokenMajor => ((base + within) * d + self.head * hd, d, (len - 1) * d + hd),
+            KvLayout::HeadMajor => (base * d + self.head * (bt * hd) + within * hd, hd, len * hd),
+        };
+        let slice = match &p.store {
+            Store::F32 { k, v } => {
+                KvHeadSlice::F32 { k: &k[off..off + span], v: &v[off..off + span], stride }
+            }
+            Store::Q8 { qk, qv, sk, sv } => {
+                let ng2 = 2 * p.ng;
+                let srow0 = base + within;
+                KvHeadSlice::Q8 {
+                    qk: &qk[off..off + span],
+                    qv: &qv[off..off + span],
+                    sk: &sk[srow0 * ng2..(srow0 + len) * ng2],
+                    sv: &sv[srow0 * ng2..(srow0 + len) * ng2],
+                    stride,
                 }
             }
         };
@@ -1042,6 +1353,141 @@ mod tests {
         p.release(c);
         assert_eq!(p.peak_blocks(), 9);
         assert_eq!(p.free_blocks(), 10);
+    }
+
+    /// Fill one slot of `p` with `cap` positions of seeded rows (same seed
+    /// -> same rows), one append per (position, layer).
+    fn fill(p: &mut KvPool, cap: usize, layers: usize, d: usize, seed: u64) -> SlotId {
+        let s = p.lease(cap).unwrap();
+        let mut rng = Rng::new(seed);
+        for _ in 0..cap {
+            for l in 0..layers {
+                let kr: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let vr: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                p.append(s, l, &kr, &vr);
+            }
+            p.advance(s);
+        }
+        s
+    }
+
+    #[test]
+    fn head_major_reads_match_token_major_bit_for_bit() {
+        // head-major is pure relocation: a gathered (t, d) window must be
+        // bit-identical to the token-major pool's, for every backend —
+        // including Q8, whose quantization happens on the logical row
+        // before the scatter. d=96 / hd=24 puts a KV_GROUP=64 boundary in
+        // the middle of head 2, so the scale-group mapping is exercised.
+        let (layers, cap, d, bt, hd) = (2usize, 13usize, 96usize, 3usize, 24usize);
+        for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            let mut tok = KvPool::new(kind, 1, layers, cap, d, bt);
+            let mut hm = KvPool::with_layout(kind, 1, layers, cap, d, bt, KvLayout::HeadMajor, hd);
+            let a = fill(&mut tok, cap, layers, d, 31);
+            let b = fill(&mut hm, cap, layers, d, 31);
+            for l in 0..layers {
+                for t in [1usize, bt, bt + 2, cap] {
+                    let (mut k1, mut v1) = (Vec::new(), Vec::new());
+                    let (mut k2, mut v2) = (Vec::new(), Vec::new());
+                    let (kt, vt) = read(&tok, a, l, t, &mut k1, &mut v1);
+                    let (kh, vh) = read(&hm, b, l, t, &mut k2, &mut v2);
+                    for (x, y) in kt.iter().zip(kh).chain(vt.iter().zip(vh)) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{kind:?} layer {l} t {t}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn head_runs_matches_layer_kv_bit_for_bit() {
+        // the flash streaming cursor must reproduce exactly the head
+        // columns of the gathered window — on both layouts, all backends,
+        // across block boundaries and mid-block stops
+        let (layers, cap, d, bt, hd) = (2usize, 13usize, 96usize, 3usize, 24usize);
+        let g = group_len(d, KV_GROUP);
+        let ng2 = 2 * q8_row_groups(d, KV_GROUP);
+        for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            for layout in [KvLayout::TokenMajor, KvLayout::HeadMajor] {
+                let mut p = KvPool::with_layout(kind, 1, layers, cap, d, bt, layout, hd);
+                let s = fill(&mut p, cap, layers, d, 37);
+                for l in 0..layers {
+                    for t in [1usize, bt, bt + 2, cap] {
+                        let (mut kb, mut vb) = (Vec::new(), Vec::new());
+                        let (want_k, want_v) = read(&p, s, l, t, &mut kb, &mut vb);
+                        // rebuild the window head by head through the cursor
+                        let mut got_k = vec![f32::NAN; t * d];
+                        let mut got_v = vec![f32::NAN; t * d];
+                        for head in 0..d / hd {
+                            let mut covered = 0usize;
+                            for (r0, len, slice) in p.head_runs(s, l, t, head, hd) {
+                                assert_eq!(r0, covered, "runs contiguous in order");
+                                covered += len;
+                                for i in 0..len {
+                                    for j in 0..hd {
+                                        let lane = head * hd + j;
+                                        let o = (r0 + i) * d + lane;
+                                        match &slice {
+                                            KvHeadSlice::F32 { k, v, stride } => {
+                                                got_k[o] = k[i * stride + j];
+                                                got_v[o] = v[i * stride + j];
+                                            }
+                                            KvHeadSlice::Q8 { qk, qv, sk, sv, stride } => {
+                                                let gi = lane / g;
+                                                let hh = sk[i * ng2 + 2 * gi];
+                                                let zz = sk[i * ng2 + 2 * gi + 1];
+                                                got_k[o] = (qk[i * stride + j] as f32 - zz) * hh;
+                                                let hh = sv[i * ng2 + 2 * gi];
+                                                let zz = sv[i * ng2 + 2 * gi + 1];
+                                                got_v[o] = (qv[i * stride + j] as f32 - zz) * hh;
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                            assert_eq!(covered, t, "cursor covers every row once");
+                        }
+                        for (x, y) in want_k.iter().zip(&got_k).chain(want_v.iter().zip(&got_v)) {
+                            assert_eq!(x.to_bits(), y.to_bits(), "{kind:?} {layout:?} l={l} t={t}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rewind_truncates_and_replays() {
+        let mut p = KvPool::new(KvStoreKind::PagedF32, 1, 1, 8, 4, 3);
+        let s = p.lease(8).unwrap();
+        for t in 0..6 {
+            p.append(s, 0, &[t as f32; 4], &[0.0; 4]);
+            p.advance(s);
+        }
+        p.rewind(s, 2);
+        assert_eq!(p.len(s), 2);
+        // appends continue from the rewound length, overwriting 2..
+        p.append(s, 0, &[9.0; 4], &[0.0; 4]);
+        p.advance(s);
+        let (mut kb, mut vb) = (Vec::new(), Vec::new());
+        let (k, _) = read(&p, s, 0, 3, &mut kb, &mut vb);
+        assert_eq!(&k[..4], &[0.0; 4]);
+        assert_eq!(&k[4..8], &[1.0; 4]);
+        assert_eq!(&k[8..12], &[9.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rewinding slot")]
+    fn rewind_forward_panics() {
+        let mut p = KvPool::new(KvStoreKind::SlabF32, 1, 1, 4, 2, 0);
+        let s = p.lease(4).unwrap();
+        p.rewind(s, 1);
+    }
+
+    #[test]
+    fn kv_kind_parse_error_names_flag_and_key() {
+        let err = KvStoreKind::parse("mmap").unwrap_err().to_string();
+        assert!(err.contains("slab|paged|paged-q8"), "{err}");
+        assert!(err.contains("--kv") && err.contains("serve.kv"), "{err}");
     }
 
     #[test]

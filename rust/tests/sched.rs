@@ -17,6 +17,12 @@
 //!   Q8 dequantized in registers, (row, head) items fanned across the
 //!   worker pool) is bit-for-bit the gather-then-attend baseline it
 //!   replaced, at the logits and at the emitted-token level;
+//! * the flash single-pass attention path (online softmax over the
+//!   head-major KV layout, W-wide lane kernels) tracks the gather
+//!   reference within the documented `ATTN_FLASH_REL_ERR` at every
+//!   logit — at ragged cached lengths crossing block boundaries and at
+//!   long contexts — and is bit-identical to *itself* at every thread
+//!   count (the fan-out never splits one item's reduction);
 //! * all of the above hold at every worker-thread count: the
 //!   lane-sharded gemm / attention fan-out may never change one emitted
 //!   token (the threaded CI lane forces `OMNIQUANT_TEST_THREADS=0`, i.e.
@@ -26,9 +32,10 @@ use omniquant::config::QuantSetting;
 use omniquant::model::ModelParams;
 use omniquant::runtime::Manifest;
 use omniquant::serve::sched::{
-    synthetic_workload, KvPool, KvStoreKind, Request, SchedConfig, Scheduler, WorkloadSpec,
+    synthetic_workload, KvLayout, KvPool, KvStoreKind, Request, SchedConfig, Scheduler,
+    WorkloadSpec,
 };
-use omniquant::serve::{AttnKind, Engine, SeqChunk};
+use omniquant::serve::{AttnKind, ATTN_FLASH_REL_ERR, Engine, SeqChunk};
 use omniquant::util::Rng;
 
 const VOCAB: usize = 96;
@@ -538,6 +545,219 @@ fn fused_attention_matches_gather_bit_for_bit() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn flash_attention_matches_gather_within_documented_eps() {
+    // the PR-7 tentpole contract: the single-pass online-softmax path
+    // reorders the reduction (running max/denominator rescales the
+    // accumulator, the q·k dot sums in W-wide lanes), so it is NOT
+    // bit-exact — it must instead track the gather reference within the
+    // documented bound at every logit:
+    //   |flash - gather| <= ATTN_FLASH_REL_ERR * (1 + |gather|).
+    // Every cached length t in 1..=10 with 4-token blocks crosses
+    // t = block_tokens - 1, block_tokens, block_tokens + 1; the flash
+    // pool uses the head-major layout the scheduler picks for flash.
+    // The cache feeding each compared step is warmed through the
+    // bit-exact gather arm on a fresh head-major pool (head-major
+    // writes are a pure relocation, so it holds exactly the reference
+    // pool's bytes), so each comparison isolates ONE flash read against
+    // the reference with no step-over-step drift compounding.
+    let eps = ATTN_FLASH_REL_ERR;
+    for (family, setting) in [("llama", "w4a16g32"), ("opt", "w4a16")] {
+        let eng = engine(family, setting, 31);
+        let tokens: Vec<i32> = (0..10).map(|i| (3 + 7 * i) % VOCAB as i32).collect();
+        let (layers, d, hd) = (eng.desc.n_layers, eng.desc.d_model, eng.desc.head_dim);
+        let max_t = 16;
+        for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            for threads in thread_counts() {
+                // reference walk: gather on the token-major pool,
+                // capturing the logits at every cached length
+                let mut gpool = KvPool::new(kv, 1, layers, max_t, d, 4);
+                let gs = gpool.lease(tokens.len()).unwrap();
+                let mut gather =
+                    eng.new_batch_scratch(1, 1, max_t, threads).with_gather_attention();
+                let mut want: Vec<Vec<f32>> = Vec::new();
+                for &t in &tokens {
+                    eng.forward_step(&[t], &[gs], &mut gpool, &mut gather);
+                    want.push(gather.logits[..eng.desc.vocab].to_vec());
+                }
+                for t in 1..=tokens.len() {
+                    let mut fpool =
+                        KvPool::with_layout(kv, 1, layers, max_t, d, 4, KvLayout::HeadMajor, hd);
+                    let fs = fpool.lease(tokens.len()).unwrap();
+                    let mut warm =
+                        eng.new_batch_scratch(1, 1, max_t, threads).with_gather_attention();
+                    for &tok in &tokens[..t - 1] {
+                        eng.forward_step(&[tok], &[fs], &mut fpool, &mut warm);
+                    }
+                    let mut flash =
+                        eng.new_batch_scratch(1, 1, max_t, threads).with_flash_attention();
+                    assert_eq!(flash.attn_kind(), AttnKind::Flash);
+                    eng.forward_step(&[tokens[t - 1]], &[fs], &mut fpool, &mut flash);
+                    let got = &flash.logits[..eng.desc.vocab];
+                    for (c, (a, b)) in got.iter().zip(&want[t - 1]).enumerate() {
+                        assert!(
+                            (a - b).abs() <= eps * (1.0 + b.abs()),
+                            "{family} {setting} {kv:?} threads={threads} t={t} logit {c}: \
+                             flash {a} vs gather {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn flash_attention_bit_identical_across_thread_counts() {
+    // flash is epsilon-bounded against the OTHER attention arms, but
+    // within one binary it is fully deterministic: the (row, head)
+    // fan-out never splits a single item's reduction across workers, so
+    // changing the worker count may never move one logit bit — even
+    // with the flash outputs feeding back through the cache step over
+    // step, on every KV backend.
+    let eng = engine("llama", "w4a16g32", 31);
+    let tokens: Vec<i32> = (0..10).map(|i| (3 + 7 * i) % VOCAB as i32).collect();
+    let (layers, d, hd) = (eng.desc.n_layers, eng.desc.d_model, eng.desc.head_dim);
+    let max_t = 16;
+    for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for threads in thread_counts() {
+            let mut pool =
+                KvPool::with_layout(kv, 1, layers, max_t, d, 4, KvLayout::HeadMajor, hd);
+            let slot = pool.lease(tokens.len()).unwrap();
+            let mut bs = eng.new_batch_scratch(1, 1, max_t, threads).with_flash_attention();
+            let mut logits: Vec<Vec<f32>> = Vec::new();
+            for &t in &tokens {
+                eng.forward_step(&[t], &[slot], &mut pool, &mut bs);
+                logits.push(bs.logits[..eng.desc.vocab].to_vec());
+            }
+            match &reference {
+                None => reference = Some(logits),
+                Some(want) => {
+                    for (step, (ws, ls)) in want.iter().zip(&logits).enumerate() {
+                        for (c, (a, b)) in ws.iter().zip(ls).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "{kv:?} threads={threads} t={} logit {c}: {a} vs {b}",
+                                step + 1
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn flash_matches_gather_at_long_context_spot_checks() {
+    // the long-context epsilon contract: ctx {256, 1024} crosses many
+    // 16-token KV blocks and many Q8 groups. Both pools are warmed to
+    // `ctx` rows through the bit-exact gather arm (forward_chunked
+    // prompt chunks of <= 64 rows; head-major writes are a pure
+    // relocation, so the two pools hold identical bytes), then a few
+    // flash decode steps are compared against the gather reference
+    // within ATTN_FLASH_REL_ERR — per KV backend, per thread count.
+    let eps = ATTN_FLASH_REL_ERR;
+    let m = Manifest::synthetic("attn-ctx", "llama", 32, 2, 2, 64, VOCAB, 1088);
+    let mut rng = Rng::new(23);
+    let params = ModelParams::init(&m, &mut rng);
+    let eng = Engine::build(&params, QuantSetting::parse("w4a16g32").unwrap()).unwrap();
+    let (layers, d, hd) = (eng.desc.n_layers, eng.desc.d_model, eng.desc.head_dim);
+    for ctx in [256usize, 1024] {
+        let prompt: Vec<i32> = (0..ctx).map(|i| ((3 + 7 * i) % VOCAB) as i32).collect();
+        let steps = [11i32, 29, 47];
+        let max_t = ctx + steps.len() + 1;
+        for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            for threads in thread_counts() {
+                let mut gpool = KvPool::new(kv, 1, layers, max_t, d, 16);
+                let mut fpool =
+                    KvPool::with_layout(kv, 1, layers, max_t, d, 16, KvLayout::HeadMajor, hd);
+                let gslot = gpool.lease(max_t).unwrap();
+                let fslot = fpool.lease(max_t).unwrap();
+                let mut gather =
+                    eng.new_batch_scratch(64, 1, max_t, threads).with_gather_attention();
+                let mut warm =
+                    eng.new_batch_scratch(64, 1, max_t, threads).with_gather_attention();
+                let mut flash =
+                    eng.new_batch_scratch(64, 1, max_t, threads).with_flash_attention();
+                for chunk in prompt.chunks(64) {
+                    eng.forward_chunked(
+                        &[SeqChunk { slot: gslot, tokens: chunk, sample: false }],
+                        &mut gpool,
+                        &mut gather,
+                    );
+                    eng.forward_chunked(
+                        &[SeqChunk { slot: fslot, tokens: chunk, sample: false }],
+                        &mut fpool,
+                        &mut warm,
+                    );
+                }
+                assert_eq!(gpool.len(gslot), ctx);
+                assert_eq!(fpool.len(fslot), ctx);
+                for (i, &tok) in steps.iter().enumerate() {
+                    eng.forward_step(&[tok], &[gslot], &mut gpool, &mut gather);
+                    eng.forward_step(&[tok], &[fslot], &mut fpool, &mut flash);
+                    let got = &flash.logits[..eng.desc.vocab];
+                    let want = &gather.logits[..eng.desc.vocab];
+                    for (c, (a, b)) in got.iter().zip(want).enumerate() {
+                        assert!(
+                            (a - b).abs() <= eps * (1.0 + b.abs()),
+                            "ctx={ctx} {kv:?} threads={threads} step {i} logit {c}: \
+                             flash {a} vs gather {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn flash_scheduler_serves_end_to_end_on_head_major_pool() {
+    // --attn flash end to end: the scheduler picks the head-major KV
+    // layout for flash, serves a churny staggered workload on every
+    // backend (chunked prefill included), and drains cleanly. Flash
+    // logits are epsilon-bounded rather than bit-exact, so sampled
+    // tokens may legitimately differ from the fused reference — this
+    // pins the serving invariants (counts, drain, layout), not the
+    // token stream.
+    let eng = engine("llama", "w4a16g32", 2);
+    let spec = WorkloadSpec {
+        requests: 10,
+        mean_interarrival_steps: 0.5,
+        prompt_len: 6,
+        max_new_tokens: 6,
+        temperature: 0.0,
+    };
+    for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+        let mut sch = Scheduler::new(
+            &eng,
+            SchedConfig {
+                slots: 3,
+                slot_tokens: 16,
+                eos: None,
+                kv,
+                block_tokens: 4,
+                threads: *thread_counts().last().unwrap(),
+                prefill_chunk: 4,
+                attn: AttnKind::Flash,
+                stats_interval: 0,
+            },
+        );
+        assert_eq!(sch.pool().layout(), KvLayout::HeadMajor, "{kv:?}: flash picks head-major");
+        for r in synthetic_workload(&spec, eng.desc.vocab, 3) {
+            sch.submit(r).unwrap();
+        }
+        let summary = sch.run().unwrap();
+        assert_eq!(summary.requests, 10, "{kv:?}");
+        assert_eq!(summary.tokens, 10 * 6, "{kv:?}: every request runs to max_new");
+        assert_eq!(sch.pool().free_slots(), 3, "{kv:?}: slots reclaimed");
+        assert_eq!(sch.pool().free_blocks(), sch.pool().n_blocks(), "{kv:?}: blocks reclaimed");
     }
 }
 

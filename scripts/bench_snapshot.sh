@@ -7,10 +7,13 @@
 # equal token capacity, over 1/2/4 worker threads, over prefill chunk
 # sizes under concurrent long-prompt arrivals (step-p90 / TTFT-p90 deltas
 # of chunked vs whole-prompt prefill), and over a long-context attention
-# sweep at cached lengths {256, 1024} x kv x threads {1, 4} measuring the
-# fused streaming-KV attention path against the gather baseline
-# (attn_sweep / step_p90_improvement_fused_vs_gather / attn_share; every
-# continuous summary also records per-tick gemm/attn/sample phase
+# sweep at cached lengths {256, 1024, 4096} x kv x threads {1, 4} — one
+# warmed cache per point, rewound between kernels — measuring the flash
+# single-pass online-softmax path against the two-pass fused stream and
+# the gather baseline (attn_sweep / the paged-q8 ctx-4096 t4 headline
+# step_p90_improvement_flash_vs_fused, plus _flash_vs_gather and
+# _fused_vs_gather / attn_share; every continuous summary also records
+# per-tick gemm/attn/sample phase
 # timings), plus a trace-overhead check rerunning the slab continuous
 # point with the span recorder enabled (step_p90_ms_trace_off /
 # step_p90_ms_trace_on / trace_overhead_pct — the < 5% observability
