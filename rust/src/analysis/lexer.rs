@@ -1,0 +1,258 @@
+//! Comment/string-stripping lexer for the invariant linter.
+//!
+//! [`strip`] splits a Rust source file into per-line `(code, comment)`
+//! halves so rules can pattern-match on code without tripping over
+//! string literals ("no `println!`" must not fire on a log *message*
+//! that mentions `println!`) and can read comments without treating
+//! them as code (`// SAFETY:` markers, `// lint: allow(..)` markers).
+//!
+//! This is a line-accurate scanner, not a parser: it understands line
+//! comments, nested block comments, string/raw-string/byte-string
+//! literals (replaced by an empty `""` placeholder in the code half so
+//! call shapes like `panic!("..")` survive), char literals, and the
+//! char-literal vs lifetime ambiguity. That is exactly enough for the
+//! token-level rules in [`super::rules`]; it intentionally knows
+//! nothing about macros or cfg, so rules see `#[cfg(feature = "pjrt")]`
+//! code too — which is what we want (those lines still ship).
+
+/// One source line split into its code half and its comment half.
+///
+/// String literal contents are *not* part of `code` (each literal is
+/// replaced by `""`); comment text keeps its `//` / `/* */` sigils so
+/// doc-comment forms (`///`, `//!`) remain distinguishable.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code text with comments removed and string contents blanked.
+    pub code: String,
+    /// Comment text on this line (line comments and block-comment spans).
+    pub comment: String,
+}
+
+/// Split `src` into per-line code/comment halves.
+///
+/// The output always has at least one element and has exactly one
+/// element per source line (multi-line strings and block comments
+/// contribute an element per physical line, keeping findings
+/// line-accurate).
+pub fn strip(src: &str) -> Vec<Line> {
+    let c: Vec<char> = src.chars().collect();
+    let n = c.len();
+    let mut out: Vec<Line> = vec![Line::default()];
+    // Block-comment nesting depth (Rust block comments nest).
+    let mut depth = 0usize;
+    // True when the previous code char was an identifier char; used to
+    // tell a raw-string prefix `r"` from an identifier ending in `r`.
+    let mut prev_ident = false;
+    let mut i = 0usize;
+    while i < n {
+        let ch = c[i];
+        if ch == '\n' {
+            out.push(Line::default());
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        if depth > 0 {
+            if ch == '*' && c.get(i + 1) == Some(&'/') {
+                depth -= 1;
+                i += 2;
+            } else if ch == '/' && c.get(i + 1) == Some(&'*') {
+                depth += 1;
+                i += 2;
+            } else {
+                out.last_mut().unwrap().comment.push(ch);
+                i += 1;
+            }
+            continue;
+        }
+        if ch == '/' && c.get(i + 1) == Some(&'/') {
+            // Line comment: the rest of the line is comment text.
+            let line = out.last_mut().unwrap();
+            while i < n && c[i] != '\n' {
+                line.comment.push(c[i]);
+                i += 1;
+            }
+            continue;
+        }
+        if ch == '/' && c.get(i + 1) == Some(&'*') {
+            depth = 1;
+            i += 2;
+            continue;
+        }
+        if (ch == 'r' || ch == 'b') && !prev_ident {
+            // Possible raw-string prefix: r"..", r#".."#, br#".."#.
+            let mut j = i + 1;
+            if ch == 'b' && c.get(j) == Some(&'r') {
+                j += 1;
+            }
+            if ch == 'r' || j > i + 1 {
+                let mut hashes = 0usize;
+                while c.get(j) == Some(&'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if c.get(j) == Some(&'"') {
+                    i = j + 1;
+                    loop {
+                        match c.get(i) {
+                            None => break,
+                            Some('\n') => {
+                                out.push(Line::default());
+                                i += 1;
+                            }
+                            Some('"') if (1..=hashes).all(|k| c.get(i + k) == Some(&'#')) => {
+                                i += 1 + hashes;
+                                break;
+                            }
+                            Some(_) => i += 1,
+                        }
+                    }
+                    out.last_mut().unwrap().code.push_str("\"\"");
+                    prev_ident = false;
+                    continue;
+                }
+            }
+            out.last_mut().unwrap().code.push(ch);
+            prev_ident = true;
+            i += 1;
+            continue;
+        }
+        if ch == '"' {
+            // Ordinary string literal (a `b".."` byte string lands here
+            // too, with the `b` already emitted as code).
+            i += 1;
+            loop {
+                match c.get(i) {
+                    None => break,
+                    Some('\\') => {
+                        // An escaped newline still starts a new physical
+                        // line; keep line numbers exact.
+                        if c.get(i + 1) == Some(&'\n') {
+                            out.push(Line::default());
+                        }
+                        i += 2;
+                    }
+                    Some('\n') => {
+                        out.push(Line::default());
+                        i += 1;
+                    }
+                    Some('"') => {
+                        i += 1;
+                        break;
+                    }
+                    Some(_) => i += 1,
+                }
+            }
+            out.last_mut().unwrap().code.push_str("\"\"");
+            prev_ident = false;
+            continue;
+        }
+        if ch == '\'' {
+            // Char literal vs lifetime: a char literal closes with a
+            // quote on this line; lifetimes (`'a`, `'static`) never do.
+            if c.get(i + 1) == Some(&'\\') {
+                i += 2;
+                if i < n {
+                    i += 1; // the escaped char itself
+                }
+                while i < n && c[i] != '\'' && c[i] != '\n' {
+                    i += 1;
+                }
+                if c.get(i) == Some(&'\'') {
+                    i += 1;
+                }
+                out.last_mut().unwrap().code.push_str("''");
+                prev_ident = false;
+                continue;
+            }
+            if c.get(i + 2) == Some(&'\'') {
+                i += 3;
+                out.last_mut().unwrap().code.push_str("''");
+                prev_ident = false;
+                continue;
+            }
+            out.last_mut().unwrap().code.push('\'');
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        let line = out.last_mut().unwrap();
+        line.code.push(ch);
+        prev_ident = ch.is_alphanumeric() || ch == '_';
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::strip;
+
+    #[test]
+    fn line_comments_are_split_out() {
+        let ls = strip("let x = 1; // trailing note\n// full line\nlet y = 2;\n");
+        assert_eq!(ls[0].code.trim(), "let x = 1;");
+        assert_eq!(ls[0].comment, "// trailing note");
+        assert!(ls[1].code.trim().is_empty());
+        assert_eq!(ls[1].comment, "// full line");
+        assert_eq!(ls[2].code.trim(), "let y = 2;");
+    }
+
+    #[test]
+    fn string_contents_are_blanked_but_structure_survives() {
+        let ls = strip("println!(\"no // comment here\");\n");
+        assert_eq!(ls[0].code, "println!(\"\");");
+        assert!(ls[0].comment.is_empty());
+    }
+
+    #[test]
+    fn escapes_do_not_end_strings_early() {
+        let ls = strip("let s = \"a \\\" // b\"; // real\n");
+        assert_eq!(ls[0].code, "let s = \"\"; ");
+        assert_eq!(ls[0].comment, "// real");
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let ls = strip("a /* one /* two */ still */ b\n/* open\nclose */ c\n");
+        assert_eq!(ls[0].code, "a  b");
+        assert_eq!(ls[0].comment, " one  two  still ");
+        assert!(ls[1].code.is_empty());
+        assert_eq!(ls[2].code.trim(), "c");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_are_blanked() {
+        let ls = strip("let j = r#\"{\"k\": \"// not code\"}\"#;\nnext();\n");
+        assert_eq!(ls[0].code, "let j = \"\";");
+        assert_eq!(ls[1].code, "next();");
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_numbers_exact() {
+        let ls = strip("let s = \"one\ntwo\nthree\";\nafter();\n");
+        assert_eq!(ls.len(), 5); // 4 source lines + trailing empty
+        assert_eq!(ls[3].code, "after();");
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_disambiguate() {
+        let ls = strip("fn f<'a>(x: &'a str) -> char {\n    let q = '\\'';\n    '/'\n}\n");
+        assert_eq!(ls[0].code, "fn f<'a>(x: &'a str) -> char {");
+        assert_eq!(ls[1].code, "    let q = '';");
+        assert_eq!(ls[2].code, "    ''");
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_a_raw_string() {
+        let ls = strip("let var = 1; for r in 0..2 { let _ = var; }\n");
+        assert!(ls[0].code.contains("for r in 0..2"));
+    }
+
+    #[test]
+    fn comment_markers_inside_strings_are_ignored() {
+        let ls = strip("let s = \"/* not a comment */ // nor this\"; g();\n");
+        assert_eq!(ls[0].code, "let s = \"\"; g();");
+        assert!(ls[0].comment.is_empty());
+    }
+}

@@ -1,0 +1,189 @@
+//! Repo-native static analysis: the `omniquant lint` invariant linter.
+//!
+//! The repo's superpower — bit-for-bit determinism across KV backends,
+//! thread counts, chunk sizes, and attention kernels — rests on a
+//! handful of coding invariants that used to live only in reviewers'
+//! heads: NaN-total float ordering, no wrapping TOML casts, documented
+//! `unsafe`, timing-free kernels, machine-clean stdout, and a parity
+//! suite that names every backend variant. PRs 3–7 each re-fixed one of
+//! those families by hand; this module makes them machine-checked.
+//!
+//! `docs/INVARIANTS.md` catalogues every rule: what it forbids, which
+//! PR's bug motivated it, and how to suppress a finding with a
+//! justification (`// lint: allow(<rule>): why`). The rule engine
+//! itself lives in [`rules`]; the comment/string-stripping scanner it
+//! runs on lives in [`lexer`].
+//!
+//! The linter is dependency-free by design (like the rest of the
+//! crate): findings are plain `file:line: [rule] message` lines, or a
+//! machine-readable report through the crate's own [`crate::json`]
+//! writer via `omniquant lint --json`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{RuleInfo, RULES};
+
+/// One lint finding, anchored to a 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Stable rule id (see [`RULES`]).
+    pub rule: &'static str,
+    /// Path of the offending file, as passed to the linter.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable explanation with the suggested fix.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// The result of one lint run.
+#[derive(Debug)]
+pub struct Report {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// All findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    /// True when the run produced no findings.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable report through the crate's own JSON writer.
+    pub fn to_json(&self) -> Json {
+        let mut findings = Vec::with_capacity(self.findings.len());
+        for f in &self.findings {
+            let mut m = BTreeMap::new();
+            m.insert("rule".to_string(), Json::Str(f.rule.to_string()));
+            m.insert("file".to_string(), Json::Str(f.file.clone()));
+            m.insert("line".to_string(), Json::Num(f.line as f64));
+            m.insert("message".to_string(), Json::Str(f.message.clone()));
+            findings.push(Json::Obj(m));
+        }
+        let mut rules = Vec::with_capacity(RULES.len());
+        for r in RULES {
+            let mut m = BTreeMap::new();
+            m.insert("id".to_string(), Json::Str(r.id.to_string()));
+            m.insert("summary".to_string(), Json::Str(r.summary.to_string()));
+            rules.push(Json::Obj(m));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("clean".to_string(), Json::Bool(self.is_clean()));
+        m.insert("files".to_string(), Json::Num(self.files as f64));
+        m.insert("findings".to_string(), Json::Arr(findings));
+        m.insert("rules".to_string(), Json::Arr(rules));
+        Json::Obj(m)
+    }
+}
+
+/// Lint in-memory `(path, source)` pairs. This is the whole engine —
+/// [`lint_root`] is just a filesystem walk feeding it — so tests can
+/// drive every rule from string fixtures.
+pub fn lint_sources(files: &[(String, String)]) -> Report {
+    let mut prepared = Vec::with_capacity(files.len());
+    for (path, src) in files {
+        let lines = lexer::strip(src);
+        let allows = rules::Allows::parse(&lines);
+        prepared.push(rules::Prepared { path: path.clone(), lines, allows });
+    }
+    let mut findings = rules::check_all(&prepared);
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Report { files: files.len(), findings }
+}
+
+/// Lint every `.rs` file under `root` (or `root` itself when it is a
+/// file), skipping `target/` and hidden directories. The walk order is
+/// sorted so findings are deterministic across filesystems.
+pub fn lint_root(root: &Path) -> Result<Report> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)
+        .with_context(|| format!("scanning {} for .rs files", root.display()))?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let src = std::fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?;
+        files.push((p.display().to_string(), src));
+    }
+    Ok(lint_sources(&files))
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if path.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(path).with_context(|| format!("reading {}", path.display()))? {
+        let entry = entry?;
+        let p = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if p.is_dir() {
+            if name == "target" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_round_trips_through_the_crate_parser() {
+        let files = vec![(
+            "rust/src/serve/x.rs".to_string(),
+            "fn f() {\n    println!(\"x\");\n}\n".to_string(),
+        )];
+        let report = lint_sources(&files);
+        assert!(!report.is_clean());
+        let parsed = Json::parse(&report.to_json().to_string()).expect("valid json");
+        assert_eq!(parsed.get("clean"), Some(&Json::Bool(false)));
+        let n_findings = match parsed.get("findings") {
+            Some(Json::Arr(v)) => v.len(),
+            other => panic!("findings is not an array: {other:?}"),
+        };
+        assert_eq!(n_findings, 1);
+        let n_rules = match parsed.get("rules") {
+            Some(Json::Arr(v)) => v.len(),
+            other => panic!("rules is not an array: {other:?}"),
+        };
+        assert_eq!(n_rules, RULES.len());
+    }
+
+    #[test]
+    fn findings_are_sorted_and_display_as_file_line_rule() {
+        let files = vec![(
+            "rust/src/serve/x.rs".to_string(),
+            "fn f() {\n    println!(\"b\");\n    println!(\"a\");\n}\n".to_string(),
+        )];
+        let report = lint_sources(&files);
+        assert_eq!(report.findings.len(), 2);
+        assert!(report.findings[0].line < report.findings[1].line);
+        let line = report.findings[0].to_string();
+        assert!(line.starts_with("rust/src/serve/x.rs:2: [stdout-print]"), "{line}");
+    }
+}

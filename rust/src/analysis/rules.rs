@@ -1,0 +1,689 @@
+//! The invariant rules and the suppression-marker machinery.
+//!
+//! Each rule codifies a bug family this repo has actually shipped and
+//! re-fixed (see `docs/INVARIANTS.md` for the catalogue: what each rule
+//! forbids, which PR's bug motivated it, and how to suppress it with a
+//! justification). Rules pattern-match on the stripped code/comment
+//! halves produced by [`super::lexer`], so string literals never trip a
+//! rule and comments never count as code.
+//!
+//! Suppression markers live in comments:
+//!
+//! - `// lint: allow(rule-id): why` — suppresses `rule-id` on this
+//!   line and the next line.
+//! - `// lint: allow(rule-id, file): why` — suppresses `rule-id` for
+//!   the whole file.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::Line;
+use super::Finding;
+
+/// Static description of one rule, surfaced in `--json` output and in
+/// `docs/INVARIANTS.md`.
+pub struct RuleInfo {
+    /// Stable kebab-case id, used in findings and `lint: allow(..)`.
+    pub id: &'static str,
+    /// One-line summary of what the rule forbids.
+    pub summary: &'static str,
+}
+
+/// Rule id: `unsafe` without an adjacent `SAFETY` argument.
+pub const UNSAFE_SAFETY: &str = "unsafe-safety";
+/// Rule id: `partial_cmp(..).unwrap()` (panics on NaN).
+pub const PARTIAL_CMP_UNWRAP: &str = "partial-cmp-unwrap";
+/// Rule id: float sorts must use `total_cmp`.
+pub const FLOAT_SORT_TOTAL_CMP: &str = "float-sort-total-cmp";
+/// Rule id: integer `as` casts on TOML `as_int()` results.
+pub const TOML_INT_CAST: &str = "toml-int-cast";
+/// Rule id: timing calls inside kernel modules.
+pub const KERNEL_TIMING: &str = "kernel-timing";
+/// Rule id: stdout prints outside `main`/`report`/`json`.
+pub const STDOUT_PRINT: &str = "stdout-print";
+/// Rule id: enum variants missing from the `tests/sched.rs` parity suite.
+pub const VARIANT_COVERAGE: &str = "variant-coverage";
+
+/// Every rule the linter ships, in finding-id order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: UNSAFE_SAFETY,
+        summary: "every `unsafe` block/fn/impl carries an adjacent \
+                  `// SAFETY:` comment (or `# Safety` docs) stating the \
+                  disjointness/lifetime argument",
+    },
+    RuleInfo {
+        id: PARTIAL_CMP_UNWRAP,
+        summary: "no `partial_cmp(..).unwrap()` — it panics on NaN; use \
+                  `total_cmp` or handle the None",
+    },
+    RuleInfo {
+        id: FLOAT_SORT_TOTAL_CMP,
+        summary: "float sorts go through `total_cmp`, not `partial_cmp` \
+                  comparators",
+    },
+    RuleInfo {
+        id: TOML_INT_CAST,
+        summary: "no integer `as` casts on TOML `as_int()` results — \
+                  negative values wrap; route through `toml_usize`/`toml_u64`",
+    },
+    RuleInfo {
+        id: KERNEL_TIMING,
+        summary: "no `Instant`/`SystemTime`/`elapsed` inside kernel modules \
+                  (linalg, quant, serve/attn) — time at the engine layer via \
+                  `trace::phase_secs`",
+    },
+    RuleInfo {
+        id: STDOUT_PRINT,
+        summary: "no `println!`/`print!` in `src/` outside `main.rs`, \
+                  `report`, and `json` — `--json` stdout must stay \
+                  machine-clean; diagnostics go to stderr",
+    },
+    RuleInfo {
+        id: VARIANT_COVERAGE,
+        summary: "every `AttnKind`/`KvStoreKind`/`KvLayout` variant name \
+                  appears in `tests/sched.rs` so the parity suite cannot \
+                  silently rot",
+    },
+];
+
+/// Enums whose variants the parity suite must mention by name.
+const WATCHED_ENUMS: &[&str] = &["AttnKind", "KvStoreKind", "KvLayout"];
+
+/// Kernel path fragments for the `kernel-timing` rule.
+const KERNEL_PATHS: &[&str] = &["src/linalg/", "src/quant/", "src/serve/attn.rs"];
+
+/// Timing tokens forbidden inside kernel modules.
+const TIMING_TOKENS: &[&str] = &["Instant", "SystemTime", "elapsed"];
+
+/// Integer cast forms that wrap negative `as_int()` results.
+const INT_CASTS: &[&str] = &["as usize", "as u64", "as u32", "as i64", "as i32", "as isize"];
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offset of `pat` in `code` at identifier boundaries, if any.
+///
+/// Boundary checks apply only at pattern ends that are themselves
+/// identifier chars, so `println!` matches as a unit but `eprintln!`
+/// never matches a search for `println!`.
+fn find_token(code: &str, pat: &str) -> Option<usize> {
+    let (cb, pb) = (code.as_bytes(), pat.as_bytes());
+    if pb.is_empty() || cb.len() < pb.len() {
+        return None;
+    }
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find(pat).map(|p| p + from) {
+        let pre_ok = !is_ident_byte(pb[0]) || pos == 0 || !is_ident_byte(cb[pos - 1]);
+        let end = pos + pb.len();
+        let post_ok =
+            !is_ident_byte(pb[pb.len() - 1]) || end == cb.len() || !is_ident_byte(cb[end]);
+        if pre_ok && post_ok {
+            return Some(pos);
+        }
+        from = pos + 1;
+    }
+    None
+}
+
+fn has_token(code: &str, pat: &str) -> bool {
+    find_token(code, pat).is_some()
+}
+
+/// Parsed `lint: allow(..)` markers for one file.
+#[derive(Default)]
+pub(crate) struct Allows {
+    file_rules: BTreeSet<String>,
+    /// Marker line (0-based) -> rule ids allowed on it and the next line.
+    line_rules: BTreeMap<usize, BTreeSet<String>>,
+}
+
+impl Allows {
+    pub(crate) fn parse(lines: &[Line]) -> Allows {
+        const MARKER: &str = "lint: allow(";
+        let mut a = Allows::default();
+        for (ln, line) in lines.iter().enumerate() {
+            let mut rest = line.comment.as_str();
+            while let Some(p) = rest.find(MARKER) {
+                rest = &rest[p + MARKER.len()..];
+                let Some(close) = rest.find(')') else { break };
+                let mut parts = rest[..close].split(',').map(str::trim);
+                let rule = parts.next().unwrap_or("").to_string();
+                if !rule.is_empty() {
+                    if parts.next() == Some("file") {
+                        a.file_rules.insert(rule);
+                    } else {
+                        a.line_rules.entry(ln).or_default().insert(rule);
+                    }
+                }
+                rest = &rest[close..];
+            }
+        }
+        a
+    }
+
+    /// Is `rule` suppressed at 0-based line `ln`? A line marker covers
+    /// its own line and the line below it (comment-above style).
+    fn suppressed(&self, rule: &str, ln: usize) -> bool {
+        if self.file_rules.contains(rule) {
+            return true;
+        }
+        if self.line_rules.get(&ln).is_some_and(|s| s.contains(rule)) {
+            return true;
+        }
+        ln > 0 && self.line_rules.get(&(ln - 1)).is_some_and(|s| s.contains(rule))
+    }
+}
+
+/// One file's stripped lines plus its parsed suppression markers.
+pub(crate) struct Prepared {
+    pub(crate) path: String,
+    pub(crate) lines: Vec<Line>,
+    pub(crate) allows: Allows,
+}
+
+fn push(findings: &mut Vec<Finding>, f: &Prepared, rule: &'static str, ln: usize, msg: &str) {
+    if !f.allows.suppressed(rule, ln) {
+        findings.push(Finding {
+            rule,
+            file: f.path.clone(),
+            line: ln + 1,
+            message: msg.to_string(),
+        });
+    }
+}
+
+/// Does a comment carry a safety argument? Accepts `// SAFETY:` block
+/// comments and `/// # Safety` doc sections on `unsafe fn`s.
+fn is_safety_comment(comment: &str) -> bool {
+    comment.contains("SAFETY:") || comment.contains("# Safety")
+}
+
+/// Walk upward from an `unsafe`-bearing line looking for a safety
+/// comment. Comment-only lines, blank lines, attributes, and other
+/// `unsafe`-bearing lines are "passive" (one comment may cover a run of
+/// consecutive unsafe lines, e.g. a Send/Sync impl pair); the first
+/// active code line without a marker ends the search.
+fn unsafe_site_is_covered(lines: &[Line], ln: usize) -> bool {
+    if is_safety_comment(&lines[ln].comment) {
+        return true;
+    }
+    let mut j = ln;
+    for _ in 0..32 {
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        let passive = code.is_empty() || code.starts_with("#[") || has_token(&l.code, "unsafe");
+        if !passive {
+            return false;
+        }
+        if is_safety_comment(&l.comment) {
+            return true;
+        }
+    }
+    false
+}
+
+fn check_unsafe_safety(f: &Prepared, findings: &mut Vec<Finding>) {
+    for ln in 0..f.lines.len() {
+        if !has_token(&f.lines[ln].code, "unsafe") {
+            continue;
+        }
+        if unsafe_site_is_covered(&f.lines, ln) {
+            continue;
+        }
+        push(
+            findings,
+            f,
+            UNSAFE_SAFETY,
+            ln,
+            "`unsafe` without an adjacent `// SAFETY:` comment — state the \
+             disjointness/lifetime argument (use `/// # Safety` docs for an \
+             unsafe fn)",
+        );
+    }
+}
+
+fn check_partial_cmp_unwrap(f: &Prepared, findings: &mut Vec<Finding>) {
+    for ln in 0..f.lines.len() {
+        let code = &f.lines[ln].code;
+        let Some(pos) = find_token(code, "partial_cmp") else {
+            continue;
+        };
+        let next = f.lines.get(ln + 1);
+        let same_line = has_token(&code[pos..], "unwrap");
+        let next_line = next.is_some_and(|l| l.code.trim_start().starts_with(".unwrap()"));
+        if same_line || next_line {
+            push(
+                findings,
+                f,
+                PARTIAL_CMP_UNWRAP,
+                ln,
+                "`partial_cmp(..).unwrap()` panics on NaN — use `total_cmp`, \
+                 or handle the `None` explicitly",
+            );
+        }
+    }
+}
+
+/// Position of a `sort_by` / `sort_unstable_by` call token, if any.
+fn find_sort_call(code: &str) -> Option<usize> {
+    find_token(code, "sort_by").or_else(|| find_token(code, "sort_unstable_by"))
+}
+
+/// The stripped code of `lines[ln..]` limited to `extra` lines past the
+/// first, starting at byte `pos` of line `ln`.
+fn window(lines: &[Line], ln: usize, pos: usize, extra: usize) -> String {
+    let mut w = lines[ln].code[pos..].to_string();
+    for l in lines.iter().skip(ln + 1).take(extra) {
+        w.push(' ');
+        w.push_str(&l.code);
+    }
+    w
+}
+
+fn check_float_sort(f: &Prepared, findings: &mut Vec<Finding>) {
+    for ln in 0..f.lines.len() {
+        let Some(pos) = find_sort_call(&f.lines[ln].code) else {
+            continue;
+        };
+        if has_token(&window(&f.lines, ln, pos, 2), "partial_cmp") {
+            push(
+                findings,
+                f,
+                FLOAT_SORT_TOTAL_CMP,
+                ln,
+                "float sort via `partial_cmp` — sort with `total_cmp`, which \
+                 is total over every f32 including NaN",
+            );
+        }
+    }
+}
+
+fn check_toml_int_cast(f: &Prepared, findings: &mut Vec<Finding>) {
+    for ln in 0..f.lines.len() {
+        let Some(pos) = find_token(&f.lines[ln].code, "as_int") else {
+            continue;
+        };
+        let w = window(&f.lines, ln, pos, 2);
+        if INT_CASTS.iter().any(|c| has_token(&w, c)) {
+            push(
+                findings,
+                f,
+                TOML_INT_CAST,
+                ln,
+                "integer `as` cast on an `as_int()` result wraps negative \
+                 TOML values — route through `config::toml_usize` / \
+                 `config::toml_u64`",
+            );
+        }
+    }
+}
+
+fn check_kernel_timing(f: &Prepared, findings: &mut Vec<Finding>) {
+    if !KERNEL_PATHS.iter().any(|p| f.path.contains(p)) {
+        return;
+    }
+    for ln in 0..f.lines.len() {
+        let code = &f.lines[ln].code;
+        if let Some(tok) = TIMING_TOKENS.iter().find(|t| has_token(code, t)) {
+            let msg = format!(
+                "`{tok}` inside a kernel module — kernels must stay \
+                 timing-free; measure at the engine layer and record via \
+                 `trace::phase_secs`"
+            );
+            push(findings, f, KERNEL_TIMING, ln, &msg);
+        }
+    }
+}
+
+fn check_stdout_print(f: &Prepared, findings: &mut Vec<Finding>) {
+    let in_src = f.path.starts_with("src/") || f.path.contains("/src/");
+    let exempt = f.path.ends_with("src/main.rs")
+        || f.path.contains("src/report/")
+        || f.path.contains("src/json/");
+    if !in_src || exempt {
+        return;
+    }
+    for ln in 0..f.lines.len() {
+        let code = &f.lines[ln].code;
+        if has_token(code, "println!") || has_token(code, "print!") {
+            push(
+                findings,
+                f,
+                STDOUT_PRINT,
+                ln,
+                "stdout print outside `main.rs`/`report`/`json` — `--json` \
+                 stdout must stay machine-clean; use `eprintln!` for \
+                 diagnostics or return the data",
+            );
+        }
+    }
+}
+
+/// Extract `(enum name, variant name, 0-based line)` for every watched
+/// enum declared across `lines`. Handles the multi-line `enum X { ... }`
+/// form the repo uses; variants may carry payloads or attributes.
+fn watched_variants(lines: &[Line]) -> Vec<(&'static str, String, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < lines.len() {
+        let decl = &lines[i].code;
+        let hit = WATCHED_ENUMS.iter().find(|w| has_token(decl, "enum") && has_token(decl, w));
+        let Some(&name) = hit else {
+            i += 1;
+            continue;
+        };
+        let mut depth = 0i32;
+        let mut entered = false;
+        let mut j = i;
+        'body: while j < lines.len() {
+            if entered && depth == 1 && j > i {
+                let t = lines[j].code.trim();
+                if t.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                    let v: String = t
+                        .chars()
+                        .take_while(|c| c.is_alphanumeric() || *c == '_')
+                        .collect();
+                    out.push((name, v, j));
+                }
+            }
+            for ch in lines[j].code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        entered = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if entered && depth == 0 {
+                            break 'body;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Project-level rule: every watched enum variant must be named in the
+/// `tests/sched.rs` parity suite. Skipped when no scanned file is the
+/// sched suite (e.g. linting a single file).
+fn check_variant_coverage(files: &[Prepared], findings: &mut Vec<Finding>) {
+    let Some(sched) = files.iter().find(|f| f.path.ends_with("tests/sched.rs")) else {
+        return;
+    };
+    let mut sched_code = String::new();
+    for l in &sched.lines {
+        sched_code.push_str(&l.code);
+        sched_code.push('\n');
+    }
+    for f in files {
+        if f.path.ends_with("tests/sched.rs") {
+            continue;
+        }
+        for (enum_name, variant, ln) in watched_variants(&f.lines) {
+            if !has_token(&sched_code, &variant) {
+                let msg = format!(
+                    "`{enum_name}::{variant}` never appears in tests/sched.rs \
+                     — extend the parity suite before shipping a new variant"
+                );
+                push(findings, f, VARIANT_COVERAGE, ln, &msg);
+            }
+        }
+    }
+}
+
+/// Run every rule over the prepared files, returning unsorted findings.
+pub(crate) fn check_all(files: &[Prepared]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for f in files {
+        check_unsafe_safety(f, &mut findings);
+        check_partial_cmp_unwrap(f, &mut findings);
+        check_float_sort(f, &mut findings);
+        check_toml_int_cast(f, &mut findings);
+        check_kernel_timing(f, &mut findings);
+        check_stdout_print(f, &mut findings);
+    }
+    check_variant_coverage(files, &mut findings);
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lint_sources;
+    use super::*;
+
+    fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+        let owned: Vec<(String, String)> =
+            files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect();
+        lint_sources(&owned).findings
+    }
+
+    /// A sched-suite stub that names the variants the fixtures treat as
+    /// "covered".
+    const SCHED_STUB: (&str, &str) = (
+        "rust/tests/sched.rs",
+        "fn covered() {\n    let _ = (AttnKind::Fused, KvLayout::TokenMajor);\n}\n",
+    );
+
+    /// One row per rule: a known-bad snippet the rule must flag at
+    /// `bad_line` (1-based), and a `lint: allow`-suppressed variant the
+    /// rule must pass. `extra` supplies a companion file for
+    /// project-level rules.
+    struct Fixture {
+        rule: &'static str,
+        path: &'static str,
+        bad: &'static str,
+        bad_line: usize,
+        allowed: &'static str,
+        extra: Option<(&'static str, &'static str)>,
+    }
+
+    const FIXTURES: &[Fixture] = &[
+        Fixture {
+            rule: UNSAFE_SAFETY,
+            path: "rust/src/serve/x.rs",
+            bad: "pub fn f(p: *mut f32) {\n    unsafe { *p = 0.0 };\n}\n",
+            bad_line: 2,
+            allowed: "pub fn f(p: *mut f32) {\n    \
+                      // lint: allow(unsafe-safety): fixture\n    \
+                      unsafe { *p = 0.0 };\n}\n",
+            extra: None,
+        },
+        Fixture {
+            rule: PARTIAL_CMP_UNWRAP,
+            path: "rust/src/serve/x.rs",
+            bad: "fn f(v: &[f32]) {\n    \
+                  v.iter().max_by(|a, b| a.partial_cmp(b).unwrap());\n}\n",
+            bad_line: 2,
+            allowed: "fn f(v: &[f32]) {\n    \
+                      // lint: allow(partial-cmp-unwrap): fixture\n    \
+                      v.iter().max_by(|a, b| a.partial_cmp(b).unwrap());\n}\n",
+            extra: None,
+        },
+        Fixture {
+            rule: FLOAT_SORT_TOTAL_CMP,
+            path: "rust/src/serve/x.rs",
+            bad: "fn f(v: &mut [f32]) {\n    \
+                  v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));\n}\n",
+            bad_line: 2,
+            allowed: "fn f(v: &mut [f32]) {\n    \
+                      // lint: allow(float-sort-total-cmp): fixture\n    \
+                      v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));\n\
+                      }\n",
+            extra: None,
+        },
+        Fixture {
+            rule: TOML_INT_CAST,
+            path: "rust/src/serve/x.rs",
+            bad: "fn f(v: &TomlValue) -> usize {\n    v.as_int().unwrap() as usize\n}\n",
+            bad_line: 2,
+            allowed: "fn f(v: &TomlValue) -> usize {\n    \
+                      // lint: allow(toml-int-cast): fixture\n    \
+                      v.as_int().unwrap() as usize\n}\n",
+            extra: None,
+        },
+        Fixture {
+            rule: KERNEL_TIMING,
+            path: "rust/src/linalg/x.rs",
+            bad: "fn f() {\n    let _t0 = std::time::Instant::now();\n}\n",
+            bad_line: 2,
+            allowed: "fn f() {\n    \
+                      // lint: allow(kernel-timing): fixture\n    \
+                      let _t0 = std::time::Instant::now();\n}\n",
+            extra: None,
+        },
+        Fixture {
+            rule: STDOUT_PRINT,
+            path: "rust/src/serve/x.rs",
+            bad: "fn f() {\n    println!(\"tok/s {}\", 3);\n}\n",
+            bad_line: 2,
+            allowed: "fn f() {\n    \
+                      // lint: allow(stdout-print): fixture\n    \
+                      println!(\"tok/s {}\", 3);\n}\n",
+            extra: None,
+        },
+        Fixture {
+            rule: VARIANT_COVERAGE,
+            path: "rust/src/serve/attn.rs",
+            bad: "pub enum AttnKind {\n    Fused,\n    Gather,\n}\n",
+            bad_line: 3,
+            allowed: "pub enum AttnKind {\n    Fused,\n    \
+                      Gather, // lint: allow(variant-coverage): fixture\n}\n",
+            extra: Some(SCHED_STUB),
+        },
+    ];
+
+    #[test]
+    fn every_rule_flags_its_fixture_at_the_right_line() {
+        for fx in FIXTURES {
+            let mut files = vec![(fx.path, fx.bad)];
+            if let Some(extra) = fx.extra {
+                files.push(extra);
+            }
+            let found = run(&files);
+            let hit = found
+                .iter()
+                .any(|f| f.rule == fx.rule && f.file == fx.path && f.line == fx.bad_line);
+            assert!(
+                hit,
+                "rule {} did not flag its fixture at line {}: {found:?}",
+                fx.rule,
+                fx.bad_line
+            );
+        }
+    }
+
+    #[test]
+    fn every_rule_respects_its_allow_marker() {
+        for fx in FIXTURES {
+            let mut files = vec![(fx.path, fx.allowed)];
+            if let Some(extra) = fx.extra {
+                files.push(extra);
+            }
+            let found = run(&files);
+            assert!(
+                !found.iter().any(|f| f.rule == fx.rule),
+                "rule {} ignored its allow marker: {found:?}",
+                fx.rule
+            );
+        }
+    }
+
+    #[test]
+    fn file_level_allow_suppresses_everywhere_in_the_file() {
+        let src = "// lint: allow(stdout-print, file): fixture\n\
+                   fn a() {\n    println!(\"x\");\n}\n\
+                   fn b() {\n    println!(\"y\");\n}\n";
+        assert!(run(&[("rust/src/serve/x.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_forms_cover_their_sites() {
+        // Same-line, comment-above, doc `# Safety`, Send/Sync pair under
+        // one comment, and attribute between comment and site.
+        let src = "fn a(p: *mut f32) {\n    \
+                   unsafe { *p = 0.0 }; // SAFETY: p is valid\n}\n\
+                   fn b(p: *mut f32) {\n    \
+                   // SAFETY: caller guarantees exclusive access to p.\n    \
+                   unsafe { *p = 0.0 };\n}\n\
+                   /// Reads a raw slot.\n///\n/// # Safety\n///\n\
+                   /// Caller must hold the slot lease.\n\
+                   pub unsafe fn c() {}\n\
+                   struct R;\n\
+                   // SAFETY: single-writer ring; readers are quiescent.\n\
+                   unsafe impl Sync for R {}\n\
+                   unsafe impl Send for R {}\n\
+                   // SAFETY: covered through the attribute below.\n\
+                   #[allow(dead_code)]\n\
+                   unsafe fn d() {}\n";
+        assert!(run(&[("rust/src/serve/x.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn a_plain_code_line_breaks_safety_coverage() {
+        let src = "fn a(p: *mut f32) {\n    \
+                   // SAFETY: does not apply — code intervenes.\n    \
+                   let q = p;\n    \
+                   unsafe { *q = 0.0 };\n}\n";
+        let found = run(&[("rust/src/serve/x.rs", src)]);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, UNSAFE_SAFETY);
+        assert_eq!(found[0].line, 4);
+    }
+
+    #[test]
+    fn banned_patterns_inside_strings_or_comments_do_not_fire() {
+        let src = "fn f() {\n    \
+                   let msg = \"println! and partial_cmp().unwrap() here\";\n    \
+                   // a comment mentioning unsafe and println! is fine\n    \
+                   eprintln!(\"{msg}\");\n}\n";
+        assert!(run(&[("rust/src/serve/x.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn stdout_rule_scopes_to_src_and_exempts_report_json_main() {
+        let print_fn = "fn f() {\n    println!(\"x\");\n}\n";
+        for exempt in [
+            "rust/src/main.rs",
+            "rust/src/report/mod.rs",
+            "rust/src/json/mod.rs",
+            "rust/tests/x.rs",
+            "rust/benches/x.rs",
+        ] {
+            assert!(run(&[(exempt, print_fn)]).is_empty(), "{exempt}");
+        }
+        assert_eq!(run(&[("rust/src/eval/mod.rs", print_fn)]).len(), 1);
+    }
+
+    #[test]
+    fn variant_coverage_skips_without_a_sched_suite_and_sees_attrs() {
+        let enum_src = "pub enum KvLayout {\n    #[default]\n    TokenMajor,\n    HeadMajor,\n}\n";
+        // No sched file scanned: the project rule stands down.
+        assert!(run(&[("rust/src/serve/sched/pool.rs", enum_src)]).is_empty());
+        // With the stub (which names TokenMajor but not HeadMajor), the
+        // attribute line is skipped and the uncovered variant is exact.
+        let found = run(&[("rust/src/serve/sched/pool.rs", enum_src), SCHED_STUB]);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, VARIANT_COVERAGE);
+        assert_eq!(found[0].line, 4);
+        assert!(found[0].message.contains("KvLayout::HeadMajor"));
+    }
+
+    #[test]
+    fn token_matching_respects_identifier_boundaries() {
+        assert!(find_token("eprintln!(\"\")", "println!").is_none());
+        assert!(find_token("println!(\"\")", "println!").is_some());
+        assert!(find_token("a.partial_cmp_like(b)", "partial_cmp").is_none());
+        assert!(find_token("my_unsafe_helper()", "unsafe").is_none());
+        assert!(find_token("unsafe { x() }", "unsafe").is_some());
+    }
+}

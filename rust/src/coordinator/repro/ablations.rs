@@ -4,6 +4,9 @@
 //! (learned clipping-scale distributions), Figure A2 (activation outliers
 //! before/after LET).
 
+// lint: allow(stdout-print, file): the rendered experiment tables ARE the
+// command's product — `repro` prints them to stdout for EXPERIMENTS.md.
+
 use anyhow::Result;
 
 use crate::calib::{self, OmniQuant};

@@ -3,6 +3,9 @@
 //! pure-Rust serving engine (the MLC-LLM-on-A100 substitution; both are
 //! memory-bound weight-streaming decoders, DESIGN.md section 2/3).
 
+// lint: allow(stdout-print, file): the rendered experiment tables ARE the
+// command's product — `repro` prints them to stdout for EXPERIMENTS.md.
+
 use anyhow::Result;
 
 use crate::config::QuantSetting;

@@ -4,6 +4,9 @@
 //! same prompts (both orders are symmetric here since NLL is
 //! position-free). Shape to reproduce: OmniQuant >= AWQ > RTN win rates.
 
+// lint: allow(stdout-print, file): the rendered experiment tables ARE the
+// command's product — `repro` prints them to stdout for EXPERIMENTS.md.
+
 use anyhow::Result;
 
 use crate::config::QuantSetting;

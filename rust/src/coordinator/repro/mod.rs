@@ -6,6 +6,9 @@
 //! quantized models are cached under `ckpt/cache/` keyed by
 //! (model, method, setting, calib params) so tables can share them.
 
+// lint: allow(stdout-print, file): the rendered experiment tables ARE the
+// command's product — `repro` prints them to stdout for EXPERIMENTS.md.
+
 pub mod ablations;
 pub mod deploy;
 pub mod judge;

@@ -2,6 +2,9 @@
 //! accuracy), Tables A12/A13 (LLaMA-family PPL), Table A14 (OPT family,
 //! three corpora).
 
+// lint: allow(stdout-print, file): the rendered experiment tables ARE the
+// command's product — `repro` prints them to stdout for EXPERIMENTS.md.
+
 use anyhow::Result;
 
 use crate::config::QuantSetting;

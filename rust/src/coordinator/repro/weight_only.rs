@@ -2,6 +2,9 @@
 //! WikiText2 PPL), Table A8 (C4), Tables A9-A11 (OPT family), Figure A3
 //! (bit-level scaling laws).
 
+// lint: allow(stdout-print, file): the rendered experiment tables ARE the
+// command's product — `repro` prints them to stdout for EXPERIMENTS.md.
+
 use anyhow::Result;
 
 use crate::config::QuantSetting;

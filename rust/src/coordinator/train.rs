@@ -59,7 +59,9 @@ pub fn pretrain(rt: &Runtime, cfg: &TrainConfig, corpus: &Corpus) -> Result<Trai
         let loss = it.next().unwrap().item();
         losses.push(loss);
         if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
-            println!(
+            // progress logging goes to stderr so stdout stays reserved
+            // for machine-readable command output
+            eprintln!(
                 "  train step {step:>5}  loss {loss:.4}  ppl {:.2}  lr {lr:.2e}",
                 loss.exp()
             );

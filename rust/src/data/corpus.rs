@@ -190,12 +190,11 @@ impl Corpus {
             let succs = &self.transitions[topic][tok];
             if i == diverge_at {
                 // order successors by weight, take the rank-th distinct one
-                let mut order: Vec<usize> = (0..succs.len()).collect();
-                order.sort_by(|&a, &b| succs[b].1.partial_cmp(&succs[a].1).unwrap());
+                let weights: Vec<f32> = succs.iter().map(|&(_, w)| w).collect();
+                let order = rank_desc(&weights);
                 let pick = order[rank.min(order.len() - 1)];
                 // burn the sample the reference walk would have drawn so
                 // the streams stay aligned afterwards
-                let weights: Vec<f32> = succs.iter().map(|&(_, w)| w).collect();
                 let _ = rng.categorical(&weights);
                 tok = succs[pick].0 as usize;
             } else {
@@ -245,6 +244,16 @@ impl Corpus {
         }
         (h / n as f64) as f32
     }
+}
+
+/// Indices of `weights` sorted by descending weight. Uses `total_cmp`, so a
+/// NaN weight orders deterministically (first: IEEE-754 total order places
+/// positive NaN above every finite value) instead of panicking mid-sort the
+/// way `partial_cmp(..).unwrap()` would.
+pub fn rank_desc(weights: &[f32]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| weights[b].total_cmp(&weights[a]));
+    order
 }
 
 #[cfg(test)]
@@ -329,5 +338,18 @@ mod tests {
     fn batch_shape() {
         let c = Corpus::new(CorpusId::Ptb, 128);
         assert_eq!(c.batch(5, 3, 32).len(), 96);
+    }
+
+    #[test]
+    fn rank_desc_is_total_on_nan() {
+        // A NaN weight must not panic and must order deterministically:
+        // first, since IEEE-754 total order puts positive NaN above +inf.
+        assert_eq!(rank_desc(&[1.0, f32::NAN, 3.0]), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn rank_desc_matches_partial_order_on_finite_weights() {
+        assert_eq!(rank_desc(&[0.25, 4.0, 1.5, 0.5]), vec![1, 2, 3, 0]);
+        assert_eq!(rank_desc(&[]), Vec::<usize>::new());
     }
 }

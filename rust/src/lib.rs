@@ -10,6 +10,7 @@
 //!   zoo (`quant`), PJRT runtime (`runtime`), deployment engine (`serve`),
 //!   evaluation (`eval`) and experiment drivers (`coordinator`).
 
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod json;

@@ -6,6 +6,7 @@
 //!   eval      perplexity + zero-shot evaluation of a checkpoint
 //!   serve     packed-weight decoding benchmark / generation
 //!   trace-check  validate a Chrome-trace JSON written by `serve --trace`
+//!   lint      repo-native invariant linter (see docs/INVARIANTS.md)
 //!   repro     regenerate a paper table/figure (see DESIGN.md index)
 //!   info      dump manifest / artifact info
 //!
@@ -343,6 +344,34 @@ fn cmd_trace_check(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Repo-native invariant linter (rules catalogued in
+/// `docs/INVARIANTS.md`): scan every `.rs` file under PATH (default
+/// `rust`), print `file:line: [rule] message` findings the way
+/// `trace-check` does, and exit 1 when any finding survives its
+/// `// lint: allow(..)` markers. `--json` emits a machine-readable
+/// report through the crate's own JSON writer instead.
+fn cmd_lint(a: &Args) -> Result<()> {
+    let root = a.positional.first().map(String::as_str).unwrap_or("rust");
+    let report = omniquant::analysis::lint_root(std::path::Path::new(root))?;
+    if a.has("json") {
+        println!("{}", report.to_json());
+    } else {
+        for f in &report.findings {
+            println!("{f}");
+        }
+        println!(
+            "lint: {} findings in {} files ({} rules)",
+            report.findings.len(),
+            report.files,
+            omniquant::analysis::RULES.len()
+        );
+    }
+    if !report.is_clean() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_serve(a: &Args) -> Result<()> {
     let model = a.get_or("model", "omni-1m");
     // `--synthetic` (or `--model synthetic`) serves a freshly initialized
@@ -415,8 +444,8 @@ fn cmd_info(a: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|trace-check|repro|info> [--model M] \
-    [--help]\n\
+const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|trace-check|lint|repro|info> \
+    [--model M] [--help]\n\
     \n\
     train     --model M --steps N --lr X --out ckpt.oqc\n\
     quantize  --model M --ckpt F --setting w4a16 --method omniquant\n\
@@ -449,6 +478,13 @@ const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|trace-check|rep
     \u{20}           live heartbeat line to stderr every N scheduler ticks)\n\
     trace-check FILE  (validate a --trace output: parses, counts spans,\n\
     \u{20}           fails on zero tick spans or unterminated spans)\n\
+    lint      [PATH] [--json]  (repo-native invariant linter over every\n\
+    \u{20}           .rs file under PATH, default 'rust': SAFETY comments on\n\
+    \u{20}           unsafe, total_cmp float ordering, TOML int casts, kernel\n\
+    \u{20}           timing, stdout cleanliness, parity-suite variant\n\
+    \u{20}           coverage — see docs/INVARIANTS.md; exits 1 on findings;\n\
+    \u{20}           suppress with '// lint: allow(rule): why'; --json emits\n\
+    \u{20}           a machine-readable report)\n\
     repro     --exp <fig1|table1|table2|table3|table4|fig4|tableA1..A14|figA1..A3\n\
     \u{20}          |serve-bench|all> [--quick] (reduced sizes/samples)\n\
     info      --model M";
@@ -478,6 +514,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
         "trace-check" => cmd_trace_check(&args),
+        "lint" => cmd_lint(&args),
         "repro" => repro::run(&args.get_or("exp", "all"), args.has("quick")),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => usage(0),

@@ -452,7 +452,7 @@ mod tests {
         let dq = fake_quant(&w, 3, 0, None, None);
         for c in 0..8 {
             let mut vals: Vec<f32> = (0..64).map(|k| dq.at2(k, c)).collect();
-            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.sort_by(f32::total_cmp);
             vals.dedup_by(|a, b| (*a - *b).abs() < 1e-7);
             assert!(vals.len() <= 8, "col {c} has {} levels", vals.len());
         }

@@ -64,6 +64,9 @@ mod imp {
             match self {
                 Value::Scalar(x) => Ok(xla::Literal::scalar(*x)),
                 Value::F32(t) => {
+                    // SAFETY: reinterprets the f32 slice as its raw
+                    // bytes — same allocation, len * 4 bytes, and u8
+                    // has no alignment or validity requirements.
                     let bytes: &[u8] = unsafe {
                         std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
                     };
@@ -75,6 +78,9 @@ mod imp {
                     .map_err(|e| anyhow!("literal create: {e:?}"))
                 }
                 Value::I32(v, shape) => {
+                    // SAFETY: reinterprets the i32 slice as its raw
+                    // bytes — same allocation, len * 4 bytes, and u8
+                    // has no alignment or validity requirements.
                     let bytes: &[u8] = unsafe {
                         std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
                     };

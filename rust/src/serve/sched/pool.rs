@@ -741,18 +741,22 @@ impl KvPool {
             let row0 = base + within;
             match (&self.store, self.layout) {
                 (Store::F32 { k, v }, KvLayout::TokenMajor) => {
-                    // SAFETY: shards own disjoint [r0, r1) row ranges
-                    unsafe { kview.rows(r, r + run) }
-                        .copy_from_slice(&k[row0 * d..(row0 + run) * d]);
-                    unsafe { vview.rows(r, r + run) }
-                        .copy_from_slice(&v[row0 * d..(row0 + run) * d]);
+                    // SAFETY: shards own disjoint [r0, r1) row ranges of
+                    // the destination views, and [r, r + run) lies inside
+                    // this shard's range.
+                    let ko = unsafe { kview.rows(r, r + run) };
+                    let vo = unsafe { vview.rows(r, r + run) };
+                    ko.copy_from_slice(&k[row0 * d..(row0 + run) * d]);
+                    vo.copy_from_slice(&v[row0 * d..(row0 + run) * d]);
                 }
                 (Store::F32 { k, v }, KvLayout::HeadMajor) => {
                     for i in 0..run {
                         let w = within + i;
-                        // SAFETY: as above — row r+i lies inside this shard
-                        let (ko, vo) =
-                            unsafe { (kview.rows(r + i, r + i + 1), vview.rows(r + i, r + i + 1)) };
+                        // SAFETY: row r + i lies inside this shard's
+                        // disjoint [r0, r1) range — no other shard
+                        // touches these destination rows.
+                        let ko = unsafe { kview.rows(r + i, r + i + 1) };
+                        let vo = unsafe { vview.rows(r + i, r + i + 1) };
                         for h in 0..d / hd {
                             let src = base * d + h * (bt * hd) + w * hd;
                             ko[h * hd..(h + 1) * hd].copy_from_slice(&k[src..src + hd]);
@@ -763,27 +767,23 @@ impl KvPool {
                 (Store::Q8 { qk, qv, sk, sv }, KvLayout::TokenMajor) => {
                     for i in 0..run {
                         let (c0, s0) = ((row0 + i) * d, (row0 + i) * ng2);
-                        // SAFETY: as above — row r+i lies inside this shard
-                        dequantize_row_q8(
-                            &qk[c0..c0 + d],
-                            KV_GROUP,
-                            &sk[s0..s0 + ng2],
-                            unsafe { kview.rows(r + i, r + i + 1) },
-                        );
-                        dequantize_row_q8(
-                            &qv[c0..c0 + d],
-                            KV_GROUP,
-                            &sv[s0..s0 + ng2],
-                            unsafe { vview.rows(r + i, r + i + 1) },
-                        );
+                        // SAFETY: row r + i lies inside this shard's
+                        // disjoint [r0, r1) range — no other shard
+                        // touches these destination rows.
+                        let ko = unsafe { kview.rows(r + i, r + i + 1) };
+                        let vo = unsafe { vview.rows(r + i, r + i + 1) };
+                        dequantize_row_q8(&qk[c0..c0 + d], KV_GROUP, &sk[s0..s0 + ng2], ko);
+                        dequantize_row_q8(&qv[c0..c0 + d], KV_GROUP, &sv[s0..s0 + ng2], vo);
                     }
                 }
                 (Store::Q8 { qk, qv, sk, sv }, KvLayout::HeadMajor) => {
                     for i in 0..run {
                         let (w, s0) = (within + i, (row0 + i) * ng2);
-                        // SAFETY: as above — row r+i lies inside this shard
-                        let (ko, vo) =
-                            unsafe { (kview.rows(r + i, r + i + 1), vview.rows(r + i, r + i + 1)) };
+                        // SAFETY: row r + i lies inside this shard's
+                        // disjoint [r0, r1) range — no other shard
+                        // touches these destination rows.
+                        let ko = unsafe { kview.rows(r + i, r + i + 1) };
+                        let vo = unsafe { vview.rows(r + i, r + i + 1) };
                         // element-wise `(code - z) * h` against the logical
                         // lane's group — the exact dequantize_row_q8 op
                         // order, so values are bit-identical to token-major

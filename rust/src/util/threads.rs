@@ -421,6 +421,8 @@ mod tests {
         let mut out = vec![0.0f32; n];
         let view = StripedMut::new(&mut out, 1, n);
         pool.run_ranges(n, 1, &|_s, a, b| {
+            // SAFETY: run_ranges hands each shard a disjoint [a, b), so
+            // no two stripes overlap.
             let dst = unsafe { view.stripe(0, a, b) };
             for (j, v) in dst.iter_mut().enumerate() {
                 *v = (a + j) as f32;

@@ -99,10 +99,12 @@ pub struct ThreadRing {
     slots: Box<[UnsafeCell<Event>]>,
 }
 
-// Safety: `slots` is written only by the owning thread (single-writer
+// SAFETY: `slots` is written only by the owning thread (single-writer
 // contract) and read by collectors only under the quiescence contract
 // above; `head`'s Release/Acquire pair orders slot writes before the
-// reader observes them.
+// reader observes them. No other interior state is thread-affine, so
+// sharing (`Sync`) and moving (`Send`) the ring are sound under that
+// discipline.
 unsafe impl Sync for ThreadRing {}
 unsafe impl Send for ThreadRing {}
 
@@ -115,8 +117,9 @@ impl ThreadRing {
     /// Owning thread only.
     fn push(&self, ev: Event) {
         let h = self.head.load(Ordering::Relaxed);
-        // Safety: single writer (the owning thread); readers honor the
-        // quiescence contract.
+        // SAFETY: single writer (the owning thread); readers honor the
+        // quiescence contract, so no reference aliases this slot while
+        // it is written.
         unsafe { *self.slots[h % self.cap].get() = ev };
         self.head.store(h + 1, Ordering::Release);
     }
@@ -140,6 +143,9 @@ impl ThreadRing {
     fn snapshot(&self) -> Vec<Event> {
         let h = self.head.load(Ordering::Acquire);
         let n = h.min(self.cap);
+        // SAFETY: the caller holds the quiescence contract (the owning
+        // thread is not pushing), and the Acquire load of `head` orders
+        // every slot write it published before these reads.
         (h - n..h).map(|i| unsafe { *self.slots[i % self.cap].get() }).collect()
     }
 }

@@ -1,0 +1,40 @@
+//! Self-test: the repo's own tree must lint clean. This is the same pass
+//! CI runs as `omniquant lint rust`; keeping it in the test suite means a
+//! plain `cargo test` catches invariant violations without the extra CI
+//! lane, and a failure prints every finding with its file:line.
+
+use std::path::Path;
+
+use omniquant::analysis;
+
+#[test]
+fn repo_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::lint_root(root).expect("walking the source tree");
+    assert!(
+        report.files >= 40,
+        "only {} .rs files scanned — the walk is missing directories",
+        report.files
+    );
+    if !report.is_clean() {
+        for f in &report.findings {
+            eprintln!("{f}");
+        }
+        panic!("{} lint findings (listed above)", report.findings.len());
+    }
+}
+
+#[test]
+fn every_shipped_rule_is_documented() {
+    // docs/INVARIANTS.md is the rule catalogue the findings point users
+    // at; a rule that isn't documented there is a dead link.
+    let doc = Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs/INVARIANTS.md");
+    let text = std::fs::read_to_string(&doc).expect("docs/INVARIANTS.md exists");
+    for rule in analysis::RULES {
+        assert!(
+            text.contains(rule.id),
+            "rule `{}` is not documented in docs/INVARIANTS.md",
+            rule.id
+        );
+    }
+}

@@ -762,6 +762,31 @@ fn flash_scheduler_serves_end_to_end_on_head_major_pool() {
 }
 
 #[test]
+fn non_flash_schedulers_keep_the_token_major_layout() {
+    // Fused and Gather attention read whole (t, d) rows, so their pools
+    // stay KvLayout::TokenMajor; only Flash switches to head-major (the
+    // previous test). Together the two pin every layout choice by name.
+    let eng = engine("llama", "w4a16g32", 2);
+    for attn in [AttnKind::Fused, AttnKind::Gather] {
+        let sch = Scheduler::new(
+            &eng,
+            SchedConfig {
+                slots: 2,
+                slot_tokens: 16,
+                eos: None,
+                kv: KvStoreKind::PagedF32,
+                block_tokens: 4,
+                threads: 1,
+                prefill_chunk: 4,
+                attn,
+                stats_interval: 0,
+            },
+        );
+        assert_eq!(sch.pool().layout(), KvLayout::TokenMajor, "{attn:?} keeps token-major");
+    }
+}
+
+#[test]
 #[should_panic(expected = "exceeds the scores capacity")]
 fn attention_past_scratch_max_t_panics_by_name() {
     // regression: BatchScratch's scores rows are sized once (from max_t
