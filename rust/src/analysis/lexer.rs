@@ -26,6 +26,11 @@ pub struct Line {
     pub code: String,
     /// Comment text on this line (line comments and block-comment spans).
     pub comment: String,
+    /// Contents of the string literals blanked out of `code`, in order of
+    /// their `""` placeholders. A literal spanning several physical lines
+    /// is attached to the line its placeholder lands on (where it ends).
+    /// Cross-file rules (usage text, TOML key names) read these.
+    pub strings: Vec<String>,
 }
 
 /// Split `src` into per-line code/comment halves.
@@ -93,21 +98,28 @@ pub fn strip(src: &str) -> Vec<Line> {
                 }
                 if c.get(j) == Some(&'"') {
                     i = j + 1;
+                    let mut content = String::new();
                     loop {
                         match c.get(i) {
                             None => break,
                             Some('\n') => {
                                 out.push(Line::default());
+                                content.push('\n');
                                 i += 1;
                             }
                             Some('"') if (1..=hashes).all(|k| c.get(i + k) == Some(&'#')) => {
                                 i += 1 + hashes;
                                 break;
                             }
-                            Some(_) => i += 1,
+                            Some(&ch) => {
+                                content.push(ch);
+                                i += 1;
+                            }
                         }
                     }
-                    out.last_mut().unwrap().code.push_str("\"\"");
+                    let line = out.last_mut().unwrap();
+                    line.code.push_str("\"\"");
+                    line.strings.push(content);
                     prev_ident = false;
                     continue;
                 }
@@ -121,6 +133,7 @@ pub fn strip(src: &str) -> Vec<Line> {
             // Ordinary string literal (a `b".."` byte string lands here
             // too, with the `b` already emitted as code).
             i += 1;
+            let mut content = String::new();
             loop {
                 match c.get(i) {
                     None => break,
@@ -129,21 +142,33 @@ pub fn strip(src: &str) -> Vec<Line> {
                         // line; keep line numbers exact.
                         if c.get(i + 1) == Some(&'\n') {
                             out.push(Line::default());
+                            content.push('\n');
+                        } else {
+                            content.push('\\');
+                            if let Some(&e) = c.get(i + 1) {
+                                content.push(e);
+                            }
                         }
                         i += 2;
                     }
                     Some('\n') => {
                         out.push(Line::default());
+                        content.push('\n');
                         i += 1;
                     }
                     Some('"') => {
                         i += 1;
                         break;
                     }
-                    Some(_) => i += 1,
+                    Some(&ch) => {
+                        content.push(ch);
+                        i += 1;
+                    }
                 }
             }
-            out.last_mut().unwrap().code.push_str("\"\"");
+            let line = out.last_mut().unwrap();
+            line.code.push_str("\"\"");
+            line.strings.push(content);
             prev_ident = false;
             continue;
         }
@@ -182,6 +207,38 @@ pub fn strip(src: &str) -> Vec<Line> {
         i += 1;
     }
     out
+}
+
+pub(crate) fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offset of `pat` in `code` at identifier boundaries, if any.
+///
+/// Boundary checks apply only at pattern ends that are themselves
+/// identifier chars, so `println!` matches as a unit but `eprintln!`
+/// never matches a search for `println!`.
+pub(crate) fn find_token(code: &str, pat: &str) -> Option<usize> {
+    let (cb, pb) = (code.as_bytes(), pat.as_bytes());
+    if pb.is_empty() || cb.len() < pb.len() {
+        return None;
+    }
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find(pat).map(|p| p + from) {
+        let pre_ok = !is_ident_byte(pb[0]) || pos == 0 || !is_ident_byte(cb[pos - 1]);
+        let end = pos + pb.len();
+        let post_ok =
+            !is_ident_byte(pb[pb.len() - 1]) || end == cb.len() || !is_ident_byte(cb[end]);
+        if pre_ok && post_ok {
+            return Some(pos);
+        }
+        from = pos + 1;
+    }
+    None
+}
+
+pub(crate) fn has_token(code: &str, pat: &str) -> bool {
+    find_token(code, pat).is_some()
 }
 
 #[cfg(test)]
@@ -254,5 +311,53 @@ mod tests {
         let ls = strip("let s = \"/* not a comment */ // nor this\"; g();\n");
         assert_eq!(ls[0].code, "let s = \"\"; g();");
         assert!(ls[0].comment.is_empty());
+    }
+
+    #[test]
+    fn string_contents_are_captured_in_placeholder_order() {
+        let ls = strip("f(\"--alpha\", 3, \"--beta\"); // note\n");
+        assert_eq!(ls[0].code, "f(\"\", 3, \"\"); ");
+        assert_eq!(ls[0].strings, vec!["--alpha", "--beta"]);
+    }
+
+    #[test]
+    fn raw_string_hashes_hide_braces_from_the_code_half() {
+        // The `{`/`}` inside the raw literal must not leak into `code`
+        // (they would corrupt the scope tracker's brace depth), and the
+        // contents must still be captured verbatim.
+        let src = "fn f() {\n    let j = r##\"{\"fn\": \"} } {\"}\"##;\n}\n";
+        let ls = strip(src);
+        assert_eq!(ls[1].code, "    let j = \"\";");
+        assert_eq!(ls[1].strings, vec!["{\"fn\": \"} } {\"}"]);
+        assert_eq!(ls[2].code, "}");
+    }
+
+    #[test]
+    fn multiline_string_content_lands_on_its_closing_line() {
+        let ls = strip("let u = \"--one\n--two\";\ng(\"--three\");\n");
+        assert!(ls[0].strings.is_empty());
+        assert_eq!(ls[1].strings, vec!["--one\n--two"]);
+        assert_eq!(ls[2].strings, vec!["--three"]);
+    }
+
+    #[test]
+    fn escaped_newline_strings_capture_both_halves() {
+        // `\` at end of line continues the literal; the capture joins the
+        // halves with a newline so token scans see both.
+        let ls = strip("const U: &str = \"--kv X\\\n    --attn Y\";\n");
+        assert_eq!(ls.len(), 3);
+        assert_eq!(ls[1].strings.len(), 1);
+        let s = &ls[1].strings[0];
+        assert!(s.contains("--kv") && s.contains("--attn"), "{s:?}");
+    }
+
+    #[test]
+    fn nested_block_comment_spanning_items_keeps_braces_out() {
+        let src = "fn a() {}\n/* fn ghost() { /* nested */\nstill comment } */\nfn b() {}\n";
+        let ls = strip(src);
+        assert_eq!(ls[0].code, "fn a() {}");
+        assert!(ls[1].code.is_empty(), "{:?}", ls[1].code);
+        assert!(ls[2].code.trim().is_empty(), "{:?}", ls[2].code);
+        assert_eq!(ls[3].code, "fn b() {}");
     }
 }

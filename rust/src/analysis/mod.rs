@@ -29,8 +29,13 @@ use crate::json::Json;
 
 pub mod lexer;
 pub mod rules;
+pub mod scopes;
 
 pub use rules::{RuleInfo, RULES};
+
+/// The `--json` report schema version. Bumped when the report shape
+/// changes: 2 added `schema_version` itself plus per-finding `scope`.
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// One lint finding, anchored to a 1-based source line.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -41,13 +46,24 @@ pub struct Finding {
     pub file: String,
     /// 1-based line number.
     pub line: usize,
+    /// Enclosing item label from the scope pass (`fn a::b`,
+    /// `impl ServeSummary`), or empty at file scope.
+    pub scope: String,
     /// Human-readable explanation with the suggested fix.
     pub message: String,
 }
 
 impl fmt::Display for Finding {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+        if self.scope.is_empty() {
+            write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+        } else {
+            write!(
+                f,
+                "{}:{} (in {}): [{}] {}",
+                self.file, self.line, self.scope, self.rule, self.message
+            )
+        }
     }
 }
 
@@ -74,6 +90,7 @@ impl Report {
             m.insert("rule".to_string(), Json::Str(f.rule.to_string()));
             m.insert("file".to_string(), Json::Str(f.file.clone()));
             m.insert("line".to_string(), Json::Num(f.line as f64));
+            m.insert("scope".to_string(), Json::Str(f.scope.clone()));
             m.insert("message".to_string(), Json::Str(f.message.clone()));
             findings.push(Json::Obj(m));
         }
@@ -85,6 +102,7 @@ impl Report {
             rules.push(Json::Obj(m));
         }
         let mut m = BTreeMap::new();
+        m.insert("schema_version".to_string(), Json::Num(SCHEMA_VERSION as f64));
         m.insert("clean".to_string(), Json::Bool(self.is_clean()));
         m.insert("files".to_string(), Json::Num(self.files as f64));
         m.insert("findings".to_string(), Json::Arr(findings));
@@ -100,8 +118,9 @@ pub fn lint_sources(files: &[(String, String)]) -> Report {
     let mut prepared = Vec::with_capacity(files.len());
     for (path, src) in files {
         let lines = lexer::strip(src);
+        let scopes = scopes::annotate(&lines);
         let allows = rules::Allows::parse(&lines);
-        prepared.push(rules::Prepared { path: path.clone(), lines, allows });
+        prepared.push(rules::Prepared { path: path.clone(), lines, scopes, allows });
     }
     let mut findings = rules::check_all(&prepared);
     findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
@@ -162,6 +181,7 @@ mod tests {
         assert!(!report.is_clean());
         let parsed = Json::parse(&report.to_json().to_string()).expect("valid json");
         assert_eq!(parsed.get("clean"), Some(&Json::Bool(false)));
+        assert_eq!(parsed.get("schema_version"), Some(&Json::Num(SCHEMA_VERSION as f64)));
         let n_findings = match parsed.get("findings") {
             Some(Json::Arr(v)) => v.len(),
             other => panic!("findings is not an array: {other:?}"),
@@ -184,6 +204,6 @@ mod tests {
         assert_eq!(report.findings.len(), 2);
         assert!(report.findings[0].line < report.findings[1].line);
         let line = report.findings[0].to_string();
-        assert!(line.starts_with("rust/src/serve/x.rs:2: [stdout-print]"), "{line}");
+        assert!(line.starts_with("rust/src/serve/x.rs:2 (in fn f): [stdout-print]"), "{line}");
     }
 }

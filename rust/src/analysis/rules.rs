@@ -4,10 +4,20 @@
 //! re-fixed (see `docs/INVARIANTS.md` for the catalogue: what each rule
 //! forbids, which PR's bug motivated it, and how to suppress it with a
 //! justification). Rules pattern-match on the stripped code/comment
-//! halves produced by [`super::lexer`], so string literals never trip a
-//! rule and comments never count as code.
+//! halves produced by [`super::lexer`], with per-line scope information
+//! from [`super::scopes`], so string literals never trip a rule,
+//! comments never count as code, and scope-aware rules (panic-free
+//! kernels, TOML-key parity) can tell a kernel fn body from its test
+//! module.
 //!
-//! Suppression markers live in comments:
+//! Two generations of rules live here. Generation 1 is token-level
+//! (one line is enough to fire). Generation 2 is *cross-file drift*:
+//! flag/usage parity in `main.rs`, TOML-key/doc parity, JSON/Display
+//! parity, stale suppression markers, and panic-free kernel bodies.
+//!
+//! Suppression markers are comments that start with the marker (one per
+//! line — prose merely *mentioning* the syntax neither suppresses nor
+//! registers):
 //!
 //! - `// lint: allow(rule-id): why` — suppresses `rule-id` on this
 //!   line and the next line.
@@ -16,7 +26,8 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use super::lexer::Line;
+use super::lexer::{find_token, has_token, is_ident_byte, Line};
+use super::scopes::{LineScope, ScopeKind};
 use super::Finding;
 
 /// Static description of one rule, surfaced in `--json` output and in
@@ -42,6 +53,19 @@ pub const KERNEL_TIMING: &str = "kernel-timing";
 pub const STDOUT_PRINT: &str = "stdout-print";
 /// Rule id: enum variants missing from the `tests/sched.rs` parity suite.
 pub const VARIANT_COVERAGE: &str = "variant-coverage";
+/// Rule id: `--flag`s consumed in `main.rs` must appear in usage/help
+/// strings and vice versa.
+pub const FLAG_SURFACE_PARITY: &str = "flag-surface-parity";
+/// Rule id: TOML keys go through the validated helpers with correctly
+/// dotted names, and every parsed key is named in a doc/usage string.
+pub const TOML_KEY_PARITY: &str = "toml-key-parity";
+/// Rule id: fields serialized by a `to_json` must appear in the same
+/// type's `Display` impl, and vice versa.
+pub const METRICS_JSON_PARITY: &str = "metrics-json-parity";
+/// Rule id: a `lint: allow` whose rule no longer fires there.
+pub const STALE_ALLOW: &str = "stale-allow";
+/// Rule id: no `unwrap`/`expect`/`panic!`/`assert!` in kernel fn bodies.
+pub const PANIC_FREE_KERNELS: &str = "panic-free-kernels";
 
 /// Every rule the linter ships, in finding-id order.
 pub const RULES: &[RuleInfo] = &[
@@ -84,6 +108,36 @@ pub const RULES: &[RuleInfo] = &[
                   appears in `tests/sched.rs` so the parity suite cannot \
                   silently rot",
     },
+    RuleInfo {
+        id: FLAG_SURFACE_PARITY,
+        summary: "every `--flag` consumed through an `Args` accessor in \
+                  `main.rs` is mentioned in a usage/help string, and every \
+                  flag mentioned in usage text is consumed",
+    },
+    RuleInfo {
+        id: TOML_KEY_PARITY,
+        summary: "TOML keys in `from_toml` fns go through the validated \
+                  `toml_usize`/`toml_u64` helpers under their full dotted \
+                  name, and every parsed key is named in a doc/usage string",
+    },
+    RuleInfo {
+        id: METRICS_JSON_PARITY,
+        summary: "a field serialized by `T::to_json` also appears in \
+                  `T::fmt` (Display) and vice versa, so `--json` and human \
+                  output cannot drift apart",
+    },
+    RuleInfo {
+        id: STALE_ALLOW,
+        summary: "a `lint: allow(rule)` marker whose rule would no longer \
+                  fire there is suppression debt and must be deleted",
+    },
+    RuleInfo {
+        id: PANIC_FREE_KERNELS,
+        summary: "no `unwrap`/`expect`/`panic!`/`assert!` inside non-test \
+                  fn bodies under `linalg/`/`quant/` — kernels return \
+                  Results or `debug_assert!`; capacity-contract asserts \
+                  carry a justified allow",
+    },
 ];
 
 /// Enums whose variants the parity suite must mention by name.
@@ -98,41 +152,45 @@ const TIMING_TOKENS: &[&str] = &["Instant", "SystemTime", "elapsed"];
 /// Integer cast forms that wrap negative `as_int()` results.
 const INT_CASTS: &[&str] = &["as usize", "as u64", "as u32", "as i64", "as i32", "as isize"];
 
-fn is_ident_byte(b: u8) -> bool {
-    b.is_ascii_alphanumeric() || b == b'_'
-}
+/// Paths whose non-test `fn` bodies must stay panic-free.
+const PANIC_FREE_PATHS: &[&str] = &["src/linalg/", "src/quant/"];
 
-/// Byte offset of `pat` in `code` at identifier boundaries, if any.
-///
-/// Boundary checks apply only at pattern ends that are themselves
-/// identifier chars, so `println!` matches as a unit but `eprintln!`
-/// never matches a search for `println!`.
-fn find_token(code: &str, pat: &str) -> Option<usize> {
-    let (cb, pb) = (code.as_bytes(), pat.as_bytes());
-    if pb.is_empty() || cb.len() < pb.len() {
-        return None;
-    }
-    let mut from = 0usize;
-    while let Some(pos) = code[from..].find(pat).map(|p| p + from) {
-        let pre_ok = !is_ident_byte(pb[0]) || pos == 0 || !is_ident_byte(cb[pos - 1]);
-        let end = pos + pb.len();
-        let post_ok =
-            !is_ident_byte(pb[pb.len() - 1]) || end == cb.len() || !is_ident_byte(cb[end]);
-        if pre_ok && post_ok {
-            return Some(pos);
-        }
-        from = pos + 1;
-    }
-    None
-}
+/// Tokens that abort the process at runtime. `debug_assert!` and
+/// `unwrap_or` never match: token matching is identifier-bounded.
+const PANIC_TOKENS: &[&str] = &[
+    "unwrap",
+    "expect",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+    "assert!",
+    "assert_eq!",
+    "assert_ne!",
+];
 
-fn has_token(code: &str, pat: &str) -> bool {
-    find_token(code, pat).is_some()
+/// The `Args` accessor methods `main.rs` consumes flags through.
+const ARG_ACCESSORS: &[&str] = &["get", "get_or", "usize_or", "f32_or", "has"];
+
+/// Usage-text mentions that are dispatched as commands, not parsed as
+/// `--` flags (`--help` is handled in `main()`'s command match).
+const FLAG_MENTION_EXEMPT: &[&str] = &["help"];
+
+/// The validated TOML integer helpers (see `config::toml_usize`).
+const TOML_HELPERS: &[&str] = &["toml_usize", "toml_u64"];
+
+/// One parsed `lint: allow(..)` marker.
+pub(crate) struct AllowMarker {
+    pub(crate) rule: String,
+    /// 0-based line the marker sits on.
+    pub(crate) line: usize,
+    pub(crate) file_level: bool,
 }
 
 /// Parsed `lint: allow(..)` markers for one file.
 #[derive(Default)]
 pub(crate) struct Allows {
+    pub(crate) markers: Vec<AllowMarker>,
     file_rules: BTreeSet<String>,
     /// Marker line (0-based) -> rule ids allowed on it and the next line.
     line_rules: BTreeMap<usize, BTreeSet<String>>,
@@ -140,24 +198,28 @@ pub(crate) struct Allows {
 
 impl Allows {
     pub(crate) fn parse(lines: &[Line]) -> Allows {
-        const MARKER: &str = "lint: allow(";
+        const MARKER: &str = "// lint: allow(";
         let mut a = Allows::default();
         for (ln, line) in lines.iter().enumerate() {
-            let mut rest = line.comment.as_str();
-            while let Some(p) = rest.find(MARKER) {
-                rest = &rest[p + MARKER.len()..];
-                let Some(close) = rest.find(')') else { break };
-                let mut parts = rest[..close].split(',').map(str::trim);
-                let rule = parts.next().unwrap_or("").to_string();
-                if !rule.is_empty() {
-                    if parts.next() == Some("file") {
-                        a.file_rules.insert(rule);
-                    } else {
-                        a.line_rules.entry(ln).or_default().insert(rule);
-                    }
-                }
-                rest = &rest[close..];
+            // Only a comment that *is* the marker counts; doc prose that
+            // mentions the syntax must neither suppress a finding nor
+            // register as suppression debt for `stale-allow`.
+            let Some(rest) = line.comment.trim_start().strip_prefix(MARKER) else {
+                continue;
+            };
+            let Some(close) = rest.find(')') else { continue };
+            let mut parts = rest[..close].split(',').map(str::trim);
+            let rule = parts.next().unwrap_or("").to_string();
+            if rule.is_empty() {
+                continue;
             }
+            let file_level = parts.next() == Some("file");
+            if file_level {
+                a.file_rules.insert(rule.clone());
+            } else {
+                a.line_rules.entry(ln).or_default().insert(rule.clone());
+            }
+            a.markers.push(AllowMarker { rule, line: ln, file_level });
         }
         a
     }
@@ -175,22 +237,25 @@ impl Allows {
     }
 }
 
-/// One file's stripped lines plus its parsed suppression markers.
+/// One file's stripped lines, per-line scopes, and parsed suppressions.
 pub(crate) struct Prepared {
     pub(crate) path: String,
     pub(crate) lines: Vec<Line>,
+    pub(crate) scopes: Vec<LineScope>,
     pub(crate) allows: Allows,
 }
 
+/// Record a raw finding. Suppression markers are applied *after* all
+/// rules ran (in [`check_all`]), so `stale-allow` can see which markers
+/// actually covered something.
 fn push(findings: &mut Vec<Finding>, f: &Prepared, rule: &'static str, ln: usize, msg: &str) {
-    if !f.allows.suppressed(rule, ln) {
-        findings.push(Finding {
-            rule,
-            file: f.path.clone(),
-            line: ln + 1,
-            message: msg.to_string(),
-        });
-    }
+    findings.push(Finding {
+        rule,
+        file: f.path.clone(),
+        line: ln + 1,
+        scope: f.scopes.get(ln).map(LineScope::label).unwrap_or_default(),
+        message: msg.to_string(),
+    });
 }
 
 /// Does a comment carry a safety argument? Accepts `// SAFETY:` block
@@ -364,51 +429,51 @@ fn check_stdout_print(f: &Prepared, findings: &mut Vec<Finding>) {
     }
 }
 
-/// Extract `(enum name, variant name, 0-based line)` for every watched
-/// enum declared across `lines`. Handles the multi-line `enum X { ... }`
-/// form the repo uses; variants may carry payloads or attributes.
-fn watched_variants(lines: &[Line]) -> Vec<(&'static str, String, usize)> {
-    let mut out = Vec::new();
-    let mut i = 0usize;
-    while i < lines.len() {
-        let decl = &lines[i].code;
-        let hit = WATCHED_ENUMS.iter().find(|w| has_token(decl, "enum") && has_token(decl, w));
-        let Some(&name) = hit else {
-            i += 1;
+/// Scope-aware: no panicking tokens inside non-test kernel fn bodies.
+/// Capacity-contract asserts at kernel entry points carry a justified
+/// `lint: allow(panic-free-kernels)`; `debug_assert!` is always fine.
+fn check_panic_free_kernels(f: &Prepared, findings: &mut Vec<Finding>) {
+    if !PANIC_FREE_PATHS.iter().any(|p| f.path.contains(p)) {
+        return;
+    }
+    for ln in 0..f.lines.len() {
+        let scope = &f.scopes[ln];
+        if scope.fn_path.is_empty() || scope.in_test {
             continue;
-        };
-        let mut depth = 0i32;
-        let mut entered = false;
-        let mut j = i;
-        'body: while j < lines.len() {
-            if entered && depth == 1 && j > i {
-                let t = lines[j].code.trim();
-                if t.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
-                    let v: String = t
-                        .chars()
-                        .take_while(|c| c.is_alphanumeric() || *c == '_')
-                        .collect();
-                    out.push((name, v, j));
-                }
-            }
-            for ch in lines[j].code.chars() {
-                match ch {
-                    '{' => {
-                        depth += 1;
-                        entered = true;
-                    }
-                    '}' => {
-                        depth -= 1;
-                        if entered && depth == 0 {
-                            break 'body;
-                        }
-                    }
-                    _ => {}
-                }
-            }
-            j += 1;
         }
-        i = j + 1;
+        let code = &f.lines[ln].code;
+        if let Some(tok) = PANIC_TOKENS.iter().find(|t| has_token(code, t)) {
+            let msg = format!(
+                "`{tok}` in kernel fn `{}` — inner kernels must not abort: \
+                 return a Result or use `debug_assert!`; a capacity-contract \
+                 assert needs a justified `lint: allow({PANIC_FREE_KERNELS})`",
+                scope.fn_path
+            );
+            push(findings, f, PANIC_FREE_KERNELS, ln, &msg);
+        }
+    }
+}
+
+/// Extract `(enum name, variant name, 0-based line)` for every watched
+/// enum in `f`, using the scope pass: a variant is an uppercase-leading
+/// line whose innermost scope is the watched enum (attributes and the
+/// declaration line itself never start uppercase).
+fn watched_variants(f: &Prepared) -> Vec<(&'static str, String, usize)> {
+    let mut out = Vec::new();
+    for ln in 0..f.lines.len() {
+        let scope = &f.scopes[ln];
+        if scope.kind != Some(ScopeKind::Enum) {
+            continue;
+        }
+        let hit = WATCHED_ENUMS
+            .iter()
+            .find(|w| scope.path == **w || scope.path.ends_with(&format!("::{w}")));
+        let Some(&name) = hit else { continue };
+        let t = f.lines[ln].code.trim();
+        if t.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+            let v: String = t.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+            out.push((name, v, ln));
+        }
     }
     out
 }
@@ -429,7 +494,7 @@ fn check_variant_coverage(files: &[Prepared], findings: &mut Vec<Finding>) {
         if f.path.ends_with("tests/sched.rs") {
             continue;
         }
-        for (enum_name, variant, ln) in watched_variants(&f.lines) {
+        for (enum_name, variant, ln) in watched_variants(f) {
             if !has_token(&sched_code, &variant) {
                 let msg = format!(
                     "`{enum_name}::{variant}` never appears in tests/sched.rs \
@@ -441,19 +506,366 @@ fn check_variant_coverage(files: &[Prepared], findings: &mut Vec<Finding>) {
     }
 }
 
-/// Run every rule over the prepared files, returning unsorted findings.
-pub(crate) fn check_all(files: &[Prepared]) -> Vec<Finding> {
-    let mut findings = Vec::new();
-    for f in files {
-        check_unsafe_safety(f, &mut findings);
-        check_partial_cmp_unwrap(f, &mut findings);
-        check_float_sort(f, &mut findings);
-        check_toml_int_cast(f, &mut findings);
-        check_kernel_timing(f, &mut findings);
-        check_stdout_print(f, &mut findings);
+/// Is the accessor token at byte `p` called on the CLI args receiver?
+/// The repo convention is `a.get_or(..)` / `args.has(..)`; a `get` on
+/// any other receiver (`Json::get`, map lookups) is not flag parsing.
+fn args_receiver(code: &str, p: usize) -> bool {
+    let head = code[..p].trim_end();
+    let Some(head) = head.strip_suffix('.') else { return false };
+    let head = head.trim_end();
+    let b = head.as_bytes();
+    let mut s = b.len();
+    while s > 0 && is_ident_byte(b[s - 1]) {
+        s -= 1;
     }
-    check_variant_coverage(files, &mut findings);
-    findings
+    matches!(&head[s..], "a" | "args")
+}
+
+/// The captured string literal whose `""` placeholder is the first one
+/// at or after byte `from` of the line's code half.
+fn string_at(line: &Line, from: usize) -> Option<&str> {
+    let pos = line.code[from..].find("\"\"")? + from;
+    let idx = line.code[..pos].matches("\"\"").count();
+    line.strings.get(idx).map(String::as_str)
+}
+
+/// Every `--flag` name mentioned in a string: `--` followed by a
+/// lowercase word, dashes allowed inside (`--prefill-chunk`).
+fn flags_in(s: &str) -> Vec<String> {
+    let b = s.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < b.len() {
+        let at_flag = b[i] == b'-'
+            && b[i + 1] == b'-'
+            && (i == 0 || b[i - 1] != b'-')
+            && b[i + 2].is_ascii_lowercase();
+        if !at_flag {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        while j < b.len() && (b[j].is_ascii_lowercase() || b[j].is_ascii_digit() || b[j] == b'-')
+        {
+            j += 1;
+        }
+        out.push(s[i + 2..j].trim_end_matches('-').to_string());
+        i = j;
+    }
+    out
+}
+
+/// Cross-file rule: in `main.rs`, the set of flags consumed through
+/// `Args` accessors and the set of flags mentioned in usage/help
+/// strings must coincide — a flag missing from `usage()` is invisible,
+/// a usage mention without a consumer is dead documentation.
+fn check_flag_surface_parity(files: &[Prepared], findings: &mut Vec<Finding>) {
+    let Some(f) = files.iter().find(|f| f.path.ends_with("src/main.rs")) else {
+        return;
+    };
+    let mut consumed: BTreeMap<String, usize> = BTreeMap::new();
+    let mut mentioned: BTreeMap<String, usize> = BTreeMap::new();
+    for ln in 0..f.lines.len() {
+        let line = &f.lines[ln];
+        for acc in ARG_ACCESSORS {
+            let mut from = 0usize;
+            while let Some(p) = find_token(&line.code[from..], acc).map(|p| p + from) {
+                let end = p + acc.len();
+                from = end;
+                if !args_receiver(&line.code, p) {
+                    continue;
+                }
+                // Only literal keys are checkable: `a.get_or("model", ..)`.
+                if !line.code[end..].trim_start().starts_with("(\"\"") {
+                    continue;
+                }
+                if let Some(flag) = string_at(line, end) {
+                    consumed.entry(flag.to_string()).or_insert(ln);
+                }
+            }
+        }
+        for s in &line.strings {
+            for flag in flags_in(s) {
+                mentioned.entry(flag).or_insert(ln);
+            }
+        }
+    }
+    for (flag, &ln) in &consumed {
+        if !mentioned.contains_key(flag) {
+            let msg = format!(
+                "`--{flag}` is consumed here but never mentioned in a \
+                 usage/help string — document it in `USAGE`"
+            );
+            push(findings, f, FLAG_SURFACE_PARITY, ln, &msg);
+        }
+    }
+    for (flag, &ln) in &mentioned {
+        if !consumed.contains_key(flag) && !FLAG_MENTION_EXEMPT.contains(&flag.as_str()) {
+            let msg = format!(
+                "`--{flag}` appears in usage/help text but no `Args` \
+                 accessor consumes it — dead documentation or a missing flag"
+            );
+            push(findings, f, FLAG_SURFACE_PARITY, ln, &msg);
+        }
+    }
+}
+
+/// The match-arm key literal governing line `ln`: a line whose code
+/// starts with `"" =>`, on `ln` itself or up to two lines above (the
+/// repo wraps long arms).
+fn arm_key(f: &Prepared, ln: usize) -> Option<&str> {
+    for back in 0..=2usize {
+        let Some(j) = ln.checked_sub(back) else { break };
+        let line = &f.lines[j];
+        if line.code.trim_start().starts_with("\"\" =>") {
+            return line.strings.first().map(String::as_str);
+        }
+    }
+    None
+}
+
+/// Cross-file rule over `from_toml` fns: integer keys go through the
+/// validated helpers under a correctly dotted `table.key` name, raw
+/// `as_int` never appears, and every parsed key is named in at least
+/// one comment or string outside the `from_toml` fns (docs, usage text,
+/// tests) — an undocumented knob is invisible to users.
+fn check_toml_key_parity(files: &[Prepared], findings: &mut Vec<Finding>) {
+    // (file index, 0-based line, arm key) of every parsed key.
+    let mut keys: Vec<(usize, usize, String)> = Vec::new();
+    for (fi, f) in files.iter().enumerate() {
+        for ln in 0..f.lines.len() {
+            let scope = &f.scopes[ln];
+            if !scope.fn_path.ends_with("::from_toml") && scope.fn_path != "from_toml" {
+                continue;
+            }
+            let line = &f.lines[ln];
+            if line.code.trim_start().starts_with("\"\" =>") {
+                if let Some(k) = line.strings.first() {
+                    keys.push((fi, ln, k.clone()));
+                }
+            }
+            for helper in TOML_HELPERS {
+                let Some(p) = find_token(&line.code, helper) else { continue };
+                let Some(dotted) = string_at(line, p + helper.len()) else { continue };
+                let suffix = match dotted.split_once('.') {
+                    Some((table, key)) if !table.is_empty() && !key.is_empty() => key,
+                    _ => {
+                        let msg = format!(
+                            "`{helper}(\"{dotted}\", ..)` — the key must be \
+                             dotted `table.key` so rejection errors name the \
+                             exact TOML location"
+                        );
+                        push(findings, f, TOML_KEY_PARITY, ln, &msg);
+                        continue;
+                    }
+                };
+                if let Some(arm) = arm_key(f, ln) {
+                    if arm != suffix {
+                        let msg = format!(
+                            "`{helper}(\"{dotted}\", ..)` inside the \
+                             `\"{arm}\"` arm — the dotted key must end in \
+                             the arm's key, or every rejection error \
+                             misnames the knob"
+                        );
+                        push(findings, f, TOML_KEY_PARITY, ln, &msg);
+                    }
+                }
+            }
+            if has_token(&line.code, "as_int")
+                && !TOML_HELPERS.iter().any(|h| has_token(&line.code, h))
+            {
+                push(
+                    findings,
+                    f,
+                    TOML_KEY_PARITY,
+                    ln,
+                    "raw `as_int` in a `from_toml` fn — route integer keys \
+                     through `toml_usize`/`toml_u64` so negatives are \
+                     rejected by name",
+                );
+            }
+        }
+    }
+    // Doc parity: each key must be named somewhere outside from_toml.
+    for (fi, ln, key) in &keys {
+        let mut documented = false;
+        'files: for f in files {
+            for dl in 0..f.lines.len() {
+                let scope = &f.scopes[dl];
+                if scope.fn_path.ends_with("::from_toml") || scope.fn_path == "from_toml" {
+                    continue;
+                }
+                let line = &f.lines[dl];
+                if has_token(&line.comment, key)
+                    || line.strings.iter().any(|s| has_token(s, key))
+                {
+                    documented = true;
+                    break 'files;
+                }
+            }
+        }
+        if !documented {
+            let f = &files[*fi];
+            let msg = format!(
+                "TOML key `{key}` (parsed in `{}`) is never named in any \
+                 doc comment or string — document the knob where users \
+                 can find it",
+                f.scopes[*ln].fn_path
+            );
+            push(findings, f, TOML_KEY_PARITY, *ln, &msg);
+        }
+    }
+}
+
+/// All `self.<field>` identifiers on a line, skipping method calls
+/// (`self.is_clean()` is not a field read).
+fn self_fields(code: &str) -> Vec<&str> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = find_token(&code[from..], "self").map(|p| p + from) {
+        from = p + 4;
+        if b.get(from) != Some(&b'.') {
+            continue;
+        }
+        let start = from + 1;
+        let mut end = start;
+        while end < b.len() && is_ident_byte(b[end]) {
+            end += 1;
+        }
+        let is_call = b.get(end) == Some(&b'(');
+        let ident = &code[start..end];
+        if !ident.is_empty()
+            && !is_call
+            && ident.as_bytes()[0].is_ascii_alphabetic()
+        {
+            out.push(ident);
+        }
+        from = end;
+    }
+    out
+}
+
+/// Per-file rule: for any type `T` with both a `to_json` and a Display
+/// `fmt` in the same file, the fields each touches must coincide. The
+/// JSON side reads `insert` lines (`m.insert("key", .. self.field ..)`),
+/// the Display side every `self.field` use. Stands down for types with
+/// only one of the two surfaces.
+fn check_metrics_json_parity(f: &Prepared, findings: &mut Vec<Finding>) {
+    // type -> field -> first 0-based line.
+    let mut json: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+    let mut fmt: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+    for ln in 0..f.lines.len() {
+        let scope = &f.scopes[ln];
+        if scope.in_test {
+            continue;
+        }
+        let line = &f.lines[ln];
+        if let Some(ty) = scope.fn_path.strip_suffix("::to_json") {
+            if has_token(&line.code, "insert") {
+                let fields = json.entry(ty.to_string()).or_default();
+                for field in self_fields(&line.code) {
+                    fields.entry(field.to_string()).or_insert(ln);
+                }
+            }
+        } else if let Some(ty) = scope.fn_path.strip_suffix("::fmt") {
+            let fields = fmt.entry(ty.to_string()).or_default();
+            for field in self_fields(&line.code) {
+                fields.entry(field.to_string()).or_insert(ln);
+            }
+        }
+    }
+    for (ty, jfields) in &json {
+        let Some(ffields) = fmt.get(ty) else { continue };
+        for (field, &ln) in jfields {
+            if !ffields.contains_key(field) {
+                let msg = format!(
+                    "`{ty}::to_json` serializes `{field}` but the `{ty}` \
+                     Display impl never formats it — `--json` and human \
+                     output have drifted"
+                );
+                push(findings, f, METRICS_JSON_PARITY, ln, &msg);
+            }
+        }
+        for (field, &ln) in ffields {
+            if !jfields.contains_key(field) {
+                let msg = format!(
+                    "the `{ty}` Display impl formats `{field}` but \
+                     `{ty}::to_json` never serializes it — `--json` \
+                     consumers cannot see this number"
+                );
+                push(findings, f, METRICS_JSON_PARITY, ln, &msg);
+            }
+        }
+    }
+}
+
+/// Every allow marker must still be earning its keep: its rule fires on
+/// the covered lines (counting findings the marker itself suppresses).
+/// An allow for an unknown rule id is flagged too — it suppresses
+/// nothing today and hides a typo.
+fn check_stale_allow(files: &[Prepared], raw: &[Finding], findings: &mut Vec<Finding>) {
+    let known: BTreeSet<&str> = RULES.iter().map(|r| r.id).collect();
+    for f in files {
+        for m in &f.allows.markers {
+            if !known.contains(m.rule.as_str()) {
+                let msg = format!(
+                    "`lint: allow({})` names a rule that does not exist — \
+                     fix the id (see docs/INVARIANTS.md for the catalogue)",
+                    m.rule
+                );
+                push(findings, f, STALE_ALLOW, m.line, &msg);
+                continue;
+            }
+            if m.rule == STALE_ALLOW {
+                continue;
+            }
+            let used = raw.iter().any(|x| {
+                x.rule == m.rule
+                    && x.file == f.path
+                    && (m.file_level || x.line == m.line + 1 || x.line == m.line + 2)
+            });
+            if !used {
+                let msg = format!(
+                    "`lint: allow({})` suppresses nothing — the rule no \
+                     longer fires here; delete the marker instead of \
+                     hoarding suppression debt",
+                    m.rule
+                );
+                push(findings, f, STALE_ALLOW, m.line, &msg);
+            }
+        }
+    }
+}
+
+/// Run every rule over the prepared files, apply suppression markers,
+/// and return the surviving findings (unsorted).
+pub(crate) fn check_all(files: &[Prepared]) -> Vec<Finding> {
+    let mut raw = Vec::new();
+    for f in files {
+        check_unsafe_safety(f, &mut raw);
+        check_partial_cmp_unwrap(f, &mut raw);
+        check_float_sort(f, &mut raw);
+        check_toml_int_cast(f, &mut raw);
+        check_kernel_timing(f, &mut raw);
+        check_stdout_print(f, &mut raw);
+        check_panic_free_kernels(f, &mut raw);
+        check_metrics_json_parity(f, &mut raw);
+    }
+    check_variant_coverage(files, &mut raw);
+    check_flag_surface_parity(files, &mut raw);
+    check_toml_key_parity(files, &mut raw);
+    // stale-allow runs over the *raw* findings: a marker that suppresses
+    // a live finding is in use, everything else is debt.
+    let mut stale = Vec::new();
+    check_stale_allow(files, &raw, &mut stale);
+    raw.append(&mut stale);
+    let by_path: BTreeMap<&str, &Allows> =
+        files.iter().map(|f| (f.path.as_str(), &f.allows)).collect();
+    raw.retain(|x| {
+        !by_path.get(x.file.as_str()).is_some_and(|a| a.suppressed(x.rule, x.line - 1))
+    });
+    raw
 }
 
 #[cfg(test)]
@@ -533,7 +945,7 @@ mod tests {
         },
         Fixture {
             rule: KERNEL_TIMING,
-            path: "rust/src/linalg/x.rs",
+            path: "rust/src/serve/attn.rs",
             bad: "fn f() {\n    let _t0 = std::time::Instant::now();\n}\n",
             bad_line: 2,
             allowed: "fn f() {\n    \
@@ -559,6 +971,80 @@ mod tests {
             allowed: "pub enum AttnKind {\n    Fused,\n    \
                       Gather, // lint: allow(variant-coverage): fixture\n}\n",
             extra: Some(SCHED_STUB),
+        },
+        Fixture {
+            rule: FLAG_SURFACE_PARITY,
+            path: "rust/src/main.rs",
+            bad: "const USAGE: &str = \"serve --model M\";\n\
+                  fn f(a: &Args) {\n    \
+                  let _ = a.get_or(\"phantom\", \"x\");\n}\n",
+            bad_line: 3,
+            allowed: "const USAGE: &str = \"serve --model M\";\n\
+                      fn f(a: &Args) {\n    \
+                      // lint: allow(flag-surface-parity): fixture\n    \
+                      let _ = a.get_or(\"phantom\", \"x\");\n    \
+                      let _ = a.get_or(\"model\", \"m\");\n}\n",
+            extra: None,
+        },
+        Fixture {
+            rule: TOML_KEY_PARITY,
+            path: "rust/src/config/mod.rs",
+            bad: "impl C {\n    fn from_toml(v: &T) -> Result<C> {\n        \
+                  match k.as_str() {\n            \
+                  \"slots\" => c.slots = toml_usize(\"serve.threads\", val)?,\n            \
+                  _ => {}\n        }\n    }\n}\n\
+                  // the serve.slots and serve.threads knobs\n",
+            bad_line: 4,
+            allowed: "impl C {\n    fn from_toml(v: &T) -> Result<C> {\n        \
+                      match k.as_str() {\n            \
+                      // lint: allow(toml-key-parity): fixture\n            \
+                      \"slots\" => c.slots = toml_usize(\"serve.threads\", val)?,\n            \
+                      _ => {}\n        }\n    }\n}\n\
+                      // the serve.slots and serve.threads knobs\n",
+            extra: None,
+        },
+        Fixture {
+            rule: METRICS_JSON_PARITY,
+            path: "rust/src/serve/x.rs",
+            bad: "impl S {\n    fn to_json(&self) -> Json {\n        \
+                  m.insert(\"a\".to_string(), Json::Num(self.a));\n        \
+                  m.insert(\"b\".to_string(), Json::Num(self.b));\n    }\n}\n\
+                  impl fmt::Display for S {\n    \
+                  fn fmt(&self, f: &mut fmt::Formatter) -> fmt::Result {\n        \
+                  write!(f, \"a={}\", self.a)\n    }\n}\n",
+            bad_line: 4,
+            allowed: "impl S {\n    fn to_json(&self) -> Json {\n        \
+                      m.insert(\"a\".to_string(), Json::Num(self.a));\n        \
+                      // lint: allow(metrics-json-parity): fixture\n        \
+                      m.insert(\"b\".to_string(), Json::Num(self.b));\n    }\n}\n\
+                      impl fmt::Display for S {\n    \
+                      fn fmt(&self, f: &mut fmt::Formatter) -> fmt::Result {\n        \
+                      write!(f, \"a={}\", self.a)\n    }\n}\n",
+            extra: None,
+        },
+        Fixture {
+            rule: STALE_ALLOW,
+            path: "rust/src/serve/x.rs",
+            bad: "fn f() {\n    \
+                  // lint: allow(stdout-print): nothing printed below\n    \
+                  let x = 1;\n}\n",
+            bad_line: 2,
+            allowed: "fn f() {\n    \
+                      // lint: allow(stale-allow): fixture for the meta-rule\n    \
+                      // lint: allow(stdout-print): nothing printed below\n    \
+                      let x = 1;\n}\n",
+            extra: None,
+        },
+        Fixture {
+            rule: PANIC_FREE_KERNELS,
+            path: "rust/src/linalg/x.rs",
+            bad: "pub fn gemv(x: &[f32]) -> f32 {\n    \
+                  let first = x.first().unwrap();\n    *first\n}\n",
+            bad_line: 2,
+            allowed: "pub fn gemv(x: &[f32]) -> f32 {\n    \
+                      // lint: allow(panic-free-kernels): fixture\n    \
+                      let first = x.first().unwrap();\n    *first\n}\n",
+            extra: None,
         },
     ];
 
@@ -685,5 +1171,96 @@ mod tests {
         assert!(find_token("a.partial_cmp_like(b)", "partial_cmp").is_none());
         assert!(find_token("my_unsafe_helper()", "unsafe").is_none());
         assert!(find_token("unsafe { x() }", "unsafe").is_some());
+    }
+
+    #[test]
+    fn findings_carry_their_enclosing_scope() {
+        let src = "mod inner {\n    fn noisy() {\n        println!(\"x\");\n    }\n}\n";
+        let found = run(&[("rust/src/serve/x.rs", src)]);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].scope, "fn inner::noisy");
+        let line = found[0].to_string();
+        assert!(
+            line.starts_with("rust/src/serve/x.rs:3 (in fn inner::noisy): [stdout-print]"),
+            "{line}"
+        );
+    }
+
+    #[test]
+    fn flag_parity_covers_both_directions() {
+        // Mentioned but never consumed.
+        let src = "const USAGE: &str = \"serve --ghost N\";\n\
+                   fn f(a: &Args) {\n    let _ = a.usize_or(\"tokens\", 1);\n}\n\
+                   fn usage() -> &'static str {\n    \"--tokens N\"\n}\n";
+        let found = run(&[("rust/src/main.rs", src)]);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, FLAG_SURFACE_PARITY);
+        assert_eq!(found[0].line, 1);
+        assert!(found[0].message.contains("--ghost"), "{}", found[0].message);
+        // Accessors on non-Args receivers are not flag consumption.
+        let src = "fn f(j: &Json) {\n    let _ = j.get(\"tokens\");\n}\n";
+        assert!(run(&[("rust/src/main.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn toml_key_parity_checks_dots_docs_and_raw_as_int() {
+        // Undotted helper key.
+        let src = "fn from_toml(v: &T) {\n    \
+                   match k {\n        \
+                   \"steps\" => c.steps = toml_usize(\"steps\", val)?,\n    }\n}\n\
+                   // the steps knob\n";
+        let found = run(&[("rust/src/config/mod.rs", src)]);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert!(found[0].message.contains("dotted"), "{}", found[0].message);
+        // Undocumented key: parsed, never named anywhere else.
+        let src = "fn from_toml(v: &T) {\n    \
+                   match k {\n        \
+                   \"warmup\" => c.warmup = toml_usize(\"train.warmup\", val)?,\n    }\n}\n";
+        let found = run(&[("rust/src/config/mod.rs", src)]);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert!(found[0].message.contains("never named"), "{}", found[0].message);
+        // Raw as_int inside from_toml.
+        let src = "fn from_toml(v: &T) {\n    \
+                   match k {\n        \
+                   \"lr\" => c.lr = val.as_int()?,\n    }\n}\n// the lr knob\n";
+        let found = run(&[("rust/src/config/mod.rs", src)]);
+        assert!(
+            found.iter().any(|f| f.rule == TOML_KEY_PARITY && f.message.contains("raw")),
+            "{found:?}"
+        );
+    }
+
+    #[test]
+    fn stale_allow_flags_unknown_rule_ids() {
+        let src = "fn f() {\n    // lint: allow(no-such-rule): typo\n    let x = 1;\n}\n";
+        let found = run(&[("rust/src/serve/x.rs", src)]);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].rule, STALE_ALLOW);
+        assert!(found[0].message.contains("no-such-rule"));
+    }
+
+    #[test]
+    fn live_allows_are_not_stale() {
+        // The marker suppresses a real finding, so stale-allow stays quiet.
+        let src = "fn f() {\n    \
+                   // lint: allow(stdout-print): fixture table printer\n    \
+                   println!(\"x\");\n}\n";
+        assert!(run(&[("rust/src/serve/x.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn panic_free_kernels_exempts_tests_and_debug_asserts() {
+        let src = "pub fn kernel(x: &[f32]) {\n    \
+                   debug_assert_eq!(x.len(), 4);\n    \
+                   let _ = x;\n}\n\
+                   #[cfg(test)]\nmod tests {\n    \
+                   #[test]\n    fn t() {\n        \
+                   super::kernel(&[0.0; 4]);\n        \
+                   assert_eq!(1, 1);\n        \
+                   Some(3).unwrap();\n    }\n}\n";
+        assert!(run(&[("rust/src/quant/x.rs", src)]).is_empty());
+        // The same unwrap outside linalg//quant/ is fine too.
+        let src = "pub fn f(x: Option<usize>) -> usize {\n    x.unwrap()\n}\n";
+        assert!(run(&[("rust/src/serve/x.rs", src)]).is_empty());
     }
 }

@@ -1,0 +1,472 @@
+//! Scope tracking over the stripped lexer output: which item is each
+//! line inside?
+//!
+//! [`annotate`] walks the code halves produced by [`super::lexer`] and
+//! assigns every physical line a [`LineScope`]: the `::`-joined path of
+//! enclosing named items (`mod` / `fn` / `impl` / `trait` / `enum` /
+//! `struct`), the innermost item's kind, the enclosing-fn path, and
+//! whether the line is test-only (`#[test]`, `#[cfg(test)]`, or a
+//! `mod tests`). Findings report the label (`file:line (in fn x::y)`),
+//! and the cross-file rules in [`super::rules`] use it to target code by
+//! scope instead of by path prefix alone — panic-freedom applies to
+//! kernel fn *bodies* but not their test modules, TOML-key parity only
+//! to `from_toml` fns, JSON/Display parity pairs methods by their
+//! `impl` type.
+//!
+//! Like the lexer this is a scanner, not a parser: it tracks brace depth
+//! (string/char contents are already blanked, so literal braces cannot
+//! desync it), binds a pending item header to the next `{` at balanced
+//! paren/bracket depth, and cancels it at a top-level `;` (tuple
+//! structs, trait-method declarations, `fn` pointer types, `mod x;`).
+//! Anonymous blocks (match arms, closures, plain `{ .. }`) change depth
+//! but never the item path.
+
+use super::lexer::{find_token, has_token, is_ident_byte, Line};
+
+/// The kind of named item a scope frame represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScopeKind {
+    Mod,
+    Fn,
+    Impl,
+    Trait,
+    Enum,
+    Struct,
+}
+
+impl ScopeKind {
+    /// The declaration keyword, also used in finding labels.
+    pub fn keyword(self) -> &'static str {
+        match self {
+            ScopeKind::Mod => "mod",
+            ScopeKind::Fn => "fn",
+            ScopeKind::Impl => "impl",
+            ScopeKind::Trait => "trait",
+            ScopeKind::Enum => "enum",
+            ScopeKind::Struct => "struct",
+        }
+    }
+}
+
+const KINDS: &[ScopeKind] = &[
+    ScopeKind::Mod,
+    ScopeKind::Fn,
+    ScopeKind::Impl,
+    ScopeKind::Trait,
+    ScopeKind::Enum,
+    ScopeKind::Struct,
+];
+
+/// Where one source line sits in the item tree.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LineScope {
+    /// `::`-joined names of every enclosing named item; "" at top level.
+    /// An `impl` frame contributes the implementing type's name.
+    pub path: String,
+    /// Kind of the innermost enclosing named item, if any.
+    pub kind: Option<ScopeKind>,
+    /// `path` truncated at the innermost `fn`; "" outside any fn body.
+    pub fn_path: String,
+    /// True under `#[test]` / `#[cfg(test)]` items or a `mod tests`.
+    pub in_test: bool,
+}
+
+impl LineScope {
+    /// Human label for findings: `fn x::y`, `impl X`, `mod m` — or ""
+    /// at top level (the finding then prints without a scope).
+    pub fn label(&self) -> String {
+        if !self.fn_path.is_empty() {
+            return format!("fn {}", self.fn_path);
+        }
+        match self.kind {
+            Some(k) => format!("{} {}", k.keyword(), self.path),
+            None => String::new(),
+        }
+    }
+}
+
+/// One entry on the item stack.
+#[derive(Debug, Clone)]
+struct Frame {
+    kind: ScopeKind,
+    name: String,
+    /// Brace depth just after this frame's opening `{`.
+    depth: usize,
+    /// Test-only, directly (`#[test]`, `#[cfg(test)]`, `mod tests`) or
+    /// by inheritance from an enclosing frame.
+    test: bool,
+}
+
+/// An item header seen but not yet bound to its `{` (or cancelled).
+struct Pending {
+    kind: ScopeKind,
+    /// Header text after the keyword, accumulated up to the `{`.
+    text: String,
+    test: bool,
+    /// Paren/bracket nesting inside the header: a `;` only cancels at
+    /// zero (`fn f(x: [u8; 3])` must survive its own semicolon).
+    group: i32,
+}
+
+/// Annotate every line of a stripped file with its enclosing scope.
+pub fn annotate(lines: &[Line]) -> Vec<LineScope> {
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut depth = 0usize;
+    let mut pending: Option<Pending> = None;
+    // True once an attribute with a `test` token was seen and no item or
+    // plain code line has consumed it yet.
+    let mut attr_test = false;
+    let mut out = Vec::with_capacity(lines.len());
+    for line in lines {
+        let code = line.code.as_str();
+        let trimmed = code.trim();
+        if trimmed.starts_with("#[") || trimmed.starts_with("#![") {
+            attr_test = attr_test || has_token(trimmed, "test");
+        }
+        // The line's scope: the stack after the last push on this line,
+        // else before the first pop, else the carried-over stack — so a
+        // one-liner `fn f() { .. }` and a closing `}` both attribute to
+        // the item, not its parent.
+        let mut snap: Option<Vec<Frame>> = None;
+        let mut bound = false;
+        let bytes = code.as_bytes();
+        let mut i = 0usize;
+        while i < bytes.len() {
+            if pending.is_none() {
+                if let Some(kind) = keyword_at(code, i) {
+                    pending = Some(Pending {
+                        kind,
+                        text: String::new(),
+                        test: attr_test,
+                        group: 0,
+                    });
+                    attr_test = false;
+                    i += kind.keyword().len();
+                    continue;
+                }
+            }
+            let ch = bytes[i] as char;
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if let Some(p) = pending.take() {
+                        let test = p.test || stack.last().is_some_and(|f| f.test);
+                        stack.push(Frame {
+                            kind: p.kind,
+                            name: item_name(p.kind, &p.text),
+                            depth,
+                            test,
+                        });
+                        snap = Some(stack.clone());
+                        bound = true;
+                    }
+                }
+                '}' => {
+                    if stack.last().is_some_and(|f| f.depth == depth) {
+                        if snap.is_none() {
+                            snap = Some(stack.clone());
+                        }
+                        stack.pop();
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                '(' | '[' => {
+                    if let Some(p) = pending.as_mut() {
+                        p.group += 1;
+                    }
+                }
+                ')' | ']' => {
+                    if let Some(p) = pending.as_mut() {
+                        p.group -= 1;
+                    }
+                }
+                ';' => {
+                    if pending.as_ref().is_some_and(|p| p.group <= 0) {
+                        pending = None;
+                    }
+                }
+                _ => {}
+            }
+            if let Some(p) = pending.as_mut() {
+                p.text.push(ch);
+            }
+            i += 1;
+        }
+        if let Some(p) = pending.as_mut() {
+            // Keep multi-line headers (where-clauses) token-separated.
+            p.text.push(' ');
+        }
+        if !trimmed.is_empty()
+            && !trimmed.starts_with("#[")
+            && !trimmed.starts_with("#![")
+            && pending.is_none()
+            && !bound
+        {
+            // A plain code line between an attribute and the next item
+            // means the attribute did not belong to an item we track.
+            attr_test = false;
+        }
+        out.push(scope_of(snap.as_deref().unwrap_or(&stack)));
+    }
+    out
+}
+
+/// The item keyword starting at byte `i` of `code`, at identifier
+/// boundaries, if any.
+fn keyword_at(code: &str, i: usize) -> Option<ScopeKind> {
+    let b = code.as_bytes();
+    if i > 0 && is_ident_byte(b[i - 1]) {
+        return None;
+    }
+    for &kind in KINDS {
+        let kw = kind.keyword();
+        let end = i + kw.len();
+        if code[i..].starts_with(kw) && (end == b.len() || !is_ident_byte(b[end])) {
+            return Some(kind);
+        }
+    }
+    None
+}
+
+fn scope_of(stack: &[Frame]) -> LineScope {
+    let Some(last) = stack.last() else {
+        return LineScope::default();
+    };
+    let join = |frames: &[Frame]| -> String {
+        let names: Vec<&str> = frames
+            .iter()
+            .map(|f| f.name.as_str())
+            .filter(|n| !n.is_empty())
+            .collect();
+        names.join("::")
+    };
+    let fn_path = match stack.iter().rposition(|f| f.kind == ScopeKind::Fn) {
+        Some(i) => join(&stack[..=i]),
+        None => String::new(),
+    };
+    let in_test = stack
+        .iter()
+        .any(|f| f.test || (f.kind == ScopeKind::Mod && f.name == "tests"));
+    LineScope { path: join(stack), kind: Some(last.kind), fn_path, in_test }
+}
+
+/// The name a bound item contributes to the path.
+fn item_name(kind: ScopeKind, header: &str) -> String {
+    if kind == ScopeKind::Impl {
+        return impl_name(header);
+    }
+    first_ident(header).to_string()
+}
+
+/// The implementing type of an `impl` header: the type after the last
+/// trait-`for` (`impl fmt::Display for X` -> `X`), else the type after
+/// the generics (`impl<'a> BlockCtx<'a>` -> `BlockCtx`). HRTB `for<'a>`
+/// bounds are followed by `<` and never name the implementing type.
+fn impl_name(header: &str) -> String {
+    let mut tail: Option<&str> = None;
+    let mut from = 0usize;
+    while let Some(p) = find_token(&header[from..], "for").map(|p| p + from) {
+        let after = header[p + 3..].trim_start();
+        if !after.starts_with('<') {
+            tail = Some(&header[p + 3..]);
+        }
+        from = p + 3;
+    }
+    type_head(tail.unwrap_or_else(|| skip_generics(header)))
+}
+
+/// `header` with one leading balanced `<..>` group removed (skipping
+/// `->` arrows inside bounds like `FnMut(usize) -> f32`).
+fn skip_generics(header: &str) -> &str {
+    let t = header.trim_start();
+    let b = t.as_bytes();
+    if b.first() != Some(&b'<') {
+        return t;
+    }
+    let mut depth = 0i32;
+    for i in 0..b.len() {
+        match b[i] {
+            b'<' => depth += 1,
+            b'>' if i > 0 && b[i - 1] == b'-' => {}
+            b'>' => {
+                depth -= 1;
+                if depth == 0 {
+                    return &t[i + 1..];
+                }
+            }
+            _ => {}
+        }
+    }
+    t
+}
+
+/// Last path segment of the leading type in `t`, generics stripped:
+/// `&mut sched::Foo<T>` -> `Foo`.
+fn type_head(t: &str) -> String {
+    let mut t = t.trim_start();
+    loop {
+        let bare = t.trim_start_matches(['&', '(']).trim_start();
+        if let Some(r) = bare.strip_prefix('\'') {
+            t = r.trim_start_matches(|c: char| c.is_alphanumeric() || c == '_');
+            continue;
+        }
+        if let Some(r) = bare.strip_prefix("mut ").or_else(|| bare.strip_prefix("dyn ")) {
+            t = r;
+            continue;
+        }
+        t = bare;
+        break;
+    }
+    let end = t
+        .find(|c: char| !(c.is_alphanumeric() || c == '_' || c == ':'))
+        .unwrap_or(t.len());
+    let path = &t[..end];
+    path.rsplit("::").next().unwrap_or(path).to_string()
+}
+
+/// First identifier in `s` (empty if none). Identifiers start with a
+/// letter or `_`, so a stray digit never names an item.
+fn first_ident(s: &str) -> &str {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() && !(b[i].is_ascii_alphabetic() || b[i] == b'_') {
+        i += 1;
+    }
+    let start = i;
+    while i < b.len() && is_ident_byte(b[i]) {
+        i += 1;
+    }
+    &s[start..i]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::strip;
+    use super::*;
+
+    fn scopes(src: &str) -> Vec<LineScope> {
+        annotate(&strip(src))
+    }
+
+    #[test]
+    fn nested_paths_attribute_exactly() {
+        let src = "mod outer {\n\
+                       fn a() {\n\
+                           let x = 1;\n\
+                       }\n\
+                       fn b() {}\n\
+                   }\n\
+                   fn top() {}\n";
+        let s = scopes(src);
+        assert_eq!(s[0].path, "outer");
+        assert_eq!(s[1].fn_path, "outer::a");
+        assert_eq!(s[2].fn_path, "outer::a");
+        assert_eq!(s[3].fn_path, "outer::a", "closing brace stays in the fn");
+        assert_eq!(s[4].fn_path, "outer::b");
+        assert_eq!(s[5].path, "outer", "mod close attributes to the mod");
+        assert_eq!(s[6].fn_path, "top");
+        assert_eq!(s[6].label(), "fn top");
+    }
+
+    #[test]
+    fn impl_headers_name_the_implementing_type() {
+        let src = "impl<'a> BlockCtx<'a> {\n\
+                       fn family(&self) {}\n\
+                   }\n\
+                   impl std::fmt::Display for ServeSummary {\n\
+                       fn fmt(&self) {}\n\
+                   }\n\
+                   unsafe impl Sync for TraceRing {}\n";
+        let s = scopes(src);
+        assert_eq!(s[1].fn_path, "BlockCtx::family");
+        assert_eq!(s[4].fn_path, "ServeSummary::fmt");
+        assert_eq!(s[6].path, "TraceRing");
+    }
+
+    #[test]
+    fn where_clauses_and_multiline_headers_bind_to_the_brace() {
+        let src = "impl<T> Holder<T> for Slot<T>\n\
+                   where\n\
+                       T: Clone,\n\
+                   {\n\
+                       fn get(&self) {}\n\
+                   }\n";
+        let s = scopes(src);
+        assert_eq!(s[3].path, "Slot", "the `{` line is inside the impl");
+        assert_eq!(s[4].fn_path, "Slot::get");
+    }
+
+    #[test]
+    fn semicolons_cancel_bodyless_items_but_not_signature_arrays() {
+        let src = "pub mod lexer;\n\
+                   struct Marker;\n\
+                   type F = fn(usize) -> f32;\n\
+                   fn takes(x: [u8; 3]) {\n\
+                       x;\n\
+                   }\n";
+        let s = scopes(src);
+        assert_eq!(s[0].kind, None);
+        assert_eq!(s[1].kind, None);
+        assert_eq!(s[2].kind, None, "fn-pointer type is not a scope");
+        assert_eq!(s[3].fn_path, "takes", "the [u8; 3] semicolon is grouped");
+        assert_eq!(s[4].fn_path, "takes");
+    }
+
+    #[test]
+    fn test_attribution_covers_cfg_test_mods_and_test_fns() {
+        let src = "fn real() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       use super::*;\n\
+                       #[test]\n\
+                       fn t() {\n\
+                           real();\n\
+                       }\n\
+                   }\n";
+        let s = scopes(src);
+        assert!(!s[0].in_test);
+        assert!(s[3].in_test, "mod body is test-only");
+        assert!(s[6].in_test, "test fn body is test-only");
+        assert_eq!(s[6].fn_path, "tests::t");
+    }
+
+    #[test]
+    fn return_position_impl_and_anonymous_blocks_do_not_push_scopes() {
+        let src = "fn runs(&self) -> impl Iterator<Item = usize> {\n\
+                       (0..3).map(|i| {\n\
+                           i + 1\n\
+                       })\n\
+                   }\n";
+        let s = scopes(src);
+        assert_eq!(s[0].fn_path, "runs");
+        assert_eq!(s[2].fn_path, "runs", "closure body stays in the fn");
+        assert_eq!(s[4].fn_path, "runs");
+    }
+
+    #[test]
+    fn enum_scope_marks_variant_lines() {
+        let src = "pub enum AttnKind {\n\
+                       #[default]\n\
+                       Fused,\n\
+                       Gather,\n\
+                   }\n\
+                   fn after() {}\n";
+        let s = scopes(src);
+        assert_eq!(s[0].kind, Some(ScopeKind::Enum));
+        assert_eq!(s[2].path, "AttnKind");
+        assert_eq!(s[3].path, "AttnKind");
+        assert_eq!(s[3].label(), "enum AttnKind");
+        assert_eq!(s[5].fn_path, "after");
+    }
+
+    #[test]
+    fn raw_string_braces_cannot_desync_the_tracker() {
+        let src = "fn a() {\n\
+                       let j = r#\"{ \"fn in_string\" { }\"#;\n\
+                   }\n\
+                   fn b() {}\n";
+        let s = scopes(src);
+        assert_eq!(s[1].fn_path, "a");
+        assert_eq!(s[3].fn_path, "b");
+    }
+}

@@ -59,8 +59,8 @@ impl std::fmt::Display for BenchResult {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{:<40} median {:>9.3} ms  (p10 {:>9.3}, p90 {:>9.3}, n={})",
-            self.name, self.median_ms, self.p10_ms, self.p90_ms, self.reps
+            "{:<40} median {:>9.3} ms  (p10 {:>9.3}, p90 {:>9.3}, mean {:>9.3}, n={})",
+            self.name, self.median_ms, self.p10_ms, self.p90_ms, self.mean_ms, self.reps
         )
     }
 }

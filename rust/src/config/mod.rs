@@ -397,6 +397,69 @@ stats_interval = 16
     }
 
     #[test]
+    fn every_toml_key_parses() {
+        // Names every knob the three tables accept — this doubles as the
+        // user-facing key catalogue the `toml-key-parity` lint rule
+        // requires outside the `from_toml` fns.
+        let cfg = ExperimentConfig::parse(
+            r#"
+model = "omni-1m"
+
+[calib]
+samples = 16
+epochs = 4
+batch = 2
+lr_lwc = 0.005
+lr_let = 0.02
+wd = 0.1
+seed = 9
+use_lwc = true
+use_let = true
+use_let_shift = false
+use_let_attn = false
+clip_variant = "pact"
+
+[train]
+steps = 100
+lr = 0.001
+warmup = 10
+seed = 3
+log_every = 50
+
+[serve]
+slots = 16
+requests = 64
+interarrival = 2.5
+prompt_len = 8
+max_new_tokens = 32
+temperature = 0.5
+seed = 11
+kv = "paged"
+block_tokens = 32
+threads = 4
+prefill_chunk = 8
+attn = "flash"
+trace = "t.json"
+stats_interval = 16
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.calib.batch, 2);
+        assert!((cfg.calib.lr_lwc - 0.005).abs() < 1e-9);
+        assert!((cfg.calib.wd - 0.1).abs() < 1e-9);
+        assert_eq!(cfg.calib.seed, 9);
+        assert!(cfg.calib.use_lwc && cfg.calib.use_let);
+        assert!(!cfg.calib.use_let_shift && !cfg.calib.use_let_attn);
+        assert_eq!(cfg.calib.clip_variant, "pact");
+        assert_eq!(cfg.train.warmup, 10);
+        assert_eq!(cfg.train.seed, 3);
+        assert_eq!(cfg.train.log_every, 50);
+        assert_eq!(cfg.serve.prompt_len, 8);
+        assert!((cfg.serve.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(cfg.serve.seed, 11);
+    }
+
+    #[test]
     fn unknown_keys_rejected() {
         assert!(ExperimentConfig::parse("bogus = 1").is_err());
         assert!(ExperimentConfig::parse("[calib]\nnope = 2").is_err());

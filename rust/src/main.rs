@@ -7,6 +7,7 @@
 //!   serve     packed-weight decoding benchmark / generation
 //!   trace-check  validate a Chrome-trace JSON written by `serve --trace`
 //!   lint      repo-native invariant linter (see docs/INVARIANTS.md)
+//!   lint-check   validate a `lint --json` report file
 //!   repro     regenerate a paper table/figure (see DESIGN.md index)
 //!   info      dump manifest / artifact info
 //!
@@ -346,13 +347,37 @@ fn cmd_trace_check(a: &Args) -> Result<()> {
 
 /// Repo-native invariant linter (rules catalogued in
 /// `docs/INVARIANTS.md`): scan every `.rs` file under PATH (default
-/// `rust`), print `file:line: [rule] message` findings the way
-/// `trace-check` does, and exit 1 when any finding survives its
-/// `// lint: allow(..)` markers. `--json` emits a machine-readable
-/// report through the crate's own JSON writer instead.
+/// `rust`), print `file:line (in scope): [rule] message` findings the
+/// way `trace-check` does. `--rule r1,r2` restricts output to the named
+/// rules; `--json` emits a machine-readable report through the crate's
+/// own JSON writer instead.
+///
+/// Exit-code contract: 0 = clean, 1 = findings survived their
+/// `// lint: allow(..)` markers, 2 = internal/usage error (unreadable
+/// PATH, unknown `--rule` id).
 fn cmd_lint(a: &Args) -> Result<()> {
     let root = a.positional.first().map(String::as_str).unwrap_or("rust");
-    let report = omniquant::analysis::lint_root(std::path::Path::new(root))?;
+    let mut picked: Vec<&str> = Vec::new();
+    if let Some(list) = a.get("rule") {
+        for r in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if !omniquant::analysis::RULES.iter().any(|info| info.id == r) {
+                let known: Vec<&str> = omniquant::analysis::RULES.iter().map(|i| i.id).collect();
+                eprintln!("lint: unknown rule '{r}' (known: {})", known.join(", "));
+                std::process::exit(2);
+            }
+            picked.push(r);
+        }
+    }
+    let mut report = match omniquant::analysis::lint_root(std::path::Path::new(root)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if !picked.is_empty() {
+        report.findings.retain(|f| picked.contains(&f.rule));
+    }
     if a.has("json") {
         println!("{}", report.to_json());
     } else {
@@ -369,6 +394,77 @@ fn cmd_lint(a: &Args) -> Result<()> {
     if !report.is_clean() {
         std::process::exit(1);
     }
+    Ok(())
+}
+
+/// Validate a `lint --json` report file with the crate's own JSON
+/// parser, trace-check style: the schema version must match this
+/// binary's, the rule catalogue must list exactly the shipped rules,
+/// every finding must name a known rule with a positive line, and the
+/// `clean` bit must agree with the findings count.
+fn cmd_lint_check(a: &Args) -> Result<()> {
+    let path = a
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("usage: omniquant lint-check FILE"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    let version = j
+        .get("schema_version")
+        .and_then(|v| v.as_f64().ok())
+        .ok_or_else(|| anyhow!("{path}: no schema_version field"))?;
+    let want = f64::from(omniquant::analysis::SCHEMA_VERSION);
+    if version != want {
+        bail!("{path}: schema_version {version} != supported {want}");
+    }
+    let rules = j
+        .get("rules")
+        .and_then(|v| v.as_arr().ok())
+        .ok_or_else(|| anyhow!("{path}: no rules array"))?;
+    let shipped = omniquant::analysis::RULES;
+    if rules.len() != shipped.len() {
+        bail!("{path}: report lists {} rules, binary ships {}", rules.len(), shipped.len());
+    }
+    for r in rules {
+        let id = r
+            .get("id")
+            .and_then(|v| v.as_str().ok())
+            .ok_or_else(|| anyhow!("{path}: rule entry without id"))?;
+        if !shipped.iter().any(|info| info.id == id) {
+            bail!("{path}: report lists unknown rule '{id}'");
+        }
+    }
+    let findings = j
+        .get("findings")
+        .and_then(|v| v.as_arr().ok())
+        .ok_or_else(|| anyhow!("{path}: no findings array"))?;
+    for f in findings {
+        let rule = f
+            .get("rule")
+            .and_then(|v| v.as_str().ok())
+            .ok_or_else(|| anyhow!("{path}: finding without rule"))?;
+        if !shipped.iter().any(|info| info.id == rule) {
+            bail!("{path}: finding names unknown rule '{rule}'");
+        }
+        let line = f.get("line").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+        if line < 1.0 {
+            bail!("{path}: finding for rule '{rule}' has no 1-based line");
+        }
+        match f.get("file").and_then(|v| v.as_str().ok()) {
+            Some(file) if !file.is_empty() => {}
+            _ => bail!("{path}: finding for rule '{rule}' has no file"),
+        }
+    }
+    match j.get("clean") {
+        Some(Json::Bool(b)) => {
+            if *b != findings.is_empty() {
+                bail!("{path}: clean={b} disagrees with {} findings", findings.len());
+            }
+        }
+        _ => bail!("{path}: no clean bool"),
+    }
+    println!("{path}: ok — schema v{version}, {} findings, {} rules", findings.len(), rules.len());
     Ok(())
 }
 
@@ -444,16 +540,18 @@ fn cmd_info(a: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|trace-check|lint|repro|info> \
-    [--model M] [--help]\n\
+const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|trace-check|lint|lint-check\
+    |repro|info> [--model M] [--help]\n\
     \n\
-    train     --model M --steps N --lr X --out ckpt.oqc\n\
+    train     --model M --steps N --lr X --seed S --out ckpt.oqc\n\
     quantize  --model M --ckpt F --setting w4a16 --method omniquant\n\
-    \u{20}          --samples N --epochs N [--out F]\n\
+    \u{20}          --samples N --epochs N [--config F] [--seed S]\n\
+    \u{20}          [--lr-lwc X] [--lr-let X] [--out F]\n\
     eval      --model M --ckpt F [--setting S] [--corpus wiki-s|c4-s|ptb-s]\n\
-    \u{20}          [--zeroshot] [--batches N]\n\
+    \u{20}          [--zeroshot [--items N]] [--batches N]\n\
     serve     --model M --ckpt F --setting w4a16g64 [--tokens N] [--batch B]\n\
     \u{20}          [--prompt-len P] [--generate] [--temp X] [--synthetic]\n\
+    \u{20}          [--config F] [--seed S] [--family llama|opt]\n\
     \u{20}          [--continuous --requests N --interarrival X --slots S --json F\n\
     \u{20}           --kv slab|paged|paged-q8 --block-tokens B --threads T\n\
     \u{20}           --prefill-chunk C --attn flash|fused|gather\n\
@@ -478,13 +576,19 @@ const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|trace-check|lin
     \u{20}           live heartbeat line to stderr every N scheduler ticks)\n\
     trace-check FILE  (validate a --trace output: parses, counts spans,\n\
     \u{20}           fails on zero tick spans or unterminated spans)\n\
-    lint      [PATH] [--json]  (repo-native invariant linter over every\n\
-    \u{20}           .rs file under PATH, default 'rust': SAFETY comments on\n\
-    \u{20}           unsafe, total_cmp float ordering, TOML int casts, kernel\n\
-    \u{20}           timing, stdout cleanliness, parity-suite variant\n\
-    \u{20}           coverage — see docs/INVARIANTS.md; exits 1 on findings;\n\
-    \u{20}           suppress with '// lint: allow(rule): why'; --json emits\n\
-    \u{20}           a machine-readable report)\n\
+    lint      [PATH] [--json] [--rule r1,r2]  (repo-native invariant\n\
+    \u{20}           linter over every .rs file under PATH, default 'rust':\n\
+    \u{20}           SAFETY comments on unsafe, total_cmp float ordering,\n\
+    \u{20}           TOML int casts, kernel timing, stdout cleanliness,\n\
+    \u{20}           parity-suite variant coverage, plus the scope-aware\n\
+    \u{20}           cross-file drift rules: flag/usage parity, TOML-key/doc\n\
+    \u{20}           parity, JSON/Display parity, stale allows, panic-free\n\
+    \u{20}           kernels — see docs/INVARIANTS.md; exits 0 clean,\n\
+    \u{20}           1 findings, 2 internal error; suppress with\n\
+    \u{20}           '// lint: allow(rule): why'; --rule filters to the named\n\
+    \u{20}           rules; --json emits a machine-readable report)\n\
+    lint-check FILE  (validate a lint --json report: schema_version,\n\
+    \u{20}           rule catalogue, finding shape, clean-bit consistency)\n\
     repro     --exp <fig1|table1|table2|table3|table4|fig4|tableA1..A14|figA1..A3\n\
     \u{20}          |serve-bench|all> [--quick] (reduced sizes/samples)\n\
     info      --model M";
@@ -515,6 +619,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "trace-check" => cmd_trace_check(&args),
         "lint" => cmd_lint(&args),
+        "lint-check" => cmd_lint_check(&args),
         "repro" => repro::run(&args.get_or("exp", "all"), args.has("quick")),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => usage(0),

@@ -92,7 +92,13 @@ impl BlockQuantizer for Gptq {
         let percdamp = self.percdamp;
         let mut failed: Option<anyhow::Error> = None;
         let fused = fuse_block(ctx.family(), &ctx.bw, &LetParams::identity(d), &mut |name, w| {
-            let x = BlockCtx::linear_input(&inter, name);
+            let x = match BlockCtx::linear_input(&inter, name) {
+                Ok(x) => x,
+                Err(e) => {
+                    failed = Some(e);
+                    return w.clone();
+                }
+            };
             match gptq_quantize(w, x, s.wbits, s.group, percdamp) {
                 Ok(t) => t,
                 Err(e) => {

@@ -15,7 +15,7 @@ pub mod gptq;
 pub mod rtn;
 pub mod smoothquant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::QuantSetting;
 use crate::model::BlockWeights;
@@ -54,13 +54,13 @@ impl<'a> BlockCtx<'a> {
     }
 
     /// The input activation feeding a given linear.
-    pub fn linear_input<'b>(inter: &'b Intermediates, linear: &str) -> &'b Tensor {
+    pub fn linear_input<'b>(inter: &'b Intermediates, linear: &str) -> Result<&'b Tensor> {
         match linear {
-            "wq" | "wk" | "wv" => &inter.x1,
-            "wo" => &inter.ao,
-            "wg" | "wu" | "w1" => &inter.x2,
-            "wd" | "w2" => &inter.mid,
-            other => panic!("unknown linear {other}"),
+            "wq" | "wk" | "wv" => Ok(&inter.x1),
+            "wo" => Ok(&inter.ao),
+            "wg" | "wu" | "w1" => Ok(&inter.x2),
+            "wd" | "w2" => Ok(&inter.mid),
+            other => Err(anyhow!("unknown linear '{other}'")),
         }
     }
 
@@ -77,24 +77,33 @@ impl<'a> BlockCtx<'a> {
                 acc[i].push(t);
             }
         }
-        let flat2 = |ts: &Vec<Tensor>| -> Tensor {
-            let c = *ts[0].shape().last().unwrap();
+        let flat2 = |ts: Vec<Tensor>| -> Result<Tensor> {
+            let c = ts
+                .first()
+                .and_then(|t| t.shape().last().copied())
+                .ok_or_else(|| anyhow!("block_intermediates returned an empty stream"))?;
             let mut data = Vec::new();
-            for t in ts {
+            for t in &ts {
                 data.extend_from_slice(t.data());
             }
             let n = data.len() / c;
-            Tensor::new(&[n, c], data)
+            Ok(Tensor::new(&[n, c], data))
         };
-        let mut it = acc.iter();
+        // `acc` always holds 7 streams (x1,q,k,v,ao,x2,mid); pop from the
+        // back so each stream is moved out without indexing.
+        let (Some(mid), Some(x2), Some(ao), Some(v), Some(k), Some(q), Some(x1)) =
+            (acc.pop(), acc.pop(), acc.pop(), acc.pop(), acc.pop(), acc.pop(), acc.pop())
+        else {
+            return Err(anyhow!("block_intermediates returned fewer than 7 streams"));
+        };
         Ok(Intermediates {
-            x1: flat2(it.next().unwrap()),
-            q: flat2(it.next().unwrap()),
-            k: flat2(it.next().unwrap()),
-            v: flat2(it.next().unwrap()),
-            ao: flat2(it.next().unwrap()),
-            x2: flat2(it.next().unwrap()),
-            mid: flat2(it.next().unwrap()),
+            x1: flat2(x1)?,
+            q: flat2(q)?,
+            k: flat2(k)?,
+            v: flat2(v)?,
+            ao: flat2(ao)?,
+            x2: flat2(x2)?,
+            mid: flat2(mid)?,
         })
     }
 }

@@ -92,6 +92,7 @@ impl PackedMatrix {
         gamma: Option<&[f32]>,
         beta: Option<&[f32]>,
     ) -> PackedMatrix {
+        // lint: allow(panic-free-kernels): bit-width contract at the packing entry
         assert!((2..=8).contains(&bits), "packing supports 2..=8 bits");
         let (cin, cout) = (w.shape()[0], w.shape()[1]);
         let qp = quant_params(w, bits, group, gamma, beta);
@@ -169,7 +170,7 @@ impl PackedMatrix {
 
     /// y = x @ W from packed storage. `x.len() == cin`, `y.len() == cout`.
     pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
-        assert_eq!(x.len(), self.cin);
+        assert_eq!(x.len(), self.cin); // lint: allow(panic-free-kernels): capacity contract
         assert_eq!(y.len(), self.cout);
         let g = group_len(self.cin, self.group);
         y.iter_mut().for_each(|v| *v = 0.0);
@@ -217,7 +218,7 @@ impl PackedMatrix {
     /// allocations; every buffer is zeroed before use, so a shared scratch
     /// carries no state between calls.
     pub fn gemm(&self, xs: &[f32], b: usize, ys: &mut [f32], scratch: &mut GemmScratch) {
-        assert_eq!(xs.len(), b * self.cin);
+        assert_eq!(xs.len(), b * self.cin); // lint: allow(panic-free-kernels): capacity contract
         assert_eq!(ys.len(), b * self.cout);
         if b == 0 {
             return;
@@ -242,8 +243,9 @@ impl PackedMatrix {
         scratches: &mut [GemmScratch],
         pool: &ThreadPool,
     ) {
-        assert_eq!(xs.len(), b * self.cin);
+        assert_eq!(xs.len(), b * self.cin); // lint: allow(panic-free-kernels): capacity contract
         assert_eq!(ys.len(), b * self.cout);
+        // lint: allow(panic-free-kernels): scratch-per-thread contract, aborts before any write
         assert!(
             scratches.len() >= pool.threads(),
             "gemm_mt needs one GemmScratch per pool thread ({} < {})",

@@ -250,8 +250,16 @@ impl std::fmt::Display for ServeSummary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "served {} requests / {} tokens in {:.2}s: decode {:.1} tok/s (overall {:.1} tok/s)",
-            self.requests, self.tokens, self.total_secs, self.decode_tok_per_s, self.total_tok_per_s
+            "served {} requests / {} tokens ({} decoded) in {:.2}s \
+             (prefill {:.2}s + decode {:.2}s): decode {:.1} tok/s (overall {:.1} tok/s)",
+            self.requests,
+            self.tokens,
+            self.decode_tokens,
+            self.total_secs,
+            self.prefill_secs,
+            self.decode_secs,
+            self.decode_tok_per_s,
+            self.total_tok_per_s
         )?;
         writeln!(
             f,

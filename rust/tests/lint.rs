@@ -2,10 +2,16 @@
 //! CI runs as `omniquant lint rust`; keeping it in the test suite means a
 //! plain `cargo test` catches invariant violations without the extra CI
 //! lane, and a failure prints every finding with its file:line.
+//!
+//! Also exercises the CLI contract end to end through the built binary:
+//! exit codes (0 clean / 1 findings / 2 internal error), `--rule`
+//! filtering, the `schema_version` field, and `lint-check` round-trips.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::process::Command;
 
 use omniquant::analysis;
+use omniquant::json::Json;
 
 #[test]
 fn repo_tree_lints_clean() {
@@ -37,4 +43,100 @@ fn every_shipped_rule_is_documented() {
             rule.id
         );
     }
+}
+
+/// A scratch tree under the target dir holding one source file.
+fn scratch_tree(name: &str, src: &str) -> PathBuf {
+    let dir = Path::new(env!("CARGO_TARGET_TMPDIR")).join(name).join("src/serve");
+    std::fs::create_dir_all(&dir).expect("mkdir scratch tree");
+    std::fs::write(dir.join("x.rs"), src).expect("write scratch source");
+    dir.ancestors().nth(2).expect("tree root").to_path_buf()
+}
+
+fn lint_cmd() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_omniquant"))
+}
+
+#[test]
+fn lint_exit_codes_cover_clean_findings_and_error() {
+    // 0: a tree with nothing to flag.
+    let clean = scratch_tree("lint_exit_clean", "fn quiet() {\n    let _x = 1;\n}\n");
+    let out = lint_cmd().arg("lint").arg(&clean).output().expect("run lint");
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+
+    // 1: a finding survives.
+    let dirty = scratch_tree("lint_exit_dirty", "fn noisy() {\n    println!(\"x\");\n}\n");
+    let out = lint_cmd().arg("lint").arg(&dirty).output().expect("run lint");
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("stdout-print"), "{stdout}");
+    assert!(stdout.contains("(in fn noisy)"), "findings must carry scope: {stdout}");
+
+    // 2: unreadable path.
+    let out = lint_cmd().arg("lint").arg("/no/such/tree").output().expect("run lint");
+    assert_eq!(out.status.code(), Some(2));
+
+    // 2: unknown --rule id.
+    let out = lint_cmd()
+        .arg("lint")
+        .arg(&clean)
+        .args(["--rule", "no-such-rule"])
+        .output()
+        .expect("run lint");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown rule"), "names the bad id");
+}
+
+#[test]
+fn lint_rule_filter_restricts_findings() {
+    // The tree trips stdout-print and unsafe-safety; filtering to one
+    // rule must drop the other from the report (exit still 1).
+    let src = "fn noisy(p: *mut f32) {\n    println!(\"x\");\n    unsafe { *p = 0.0 };\n}\n";
+    let tree = scratch_tree("lint_rule_filter", src);
+    let out = lint_cmd()
+        .arg("lint")
+        .arg(&tree)
+        .args(["--rule", "unsafe-safety", "--json"])
+        .output()
+        .expect("run lint");
+    assert_eq!(out.status.code(), Some(1));
+    let j = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).expect("valid json");
+    let findings = j.get("findings").and_then(|v| v.as_arr().ok()).expect("findings array");
+    assert_eq!(findings.len(), 1, "{j}");
+    assert_eq!(
+        findings[0].get("rule").and_then(|v| v.as_str().ok()),
+        Some("unsafe-safety")
+    );
+}
+
+#[test]
+fn lint_json_schema_version_and_lint_check_round_trip() {
+    let tree = scratch_tree("lint_check_rt", "fn noisy() {\n    println!(\"x\");\n}\n");
+    let out = lint_cmd().arg("lint").arg(&tree).arg("--json").output().expect("run lint");
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let j = Json::parse(text.trim()).expect("valid json");
+    assert_eq!(
+        j.get("schema_version").and_then(|v| v.as_f64().ok()),
+        Some(f64::from(analysis::SCHEMA_VERSION))
+    );
+    // Every finding carries a scope key (may be empty at file scope).
+    let findings = j.get("findings").and_then(|v| v.as_arr().ok()).expect("findings array");
+    assert!(!findings.is_empty());
+    for f in findings {
+        assert!(f.get("scope").is_some(), "finding without scope: {f}");
+    }
+
+    // lint-check accepts the exact bytes the binary just emitted...
+    let report = Path::new(env!("CARGO_TARGET_TMPDIR")).join("lint_check_rt/report.json");
+    std::fs::write(&report, out.stdout).expect("write report");
+    let out = lint_cmd().arg("lint-check").arg(&report).output().expect("run lint-check");
+    assert_eq!(out.status.code(), Some(0), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // ...and rejects a tampered clean bit.
+    let tampered = text.replace("\"clean\":false", "\"clean\":true");
+    assert_ne!(tampered, text, "replacement must hit");
+    std::fs::write(&report, tampered).expect("write tampered report");
+    let out = lint_cmd().arg("lint-check").arg(&report).output().expect("run lint-check");
+    assert_ne!(out.status.code(), Some(0), "tampered clean bit must fail lint-check");
 }

@@ -33,6 +33,11 @@ for arg in "$@"; do
   fi
 done
 
+# Preflight: a drifted tree (flag/TOML/JSON surface parity, stale
+# allows, kernel invariants — see docs/INVARIANTS.md) must not produce
+# a bench snapshot. Exit 1 = findings, 2 = lint internal error.
+cargo run --quiet --release --manifest-path rust/Cargo.toml -- lint rust
+
 cargo run --quiet --release --manifest-path rust/Cargo.toml -- \
   repro --exp serve-bench $QUICK
 
