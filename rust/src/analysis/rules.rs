@@ -104,9 +104,9 @@ pub const RULES: &[RuleInfo] = &[
     },
     RuleInfo {
         id: VARIANT_COVERAGE,
-        summary: "every `AttnKind`/`KvStoreKind`/`KvLayout` variant name \
-                  appears in `tests/sched.rs` so the parity suite cannot \
-                  silently rot",
+        summary: "every `AttnKind`/`KvStoreKind`/`KvLayout`/`TerminalState` \
+                  variant name appears in `tests/sched.rs` so the parity \
+                  and lifecycle suites cannot silently rot",
     },
     RuleInfo {
         id: FLAG_SURFACE_PARITY,
@@ -141,7 +141,7 @@ pub const RULES: &[RuleInfo] = &[
 ];
 
 /// Enums whose variants the parity suite must mention by name.
-const WATCHED_ENUMS: &[&str] = &["AttnKind", "KvStoreKind", "KvLayout"];
+const WATCHED_ENUMS: &[&str] = &["AttnKind", "KvStoreKind", "KvLayout", "TerminalState"];
 
 /// Kernel path fragments for the `kernel-timing` rule.
 const KERNEL_PATHS: &[&str] = &["src/linalg/", "src/quant/", "src/serve/attn.rs"];

@@ -206,6 +206,19 @@ pub struct ServeConfig {
     /// Heartbeat period in scheduler ticks (stderr status line: live
     /// QPS, p90 step, batch width, KV blocks in use). 0 = off.
     pub stats_interval: usize,
+    /// Admission-queue bound: submits past this many queued requests are
+    /// shed with a documented error (0 = unbounded, the historic
+    /// behavior).
+    pub queue_cap: usize,
+    /// Priority classes for the synthetic workload, assigned round-robin
+    /// by request id (0 or 1 = everyone in the single top class).
+    /// Class 0 is the highest; lower classes preempt higher under block
+    /// pressure.
+    pub classes: usize,
+    /// Deadline budget in scheduler steps from arrival for every
+    /// synthetic request; past it the request is dropped with whatever
+    /// output it has (0 = no deadline).
+    pub deadline_steps: usize,
 }
 
 impl Default for ServeConfig {
@@ -225,6 +238,9 @@ impl Default for ServeConfig {
             attn: "fused".into(),
             trace: String::new(),
             stats_interval: 0,
+            queue_cap: 0,
+            classes: 0,
+            deadline_steps: 0,
         }
     }
 }
@@ -249,6 +265,11 @@ impl ServeConfig {
                 "trace" => c.trace = val.as_str()?.to_string(),
                 "stats_interval" => {
                     c.stats_interval = toml_usize("serve.stats_interval", val)?
+                }
+                "queue_cap" => c.queue_cap = toml_usize("serve.queue_cap", val)?,
+                "classes" => c.classes = toml_usize("serve.classes", val)?,
+                "deadline_steps" => {
+                    c.deadline_steps = toml_usize("serve.deadline_steps", val)?
                 }
                 other => return Err(anyhow!("unknown serve key '{other}'")),
             }
@@ -370,6 +391,9 @@ prefill_chunk = 8
 attn = "flash"
 trace = "/tmp/trace.json"
 stats_interval = 16
+queue_cap = 128
+classes = 3
+deadline_steps = 200
 "#,
         )
         .unwrap();
@@ -385,6 +409,9 @@ stats_interval = 16
         assert_eq!(cfg.serve.attn, "flash");
         assert_eq!(cfg.serve.trace, "/tmp/trace.json");
         assert_eq!(cfg.serve.stats_interval, 16);
+        assert_eq!(cfg.serve.queue_cap, 128);
+        assert_eq!(cfg.serve.classes, 3);
+        assert_eq!(cfg.serve.deadline_steps, 200);
         let d = ExperimentConfig::parse("model = \"m\"").unwrap();
         assert_eq!(d.serve.slots, ServeConfig::default().slots);
         assert_eq!(d.serve.kv, "slab");
@@ -394,6 +421,9 @@ stats_interval = 16
         assert_eq!(d.serve.attn, "fused", "default: streaming fused attention");
         assert_eq!(d.serve.trace, "", "default: tracing off");
         assert_eq!(d.serve.stats_interval, 0, "default: heartbeat off");
+        assert_eq!(d.serve.queue_cap, 0, "default: unbounded queue");
+        assert_eq!(d.serve.classes, 0, "default: one priority class");
+        assert_eq!(d.serve.deadline_steps, 0, "default: no deadline");
     }
 
     #[test]
@@ -441,6 +471,9 @@ prefill_chunk = 8
 attn = "flash"
 trace = "t.json"
 stats_interval = 16
+queue_cap = 64
+classes = 2
+deadline_steps = 500
 "#,
         )
         .unwrap();
@@ -457,6 +490,9 @@ stats_interval = 16
         assert_eq!(cfg.serve.prompt_len, 8);
         assert!((cfg.serve.temperature - 0.5).abs() < 1e-6);
         assert_eq!(cfg.serve.seed, 11);
+        assert_eq!(cfg.serve.queue_cap, 64);
+        assert_eq!(cfg.serve.classes, 2);
+        assert_eq!(cfg.serve.deadline_steps, 500);
     }
 
     #[test]
@@ -477,6 +513,9 @@ stats_interval = 16
             ("serve.slots", "-2", "[serve]\nslots = -2"),
             ("serve.seed", "-7", "[serve]\nseed = -7"),
             ("serve.stats_interval", "-8", "[serve]\nstats_interval = -8"),
+            ("serve.queue_cap", "-3", "[serve]\nqueue_cap = -3"),
+            ("serve.classes", "-2", "[serve]\nclasses = -2"),
+            ("serve.deadline_steps", "-9", "[serve]\ndeadline_steps = -9"),
             ("calib.samples", "-32", "[calib]\nsamples = -32"),
             ("train.steps", "-300", "[train]\nsteps = -300"),
         ] {

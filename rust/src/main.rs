@@ -210,6 +210,9 @@ fn serve_cfg_from_args(a: &Args) -> Result<ServeConfig> {
         c.trace = v.to_string();
     }
     c.stats_interval = a.usize_or("stats-interval", c.stats_interval)?;
+    c.queue_cap = a.usize_or("queue-cap", c.queue_cap)?;
+    c.classes = a.usize_or("classes", c.classes)?;
+    c.deadline_steps = a.usize_or("deadline-steps", c.deadline_steps)?;
     Ok(c)
 }
 
@@ -246,8 +249,10 @@ fn cmd_serve_continuous(a: &Args, engine: &serve::Engine) -> Result<()> {
         prompt_len: cfg.prompt_len,
         max_new_tokens: cfg.max_new_tokens,
         temperature: cfg.temperature,
+        classes: cfg.classes,
+        deadline_steps: cfg.deadline_steps,
     };
-    let requests = sched::synthetic_workload(&spec, engine.desc.vocab, cfg.seed);
+    let mut requests = sched::synthetic_workload(&spec, engine.desc.vocab, cfg.seed);
     let scfg = sched::SchedConfig {
         slots: cfg.slots,
         slot_tokens: cfg.prompt_len + cfg.max_new_tokens + 1,
@@ -258,6 +263,7 @@ fn cmd_serve_continuous(a: &Args, engine: &serve::Engine) -> Result<()> {
         prefill_chunk: cfg.prefill_chunk,
         attn,
         stats_interval: cfg.stats_interval,
+        queue_cap: cfg.queue_cap,
     };
     let tracing = !cfg.trace.is_empty();
     if tracing {
@@ -265,10 +271,39 @@ fn cmd_serve_continuous(a: &Args, engine: &serve::Engine) -> Result<()> {
         trace::enable();
     }
     let mut scheduler = sched::Scheduler::new(engine, scfg);
+    // --faults SEED: generate a deterministic fault plan (cancels,
+    // transient block squeezes, deadline storms) sized to this workload
+    // and drive the run through it.
+    let plan = match a.get("faults") {
+        None => None,
+        Some(v) => {
+            let fseed: u64 = v.parse().with_context(|| format!("--faults {v}"))?;
+            let last_arrival = requests.iter().map(|r| r.arrival_step).max().unwrap_or(0);
+            let horizon = last_arrival + cfg.requests * 2 + 16;
+            let plan = sched::FaultPlan::generate(
+                fseed,
+                cfg.requests,
+                horizon,
+                scheduler.pool().n_blocks(),
+            );
+            plan.apply_deadlines(&mut requests);
+            println!(
+                "fault plan (seed {fseed}): {} cancels, {} block squeezes, {} deadline storms",
+                plan.cancels.len(),
+                plan.squeezes.len(),
+                plan.storms.len()
+            );
+            Some(plan)
+        }
+    };
+    // Shed/rejected submits are terminal states of the run, not command
+    // failures: report and keep going (the summary counts them).
     for r in requests {
-        scheduler.submit(r)?;
+        if let Err(e) = scheduler.submit(r) {
+            eprintln!("submit: {e}");
+        }
     }
-    let summary = scheduler.run()?;
+    let summary = scheduler.run_with_faults(plan.as_ref())?;
     if tracing {
         trace::disable();
         trace::write(&cfg.trace)?;
@@ -555,7 +590,8 @@ const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|trace-check|lin
     \u{20}          [--continuous --requests N --interarrival X --slots S --json F\n\
     \u{20}           --kv slab|paged|paged-q8 --block-tokens B --threads T\n\
     \u{20}           --prefill-chunk C --attn flash|fused|gather\n\
-    \u{20}           --trace F --stats-interval N]\n\
+    \u{20}           --trace F --stats-interval N --queue-cap Q --classes K\n\
+    \u{20}           --deadline-steps D --faults SEED]\n\
     \u{20}          (--continuous: open-loop staggered arrivals through the\n\
     \u{20}           pooled-KV continuous-batching scheduler; --kv picks the KV\n\
     \u{20}           store: slab f32 slots, vLLM-style paged blocks, or paged\n\
@@ -573,7 +609,17 @@ const USAGE: &str = "usage: omniquant <train|quantize|eval|serve|trace-check|lin
     \u{20}           artifacts/PJRT needed; --trace writes a Chrome Trace\n\
     \u{20}           Event JSON of the run, openable in Perfetto, with no\n\
     \u{20}           effect on sampled tokens; --stats-interval prints a\n\
-    \u{20}           live heartbeat line to stderr every N scheduler ticks)\n\
+    \u{20}           live heartbeat line to stderr every N scheduler ticks;\n\
+    \u{20}           --queue-cap bounds the admission queue, submits past it\n\
+    \u{20}           are shed, 0 = unbounded; --classes assigns round-robin\n\
+    \u{20}           priority classes to the synthetic workload, class 0\n\
+    \u{20}           highest; --deadline-steps drops any request still\n\
+    \u{20}           unfinished D scheduler steps after arrival, keeping its\n\
+    \u{20}           partial output, 0 = no deadline; --faults runs a seeded\n\
+    \u{20}           deterministic fault plan: step-indexed cancels,\n\
+    \u{20}           transient KV block squeezes forcing preempt-and-requeue,\n\
+    \u{20}           and deadline storms, with a zero-leak pool conservation\n\
+    \u{20}           audit after drain)\n\
     trace-check FILE  (validate a --trace output: parses, counts spans,\n\
     \u{20}           fails on zero tick spans or unterminated spans)\n\
     lint      [PATH] [--json] [--rule r1,r2]  (repo-native invariant\n\

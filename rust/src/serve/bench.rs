@@ -30,7 +30,8 @@ use crate::runtime::Manifest;
 use crate::util::{stats, trace, Rng};
 
 use super::sched::{
-    synthetic_workload, KvPool, KvStoreKind, SchedConfig, Scheduler, ServeSummary, WorkloadSpec,
+    synthetic_workload, KvPool, KvStoreKind, SchedConfig, Scheduler, ServeSummary, TerminalState,
+    WorkloadSpec,
 };
 use super::{AttnKind, Engine};
 
@@ -132,6 +133,8 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         prompt_len: p,
         max_new_tokens: n,
         temperature: 0.0,
+        classes: 0,
+        deadline_steps: 0,
     };
     lines.push(format!("sequential (width 1)    {sequential_tps:>9.1} tok/s"));
     lines.push(format!(
@@ -167,6 +170,7 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
                 prefill_chunk: chunk,
                 attn: AttnKind::Fused,
                 stats_interval: 0,
+                queue_cap: 0,
             };
             let mut sch = Scheduler::new(&engine, cfg);
             for r in reqs {
@@ -256,6 +260,8 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         prompt_len: long_p,
         max_new_tokens: n,
         temperature: 0.0,
+        classes: 0,
+        deadline_steps: 0,
     };
     let mut whole_step_p90 = 0.0f64;
     let mut whole_ttft_p90 = 0.0f64;
@@ -454,6 +460,87 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
          ({trace_overhead_pct:+.1}%)"
     ));
 
+    // 8. overload trace: a bursty 3-class mixed-length workload at ~2x
+    //    queue capacity with per-class deadlines, on paged-q8 with
+    //    chunked prefill — the lifecycle section of the snapshot. Every
+    //    outcome-deciding input (arrivals, deadlines, shedding,
+    //    preemption pressure) is step-indexed, so the per-class SLO
+    //    attainment and terminal-state counters reproduce exactly run
+    //    to run even though wall-clock timings move.
+    let over_slots = (b / 2).max(1);
+    let over_spec = WorkloadSpec {
+        requests: 4 * b,
+        mean_interarrival_steps: 0.25,
+        prompt_len: p,
+        max_new_tokens: n,
+        temperature: 0.0,
+        classes: 3,
+        deadline_steps: 0,
+    };
+    let mut over_reqs = synthetic_workload(&over_spec, vocab, opts.seed ^ 0x0E);
+    for r in over_reqs.iter_mut() {
+        // mixed lengths: every third prompt doubled (burstier prefill);
+        // deadlines by class — 0 tight, 1 loose, 2 best-effort (none)
+        if r.id % 3 == 0 {
+            let head = r.prompt.clone();
+            r.prompt.extend(head);
+        }
+        r.deadline_steps = match r.class {
+            0 => 4 * (p + n),
+            1 => 8 * (p + n),
+            _ => 0,
+        };
+    }
+    let over_cfg = SchedConfig {
+        slots: over_slots,
+        slot_tokens: 2 * p + n + 1,
+        eos: None,
+        kv: KvStoreKind::PagedQ8,
+        block_tokens: BENCH_BLOCK_TOKENS,
+        threads: 1,
+        prefill_chunk: 8,
+        attn: AttnKind::Fused,
+        stats_interval: 0,
+        queue_cap: 3 * b,
+    };
+    let mut over_sch = Scheduler::new(&engine, over_cfg);
+    for r in over_reqs {
+        // shed submits error by design under overload; the terminal
+        // ledger and summary counters account for them below
+        let _ = over_sch.submit(r);
+    }
+    let over = over_sch.run()?;
+    let mut arrived = [0usize; 3];
+    let mut finished = [0usize; 3];
+    for (&id, &state) in over_sch.terminal_states() {
+        // classes were assigned round-robin by id above
+        let c = id % 3;
+        arrived[c] += 1;
+        if state == TerminalState::Finished {
+            finished[c] += 1;
+        }
+    }
+    let slo: Vec<f64> =
+        (0..3).map(|c| finished[c] as f64 / arrived[c].max(1) as f64).collect();
+    lines.push(format!(
+        "overload x{} slots {over_slots} cap {}: SLO attainment class0 {:.0}% / class1 {:.0}% \
+         / class2 {:.0}%",
+        4 * b,
+        3 * b,
+        100.0 * slo[0],
+        100.0 * slo[1],
+        100.0 * slo[2],
+    ));
+    lines.push(format!(
+        "overload lifecycle: {} shed, {} deadline_exceeded, {} preempted, {} resumed",
+        over.shed, over.deadline_exceeded, over.preempted, over.resumed,
+    ));
+    let over_shed = over.shed;
+    let over_deadline = over.deadline_exceeded;
+    let over_preempted = over.preempted;
+    let over_resumed = over.resumed;
+    modes.insert("overload".to_string(), over.to_json());
+
     let num = |v: f64| Json::Num(v);
     let mut seq_o = BTreeMap::new();
     seq_o.insert("tok_per_s".to_string(), num(sequential_tps));
@@ -516,6 +603,15 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeBenchReport> {
         ("step_p90_ms_trace_off".to_string(), num(slab_step_p90)),
         ("step_p90_ms_trace_on".to_string(), num(step_p90_trace_on)),
         ("trace_overhead_pct".to_string(), num(trace_overhead_pct)),
+        // overload lifecycle headlines: deterministic per-class SLO
+        // attainment + terminal-state counters under the bursty trace
+        ("overload_slo_class0".to_string(), num(slo[0])),
+        ("overload_slo_class1".to_string(), num(slo[1])),
+        ("overload_slo_class2".to_string(), num(slo[2])),
+        ("overload_shed".to_string(), num(over_shed as f64)),
+        ("overload_deadline_exceeded".to_string(), num(over_deadline as f64)),
+        ("overload_preempted".to_string(), num(over_preempted as f64)),
+        ("overload_resumed".to_string(), num(over_resumed as f64)),
     ];
     Ok(ServeBenchReport { entries, lines, speedup_continuous_vs_lockstep: speedup })
 }

@@ -1,0 +1,159 @@
+//! Deterministic fault injection for the scheduler: a seeded,
+//! step-indexed [`FaultPlan`] that the run loop
+//! ([`Scheduler::run_with_faults`]) applies tick by tick — cancel
+//! request *i* just before tick *t*, withhold free KV blocks for a
+//! window of ticks (a transient memory squeeze that forces back-pressure
+//! and preemption without any real allocation failing), and stamp
+//! deadline storms onto id ranges of the workload before submission.
+//!
+//! Everything is indexed in scheduler steps, never wall time, so a
+//! faulted run is exactly as reproducible as a clean one: the same
+//! (plan, workload, engine) triple yields the same terminal state for
+//! every request, the same preemption count, and bit-identical tokens
+//! for every request that finishes. `serve --continuous --faults SEED`
+//! drives a generated plan end to end; the fault-churn tests in
+//! `tests/sched.rs` pair a 1k-request plan with the scheduler's
+//! KV conservation audit ([`Scheduler::audit_conservation`]).
+//!
+//! [`Scheduler::run_with_faults`]: super::Scheduler::run_with_faults
+//! [`Scheduler::audit_conservation`]: super::Scheduler::audit_conservation
+
+use crate::util::Rng;
+
+use super::Request;
+
+/// A seeded, step-indexed fault plan. Fields are public so tests can
+/// hand-craft exact scenarios; [`FaultPlan::generate`] draws a mixed
+/// plan from a seed.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// `(tick, request id)`: cancel the request just before that tick
+    /// runs. Unknown or already-terminal ids are no-ops, so cancels may
+    /// deterministically race finishes.
+    pub cancels: Vec<(usize, usize)>,
+    /// `(start_tick, withheld, duration_ticks)`: withhold up to
+    /// `withheld` free blocks (slab: slots) for ticks
+    /// `start..start + duration`. Overlapping windows take the max.
+    pub squeezes: Vec<(usize, usize, usize)>,
+    /// `(first_id, last_id inclusive, deadline_steps)`: a deadline
+    /// storm, stamped onto the workload before submission by
+    /// [`FaultPlan::apply_deadlines`].
+    pub storms: Vec<(usize, usize, usize)>,
+}
+
+impl FaultPlan {
+    /// Seeded mixed plan: roughly one cancel per 8 requests spread over
+    /// the horizon, 3 transient block squeezes, and 2 deadline storms
+    /// over id ranges. Deterministic given `(seed, requests, horizon,
+    /// blocks)` — no wall clock anywhere.
+    pub fn generate(seed: u64, requests: usize, horizon: usize, blocks: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17_BEEF);
+        let horizon = horizon.max(4);
+        let requests = requests.max(1);
+        let cancels = (0..requests.div_ceil(8))
+            .map(|_| (rng.below(horizon), rng.below(requests)))
+            .collect();
+        let squeezes = (0..3)
+            .map(|_| {
+                (rng.below(horizon), 1 + rng.below(blocks.max(1)), 1 + rng.below(horizon / 2 + 1))
+            })
+            .collect();
+        let storms = (0..2)
+            .map(|_| {
+                let lo = rng.below(requests);
+                let span = rng.below(requests - lo).min(requests / 4 + 1);
+                (lo, lo + span, 4 + rng.below(horizon))
+            })
+            .collect();
+        FaultPlan { cancels, squeezes, storms }
+    }
+
+    /// Stamp the storm deadlines onto a workload (before submission).
+    pub fn apply_deadlines(&self, reqs: &mut [Request]) {
+        for &(lo, hi, d) in &self.storms {
+            for r in reqs.iter_mut().filter(|r| r.id >= lo && r.id <= hi) {
+                r.deadline_steps = d;
+            }
+        }
+    }
+
+    /// Squeeze target active at `tick` (max over overlapping windows;
+    /// 0 = no squeeze).
+    pub fn squeeze_at(&self, tick: usize) -> usize {
+        self.squeezes
+            .iter()
+            .filter(|&&(start, _, dur)| tick >= start && tick < start + dur)
+            .map(|&(_, withheld, _)| withheld)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Last tick at which any plan event can still change scheduler
+    /// state: the final cancel, or the tick a squeeze window releases.
+    /// The run loop's no-progress watchdog stays quiet through this
+    /// horizon — a squeezed pool is a future wake event, not a stall.
+    pub fn horizon(&self) -> usize {
+        let c = self.cancels.iter().map(|&(t, _)| t).max().unwrap_or(0);
+        let s = self.squeezes.iter().map(|&(t, _, d)| t + d).max().unwrap_or(0);
+        c.max(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_plans_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::generate(7, 100, 200, 24);
+        let b = FaultPlan::generate(7, 100, 200, 24);
+        let c = FaultPlan::generate(8, 100, 200, 24);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.cancels.len(), 13);
+        assert_eq!(a.squeezes.len(), 3);
+        assert_eq!(a.storms.len(), 2);
+        assert!(a.cancels.iter().all(|&(t, id)| t < 200 && id < 100));
+        assert!(a.squeezes.iter().all(|&(_, w, d)| w >= 1 && w <= 24 && d >= 1));
+        assert!(a.storms.iter().all(|&(lo, hi, d)| lo <= hi && hi < 100 + 26 && d >= 4));
+    }
+
+    #[test]
+    fn squeeze_windows_overlap_by_max_and_release() {
+        let plan = FaultPlan {
+            cancels: vec![(9, 1)],
+            squeezes: vec![(2, 3, 4), (4, 5, 2)],
+            storms: Vec::new(),
+        };
+        assert_eq!(plan.squeeze_at(1), 0);
+        assert_eq!(plan.squeeze_at(2), 3);
+        assert_eq!(plan.squeeze_at(4), 5, "overlap takes the max");
+        assert_eq!(plan.squeeze_at(5), 5);
+        assert_eq!(plan.squeeze_at(6), 0, "window released");
+        assert_eq!(plan.horizon(), 9, "last cancel past the last release");
+    }
+
+    #[test]
+    fn storms_stamp_inclusive_id_ranges() {
+        let plan = FaultPlan {
+            cancels: Vec::new(),
+            squeezes: Vec::new(),
+            storms: vec![(1, 2, 30)],
+        };
+        let mut reqs: Vec<Request> = (0..4)
+            .map(|id| Request {
+                id,
+                prompt: vec![1],
+                max_new_tokens: 1,
+                temperature: 0.0,
+                seed: 0,
+                arrival_step: 0,
+                class: 0,
+                deadline_steps: 0,
+            })
+            .collect();
+        plan.apply_deadlines(&mut reqs);
+        let got: Vec<usize> = reqs.iter().map(|r| r.deadline_steps).collect();
+        assert_eq!(got, vec![0, 30, 30, 0]);
+    }
+}

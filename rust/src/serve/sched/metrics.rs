@@ -87,6 +87,20 @@ pub struct ServeMetrics {
     pub prefill_chunk: usize,
     /// Attention read path ("flash" | "fused" | "gather").
     pub attn_kind: String,
+    /// Requests that reached the `Cancelled` terminal state.
+    pub cancelled: usize,
+    /// Requests shed at submit because the queue was at `queue_cap`.
+    pub shed: usize,
+    /// Requests that blew their `deadline_steps` budget (queued or
+    /// running) and were dropped with partial output.
+    pub deadline_exceeded: usize,
+    /// Requests refused at submit by shape validation.
+    pub rejected: usize,
+    /// Preempt-and-requeue evictions under block pressure (a request may
+    /// count more than once).
+    pub preempted: usize,
+    /// Re-admissions of previously preempted requests.
+    pub resumed: usize,
 }
 
 impl ServeMetrics {
@@ -145,6 +159,12 @@ impl ServeMetrics {
             threads: self.threads,
             prefill_chunk: self.prefill_chunk,
             attn_kind: self.attn_kind.clone(),
+            cancelled: self.cancelled,
+            shed: self.shed,
+            deadline_exceeded: self.deadline_exceeded,
+            rejected: self.rejected,
+            preempted: self.preempted,
+            resumed: self.resumed,
         }
     }
 }
@@ -201,6 +221,18 @@ pub struct ServeSummary {
     pub prefill_chunk: usize,
     /// Attention read path ("flash" | "fused" | "gather").
     pub attn_kind: String,
+    /// Requests cancelled (queued or mid-decode).
+    pub cancelled: usize,
+    /// Requests shed at submit (`queue_cap` back-pressure).
+    pub shed: usize,
+    /// Requests dropped after exceeding `deadline_steps`.
+    pub deadline_exceeded: usize,
+    /// Requests refused at submit by shape validation.
+    pub rejected: usize,
+    /// Preempt-and-requeue evictions (a request may count twice).
+    pub preempted: usize,
+    /// Re-admissions of previously preempted requests.
+    pub resumed: usize,
 }
 
 impl ServeSummary {
@@ -242,6 +274,12 @@ impl ServeSummary {
         m.insert("threads".to_string(), Json::Num(self.threads as f64));
         m.insert("prefill_chunk".to_string(), Json::Num(self.prefill_chunk as f64));
         m.insert("attn_kind".to_string(), Json::Str(self.attn_kind.clone()));
+        m.insert("cancelled".to_string(), Json::Num(self.cancelled as f64));
+        m.insert("shed".to_string(), Json::Num(self.shed as f64));
+        m.insert("deadline_exceeded".to_string(), Json::Num(self.deadline_exceeded as f64));
+        m.insert("rejected".to_string(), Json::Num(self.rejected as f64));
+        m.insert("preempted".to_string(), Json::Num(self.preempted as f64));
+        m.insert("resumed".to_string(), Json::Num(self.resumed as f64));
         Json::Obj(m)
     }
 }
@@ -293,7 +331,7 @@ impl std::fmt::Display for ServeSummary {
             self.threads,
             fmt_bytes(self.peak_running_bytes)
         )?;
-        write!(
+        writeln!(
             f,
             "kv {}: arena {}, {} B/token, {}-token blocks, peak {} blocks; \
              prefill chunk {} tokens/tick",
@@ -303,6 +341,17 @@ impl std::fmt::Display for ServeSummary {
             self.kv_block_tokens,
             self.peak_kv_blocks,
             self.prefill_chunk
+        )?;
+        write!(
+            f,
+            "lifecycle: {} cancelled, {} deadline_exceeded, {} shed, {} rejected; \
+             {} preempted, {} resumed",
+            self.cancelled,
+            self.deadline_exceeded,
+            self.shed,
+            self.rejected,
+            self.preempted,
+            self.resumed
         )
     }
 }
@@ -363,6 +412,12 @@ mod tests {
             threads: 4,
             prefill_chunk: 24,
             attn_kind: "fused".into(),
+            cancelled: 2,
+            shed: 3,
+            deadline_exceeded: 1,
+            rejected: 4,
+            preempted: 5,
+            resumed: 5,
         };
         let s = m.summary();
         assert_eq!(s.requests, 2);
@@ -398,6 +453,12 @@ mod tests {
         assert!((j.get("attn_share").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-6);
         assert!((j.get("queue_wait_p90_ms").unwrap().as_f64().unwrap() - 3.6).abs() < 1e-6);
         assert_eq!(j.get("attn_kind").unwrap().as_str().unwrap(), "fused");
+        assert_eq!(j.get("cancelled").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("shed").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("deadline_exceeded").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("rejected").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("preempted").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(j.get("resumed").unwrap().as_usize().unwrap(), 5);
         let text = format!("{s}");
         assert!(text.contains("decode 8.0 tok/s"), "{text}");
         assert!(text.contains("kv paged-q8"), "{text}");
@@ -406,6 +467,11 @@ mod tests {
         assert!(text.contains("fused attention"), "{text}");
         assert!(text.contains("attn share 25%"), "{text}");
         assert!(text.contains("queue wait p50 2.0 / p90 3.6 ms"), "{text}");
+        assert!(
+            text.contains("lifecycle: 2 cancelled, 1 deadline_exceeded, 3 shed, 4 rejected"),
+            "{text}"
+        );
+        assert!(text.contains("5 preempted, 5 resumed"), "{text}");
     }
 
     #[test]

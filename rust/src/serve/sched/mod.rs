@@ -9,80 +9,143 @@
 //! cannot absorb new requests mid-flight.
 //!
 //! This module is the serving subsystem that fixes both, in the style of
-//! production engines (vLLM / mistral.rs). Request lifecycle:
+//! production engines (vLLM / mistral.rs). The request lifecycle is a
+//! full state machine: every submitted request ends in **exactly one**
+//! terminal state ([`TerminalState`], recorded once per request in the
+//! scheduler's ledger):
 //!
-//! **admission → chunked prefill → decode → retire**
+//! **admission → chunked prefill → decode →
+//! {`Finished` | `Cancelled` | `DeadlineExceeded`}**, with `Shed` and
+//! `Rejected` decided at submit time and **preempt → requeue** as the
+//! one non-terminal detour (back to admission, KV rebuilt on resume).
 //!
+//! * **submit** — invalid requests (empty prompt, zero token budget,
+//!   oversize, duplicate id) are `Rejected`; when the admission queue is
+//!   at [`SchedConfig::queue_cap`] the request is `Shed` instead of
+//!   growing memory without bound — overload degrades by policy. Both
+//!   are recorded in the ledger and the summary counters; a shed or
+//!   rejected id may be resubmitted later (the retry supersedes the
+//!   provisional ledger entry).
 //! * **admission** — requests sit in an arrival-ordered queue
-//!   ([`Scheduler::submit`]); each scheduler tick admits every visible
-//!   request (its `arrival_step` has passed) for which the [`KvPool`] can
-//!   reserve capacity: a free slot under the slab backend, a free handle
-//!   *plus enough free blocks* under the paged backends
-//!   ([`KvPool::can_admit`]). When blocks are exhausted the request stays
-//!   queued — back-pressure, never a panic — until retiring sequences
-//!   return blocks. The pool preallocates one arena whatever the backend,
-//!   so running memory stays a single constant slab (Table 3 'RM'), and
-//!   the `paged-q8` backend shrinks it ~3.6x (see [`pool`]). Admission
-//!   only leases the slot; no forward work happens at admit time.
-//! * **chunked prefill** — an admitted request carries a *prefill cursor*.
-//!   Each tick advances at most [`SchedConfig::prefill_chunk`] prompt
-//!   tokens (a shared per-tick budget, FCFS across prefilling requests;
-//!   0 = unchunked, i.e. a slot-capacity budget), stacked **into the same batched
+//!   ([`Scheduler::submit`]); each tick admits visible requests (their
+//!   `arrival_step` has passed) in (priority class, arrival, submit)
+//!   order, for which the [`KvPool`] can reserve capacity: a free slot
+//!   under the slab backend, a free handle *plus enough free blocks*
+//!   under the paged backends ([`KvPool::can_admit`]). When capacity is
+//!   short the best candidate may **preempt-and-requeue** running
+//!   sequences of strictly lower priority (worst class first, then
+//!   latest admit): the victim's blocks return to the pool and it
+//!   re-enters the queue carrying its emitted tokens and RNG state.
+//!   Otherwise the candidate stays queued — back-pressure, never a
+//!   panic — until retiring sequences return blocks. The pool
+//!   preallocates one arena whatever the backend, so running memory
+//!   stays a single constant slab (Table 3 'RM'), and the `paged-q8`
+//!   backend shrinks it ~3.6x (see [`pool`]). Admission only leases the
+//!   slot; no forward work happens at admit time.
+//! * **chunked prefill** — an admitted request carries a *prefill
+//!   cursor* over its feed: the prompt, or — on resume after preemption —
+//!   the prompt plus all but the last emitted token. Each tick advances
+//!   at most [`SchedConfig::prefill_chunk`] feed tokens (a shared
+//!   per-tick budget, FCFS across prefilling requests; 0 = unchunked,
+//!   i.e. a slot-capacity budget), stacked **into the same batched
 //!   forward as the decode rows** ([`Engine::forward_chunked`], causal
-//!   within the chunk): a chunk of C prompt tokens streams each weight
-//!   matrix once instead of C times, and decoding sequences keep emitting
-//!   every tick instead of stalling behind a long prompt — the
-//!   head-of-line fix. The first token is sampled only once the cursor
-//!   reaches the prompt end (that sample is the TTFT the metrics report).
-//! * **decode** — every sequence past its prompt contributes a one-token
+//!   within the chunk). The first token is sampled only once the cursor
+//!   reaches the prompt end (that sample is the TTFT the metrics
+//!   report); a resumed request samples nothing at the feed end — its
+//!   next token was already sampled before preemption — so the
+//!   continuation is bit-identical to a never-preempted run.
+//! * **decode** — every sequence past its feed contributes a one-token
 //!   run to the same tick batch: activations are stacked into a
 //!   `(width, d)` matrix and every packed weight matrix is streamed
-//!   **once per tick for the whole batch** through `PackedMatrix::gemm` /
-//!   `LinearStore::gemm`, instead of once per sequence — and both the
-//!   independent output lanes of every gemm and the independent
-//!   (row, head) items of the fused attention kernel (`serve::attn`:
-//!   K/V streamed block-table-direct off the store, Q8 dequantized in
-//!   registers, no per-step window materialization) are sharded across a
-//!   persistent worker pool ([`SchedConfig::threads`],
-//!   `util::ThreadPool`). Per-row, per-lane arithmetic is bit-identical
-//!   to the single-sequence `gemv` path at any thread count, any
-//!   `prefill_chunk` and either [`SchedConfig::attn`] read path, and
-//!   each request samples from its own seeded RNG stream — so a
-//!   request's output never depends on what else shares the batch, how
-//!   many cores served it, or how its prompt was chunked (tested in
-//!   `tests/sched.rs`). [`ServeMetrics`] records where each tick's wall
-//!   time went (`gemm_ms` / `attn_ms` / `sample_ms`).
-//! * **retire** — on EOS or `max_new_tokens` the slot is released back to
-//!   the pool, per-request metrics are recorded, and the next queued
-//!   request can be admitted on the following tick.
+//!   **once per tick for the whole batch**, with the gemm lanes and the
+//!   (row, head) attention items sharded across a persistent worker
+//!   pool ([`SchedConfig::threads`]). Per-row arithmetic is
+//!   bit-identical to the single-sequence path at any thread count, any
+//!   `prefill_chunk`, either [`SchedConfig::attn`] read path, and
+//!   across preempt/resume cycles — a request's output is a pure
+//!   function of (engine, prompt, temperature, seed), tested in
+//!   `tests/sched.rs`.
+//! * **terminal states** — on EOS or `max_new_tokens` the request is
+//!   `Finished` (slot released, metrics recorded). [`Scheduler::cancel`]
+//!   drops a queued request immediately and flags a running one to leave
+//!   at the start of the next tick, partial output preserved
+//!   (`Cancelled`). A request not terminal by `arrival_step +
+//!   deadline_steps` is expired queued or running (`DeadlineExceeded`),
+//!   partial output preserved. Every transition frees KV through the
+//!   same release path; [`Scheduler::audit_conservation`] proves zero
+//!   leaked slots/blocks after drain.
+//!
+//! [`Scheduler::run_with_faults`] drives the loop under a deterministic,
+//! step-indexed [`FaultPlan`] (cancels, transient free-block squeezes,
+//! deadline storms — see [`faults`]), and a no-progress watchdog bails
+//! with the stuck request ids and pool state instead of spinning.
 //!
 //! [`ServeMetrics`] collects queue wait (steps *and* wall-clock ms),
 //! TTFT, per-step latency percentiles (streaming log-bucket histograms —
-//! O(1) memory, live queries), decode tokens/s and peak running bytes,
-//! plus a per-request lifecycle record (arrival → admit → chunked
-//! prefill → first token → retire). With tracing on (`serve --trace`,
-//! see `util::trace`) the same milestones become Chrome-trace events:
-//! one span per tick plus its gemm/attn/sample phases, and `admit`,
-//! `prefill_chunk`, `first_token`, `retire` and `backpressure` instants
-//! carrying the request id. [`SchedConfig::stats_interval`] adds a
-//! periodic stderr heartbeat (live QPS, p90 step latency from the
-//! histograms, batch width, KV blocks in use).
-//! [`synthetic_workload`] generates the open-loop Poisson-ish arrival
-//! workloads used by `serve --continuous` and `serve::bench`.
+//! O(1) memory, live queries), decode tokens/s, peak running bytes and
+//! the terminal-state counters, plus a per-request lifecycle record for
+//! finished requests. With tracing on (`serve --trace`, see
+//! `util::trace`) the same milestones become Chrome-trace events: one
+//! span per tick plus its gemm/attn/sample phases, and `admit`,
+//! `prefill_chunk`, `first_token`, `retire`, `backpressure`, `cancel`,
+//! `deadline`, `preempt`, `resume` and `shed` instants carrying the
+//! request id. [`SchedConfig::stats_interval`] adds a periodic stderr
+//! heartbeat. [`synthetic_workload`] generates the open-loop
+//! Poisson-ish arrival workloads used by `serve --continuous` and
+//! `serve::bench`.
 
+pub mod faults;
 pub mod metrics;
 pub mod pool;
 
+pub use faults::FaultPlan;
 pub use metrics::{RequestMetrics, ServeMetrics, ServeSummary};
 pub use pool::{KvLayout, KvPool, KvStoreKind, SlotId};
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
 use super::{sample, AttnKind, BatchScratch, Engine, SeqChunk};
 use crate::util::{trace, Rng};
+
+/// The single terminal state every submitted request ends in. The
+/// scheduler records each request's terminal transition exactly once in
+/// its ledger ([`Scheduler::terminal_states`]) — a second transition for
+/// the same live request is a scheduler bug and panics.
+///
+/// `Shed` and `Rejected` are decided at submit time (the request never
+/// enters the queue); a later successful resubmission of the same id
+/// supersedes that provisional entry — sheds are explicitly retryable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TerminalState {
+    /// Retired normally: EOS or `max_new_tokens` reached.
+    Finished,
+    /// Dropped by [`Scheduler::cancel`]; partial output preserved.
+    Cancelled,
+    /// Expired past `arrival_step + deadline_steps` (queued or running);
+    /// partial output preserved.
+    DeadlineExceeded,
+    /// Refused at submit: the admission queue was at
+    /// [`SchedConfig::queue_cap`].
+    Shed,
+    /// Refused at submit: the request could never be served (empty
+    /// prompt, zero token budget, oversize, duplicate id).
+    Rejected,
+}
+
+impl TerminalState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TerminalState::Finished => "finished",
+            TerminalState::Cancelled => "cancelled",
+            TerminalState::DeadlineExceeded => "deadline_exceeded",
+            TerminalState::Shed => "shed",
+            TerminalState::Rejected => "rejected",
+        }
+    }
+}
 
 /// One generation request.
 #[derive(Clone, Debug)]
@@ -102,6 +165,16 @@ pub struct Request {
     /// Scheduler tick at which the request becomes visible (open-loop
     /// arrival; steps, not wall time, so runs are deterministic).
     pub arrival_step: usize,
+    /// Priority class: 0 is the highest. Admission is ordered by
+    /// (class, arrival, submit order), and under KV pressure a
+    /// higher-priority candidate preempts running sequences of strictly
+    /// lower priority (greater class).
+    pub class: u8,
+    /// Deadline in scheduler steps after `arrival_step` (0 = none). A
+    /// request not terminal by `arrival_step + deadline_steps` is
+    /// expired to [`TerminalState::DeadlineExceeded`] on the next tick,
+    /// queued or running; partial output is preserved.
+    pub deadline_steps: usize,
 }
 
 /// Scheduler knobs.
@@ -147,6 +220,11 @@ pub struct SchedConfig {
     /// blocks in use). 0 = off. Observability only — never changes a
     /// token.
     pub stats_interval: usize,
+    /// Bound on the admission queue: `submit` sheds (an error naming the
+    /// cap, terminal state [`TerminalState::Shed`]) while this many
+    /// requests are already queued, so sustained overload degrades by
+    /// policy instead of by memory growth. 0 = unbounded.
+    pub queue_cap: usize,
 }
 
 impl Default for SchedConfig {
@@ -161,6 +239,7 @@ impl Default for SchedConfig {
             prefill_chunk: 32,
             attn: AttnKind::Fused,
             stats_interval: 0,
+            queue_cap: 0,
         }
     }
 }
@@ -169,6 +248,24 @@ struct Pending {
     req: Request,
     /// Set when `arrival_step` first passes (wall-clock anchor for TTFT).
     visible: Option<Instant>,
+    /// Present when this entry is a preempted request waiting to resume.
+    resume: Option<ResumeState>,
+}
+
+/// Everything a preempted request needs to continue bit-identically: its
+/// emitted tokens (the last of which is re-fed, not re-sampled, on
+/// resume), the sampling RNG exactly where it stopped, and the metrics
+/// anchors of its first admission.
+struct ResumeState {
+    out: Vec<i32>,
+    rng: Rng,
+    admit_step: usize,
+    visible_at: Instant,
+    admit_at: Instant,
+    ttft_secs: f64,
+    prefill_secs: f64,
+    queue_wait_ms: f64,
+    prefill_chunks: usize,
 }
 
 struct Running {
@@ -176,14 +273,23 @@ struct Running {
     slot: SlotId,
     rng: Rng,
     out: Vec<i32>,
-    /// Prefill cursor: prompt tokens fed to the engine so far (== the
-    /// slot's KV length while `prefilled < prompt.len()`). The request is
-    /// in its chunked-prefill phase until the cursor reaches the prompt
-    /// end; only then is the first token sampled.
+    /// Tokens the prefill cursor feeds: the prompt, or — resuming after
+    /// preemption — the prompt plus all but the last emitted token (the
+    /// KV state a never-preempted run would hold at this point).
+    feed: Vec<i32>,
+    /// Prefill cursor: feed tokens fed to the engine so far (== the
+    /// slot's KV length while `prefilled < feed.len()`). The request is
+    /// in its (re-)prefill phase until the cursor reaches the feed end.
     prefilled: usize,
     /// Last sampled token, to feed on the next decode tick (None until
-    /// the prompt is fully prefilled and the first token sampled).
+    /// the feed is fully prefilled).
     next: Option<i32>,
+    /// Resume only: the already-sampled token to restore as `next` when
+    /// the cursor reaches the feed end — restored, never re-sampled, so
+    /// no logits row is consumed and the RNG stream stays aligned.
+    resume_next: Option<i32>,
+    /// Set by [`Scheduler::cancel`]; swept at the start of the next tick.
+    cancel: bool,
     admit_step: usize,
     /// Wall-clock anchors: when the request became visible (TTFT) and
     /// when it was admitted (prefill span).
@@ -206,6 +312,9 @@ pub struct Scheduler<'e> {
     pending: VecDeque<Pending>,
     running: Vec<Running>,
     finished: Vec<(usize, Vec<i32>)>,
+    /// The terminal-state ledger: exactly one entry per request id (see
+    /// [`TerminalState`] for the Shed/Rejected retry caveat).
+    terminal: BTreeMap<usize, TerminalState>,
     pub metrics: ServeMetrics,
     tick: usize,
     /// Effective per-tick prefill token budget (`cfg.prefill_chunk`
@@ -215,6 +324,9 @@ pub struct Scheduler<'e> {
     /// tick with live sequences advances at least one of them).
     submitted_work: usize,
     last_arrival: usize,
+    /// Did the last tick admit, advance, retire, preempt or expire
+    /// anything? The run-loop watchdog reads this.
+    progressed: bool,
     /// Wall-clock anchor of the first tick (heartbeat QPS denominator).
     started: Option<Instant>,
 }
@@ -280,11 +392,13 @@ impl<'e> Scheduler<'e> {
             pending: VecDeque::new(),
             running: Vec::new(),
             finished: Vec::new(),
+            terminal: BTreeMap::new(),
             metrics,
             tick: 0,
             prefill_chunk,
             submitted_work: 0,
             last_arrival: 0,
+            progressed: false,
             started: None,
         }
     }
@@ -292,21 +406,58 @@ impl<'e> Scheduler<'e> {
     /// Queue a request. Requests may be submitted in any order; the queue
     /// is kept sorted by arrival step (FIFO within a step).
     ///
-    /// Invalid requests are rejected here, with an error, instead of
-    /// poisoning the loop later:
-    /// * an **empty prompt** has no logits to sample a first token from
-    ///   (it would otherwise read whatever the scratch's logits buffer
-    ///   held from a *previous* forward — another request's output);
-    /// * **`max_new_tokens == 0`** is rejected rather than honored: the
-    ///   scheduler's contract is that every admitted request emits at
-    ///   least its first (TTFT) token, so a request that may emit nothing
-    ///   is a caller bug;
+    /// Requests that can never be served are **`Rejected`** here, with an
+    /// error, instead of poisoning the loop later:
+    /// * an **empty prompt** has no logits to sample a first token from;
+    /// * **`max_new_tokens == 0`** is rejected rather than honored: every
+    ///   admitted request emits at least its first (TTFT) token;
     /// * a request whose **`prompt + max_new_tokens` exceeds the
-    ///   per-sequence KV capacity** (`slot_tokens`, the most any single
-    ///   sequence can reserve under every backend) could never satisfy
-    ///   [`KvPool::can_admit`] and would wedge the FCFS queue head
-    ///   forever — a silent livelock; the error names the capacity.
+    ///   per-sequence KV capacity** (`slot_tokens`) could never satisfy
+    ///   [`KvPool::can_admit`] and would wedge the queue head forever;
+    /// * a **duplicate id** would break the one-terminal-state-per-request
+    ///   ledger (an id that was shed or rejected may retry; an id that is
+    ///   live or already finished may not).
+    ///
+    /// When [`SchedConfig::queue_cap`] requests are already queued the
+    /// request is **`Shed`** — the error names the cap, and the id may be
+    /// resubmitted once the queue drains.
     pub fn submit(&mut self, req: Request) -> Result<()> {
+        if let Err(e) = self.validate(&req) {
+            self.metrics.rejected += 1;
+            // misuse naming a *live* id never touches the ledger — the
+            // live request owns its single terminal state
+            if !self.is_live(req.id) {
+                self.terminal.entry(req.id).or_insert(TerminalState::Rejected);
+            }
+            return Err(e);
+        }
+        if self.cfg.queue_cap > 0 && self.pending.len() >= self.cfg.queue_cap {
+            self.metrics.shed += 1;
+            self.terminal.entry(req.id).or_insert(TerminalState::Shed);
+            trace::instant("shed", req.id as u64);
+            bail!(
+                "request {}: shed — admission queue is at queue_cap {} \
+                 (resubmit after the queue drains, or raise --queue-cap / \
+                 [serve] queue_cap; 0 = unbounded)",
+                req.id,
+                self.cfg.queue_cap
+            );
+        }
+        // a previously shed/rejected id is retrying: the successful
+        // resubmission supersedes the provisional ledger entry
+        self.terminal.remove(&req.id);
+        self.submitted_work += req.prompt.len() + req.max_new_tokens;
+        self.last_arrival = self.last_arrival.max(req.arrival_step);
+        let pos = self
+            .pending
+            .iter()
+            .position(|p| p.req.arrival_step > req.arrival_step)
+            .unwrap_or(self.pending.len());
+        self.pending.insert(pos, Pending { req, visible: None, resume: None });
+        Ok(())
+    }
+
+    fn validate(&self, req: &Request) -> Result<()> {
         ensure!(!req.prompt.is_empty(), "request {}: empty prompt", req.id);
         ensure!(req.max_new_tokens > 0, "request {}: max_new_tokens == 0", req.id);
         ensure!(
@@ -318,15 +469,43 @@ impl<'e> Scheduler<'e> {
             req.max_new_tokens,
             self.cfg.slot_tokens
         );
-        self.submitted_work += req.prompt.len() + req.max_new_tokens;
-        self.last_arrival = self.last_arrival.max(req.arrival_step);
-        let pos = self
-            .pending
-            .iter()
-            .position(|p| p.req.arrival_step > req.arrival_step)
-            .unwrap_or(self.pending.len());
-        self.pending.insert(pos, Pending { req, visible: None });
+        ensure!(!self.is_live(req.id), "request {}: id is already pending or running", req.id);
+        if let Some(st) = self.terminal.get(&req.id) {
+            ensure!(
+                matches!(st, TerminalState::Shed | TerminalState::Rejected),
+                "request {}: id already reached terminal state {}",
+                req.id,
+                st.name()
+            );
+        }
         Ok(())
+    }
+
+    fn is_live(&self, id: usize) -> bool {
+        self.pending.iter().any(|p| p.req.id == id) || self.running.iter().any(|r| r.req.id == id)
+    }
+
+    /// First-class cancel. A queued request is dropped immediately; a
+    /// running request is flagged and leaves at the start of the next
+    /// tick (its KV blocks return to the pool then), with whatever it
+    /// already emitted preserved in [`Scheduler::outputs`]. Returns
+    /// `false` when the id is unknown, already terminal, or already
+    /// flagged — cancel is idempotent.
+    pub fn cancel(&mut self, id: usize) -> bool {
+        if let Some(pos) = self.pending.iter().position(|p| p.req.id == id) {
+            let p = self.pending.remove(pos).expect("position is in range");
+            let out = p.resume.map(|r| r.out).unwrap_or_default();
+            self.record_terminal(id, TerminalState::Cancelled);
+            trace::instant("cancel", id as u64);
+            self.finished.push((id, out));
+            return true;
+        }
+        if let Some(r) = self.running.iter_mut().find(|r| r.req.id == id) {
+            let fresh = !r.cancel;
+            r.cancel = true;
+            return fresh;
+        }
+        false
     }
 
     pub fn done(&self) -> bool {
@@ -337,7 +516,17 @@ impl<'e> Scheduler<'e> {
         &self.pool
     }
 
-    /// (request id, emitted tokens) in retire order.
+    /// Fault-harness hook: withhold up to `target` free blocks (slab:
+    /// slots) from admission, returning how many are actually withheld;
+    /// 0 releases the squeeze. See [`KvPool::set_squeeze`].
+    pub fn inject_squeeze(&mut self, target: usize) -> usize {
+        self.pool.set_squeeze(target)
+    }
+
+    /// (request id, emitted tokens) in terminal order, for every request
+    /// that reached `Finished`, `Cancelled` or `DeadlineExceeded` (the
+    /// latter two may carry partial — possibly empty — output). Shed and
+    /// rejected requests never appear: they never entered the queue.
     pub fn outputs(&self) -> &[(usize, Vec<i32>)] {
         &self.finished
     }
@@ -346,13 +535,47 @@ impl<'e> Scheduler<'e> {
         self.finished.iter().find(|(i, _)| *i == id).map(|(_, v)| v.as_slice())
     }
 
-    /// One scheduler tick: admit every visible request that fits, then one
-    /// batched forward over all live sequences — decode rows and prefill
-    /// chunks stacked into the same weight walk.
+    /// The terminal-state ledger: every submitted request's single
+    /// terminal state, keyed by request id.
+    pub fn terminal_states(&self) -> &BTreeMap<usize, TerminalState> {
+        &self.terminal
+    }
+
+    pub fn terminal(&self, id: usize) -> Option<TerminalState> {
+        self.terminal.get(&id).copied()
+    }
+
+    /// Record a terminal transition in the ledger — exactly once per
+    /// request — and bump its summary counter.
+    fn record_terminal(&mut self, id: usize, state: TerminalState) {
+        match state {
+            TerminalState::Finished => {}
+            TerminalState::Cancelled => self.metrics.cancelled += 1,
+            TerminalState::DeadlineExceeded => self.metrics.deadline_exceeded += 1,
+            TerminalState::Shed => self.metrics.shed += 1,
+            TerminalState::Rejected => self.metrics.rejected += 1,
+        }
+        let prev = self.terminal.insert(id, state);
+        assert!(
+            prev.is_none(),
+            "request {id} reached a second terminal state {} (was {})",
+            state.name(),
+            prev.map(|s| s.name()).unwrap_or("?")
+        );
+    }
+
+    /// One scheduler tick: sweep deferred cancels and expired deadlines,
+    /// admit every visible request that fits (preempting lower-priority
+    /// runners under KV pressure), then one batched forward over all live
+    /// sequences — decode rows and prefill chunks stacked into the same
+    /// weight walk.
     pub fn step(&mut self) {
         if self.started.is_none() {
             self.started = Some(Instant::now());
         }
+        self.progressed = false;
+        self.sweep_cancelled();
+        self.sweep_deadlines();
         self.admit();
         self.forward();
         self.tick += 1;
@@ -386,13 +609,31 @@ impl<'e> Scheduler<'e> {
     }
 
     /// Drive to completion; errors out (rather than spinning) if progress
-    /// stalls.
+    /// stalls. Equivalent to [`Scheduler::run_with_faults`] with no plan.
     pub fn run(&mut self) -> Result<ServeSummary> {
+        self.run_with_faults(None)
+    }
+
+    /// Drive to completion under an optional deterministic [`FaultPlan`]:
+    /// before each tick the plan's cancels for that tick are applied and
+    /// the pool's free-block squeeze is set to the plan's target. After
+    /// drain the squeeze is released and [`Scheduler::audit_conservation`]
+    /// runs — a leaked slot or block fails the run. Two watchdogs replace
+    /// blind spinning: a tick that admits nothing, advances nothing and
+    /// retires nothing while no future wake event (arrival, deadline
+    /// expiry, fault event) exists bails immediately with the stuck
+    /// request ids and pool state, and a slack hard bound on total ticks
+    /// backstops pathological preemption churn.
+    pub fn run_with_faults(&mut self, plan: Option<&FaultPlan>) -> Result<ServeSummary> {
         let t0 = Instant::now();
-        // every tick with live sequences advances >= 1 prompt token or
-        // emits >= 1 token, every idle tick moves the clock toward the
-        // next arrival, so this bound is slack
-        let max_ticks = self.last_arrival + self.submitted_work + self.pending.len() + 16;
+        let horizon = plan.map(|p| p.horizon()).unwrap_or(0);
+        // every productive tick advances >= 1 feed token, emits >= 1
+        // token or performs a lifecycle transition; idle ticks only move
+        // the clock toward the next arrival / deadline / fault event.
+        // Preemption re-prefills work, so the bound is scaled generously —
+        // the watchdog below catches real stalls long before it.
+        let max_ticks =
+            (self.last_arrival + horizon + self.submitted_work + self.pending.len() + 16) * 8;
         while !self.done() {
             if self.tick > max_ticks {
                 bail!(
@@ -402,52 +643,271 @@ impl<'e> Scheduler<'e> {
                     self.running.len()
                 );
             }
+            if let Some(pl) = plan {
+                for &(t, id) in &pl.cancels {
+                    if t == self.tick {
+                        self.cancel(id);
+                    }
+                }
+                self.pool.set_squeeze(pl.squeeze_at(self.tick));
+            }
             self.step();
+            if !self.progressed && !self.done() && !self.wake_ahead(horizon) {
+                bail!("{}", self.stall_diagnostic());
+            }
         }
+        self.pool.set_squeeze(0);
+        self.audit_conservation()?;
         self.metrics.total_secs += t0.elapsed().as_secs_f64();
         Ok(self.metrics.summary())
+    }
+
+    /// Is any future event guaranteed to change the schedulable state? A
+    /// pending arrival still ahead, a live deadline that will expire, or
+    /// a fault-plan event (cancel / squeeze change) at or beyond the
+    /// current tick.
+    fn wake_ahead(&self, fault_horizon: usize) -> bool {
+        if fault_horizon >= self.tick {
+            return true;
+        }
+        if self.pending.iter().any(|p| p.req.arrival_step >= self.tick) {
+            return true;
+        }
+        let live_deadline = |req: &Request| {
+            req.deadline_steps > 0 && req.arrival_step + req.deadline_steps >= self.tick
+        };
+        self.pending
+            .iter()
+            .map(|p| &p.req)
+            .chain(self.running.iter().map(|r| &r.req))
+            .any(live_deadline)
+    }
+
+    /// No-progress watchdog report: the stuck request ids and the pool
+    /// state that explains why nothing could move.
+    fn stall_diagnostic(&self) -> String {
+        let pend: Vec<String> = self.pending.iter().map(|p| p.req.id.to_string()).collect();
+        let run: Vec<String> = self.running.iter().map(|r| r.req.id.to_string()).collect();
+        format!(
+            "scheduler made no progress at tick {} with no future wake event \
+             (stuck request ids: pending [{}], running [{}]; pool: {}/{} slots free, \
+             {}/{} blocks free, {} squeezed)",
+            self.tick,
+            pend.join(", "),
+            run.join(", "),
+            self.pool.free_slots(),
+            self.pool.n_slots(),
+            self.pool.free_blocks(),
+            self.pool.n_blocks(),
+            self.pool.squeezed(),
+        )
+    }
+
+    /// KV conservation audit: every slot and block is either free,
+    /// squeezed by the fault harness, or held by a currently-leased
+    /// sequence — nothing has leaked; and once drained, nothing may
+    /// still be leased. [`Scheduler::run_with_faults`] calls this after
+    /// drain; fault-harness tests also call it directly.
+    pub fn audit_conservation(&self) -> Result<()> {
+        let p = &self.pool;
+        ensure!(
+            p.leaked_slots() == 0 && p.leaked_blocks() == 0,
+            "kv conservation violated: {} leaked slots, {} leaked blocks \
+             ({} slots free, {} blocks free, {} squeezed)",
+            p.leaked_slots(),
+            p.leaked_blocks(),
+            p.free_slots(),
+            p.free_blocks(),
+            p.squeezed()
+        );
+        if self.running.is_empty() {
+            ensure!(
+                p.leased_slots() == 0,
+                "kv conservation violated: {} slots still leased after drain",
+                p.leased_slots()
+            );
+        }
+        Ok(())
     }
 
     /// Worst-case cached positions a request reserves: the whole prompt
     /// plus every token it may decode (the last sampled token is never
     /// fed back, so this over-reserves by one — the same slack the slab
-    /// slot check always had).
+    /// slot check always had). Resumes reserve the same: their feed plus
+    /// remaining decode is always `prompt + max_new - 1` tokens.
     fn need_tokens(req: &Request) -> usize {
         req.prompt.len() + req.max_new_tokens
     }
 
+    /// Apply deferred cancels: a running request flagged by
+    /// [`Scheduler::cancel`] leaves at the start of the next tick — its
+    /// slot and blocks return to the pool and whatever it emitted is
+    /// preserved in [`Scheduler::outputs`].
+    fn sweep_cancelled(&mut self) {
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].cancel {
+                let r = self.running.remove(i);
+                self.pool.release(r.slot);
+                self.record_terminal(r.req.id, TerminalState::Cancelled);
+                trace::instant("cancel", r.req.id as u64);
+                self.finished.push((r.req.id, r.out));
+                self.progressed = true;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Expire requests past their deadline (`arrival_step +
+    /// deadline_steps`; 0 = none): queued requests are dropped before
+    /// admission can waste KV on them, running requests release their
+    /// slot with partial output preserved. Enforced every tick, so an
+    /// expiry is observed deterministically — both sides of the
+    /// comparison are step counts, never wall time.
+    fn sweep_deadlines(&mut self) {
+        let tick = self.tick;
+        let expired =
+            |req: &Request| req.deadline_steps > 0 && tick > req.arrival_step + req.deadline_steps;
+        let mut i = 0;
+        while i < self.pending.len() {
+            if expired(&self.pending[i].req) {
+                let p = self.pending.remove(i).expect("index is in range");
+                let out = p.resume.map(|r| r.out).unwrap_or_default();
+                self.record_terminal(p.req.id, TerminalState::DeadlineExceeded);
+                trace::instant("deadline", p.req.id as u64);
+                self.finished.push((p.req.id, out));
+                self.progressed = true;
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.running.len() {
+            if expired(&self.running[i].req) {
+                let r = self.running.remove(i);
+                self.pool.release(r.slot);
+                self.record_terminal(r.req.id, TerminalState::DeadlineExceeded);
+                trace::instant("deadline", r.req.id as u64);
+                self.finished.push((r.req.id, r.out));
+                self.progressed = true;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Priority admission. The queue is arrival-sorted and stable, so the
+    /// first visible entry with the minimum class is the head in (class,
+    /// arrival, submit) order. Admission is strictly head-blocking within
+    /// that order: a blocked best candidate is never skipped for a
+    /// worse-class request behind it (no starvation of large high-priority
+    /// prompts) — it preempts strictly-lower-priority runners when that
+    /// frees enough capacity, and otherwise waits (back-pressure, never a
+    /// panic) until retiring sequences return blocks.
     fn admit(&mut self) {
         for p in self.pending.iter_mut() {
             if p.visible.is_none() && p.req.arrival_step <= self.tick {
                 p.visible = Some(Instant::now());
             }
         }
-        // FIFO with back-pressure: when the head request's blocks don't
-        // fit (pool saturated, or block exhaustion under the paged
-        // backends) it stays queued until retiring sequences free capacity
-        while self
-            .pending
-            .front()
-            .is_some_and(|p| p.visible.is_some() && self.pool.can_admit(Self::need_tokens(&p.req)))
-        {
-            let p = self.pending.pop_front().unwrap();
-            self.start(p);
-        }
-        // back-pressure is a lifecycle event too: mark every tick the
-        // queue head sits blocked on KV capacity
-        if trace::enabled() {
-            if let Some(p) = self.pending.front() {
-                if p.visible.is_some() && !self.pool.can_admit(Self::need_tokens(&p.req)) {
-                    trace::instant("backpressure", p.req.id as u64);
+        loop {
+            let Some(ci) = self
+                .pending
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.visible.is_some())
+                .min_by_key(|(i, p)| (p.req.class, *i))
+                .map(|(i, _)| i)
+            else {
+                break;
+            };
+            let need = Self::need_tokens(&self.pending[ci].req);
+            let class = self.pending[ci].req.class;
+            if !self.pool.can_admit(need) && !self.preempt_for(need, class) {
+                // back-pressure is a lifecycle event too: mark every tick
+                // the best candidate sits blocked on KV capacity
+                if trace::enabled() {
+                    trace::instant("backpressure", self.pending[ci].req.id as u64);
                 }
+                break;
             }
+            let p = self.pending.remove(ci).expect("candidate index is in range");
+            self.start(p);
         }
     }
 
+    /// Preempt-and-requeue: free capacity for a `class`-priority
+    /// candidate by evicting strictly lower-priority (greater class)
+    /// running sequences — worst class first, then latest admit. Only
+    /// fires when evicting eligible victims can actually admit the
+    /// candidate (otherwise victims would lose their KV for nothing),
+    /// and victims are always strictly worse, so a resumed victim can
+    /// never preempt its preemptor — no thrash cycles.
+    fn preempt_for(&mut self, need: usize, class: u8) -> bool {
+        let mut slots = self.pool.free_slots();
+        let mut blocks = self.pool.free_blocks();
+        for r in self.running.iter().filter(|r| r.req.class > class) {
+            slots += 1;
+            blocks += self.pool.slot_blocks(r.slot);
+        }
+        if slots == 0 || need.div_ceil(self.pool.block_tokens()) > blocks {
+            return false;
+        }
+        while !self.pool.can_admit(need) {
+            let victim = self
+                .running
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.req.class > class)
+                .max_by_key(|(i, r)| (r.req.class, r.admit_step, *i))
+                .map(|(i, _)| i);
+            match victim {
+                Some(v) => self.preempt(v),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Evict one running sequence: release its KV, count the preemption,
+    /// and requeue it (still visible, still at its arrival position) with
+    /// the state a resume needs — emitted tokens, sampling RNG, metrics
+    /// anchors. Its KV is rebuilt through the chunked-prefill cursor on
+    /// re-admission, bit-identically (see [`Scheduler::start`]).
+    fn preempt(&mut self, idx: usize) {
+        let r = self.running.remove(idx);
+        self.pool.release(r.slot);
+        self.metrics.preempted += 1;
+        trace::instant("preempt", r.req.id as u64);
+        let resume = ResumeState {
+            out: r.out,
+            rng: r.rng,
+            admit_step: r.admit_step,
+            visible_at: r.visible_at,
+            admit_at: r.admit_at,
+            ttft_secs: r.ttft_secs,
+            prefill_secs: r.prefill_secs,
+            queue_wait_ms: r.queue_wait_ms,
+            prefill_chunks: r.prefill_chunks,
+        };
+        let pos = self
+            .pending
+            .iter()
+            .position(|p| p.req.arrival_step > r.req.arrival_step)
+            .unwrap_or(self.pending.len());
+        self.pending
+            .insert(pos, Pending { visible: Some(r.visible_at), resume: Some(resume), req: r.req });
+    }
+
     /// Admit a request: lease its KV capacity and enter the chunked
-    /// prefill phase with the cursor at 0. No forward work happens here —
-    /// the prompt is advanced chunk by chunk inside the regular tick
-    /// batches, so co-scheduled decoders never stall behind it.
+    /// (re-)prefill phase with the cursor at 0. No forward work happens
+    /// here — the feed is advanced chunk by chunk inside the regular tick
+    /// batches, so co-scheduled decoders never stall behind it. A fresh
+    /// request feeds its prompt; a resumed request feeds the prompt plus
+    /// all but the last emitted token and restores that token as `next`
+    /// without sampling, so the continuation is bit-identical to a
+    /// never-preempted run.
     fn start(&mut self, p: Pending) {
         let visible_at = p.visible.expect("admit only starts visible requests");
         let req = p.req;
@@ -456,27 +916,61 @@ impl<'e> Scheduler<'e> {
             .lease(Self::need_tokens(&req))
             .expect("admit checked the pool can host this request");
         let admit_at = Instant::now();
-        trace::instant("admit", req.id as u64);
-        self.running.push(Running {
-            slot,
-            rng: Rng::new(req.seed),
-            out: Vec::new(),
-            prefilled: 0,
-            next: None,
-            admit_step: self.tick,
-            visible_at,
-            admit_at,
-            ttft_secs: 0.0,
-            prefill_secs: 0.0,
-            queue_wait_ms: admit_at.saturating_duration_since(visible_at).as_secs_f64() * 1e3,
-            prefill_chunks: 0,
-            req,
-        });
+        match p.resume {
+            None => {
+                trace::instant("admit", req.id as u64);
+                self.running.push(Running {
+                    slot,
+                    rng: Rng::new(req.seed),
+                    out: Vec::new(),
+                    feed: req.prompt.clone(),
+                    prefilled: 0,
+                    next: None,
+                    resume_next: None,
+                    cancel: false,
+                    admit_step: self.tick,
+                    visible_at,
+                    admit_at,
+                    ttft_secs: 0.0,
+                    prefill_secs: 0.0,
+                    queue_wait_ms: admit_at.saturating_duration_since(visible_at).as_secs_f64()
+                        * 1e3,
+                    prefill_chunks: 0,
+                    req,
+                });
+            }
+            Some(res) => {
+                self.metrics.resumed += 1;
+                trace::instant("resume", req.id as u64);
+                let k = res.out.len();
+                let mut feed = req.prompt.clone();
+                feed.extend_from_slice(&res.out[..k.saturating_sub(1)]);
+                self.running.push(Running {
+                    slot,
+                    rng: res.rng,
+                    resume_next: res.out.last().copied(),
+                    out: res.out,
+                    feed,
+                    prefilled: 0,
+                    next: None,
+                    cancel: false,
+                    admit_step: res.admit_step,
+                    visible_at: res.visible_at,
+                    admit_at: res.admit_at,
+                    ttft_secs: res.ttft_secs,
+                    prefill_secs: res.prefill_secs,
+                    queue_wait_ms: res.queue_wait_ms,
+                    prefill_chunks: res.prefill_chunks,
+                    req,
+                });
+            }
+        }
+        self.progressed = true;
     }
 
     /// One batched forward over all live sequences: every decoding
     /// sequence contributes a one-token run, and prefilling sequences
-    /// share the per-tick `prefill_chunk` prompt-token budget (FCFS in
+    /// share the per-tick `prefill_chunk` feed-token budget (FCFS in
     /// running order). All runs stack into a single
     /// [`Engine::forward_chunked`] call, so each weight matrix streams
     /// once per tick whatever the prefill/decode mix.
@@ -484,14 +978,14 @@ impl<'e> Scheduler<'e> {
         if self.running.is_empty() {
             return;
         }
-        // plan: how many prompt tokens each sequence advances this tick
+        // plan: how many feed tokens each sequence advances this tick
         // (0 for decoding sequences and for prefillers past the budget)
         let mut budget = self.prefill_chunk;
         let takes: Vec<usize> = self
             .running
             .iter()
             .map(|r| {
-                let rem = r.req.prompt.len() - r.prefilled;
+                let rem = r.feed.len() - r.prefilled;
                 let take = rem.min(budget);
                 budget -= take;
                 take
@@ -502,13 +996,15 @@ impl<'e> Scheduler<'e> {
             .iter()
             .zip(&takes)
             .filter_map(|(r, &take)| {
-                if r.prefilled < r.req.prompt.len() {
-                    // mid-prefill: advance `take` prompt tokens; sample
-                    // only when the chunk reaches the prompt end
+                if r.prefilled < r.feed.len() {
+                    // mid-prefill: advance `take` feed tokens; sample only
+                    // when the chunk reaches the feed end of a fresh
+                    // request (a resume restores its pre-sampled token
+                    // instead — no logits row)
                     (take > 0).then(|| SeqChunk {
                         slot: r.slot,
-                        tokens: &r.req.prompt[r.prefilled..r.prefilled + take],
-                        sample: r.prefilled + take == r.req.prompt.len(),
+                        tokens: &r.feed[r.prefilled..r.prefilled + take],
+                        sample: r.prefilled + take == r.feed.len() && r.resume_next.is_none(),
                     })
                 } else {
                     // decoding: feed the last sampled token
@@ -525,10 +1021,10 @@ impl<'e> Scheduler<'e> {
         if runs.is_empty() {
             return;
         }
+        self.progressed = true;
         let width = runs.len();
         let prefill_rows: usize = takes.iter().sum();
-        let decode_rows =
-            self.running.iter().filter(|r| r.prefilled >= r.req.prompt.len()).count();
+        let decode_rows = self.running.iter().filter(|r| r.prefilled >= r.feed.len()).count();
         let t0 = Instant::now();
         self.engine.forward_chunked(&runs, &mut self.pool, &mut self.scratch);
         drop(runs);
@@ -539,14 +1035,22 @@ impl<'e> Scheduler<'e> {
         let ts = Instant::now();
         let mut j = 0usize;
         for (i, r) in self.running.iter_mut().enumerate() {
-            if r.prefilled < r.req.prompt.len() {
+            if r.prefilled < r.feed.len() {
                 if takes[i] > 0 {
                     r.prefilled += takes[i];
                     r.prefill_chunks += 1;
                     trace::instant("prefill_chunk", r.req.id as u64);
                 }
-                if r.prefilled < r.req.prompt.len() {
-                    continue; // still mid-prompt: nothing sampled this tick
+                if r.prefilled < r.feed.len() {
+                    continue; // still mid-feed: nothing sampled this tick
+                }
+                if let Some(tok) = r.resume_next.take() {
+                    // resume boundary: the KV now holds prompt + all but
+                    // the last emitted token; restore that token as the
+                    // next decode feed. It was sampled before preemption —
+                    // no logits row was produced and `j` stays aligned.
+                    r.next = Some(tok);
+                    continue;
                 }
                 // the chunk just consumed the final prompt token: its
                 // logits row samples the request's first output token
@@ -596,12 +1100,14 @@ impl<'e> Scheduler<'e> {
 
     fn is_finished(&self, r: &Running) -> bool {
         !r.out.is_empty()
+            && r.resume_next.is_none()
             && (r.out.len() >= r.req.max_new_tokens
                 || self.cfg.eos.is_some_and(|e| r.out.last() == Some(&e)))
     }
 
     fn retire(&mut self, r: Running) {
         self.pool.release(r.slot);
+        self.record_terminal(r.req.id, TerminalState::Finished);
         trace::instant("retire", r.req.id as u64);
         self.metrics.requests.push(RequestMetrics {
             id: r.req.id,
@@ -631,6 +1137,12 @@ pub struct WorkloadSpec {
     pub prompt_len: usize,
     pub max_new_tokens: usize,
     pub temperature: f32,
+    /// Priority classes to spread requests over round-robin by id
+    /// (0 or 1 = everyone class 0, the highest).
+    pub classes: usize,
+    /// Per-request deadline in steps after arrival (0 = none), applied
+    /// uniformly; [`FaultPlan::apply_deadlines`] storms override ranges.
+    pub deadline_steps: usize,
 }
 
 pub fn synthetic_workload(spec: &WorkloadSpec, vocab: usize, seed: u64) -> Vec<Request> {
@@ -649,6 +1161,8 @@ pub fn synthetic_workload(spec: &WorkloadSpec, vocab: usize, seed: u64) -> Vec<R
                 temperature: spec.temperature,
                 seed: rng.next_u64(),
                 arrival_step: t as usize,
+                class: if spec.classes > 1 { (id % spec.classes) as u8 } else { 0 },
+                deadline_steps: spec.deadline_steps,
             }
         })
         .collect()
@@ -666,6 +1180,8 @@ mod tests {
             prompt_len: 4,
             max_new_tokens: 8,
             temperature: 0.5,
+            classes: 0,
+            deadline_steps: 0,
         };
         let a = synthetic_workload(&spec, 64, 9);
         let b = synthetic_workload(&spec, 64, 9);
@@ -680,6 +1196,8 @@ mod tests {
         assert!(a.iter().zip(&c).any(|(x, y)| x.seed != y.seed));
         // open loop: arrivals actually spread out
         assert!(a.last().unwrap().arrival_step > 0);
+        // no classes / deadlines requested -> everyone class 0, no deadline
+        assert!(a.iter().all(|r| r.class == 0 && r.deadline_steps == 0));
     }
 
     #[test]
@@ -690,7 +1208,37 @@ mod tests {
             prompt_len: 2,
             max_new_tokens: 4,
             temperature: 0.0,
+            classes: 0,
+            deadline_steps: 0,
         };
         assert!(synthetic_workload(&spec, 16, 1).iter().all(|r| r.arrival_step == 0));
+    }
+
+    #[test]
+    fn workload_classes_round_robin_and_deadlines_uniform() {
+        let spec = WorkloadSpec {
+            requests: 9,
+            mean_interarrival_steps: 1.0,
+            prompt_len: 2,
+            max_new_tokens: 4,
+            temperature: 0.0,
+            classes: 3,
+            deadline_steps: 40,
+        };
+        let w = synthetic_workload(&spec, 16, 1);
+        assert!(w.iter().all(|r| r.class == (r.id % 3) as u8));
+        assert!(w.iter().all(|r| r.deadline_steps == 40));
+        // the class assignment draws nothing from the RNG: same seed with
+        // classes off yields the same prompts/seeds/arrivals
+        let plain = synthetic_workload(
+            &WorkloadSpec { classes: 0, deadline_steps: 0, ..spec.clone() },
+            16,
+            1,
+        );
+        for (x, y) in w.iter().zip(&plain) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.arrival_step, y.arrival_step);
+        }
     }
 }

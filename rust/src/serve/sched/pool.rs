@@ -187,6 +187,12 @@ pub struct KvPool {
     /// Per-sequence block tables (paged backends; empty for slab).
     tables: Vec<Vec<u32>>,
     block_free: Vec<u32>,
+    /// Blocks withheld from `block_free` by an active fault-injection
+    /// squeeze (paged backends) — invisible to `can_admit`/`lease` but
+    /// still accounted, so conservation audits see them.
+    squeezed_blocks: Vec<u32>,
+    /// Slots withheld from `free` by an active squeeze (slab backend).
+    squeezed_slots: Vec<usize>,
     peak_leased: usize,
     peak_blocks: usize,
 }
@@ -270,6 +276,8 @@ impl KvPool {
             free: (0..n_slots).rev().collect(),
             tables: vec![Vec::new(); n_slots],
             block_free: if kind.paged() { (0..n_blocks as u32).rev().collect() } else { Vec::new() },
+            squeezed_blocks: Vec::new(),
+            squeezed_slots: Vec::new(),
             peak_leased: 0,
             peak_blocks: 0,
         }
@@ -354,7 +362,7 @@ impl KvPool {
     }
 
     pub fn leased_slots(&self) -> usize {
-        self.n_slots - self.free.len()
+        self.leased.iter().filter(|&&l| l).count()
     }
 
     /// High-water mark of concurrently leased sequences.
@@ -404,7 +412,80 @@ impl KvPool {
     }
 
     pub fn blocks_in_use(&self) -> usize {
-        self.n_blocks - self.free_blocks()
+        self.n_blocks - self.free_blocks() - self.squeezed()
+    }
+
+    /// Blocks the sequence's lease is holding (slab: one implicit block).
+    pub fn slot_blocks(&self, slot: SlotId) -> usize {
+        self.check(slot);
+        match self.kind {
+            KvStoreKind::SlabF32 => 1,
+            _ => self.tables[slot.0].len(),
+        }
+    }
+
+    /// Set the fault-injection squeeze to withhold `target` free blocks
+    /// (slab: free slots) from admission, returning how many are actually
+    /// withheld — capped at what is free right now; the stash never takes
+    /// leased capacity and never grows a window retroactively. `target`
+    /// below the current stash releases the excess back to the free list,
+    /// so `set_squeeze(0)` always ends the fault. Squeezed capacity stays
+    /// visible to the conservation audit ([`KvPool::leaked_blocks`]).
+    pub fn set_squeeze(&mut self, target: usize) -> usize {
+        match self.kind {
+            KvStoreKind::SlabF32 => {
+                while self.squeezed_slots.len() > target {
+                    let s = self.squeezed_slots.pop().expect("len checked above");
+                    self.free.push(s);
+                }
+                while self.squeezed_slots.len() < target {
+                    match self.free.pop() {
+                        Some(s) => self.squeezed_slots.push(s),
+                        None => break,
+                    }
+                }
+                self.squeezed_slots.len()
+            }
+            _ => {
+                while self.squeezed_blocks.len() > target {
+                    let b = self.squeezed_blocks.pop().expect("len checked above");
+                    self.block_free.push(b);
+                }
+                while self.squeezed_blocks.len() < target {
+                    match self.block_free.pop() {
+                        Some(b) => self.squeezed_blocks.push(b),
+                        None => break,
+                    }
+                }
+                self.squeezed_blocks.len()
+            }
+        }
+    }
+
+    /// Capacity currently withheld by [`KvPool::set_squeeze`] (blocks for
+    /// the paged backends, slots for slab; 0 = no active squeeze).
+    pub fn squeezed(&self) -> usize {
+        self.squeezed_slots.len() + self.squeezed_blocks.len()
+    }
+
+    /// Conservation audit: slots neither leased, free, nor squeezed.
+    /// Always 0 unless the lease/release bookkeeping leaked.
+    pub fn leaked_slots(&self) -> usize {
+        let leased = self.leased.iter().filter(|&&l| l).count();
+        self.n_slots - leased - self.free.len() - self.squeezed_slots.len()
+    }
+
+    /// Conservation audit: blocks neither held by a lease's block table,
+    /// free, nor squeezed. Always 0 unless the paged bookkeeping leaked
+    /// (slab: mirrors [`KvPool::leaked_slots`] — one implicit block each).
+    pub fn leaked_blocks(&self) -> usize {
+        match self.kind {
+            KvStoreKind::SlabF32 => self.leaked_slots(),
+            _ => {
+                let held: usize = self.tables.iter().map(|t| t.len()).sum();
+                self.n_blocks - held - self.block_free.len() - self.squeezed_blocks.len()
+            }
+        }
     }
 
     /// High-water mark of blocks in use (block-granular RM).
@@ -973,6 +1054,44 @@ mod tests {
             assert_eq!(p.peak_leased(), 3);
             assert_eq!(p.free_blocks(), p.n_blocks(), "{kind:?}: all blocks reclaimed");
         }
+    }
+
+    #[test]
+    fn squeeze_withholds_and_releases_with_conservation() {
+        for kind in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+            let mut p = KvPool::new(kind, 3, 2, 4, 8, 2);
+            let before = p.free_blocks();
+            let a = p.lease(4).unwrap();
+            // withhold everything that's still free: admission must stall
+            let got = p.set_squeeze(p.free_blocks());
+            assert!(got > 0, "{kind:?}");
+            assert_eq!(p.free_blocks(), before - got - p.slot_blocks(a), "{kind:?}");
+            assert!(!p.can_admit(4), "{kind:?}: squeezed pool must refuse admission");
+            assert_eq!(p.squeezed(), got, "{kind:?}");
+            // squeezed capacity is withheld, not leaked — and never leased
+            assert_eq!(p.leaked_slots(), 0, "{kind:?}");
+            assert_eq!(p.leaked_blocks(), 0, "{kind:?}");
+            assert_eq!(p.leased_slots(), 1, "{kind:?}");
+            // over-asking caps at what is actually free
+            assert_eq!(p.set_squeeze(p.n_blocks() + 7), got, "{kind:?}");
+            // release: everything returns, admission resumes
+            assert_eq!(p.set_squeeze(0), 0, "{kind:?}");
+            assert!(p.can_admit(4), "{kind:?}");
+            p.release(a);
+            assert_eq!(p.free_blocks(), p.n_blocks(), "{kind:?}");
+            assert_eq!(p.leaked_slots(), 0, "{kind:?}");
+            assert_eq!(p.leaked_blocks(), 0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn slot_blocks_counts_the_lease() {
+        let mut slab = KvPool::new(KvStoreKind::SlabF32, 2, 1, 8, 4, 2);
+        let a = slab.lease(8).unwrap();
+        assert_eq!(slab.slot_blocks(a), 1, "slab: one implicit block per slot");
+        let mut paged = KvPool::new(KvStoreKind::PagedF32, 2, 1, 8, 4, 2);
+        let b = paged.lease(5).unwrap();
+        assert_eq!(paged.slot_blocks(b), 3, "ceil(5 / 2) blocks reserved");
     }
 
     #[test]

@@ -26,14 +26,22 @@
 //! * all of the above hold at every worker-thread count: the
 //!   lane-sharded gemm / attention fan-out may never change one emitted
 //!   token (the threaded CI lane forces `OMNIQUANT_TEST_THREADS=0`, i.e.
-//!   one worker per core, so a single-core runner can't mask a race).
+//!   one worker per core, so a single-core runner can't mask a race);
+//! * the request lifecycle is a closed state machine: every submitted
+//!   request lands in the terminal ledger exactly once (`Finished`,
+//!   `Cancelled`, `DeadlineExceeded`, `Shed` or `Rejected`), cancels
+//!   and deadline expiries preserve partial output as a bit-identical
+//!   prefix of the uninterrupted run, preempted-then-resumed requests
+//!   emit bit-identical tokens to never-preempted ones, and after any
+//!   drain — including a seeded 1000-request fault-plan churn — the
+//!   KvPool conservation audit finds zero leaked slots or blocks.
 
 use omniquant::config::QuantSetting;
 use omniquant::model::ModelParams;
 use omniquant::runtime::Manifest;
 use omniquant::serve::sched::{
-    synthetic_workload, KvLayout, KvPool, KvStoreKind, Request, SchedConfig, Scheduler,
-    WorkloadSpec,
+    synthetic_workload, FaultPlan, KvLayout, KvPool, KvStoreKind, Request, SchedConfig, Scheduler,
+    TerminalState, WorkloadSpec,
 };
 use omniquant::serve::{AttnKind, ATTN_FLASH_REL_ERR, Engine, SeqChunk};
 use omniquant::util::Rng;
@@ -78,6 +86,8 @@ fn outputs_independent_of_batch_composition_and_kv_backend() {
                 temperature: if id % 2 == 0 { 0.0 } else { 0.8 },
                 seed: 1000 + id as u64,
                 arrival_step: [0usize, 0, 1, 3, 7][id],
+                class: 0,
+                deadline_steps: 0,
             })
             .collect();
 
@@ -109,6 +119,7 @@ fn outputs_independent_of_batch_composition_and_kv_backend() {
                         prefill_chunk,
                         attn: AttnKind::Fused,
                         stats_interval: 0,
+                        queue_cap: 0,
                     };
                     let mut sch = Scheduler::new(&eng, cfg);
                     for r in reqs.iter().cloned() {
@@ -224,6 +235,8 @@ fn eos_retires_early() {
             temperature: 0.0,
             seed: 42,
             arrival_step: 0,
+            class: 0,
+            deadline_steps: 0,
         })
         .unwrap();
         sch.run().unwrap();
@@ -245,6 +258,8 @@ fn submit_rejects_invalid_requests() {
         temperature: 0.0,
         seed: 1,
         arrival_step: 0,
+        class: 0,
+        deadline_steps: 0,
     };
     // empty prompt: there are no logits to sample a first token from — it
     // must never reach the loop (where it would read another request's
@@ -290,6 +305,8 @@ fn oversize_request_errors_not_livelocks_on_paged_backend() {
             temperature: 0.0,
             seed: 1,
             arrival_step: 0,
+            class: 0,
+            deadline_steps: 0,
         })
         .unwrap_err()
         .to_string();
@@ -302,6 +319,8 @@ fn oversize_request_errors_not_livelocks_on_paged_backend() {
         temperature: 0.0,
         seed: 2,
         arrival_step: 0,
+        class: 0,
+        deadline_steps: 0,
     })
     .unwrap();
     let summary = sch.run().unwrap();
@@ -331,6 +350,8 @@ fn chunked_prefill_parity_across_backends_and_threads() {
             temperature: if id % 2 == 0 { 0.0 } else { 0.7 },
             seed: 500 + id as u64,
             arrival_step: 2 * id,
+            class: 0,
+            deadline_steps: 0,
         })
         .collect();
     let fp_expect: Vec<Vec<i32>> = reqs
@@ -355,6 +376,7 @@ fn chunked_prefill_parity_across_backends_and_threads() {
                         prefill_chunk,
                         attn,
                         stats_interval: 0,
+                        queue_cap: 0,
                     };
                     let mut sch = Scheduler::new(&eng, cfg);
                     for r in reqs.iter().cloned() {
@@ -733,6 +755,8 @@ fn flash_scheduler_serves_end_to_end_on_head_major_pool() {
         prompt_len: 6,
         max_new_tokens: 6,
         temperature: 0.0,
+        classes: 0,
+        deadline_steps: 0,
     };
     for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
         let mut sch = Scheduler::new(
@@ -747,6 +771,7 @@ fn flash_scheduler_serves_end_to_end_on_head_major_pool() {
                 prefill_chunk: 4,
                 attn: AttnKind::Flash,
                 stats_interval: 0,
+                queue_cap: 0,
             },
         );
         assert_eq!(sch.pool().layout(), KvLayout::HeadMajor, "{kv:?}: flash picks head-major");
@@ -780,6 +805,7 @@ fn non_flash_schedulers_keep_the_token_major_layout() {
                 prefill_chunk: 4,
                 attn,
                 stats_interval: 0,
+                queue_cap: 0,
             },
         );
         assert_eq!(sch.pool().layout(), KvLayout::TokenMajor, "{attn:?} keeps token-major");
@@ -813,6 +839,8 @@ fn staggered_workload_queues_and_drains() {
         prompt_len: 4,
         max_new_tokens: 6,
         temperature: 0.0,
+        classes: 0,
+        deadline_steps: 0,
     };
     // run the churny end-to-end workload at the suite's threaded point:
     // admission, retirement and back-pressure under a sharded decode
@@ -859,6 +887,8 @@ fn paged_q8_serves_and_drains_with_smaller_arena() {
         prompt_len: 4,
         max_new_tokens: 6,
         temperature: 0.0,
+        classes: 0,
+        deadline_steps: 0,
     };
     let mk = |kv| SchedConfig {
         slots: 3,
@@ -916,6 +946,8 @@ fn block_exhaustion_backpressure_queues() {
             temperature: 0.0,
             seed: 100 + id as u64,
             arrival_step: 0,
+            class: 0,
+            deadline_steps: 0,
         })
         .unwrap();
     }
@@ -988,6 +1020,8 @@ fn tracing_enabled_changes_no_tokens_and_exports_nested_spans() {
         prompt_len: 4,
         max_new_tokens: 5,
         temperature: 0.3,
+        classes: 0,
+        deadline_steps: 0,
     };
     let threads = *thread_counts().last().unwrap();
     let run = |eng: &Engine| -> Vec<Vec<i32>> {
@@ -1076,4 +1110,439 @@ fn tracing_enabled_changes_no_tokens_and_exports_nested_spans() {
     }
     assert!(checked > 0, "nesting check must have covered at least one sample span");
     trace::reset();
+}
+
+#[test]
+fn cancel_preserves_partial_output_and_frees_kv() {
+    // Lifecycle pin, cancel arm. A queued request cancels to an immediate
+    // Cancelled terminal with empty output; a running request leaves at
+    // the start of the next tick with whatever it emitted preserved — a
+    // bit-identical prefix of what the same request emits when never
+    // cancelled — and its slot and blocks back in the pool. Cancel is
+    // idempotent and unknown ids report false. All three backends, both
+    // suite thread counts, token-by-token and whole-prompt prefill.
+    let eng = engine("llama", "w4a16g32", 11);
+    let mk = |id: usize, temperature: f32, seed: u64| Request {
+        id,
+        prompt: (0..4).map(|i| (5 + 3 * i + id as i32) % VOCAB as i32).collect(),
+        max_new_tokens: 12,
+        temperature,
+        seed,
+        arrival_step: 0,
+        class: 0,
+        deadline_steps: 0,
+    };
+    for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+        for threads in thread_counts() {
+            for prefill_chunk in [1usize, 0] {
+                let cfg = SchedConfig {
+                    slots: 2,
+                    slot_tokens: 32,
+                    eos: None,
+                    kv,
+                    block_tokens: 4,
+                    threads,
+                    prefill_chunk,
+                    attn: AttnKind::Fused,
+                    stats_interval: 0,
+                    queue_cap: 0,
+                };
+                // per-config solo references: paged-q8 quantizes its
+                // cache, so its reference is the scheduler itself, run
+                // uncancelled
+                let solo = |r: &Request| {
+                    let mut s = Scheduler::new(&eng, SchedConfig { slots: 1, ..cfg.clone() });
+                    s.submit(r.clone()).unwrap();
+                    s.run().unwrap();
+                    s.output(r.id).unwrap().to_vec()
+                };
+                let reqs = [mk(0, 0.7, 101), mk(1, 0.0, 102), mk(2, 0.5, 103)];
+                let expect: Vec<Vec<i32>> = reqs[..2].iter().map(solo).collect();
+                let mut sch = Scheduler::new(&eng, cfg);
+                for r in &reqs {
+                    sch.submit(r.clone()).unwrap();
+                }
+                // 2 slots: requests 0 and 1 admit, 2 queues — cancel it
+                // before it ever runs
+                assert!(sch.cancel(2), "queued cancel reports success");
+                assert!(!sch.cancel(2), "cancel is idempotent");
+                assert!(!sch.cancel(99), "unknown id reports false");
+                assert_eq!(sch.terminal(2), Some(TerminalState::Cancelled));
+                assert_eq!(sch.output(2), Some(&[][..]), "never ran: no output");
+                for _ in 0..10 {
+                    sch.step();
+                }
+                assert!(sch.cancel(0), "running cancel flags the sequence");
+                let summary = sch.run().unwrap();
+                let got = sch.output(0).unwrap();
+                assert!(
+                    !got.is_empty() && got.len() < 12,
+                    "{kv:?} chunk={prefill_chunk}: expected a mid-decode cancel, got {} tokens",
+                    got.len()
+                );
+                assert_eq!(
+                    got,
+                    &expect[0][..got.len()],
+                    "{kv:?} threads={threads} chunk={prefill_chunk}: partial output must be a \
+                     bit-identical prefix of the uncancelled run"
+                );
+                assert_eq!(sch.terminal(0), Some(TerminalState::Cancelled));
+                assert_eq!(sch.terminal(1), Some(TerminalState::Finished));
+                assert_eq!(sch.output(1).unwrap(), &expect[1][..], "survivor unaffected");
+                assert_eq!(summary.cancelled, 2);
+                assert_eq!(summary.requests, 1, "only the survivor counts as finished");
+                sch.audit_conservation().unwrap();
+                assert_eq!(sch.pool().free_slots(), 2);
+                assert_eq!(sch.pool().free_blocks(), sch.pool().n_blocks());
+            }
+        }
+    }
+}
+
+#[test]
+fn deadlines_expire_queued_and_running_deterministically() {
+    // Lifecycle pin, deadline arm. Deadlines are step counts, so expiry
+    // is deterministic: a queued request past its deadline drops with
+    // empty output before admission can waste KV on it, and a running
+    // request leaves with its partial output preserved — a bit-identical
+    // prefix of the undeadlined run. The expiry point is a pure function
+    // of the prefill chunking, never of backend, thread count or wall
+    // time.
+    let eng = engine("llama", "w4a16g32", 12);
+    let mk = |id: usize, max_new: usize, deadline: usize, seed: u64| Request {
+        id,
+        prompt: (0..4).map(|i| (7 + 5 * i + id as i32) % VOCAB as i32).collect(),
+        max_new_tokens: max_new,
+        temperature: 0.6,
+        seed,
+        arrival_step: 0,
+        class: 0,
+        deadline_steps: deadline,
+    };
+    let mut len_by_chunk: std::collections::BTreeMap<usize, usize> = Default::default();
+    for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+        for threads in thread_counts() {
+            for prefill_chunk in [1usize, 0] {
+                let cfg = SchedConfig {
+                    slots: 1,
+                    slot_tokens: 32,
+                    eos: None,
+                    kv,
+                    block_tokens: 4,
+                    threads,
+                    prefill_chunk,
+                    attn: AttnKind::Fused,
+                    stats_interval: 0,
+                    queue_cap: 0,
+                };
+                // r0 runs and expires mid-decode; r1 expires while queued
+                // behind it (slots = 1); r2 has no deadline and completes
+                // once r0's expiry frees the slot
+                let r0 = mk(0, 20, 8, 201);
+                let r1 = mk(1, 20, 3, 202);
+                let r2 = mk(2, 5, 0, 203);
+                let expect0 = {
+                    let mut s = Scheduler::new(&eng, cfg.clone());
+                    s.submit(mk(0, 20, 0, 201)).unwrap();
+                    s.run().unwrap();
+                    s.output(0).unwrap().to_vec()
+                };
+                let expect2 = {
+                    let mut s = Scheduler::new(&eng, cfg.clone());
+                    s.submit(r2.clone()).unwrap();
+                    s.run().unwrap();
+                    s.output(2).unwrap().to_vec()
+                };
+                let mut sch = Scheduler::new(&eng, cfg);
+                for r in [&r0, &r1, &r2] {
+                    sch.submit(r.clone()).unwrap();
+                }
+                let summary = sch.run().unwrap();
+                assert_eq!(sch.terminal(0), Some(TerminalState::DeadlineExceeded), "{kv:?}");
+                assert_eq!(sch.terminal(1), Some(TerminalState::DeadlineExceeded), "{kv:?}");
+                assert_eq!(sch.terminal(2), Some(TerminalState::Finished), "{kv:?}");
+                let got = sch.output(0).unwrap();
+                assert!(!got.is_empty() && got.len() < 20, "{kv:?}: expiry lands mid-decode");
+                assert_eq!(
+                    got,
+                    &expect0[..got.len()],
+                    "{kv:?} threads={threads} chunk={prefill_chunk}: partial output must be a \
+                     bit-identical prefix of the undeadlined run"
+                );
+                assert_eq!(sch.output(1), Some(&[][..]), "expired while queued: no output");
+                assert_eq!(sch.output(2).unwrap(), &expect2[..]);
+                let want = *len_by_chunk.entry(prefill_chunk).or_insert(got.len());
+                assert_eq!(
+                    got.len(),
+                    want,
+                    "{kv:?} threads={threads} chunk={prefill_chunk}: expiry point drifted"
+                );
+                assert_eq!(summary.deadline_exceeded, 2);
+                assert_eq!(summary.requests, 1);
+                sch.audit_conservation().unwrap();
+                assert_eq!(sch.pool().free_slots(), 1);
+                assert_eq!(sch.pool().free_blocks(), sch.pool().n_blocks());
+            }
+        }
+    }
+}
+
+#[test]
+fn preempted_requests_resume_bit_identical() {
+    // Tentpole pin: under KV pressure a higher-priority arrival preempts
+    // the lowest-priority, latest-admitted runner; the victim's KV is
+    // rebuilt through the chunked-prefill cursor on resume and its token
+    // stream continues bit-identically to a never-preempted run — the
+    // sampling RNG travels with the request, and the restored token is
+    // re-fed, never re-sampled. Exercised with the victim both
+    // mid-prefill (chunk = 1: nothing emitted yet) and mid-decode
+    // (whole-prompt prefill: tokens already out), on all three backends
+    // at both suite thread counts.
+    let eng = engine("llama", "w4a16g32", 13);
+    let mk = |id: usize, class: u8, arrival: usize, max_new: usize, temp: f32| Request {
+        id,
+        prompt: (0..5).map(|i| (11 + 2 * i + id as i32) % VOCAB as i32).collect(),
+        max_new_tokens: max_new,
+        temperature: temp,
+        seed: 300 + id as u64,
+        arrival_step: arrival,
+        class,
+        deadline_steps: 0,
+    };
+    for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+        for threads in thread_counts() {
+            for prefill_chunk in [1usize, 0] {
+                let cfg = SchedConfig {
+                    slots: 2,
+                    slot_tokens: 16,
+                    eos: None,
+                    kv,
+                    block_tokens: 4,
+                    threads,
+                    prefill_chunk,
+                    attn: AttnKind::Fused,
+                    stats_interval: 0,
+                    queue_cap: 0,
+                };
+                // two background (class 1) requests fill both slots and
+                // every block; the class-0 arrival at step 2 fits only by
+                // preempting one of them
+                let reqs = [mk(0, 1, 0, 10, 0.0), mk(1, 1, 0, 10, 0.8), mk(2, 0, 2, 6, 0.6)];
+                let expect: Vec<Vec<i32>> = reqs
+                    .iter()
+                    .map(|r| {
+                        let mut s = Scheduler::new(&eng, SchedConfig { slots: 1, ..cfg.clone() });
+                        let mut solo = r.clone();
+                        solo.arrival_step = 0;
+                        s.submit(solo).unwrap();
+                        s.run().unwrap();
+                        s.output(r.id).unwrap().to_vec()
+                    })
+                    .collect();
+                let mut sch = Scheduler::new(&eng, cfg);
+                for r in &reqs {
+                    sch.submit(r.clone()).unwrap();
+                }
+                let summary = sch.run().unwrap();
+                assert!(
+                    summary.preempted >= 1,
+                    "{kv:?} threads={threads} chunk={prefill_chunk}: pressure must preempt"
+                );
+                assert_eq!(summary.resumed, summary.preempted, "every victim resumed");
+                for r in &reqs {
+                    assert_eq!(sch.terminal(r.id), Some(TerminalState::Finished));
+                    assert_eq!(
+                        sch.output(r.id).unwrap(),
+                        &expect[r.id][..],
+                        "{kv:?} threads={threads} chunk={prefill_chunk} req {}: preemption \
+                         changed a token",
+                        r.id
+                    );
+                }
+                sch.audit_conservation().unwrap();
+                assert_eq!(sch.pool().free_slots(), 2);
+                assert_eq!(sch.pool().free_blocks(), sch.pool().n_blocks());
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_fault_plan_churn_reaches_single_terminal_states() {
+    // The overload-grade proof: 1000 staggered requests in three priority
+    // classes under a seeded FaultPlan (cancels, free-block squeezes,
+    // deadline storms) on every KV backend. Every id must land in the
+    // ledger with exactly one terminal state, the summary counters must
+    // reconcile to the request count, and after drain the conservation
+    // audit must find every slot and block back in the pool with the
+    // squeeze released. The churn is step-indexed end to end, so a repeat
+    // run reproduces the ledger and every output byte.
+    let eng = engine("llama", "w4a16g32", 14);
+    let spec = WorkloadSpec {
+        requests: 1000,
+        mean_interarrival_steps: 0.3,
+        prompt_len: 4,
+        max_new_tokens: 4,
+        temperature: 0.4,
+        classes: 3,
+        deadline_steps: 0,
+    };
+    let threads = *thread_counts().last().unwrap();
+    for kv in [KvStoreKind::SlabF32, KvStoreKind::PagedF32, KvStoreKind::PagedQ8] {
+        let mk_sched = || {
+            Scheduler::new(
+                &eng,
+                SchedConfig {
+                    slots: 4,
+                    slot_tokens: 16,
+                    eos: None,
+                    kv,
+                    block_tokens: 4,
+                    threads,
+                    prefill_chunk: 3,
+                    attn: AttnKind::Fused,
+                    stats_interval: 0,
+                    queue_cap: 0,
+                },
+            )
+        };
+        let mut reqs = synthetic_workload(&spec, VOCAB, 77);
+        let last_arrival = reqs.iter().map(|r| r.arrival_step).max().unwrap_or(0);
+        let blocks = mk_sched().pool().n_blocks();
+        let plan = FaultPlan::generate(77, reqs.len(), last_arrival + 64, blocks);
+        plan.apply_deadlines(&mut reqs);
+        // on top of the plan's storms, give every 10th request a tight
+        // deadline: under this backlog the low-priority ones cannot all
+        // be served within 40 steps, so expiry is guaranteed to fire
+        for r in reqs.iter_mut().filter(|r| r.id % 10 == 0) {
+            r.deadline_steps = 40;
+        }
+        let run_churn = |reqs: &[Request]| {
+            let mut sch = mk_sched();
+            for r in reqs {
+                sch.submit(r.clone()).unwrap();
+            }
+            let summary = sch.run_with_faults(Some(&plan)).unwrap();
+            (sch, summary)
+        };
+        let (sch, summary) = run_churn(&reqs);
+        assert_eq!(sch.terminal_states().len(), 1000, "{kv:?}: one terminal per request");
+        assert!((0..1000).all(|id| sch.terminal(id).is_some()), "{kv:?}: every id in the ledger");
+        let count =
+            |st: TerminalState| sch.terminal_states().values().filter(|&&s| s == st).count();
+        let fin = count(TerminalState::Finished);
+        let can = count(TerminalState::Cancelled);
+        let dead = count(TerminalState::DeadlineExceeded);
+        assert_eq!(fin + can + dead, 1000, "{kv:?}: only run terminals, each exactly once");
+        assert_eq!(summary.requests, fin, "{kv:?}");
+        assert_eq!(summary.cancelled, can, "{kv:?}");
+        assert_eq!(summary.deadline_exceeded, dead, "{kv:?}");
+        assert!(
+            can > 0 && dead > 0,
+            "{kv:?}: the plan must actually cancel ({can}) and expire ({dead})"
+        );
+        assert_eq!(sch.outputs().len(), 1000, "{kv:?}: every run terminal preserved an output");
+        sch.audit_conservation().unwrap();
+        assert_eq!(sch.pool().squeezed(), 0, "{kv:?}: drain releases the squeeze");
+        assert_eq!(sch.pool().free_slots(), 4, "{kv:?}");
+        assert_eq!(sch.pool().free_blocks(), sch.pool().n_blocks(), "{kv:?}");
+        // the churn is deterministic: same plan, same ledger, same bytes
+        if kv == KvStoreKind::PagedQ8 {
+            let (sch2, summary2) = run_churn(&reqs);
+            assert_eq!(sch.terminal_states(), sch2.terminal_states(), "ledger deterministic");
+            assert_eq!(sch.outputs(), sch2.outputs(), "outputs deterministic");
+            assert_eq!(summary.preempted, summary2.preempted);
+        }
+    }
+}
+
+#[test]
+fn queue_cap_sheds_with_named_cap_and_resubmit_succeeds() {
+    // Load-shedding satellite: with queue_cap queued requests already
+    // waiting, submit sheds — the error names the cap, the ledger says
+    // Shed, and the summary counts it — while malformed submissions land
+    // in the distinct Rejected terminal. A shed id never entered the
+    // queue, so after it drains the same id resubmits cleanly and runs
+    // to Finished; a finished id can never be reused.
+    let eng = engine("llama", "w4a16g32", 15);
+    let mut sch = Scheduler::new(
+        &eng,
+        SchedConfig { slots: 1, slot_tokens: 16, queue_cap: 2, ..Default::default() },
+    );
+    let mk = |id: usize| Request {
+        id,
+        prompt: vec![3, 5, 7],
+        max_new_tokens: 4,
+        temperature: 0.0,
+        seed: 40 + id as u64,
+        arrival_step: 0,
+        class: 0,
+        deadline_steps: 0,
+    };
+    sch.submit(mk(0)).unwrap();
+    sch.submit(mk(1)).unwrap();
+    let err = sch.submit(mk(2)).unwrap_err().to_string();
+    assert!(err.contains("queue_cap 2"), "shed error names the cap: {err}");
+    assert_eq!(sch.terminal(2), Some(TerminalState::Shed));
+    // malformed submissions are Rejected — a different terminal than Shed
+    let err = sch.submit(Request { prompt: vec![], ..mk(9) }).unwrap_err().to_string();
+    assert!(err.contains("empty prompt"), "{err}");
+    assert_eq!(sch.terminal(9), Some(TerminalState::Rejected));
+    let summary = sch.run().unwrap();
+    assert_eq!(summary.shed, 1);
+    assert_eq!(summary.rejected, 1);
+    // the queue drained: the shed id retries cleanly and finishes
+    sch.submit(mk(2)).unwrap();
+    let summary = sch.run().unwrap();
+    assert_eq!(sch.terminal(2), Some(TerminalState::Finished));
+    assert_eq!(sch.output(2).unwrap().len(), 4);
+    assert_eq!(summary.requests, 3);
+    assert_eq!(summary.shed, 1, "the successful retry does not re-count the shed");
+    // a finished id is owned by the ledger forever
+    let err = sch.submit(mk(0)).unwrap_err().to_string();
+    assert!(err.contains("terminal state finished"), "{err}");
+    sch.audit_conservation().unwrap();
+}
+
+#[test]
+fn watchdog_names_stuck_requests_and_pool_state() {
+    // No-progress watchdog satellite: a scheduler that can make no
+    // progress and has no future wake event must bail with a diagnostic
+    // naming the stuck ids and the pool state — never spin. Squeezing
+    // every free block makes admission impossible; once the lone arrival
+    // is in the past, nothing can ever move.
+    let eng = engine("llama", "w4a16g32", 16);
+    let mut sch = Scheduler::new(
+        &eng,
+        SchedConfig {
+            slots: 2,
+            slot_tokens: 16,
+            kv: KvStoreKind::PagedF32,
+            block_tokens: 4,
+            ..Default::default()
+        },
+    );
+    let withheld = sch.inject_squeeze(usize::MAX);
+    assert_eq!(withheld, sch.pool().n_blocks(), "squeeze withholds every free block");
+    sch.submit(Request {
+        id: 7,
+        prompt: vec![1, 2, 3],
+        max_new_tokens: 4,
+        temperature: 0.0,
+        seed: 1,
+        arrival_step: 0,
+        class: 0,
+        deadline_steps: 0,
+    })
+    .unwrap();
+    let err = sch.run().unwrap_err().to_string();
+    assert!(err.contains("no progress"), "{err}");
+    assert!(err.contains("pending [7]"), "diagnostic names the stuck id: {err}");
+    assert!(err.contains("squeezed"), "diagnostic reports the pool squeeze: {err}");
+    // releasing the squeeze unwedges the same scheduler
+    assert_eq!(sch.inject_squeeze(0), 0);
+    let summary = sch.run().unwrap();
+    assert_eq!(summary.requests, 1);
+    assert_eq!(sch.terminal(7), Some(TerminalState::Finished));
+    sch.audit_conservation().unwrap();
 }

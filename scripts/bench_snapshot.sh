@@ -17,7 +17,11 @@
 # timings), plus a trace-overhead check rerunning the slab continuous
 # point with the span recorder enabled (step_p90_ms_trace_off /
 # step_p90_ms_trace_on / trace_overhead_pct — the < 5% observability
-# budget) — and writes the machine-readable BENCH_serve.json at the
+# budget), plus a bursty mixed-length overload trace (4x oversubscribed
+# slots, three priority classes, bounded queue) reporting per-class SLO
+# attainment and the lifecycle counters (overload_slo_class0/1/2,
+# overload_shed / _deadline_exceeded / _preempted / _resumed) — and
+# writes the machine-readable BENCH_serve.json at the
 # repo root, plus results/serve-bench.md. Pass extra flags through to
 # `repro` (e.g. drop --quick for the bigger model).
 #
